@@ -1,0 +1,67 @@
+//! Quickstart: simulate the three schedulers on the paper's mixed
+//! workload, then (if `make artifacts` has been run) serve a few real
+//! requests through the PJRT model under AcceLLM.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::time::Duration;
+
+use accellm::coordinator::{AcceLlm, Splitwise, Vllm};
+use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
+use accellm::sim::{run, InstanceSpec, PerfModel, Scheduler, SimConfig, H100,
+                   LLAMA2_70B};
+use accellm::workload::{Trace, MIXED};
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. Cluster simulation (the paper's evaluation substrate) ----
+    println!("== simulated cluster: 4x H100 instances, mixed workload, \
+              10 req/s ==");
+    let cfg = SimConfig {
+        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+        n_instances: 4,
+        interconnect_bw: None,
+        record_timeline: false,
+    };
+    let trace = Trace::poisson(MIXED, 10.0, 60.0, 42);
+    println!("{:>10} | {:>9} | {:>8} | {:>8} | {:>7} | {:>5}",
+             "scheduler", "tok/inst/s", "ttft ms", "tbt ms", "jct s", "util");
+    let mut scheds: Vec<Box<dyn Scheduler>> = vec![
+        Box::new(AcceLlm::new(4)),
+        Box::new(Splitwise::new(4)),
+        Box::new(Vllm::new(4)),
+    ];
+    for s in &mut scheds {
+        let r = run(&cfg, &trace, s.as_mut());
+        assert_eq!(r.completed, trace.len());
+        println!("{:>10} | {:>9.0} | {:>8.1} | {:>8.2} | {:>7.2} | {:>5.2}",
+                 r.scheduler, r.cost_efficiency, r.ttft_mean * 1e3,
+                 r.tbt_mean * 1e3, r.jct_mean, r.utilization);
+    }
+
+    // ---- 2. Real model serving over PJRT ----
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n(artifacts/ not built — run `make artifacts` to also \
+                  exercise the real serving path)");
+        return Ok(());
+    }
+    println!("\n== real model (PJRT, AOT artifacts): 2 instances, AcceLLM ==");
+    let reqs: Vec<ServeRequest> = (0..6)
+        .map(|i| ServeRequest {
+            id: i,
+            prompt: format!("request number {i}: the scheduler should"),
+            max_new_tokens: 16,
+            arrival_offset: Duration::from_millis(200 * i),
+        })
+        .collect();
+    let report = serve_trace(
+        &ClusterConfig {
+            artifacts_dir: "artifacts".into(),
+            n_instances: 2,
+            policy: ServePolicy::AcceLlm,
+            slots: 8,
+        },
+        &reqs,
+    )?;
+    report.print_summary();
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT bridge: lower the JAX model to HLO *text* + export weights.
+
+Run once at build time (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file``,
+compiles them on the PJRT CPU client and executes them with device-
+resident buffers.  Python never runs on the request path.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT a serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifact set (per model preset):
+
+* ``prefill_s{S}.hlo.txt``  S in PREFILL_BUCKETS — prompt processing, batch=1
+* ``decode_b{B}.hlo.txt``   B in DECODE_BATCHES  — one token for B slots
+* ``kv_write_b{B}.hlo.txt`` / ``kv_read_b{B}.hlo.txt`` — device-side KV
+  slot insert/extract (the Rust KV manager's migration primitives)
+* ``weights.bin``           — raw little-endian f32, canonical param order
+* ``manifest.json``         — config + param table + artifact index
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--preset tiny]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+PREFILL_BUCKETS = [16, 32, 64, 128]
+DECODE_BATCHES = [1, 4, 8]
+KV_BATCHES = [4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lower_prefill(cfg: M.ModelConfig, seq: int) -> str:
+    param_specs = [_spec(s) for _, s in cfg.param_shapes()]
+    tok_spec = _spec((1, seq), jnp.int32)
+    len_spec = _spec((), jnp.int32)  # true prompt length within the bucket
+
+    def fn(*args):
+        params, tokens, length = list(args[:-2]), args[-2], args[-1]
+        return M.prefill(cfg, params, tokens, length)
+
+    return to_hlo_text(jax.jit(fn).lower(*param_specs, tok_spec, len_spec))
+
+
+def lower_decode(cfg: M.ModelConfig, batch: int) -> str:
+    param_specs = [_spec(s) for _, s in cfg.param_shapes()]
+    cache = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_len, cfg.head_dim)
+    specs = param_specs + [
+        _spec((batch,), jnp.int32),  # tokens
+        _spec(cache),                # k_cache
+        _spec(cache),                # v_cache
+        _spec((batch,), jnp.int32),  # lengths
+    ]
+
+    def fn(*args):
+        params = list(args[:-4])
+        tokens, k_cache, v_cache, lengths = args[-4:]
+        return M.decode_step(cfg, params, tokens, k_cache, v_cache, lengths)
+
+    # No donation: the caches are inputs only (outputs are just the new
+    # KV lines — see model.decode_step docstring for the PJRT rationale).
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_kv_write(cfg: M.ModelConfig, batch: int) -> str:
+    cache = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_len, cfg.head_dim)
+    row = (cfg.n_layers, cfg.n_kv_heads, cfg.max_len, cfg.head_dim)
+    specs = [_spec(cache), _spec(cache), _spec(row), _spec(row),
+             _spec((), jnp.int32)]
+    return to_hlo_text(
+        jax.jit(M.kv_write_slot, donate_argnums=(0, 1)).lower(*specs))
+
+
+def lower_kv_read(cfg: M.ModelConfig, batch: int) -> str:
+    cache = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_len, cfg.head_dim)
+    specs = [_spec(cache), _spec(cache), _spec((), jnp.int32)]
+    return to_hlo_text(jax.jit(M.kv_read_slot).lower(*specs))
+
+
+def export(cfg: M.ModelConfig, out_dir: str, seed: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    def emit(name: str, text: str, kind: str, **meta):
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append({"name": name, "file": name + ".hlo.txt",
+                          "kind": kind, **meta})
+        print(f"  {name}: {len(text)} chars")
+
+    for s in PREFILL_BUCKETS:
+        emit(f"prefill_s{s}", lower_prefill(cfg, s), "prefill", seq=s)
+    for b in DECODE_BATCHES:
+        emit(f"decode_b{b}", lower_decode(cfg, b), "decode", batch=b)
+    for b in KV_BATCHES:
+        emit(f"kv_write_b{b}", lower_kv_write(cfg, b), "kv_write", batch=b)
+        emit(f"kv_read_b{b}", lower_kv_read(cfg, b), "kv_read", batch=b)
+
+    # Weights: raw little-endian f32 in canonical order.
+    params = M.init_params(cfg, seed)
+    offsets, off = [], 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), p in zip(cfg.param_shapes(), params):
+            arr = np.asarray(p, dtype="<f4")
+            f.write(arr.tobytes())
+            offsets.append({"name": name, "shape": list(shape),
+                            "offset": off, "numel": int(arr.size)})
+            off += int(arr.size)
+
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "dim": cfg.dim,
+            "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn, "max_len": cfg.max_len,
+            "rope_theta": cfg.rope_theta, "norm_eps": cfg.norm_eps,
+            "param_count": int(off),
+        },
+        "seed": seed,
+        "params": offsets,
+        "artifacts": artifacts,
+        "prefill_buckets": PREFILL_BUCKETS,
+        "decode_batches": DECODE_BATCHES,
+        "kv_batches": KV_BATCHES,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  weights.bin: {off * 4} bytes ({off} f32)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = M.PRESETS[args.preset]
+    print(f"AOT-lowering preset '{args.preset}' "
+          f"({cfg.param_count():,} params) -> {args.out_dir}")
+    export(cfg, args.out_dir, args.seed)
+    # Build stamp so `make artifacts` is a no-op when inputs are unchanged.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write(cfg.name + "\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

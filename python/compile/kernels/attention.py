@@ -1,0 +1,219 @@
+"""Layer-1 Pallas attention kernels (TPU-shaped, run under interpret=True).
+
+Two kernels cover the paper's compute hot-spots:
+
+* ``decode_attention`` — single-query attention over a padded KV cache,
+  the bandwidth-bound decode-phase operation the paper's performance
+  model is built around (Section 3.3).  Flash-style running-softmax so
+  the KV cache is read exactly once (IO-optimal), tiled ``block_k`` at a
+  time: the BlockSpec + inner ``fori_loop`` expresses the HBM→VMEM
+  streaming schedule that the CUDA original expressed with threadblocks.
+* ``prefill_attention`` — blocked causal self-attention for the
+  compute-bound prefill phase (Section 3.2), tiled over query blocks
+  with the inner loop stopping at the causal diagonal.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+NVIDIA H100 / Ascend 910B2.  We re-think the kernels for the TPU memory
+model — VMEM tiles instead of CUDA shared memory, MXU-friendly
+(multiple-of-8 × 128) blocks instead of WMMA fragments.  ``interpret=True``
+is mandatory on this CPU-PJRT image; real-TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot execute.
+
+Both kernels are validated against the pure-jnp oracles in ``ref.py``
+by ``python/tests/test_attention.py`` (pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mask value: large-negative instead of -inf so that a fully-masked tile
+# cannot poison the running max with NaNs (exp(-inf - -inf)).
+_NEG_INF = -1e30
+
+# Default KV tile: 128 rows — one MXU systolic pass per (8,128) q tile.
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_Q = 128
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of ``n`` that is <= preferred (keeps tiles aligned)."""
+    b = min(n, preferred)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                        max_len: int, scale: float):
+    """Grid cell = (batch b, kv-head h).
+
+    Block shapes (leading grid dims squeezed by indexing [0]):
+      len_ref: [1] int32          — valid KV length of request b
+      q_ref:   [1, group, d]      — the `group` query heads sharing kv-head h
+      k_ref:   [1, 1, max_len, d] — kv-head h of request b's K cache
+      v_ref:   [1, 1, max_len, d]
+      o_ref:   [1, group, d]
+    """
+    length = len_ref[0]
+    q = q_ref[0].astype(jnp.float32) * scale  # [group, d]
+    group = q.shape[0]
+    nblocks = max_len // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(i * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # [group, block_k] — MXU matmul per tile
+        pos = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = pos < length  # [1, block_k]
+        s = jnp.where(mask, s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)  # kill fully-masked tiles
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group,), jnp.float32)
+    acc0 = jnp.zeros_like(q)
+    _, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    # length >= 1 is a caller invariant; guard anyway so padded batch slots
+    # produce zeros instead of NaNs.
+    denom = jnp.where(l > 0.0, l, 1.0)
+    o_ref[0] = (acc / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # [batch, n_q_heads, head_dim]
+    k_cache: jnp.ndarray,  # [batch, n_kv_heads, max_len, head_dim]
+    v_cache: jnp.ndarray,  # [batch, n_kv_heads, max_len, head_dim]
+    lengths: jnp.ndarray,  # [batch] int32
+    *,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Flash-style decode attention; see module docstring.
+
+    Returns [batch, n_q_heads, head_dim] in q.dtype.
+    """
+    batch, n_q, d = q.shape
+    _, n_kv, max_len, _ = k_cache.shape
+    assert n_q % n_kv == 0, "GQA requires n_q divisible by n_kv"
+    group = n_q // n_kv
+    bk = _pick_block(max_len, block_k)
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, block_k=bk, max_len=max_len, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, group, d), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, max_len, d), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, max_len, d), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_q, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (causal) attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                         block_k: int, seq: int, scale: float):
+    """Grid cell = (batch b, kv-head h, query-block iq).
+
+    Block shapes:
+      q_ref: [1, group, block_q, d]
+      k_ref: [1, 1, seq, d]   (full KV row; tiles streamed by the loop)
+      v_ref: [1, 1, seq, d]
+      o_ref: [1, group, block_q, d]
+    """
+    iq = pl.program_id(2)
+    q = q_ref[0].astype(jnp.float32) * scale  # [group, block_q, d]
+    group = q.shape[0]
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jnp.einsum("gqd,kd->gqk", q, k)  # [group, block_q, block_k]
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        causal = q_pos >= k_pos  # [block_q, block_k]
+        s = jnp.where(causal[None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(causal[None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=2)
+        acc_new = acc * alpha[..., None] + jnp.einsum("gqk,kd->gqd", p, v)
+        return m_new, l_new, acc_new
+
+    # Causal: only KV tiles at or below this query block's diagonal.
+    nblocks = (iq + 1) * block_q // block_k
+    m0 = jnp.full((group, block_q), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group, block_q), jnp.float32)
+    acc0 = jnp.zeros_like(q)
+    _, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    o_ref[0] = (acc / l[..., None]).astype(o_ref.dtype)
+
+
+def prefill_attention(
+    q: jnp.ndarray,  # [batch, n_q_heads, seq, head_dim]
+    k: jnp.ndarray,  # [batch, n_kv_heads, seq, head_dim]
+    v: jnp.ndarray,  # [batch, n_kv_heads, seq, head_dim]
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Blocked causal flash attention for the prefill phase (GQA).
+
+    Returns [batch, n_q_heads, seq, head_dim] in q.dtype.
+    """
+    batch, n_q, seq, d = q.shape
+    n_kv = k.shape[1]
+    assert n_q % n_kv == 0
+    group = n_q // n_kv
+    bq = _pick_block(seq, block_q)
+    # block_k must divide block_q boundaries for the causal tile count.
+    bk = _pick_block(seq, min(block_k, bq))
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _prefill_attn_kernel, block_q=bq, block_k=bk, seq=seq, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, n_kv, seq // bq),
+        in_specs=[
+            pl.BlockSpec((1, group, bq, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, seq, d), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq, d), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, bq, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_q, seq, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth the Pallas kernels in
+``attention.py`` are validated against (pytest + hypothesis in
+``python/tests/``).  They are deliberately written in the most obvious
+way possible — no tiling, no running softmax — so that a mismatch always
+points at the kernel, not the oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [batch, n_q_heads, head_dim]
+    k_cache: jnp.ndarray,  # [batch, n_kv_heads, max_len, head_dim]
+    v_cache: jnp.ndarray,  # [batch, n_kv_heads, max_len, head_dim]
+    lengths: jnp.ndarray,  # [batch] int32 — valid KV length per request
+) -> jnp.ndarray:
+    """Single-token (decode-phase) attention over a padded KV cache.
+
+    GQA: n_q_heads must be a multiple of n_kv_heads; query head h reads
+    KV head ``h // (n_q_heads // n_kv_heads)``.
+    Positions >= lengths[b] are masked out.
+    Returns [batch, n_q_heads, head_dim].
+    """
+    b, n_q, d = q.shape
+    _, n_kv, max_len, _ = k_cache.shape
+    group = n_q // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    # Expand KV heads to match query heads.
+    k = jnp.repeat(k_cache, group, axis=1)  # [b, n_q, max_len, d]
+    v = jnp.repeat(v_cache, group, axis=1)
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    scores = jnp.einsum("bhd,bhld->bhl", qf, kf) * scale  # [b, n_q, max_len]
+    pos = jnp.arange(max_len)[None, None, :]
+    mask = pos < lengths[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = jnp.where(mask, probs, 0.0)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhl,bhld->bhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def prefill_attention_ref(
+    q: jnp.ndarray,  # [batch, n_q_heads, seq, head_dim]
+    k: jnp.ndarray,  # [batch, n_kv_heads, seq, head_dim]
+    v: jnp.ndarray,  # [batch, n_kv_heads, seq, head_dim]
+) -> jnp.ndarray:
+    """Causal self-attention for the prefill phase (GQA).
+
+    Returns [batch, n_q_heads, seq, head_dim].
+    """
+    b, n_q, s, d = q.shape
+    n_kv = k.shape[1]
+    group = n_q // n_kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+
+    qf = q.astype(jnp.float32)
+    kf = kx.astype(jnp.float32)
+    vf = vx.astype(jnp.float32)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """Root-mean-square layer norm (Llama style)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * (1.0 / jnp.sqrt(var + eps)) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu_ref(x, w_gate, w_up, w_down):
+    """Llama FFN: down( silu(gate(x)) * up(x) )."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    act = g * (1.0 / (1.0 + jnp.exp(-g)))  # silu
+    return ((act * u) @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,276 @@
+"""Layer-2 JAX model: a Llama-style decoder with an explicit KV cache.
+
+This is the compute graph that gets AOT-lowered (``aot.py``) to HLO text
+and executed from the Rust coordinator via PJRT.  Python never runs on
+the request path — these functions exist only to be traced.
+
+Entry points (all pure, weights passed as a flat list of arrays so the
+Rust side can feed ``execute_b`` positionally):
+
+* :func:`prefill`      — process a whole prompt (batch=1), return the last-
+                         position logits and the generated KV cache.
+* :func:`decode_step`  — one token for a fixed-size batch of slots over a
+                         padded KV cache; returns logits + updated caches.
+* :func:`kv_write_slot` / :func:`kv_read_slot` — device-side KV cache
+                         migration primitives (insert a request's KV into a
+                         batch slot / extract it), used by the Rust KV
+                         manager for instance-to-instance transfers.
+
+Attention inside prefill/decode calls the Layer-1 Pallas kernels
+(``kernels/attention.py``); everything else is plain jnp and fuses in XLA.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import decode_attention, prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (compiled into the HLO)."""
+
+    name: str = "llama-tiny"
+    vocab: int = 256  # byte-level tokenizer
+    dim: int = 384
+    n_layers: int = 6
+    n_q_heads: int = 6
+    n_kv_heads: int = 3  # GQA, group = 2
+    head_dim: int = 64
+    ffn: int = 1024
+    max_len: int = 256  # padded KV cache length (decode slots)
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_q_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes())
+
+    def param_shapes(self):
+        """Flat (name, shape) list — THE canonical argument order.
+
+        The Rust runtime replays this order when uploading weights; it is
+        serialized into ``artifacts/manifest.json`` by ``aot.py``.
+        """
+        out = [("embed", (self.vocab, self.dim))]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            out += [
+                (p + "attn_norm", (self.dim,)),
+                (p + "wq", (self.dim, self.q_dim)),
+                (p + "wk", (self.dim, self.kv_dim)),
+                (p + "wv", (self.dim, self.kv_dim)),
+                (p + "wo", (self.q_dim, self.dim)),
+                (p + "ffn_norm", (self.dim,)),
+                (p + "w_gate", (self.dim, self.ffn)),
+                (p + "w_up", (self.dim, self.ffn)),
+                (p + "w_down", (self.ffn, self.dim)),
+            ]
+        out += [("final_norm", (self.dim,)), ("lm_head", (self.dim, self.vocab))]
+        return out
+
+
+PRESETS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(name="llama-small", dim=512, n_layers=8, n_q_heads=8,
+                         n_kv_heads=4, ffn=1408, max_len=512),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    """Random-normal initialization (no pretrained weights are available
+    offline — documented substitution in DESIGN.md §3).  Scaled 0.02 like
+    GPT-2 so logits stay numerically tame over hundreds of decode steps."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Building blocks (plain jnp — fused by XLA)
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding.  x: [..., seq, n_heads, head_dim], positions: [..., seq]."""
+    d = x.shape[-1]
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # [..., seq, d/2]
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _ffn(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    return (jax.nn.silu(g) * (x @ w_up)) @ w_down
+
+
+def _unpack(cfg: ModelConfig, params: List[jnp.ndarray]):
+    embed = params[0]
+    layers = []
+    for i in range(cfg.n_layers):
+        base = 1 + 9 * i
+        layers.append(params[base:base + 9])
+    final_norm, lm_head = params[-2], params[-1]
+    return embed, layers, final_norm, lm_head
+
+
+# ---------------------------------------------------------------------------
+# Prefill: batch=1, full prompt
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: List[jnp.ndarray], tokens: jnp.ndarray,
+            length: jnp.ndarray | None = None):
+    """Process a prompt.
+
+    tokens: [1, seq] int32 — right-padded to the compiled bucket size.
+    length: [] int32 — true prompt length (logits are taken at position
+            ``length - 1``; right-pad tokens are causal-masked away for
+            every position before that, so they cannot affect the
+            result).  Defaults to seq.
+    Returns (logits[1, vocab] at the last real position,
+             k_cache[L, n_kv, seq, hd], v_cache[L, n_kv, seq, hd]).
+    """
+    embed, layers, final_norm, lm_head = _unpack(cfg, params)
+    _, seq = tokens.shape
+    if length is None:
+        length = jnp.asarray(seq, jnp.int32)
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :]  # [1, seq]
+
+    x = embed[tokens[0]][None]  # [1, seq, dim]
+    ks, vs = [], []
+    for (attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down) in layers:
+        h = _rmsnorm(x, attn_norm, cfg.norm_eps)
+        q = (h @ wq).reshape(1, seq, cfg.n_q_heads, cfg.head_dim)
+        k = (h @ wk).reshape(1, seq, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ wv).reshape(1, seq, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        # kernels expect [batch, heads, seq, hd]
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        attn = prefill_attention(qt, kt, vt)  # [1, n_q, seq, hd]
+        attn = attn.transpose(0, 2, 1, 3).reshape(1, seq, cfg.q_dim)
+        x = x + attn @ wo
+        h2 = _rmsnorm(x, ffn_norm, cfg.norm_eps)
+        x = x + _ffn(h2, w_gate, w_up, w_down)
+        ks.append(kt[0])  # [n_kv, seq, hd]
+        vs.append(vt[0])
+
+    # Last REAL position (causality guarantees pad positions after it
+    # cannot have influenced positions <= length-1).
+    x_last = jax.lax.dynamic_slice(x, (0, length - 1, 0), (1, 1, cfg.dim))
+    x_last = _rmsnorm(x_last[:, 0, :], final_norm, cfg.norm_eps)  # [1, dim]
+    logits = x_last @ lm_head  # [1, vocab]
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+# ---------------------------------------------------------------------------
+# Decode: fixed batch of slots, padded cache
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: List[jnp.ndarray],
+                tokens: jnp.ndarray, k_cache: jnp.ndarray,
+                v_cache: jnp.ndarray, lengths: jnp.ndarray):
+    """One decode iteration for B slots.
+
+    tokens:  [B] int32 — last generated token per slot.
+    k_cache: [L, B, n_kv, max_len, hd] (same for v_cache).
+    lengths: [B] int32 — tokens already cached per slot; the new token's
+             KV lines are written at index ``lengths[b]`` and attention
+             spans ``lengths[b]+1`` positions.  Empty slots (length 0 with
+             a dummy token) produce garbage logits the coordinator ignores.
+    Returns (logits[B, vocab], k_new[L, B, n_kv, hd], v_new[L, B, n_kv, hd])
+    — only the NEW KV lines: PJRT returns outputs as one tuple buffer that
+    cannot be re-fed as separate inputs, so the Rust coordinator owns the
+    canonical cache host-side and applies the new lines itself (tiny
+    download instead of a full-cache round trip per step).
+    """
+    embed, layers, final_norm, lm_head = _unpack(cfg, params)
+    B = tokens.shape[0]
+
+    x = embed[tokens]  # [B, dim]
+    new_ks, new_vs = [], []
+    for li, (attn_norm, wq, wk, wv, wo, ffn_norm, w_gate, w_up, w_down) in \
+            enumerate(layers):
+        h = _rmsnorm(x, attn_norm, cfg.norm_eps)
+        q = (h @ wq).reshape(B, 1, cfg.n_q_heads, cfg.head_dim)
+        k = (h @ wk).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ wv).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, lengths[:, None], cfg.rope_theta)[:, 0]  # [B, n_q, hd]
+        k = _rope(k, lengths[:, None], cfg.rope_theta)[:, 0]  # [B, n_kv, hd]
+        v = v[:, 0]
+
+        # Scatter the new KV lines into the cache at position lengths[b].
+        def write(cache_b, new_b, pos_b):
+            # cache_b: [n_kv, max_len, hd], new_b: [n_kv, hd]
+            return jax.lax.dynamic_update_slice(
+                cache_b, new_b[:, None, :], (0, pos_b, 0))
+
+        k_l = jax.vmap(write)(k_cache[li], k, lengths)  # [B, n_kv, M, hd]
+        v_l = jax.vmap(write)(v_cache[li], v, lengths)
+        new_ks.append(k)  # [B, n_kv, hd] — just this token's lines
+        new_vs.append(v)
+
+        attn = decode_attention(q, k_l, v_l, lengths + 1)  # [B, n_q, hd]
+        x = x + attn.reshape(B, cfg.q_dim) @ wo
+        h2 = _rmsnorm(x, ffn_norm, cfg.norm_eps)
+        x = x + _ffn(h2, w_gate, w_up, w_down)
+
+    x = _rmsnorm(x, final_norm, cfg.norm_eps)
+    logits = x @ lm_head
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+# ---------------------------------------------------------------------------
+# Device-side KV migration primitives
+# ---------------------------------------------------------------------------
+
+
+def kv_write_slot(k_cache, v_cache, k_req, v_req, slot):
+    """Insert one request's (padded) KV into batch slot ``slot``.
+
+    k_cache: [L, B, n_kv, M, hd];  k_req: [L, n_kv, M, hd];  slot: [] int32.
+    The whole M row is replaced — the valid prefix is tracked Rust-side.
+    """
+    k = jax.lax.dynamic_update_slice(
+        k_cache, k_req[:, None], (0, slot, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        v_cache, v_req[:, None], (0, slot, 0, 0, 0))
+    return k, v
+
+
+def kv_read_slot(k_cache, v_cache, slot):
+    """Extract one slot's KV row (for completion hand-off or migration)."""
+    L, B, n_kv, M, hd = k_cache.shape
+    k = jax.lax.dynamic_slice(k_cache, (0, slot, 0, 0, 0), (L, 1, n_kv, M, hd))
+    v = jax.lax.dynamic_slice(v_cache, (0, slot, 0, 0, 0), (L, 1, n_kv, M, hd))
+    return k[:, 0], v[:, 0]

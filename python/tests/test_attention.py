@@ -1,0 +1,210 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the exact configurations
+the AOT artifacts are built with (the CORE correctness signal for the
+serving path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention
+# ---------------------------------------------------------------------------
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("batch", [1, 4, 8])
+    @pytest.mark.parametrize("max_len", [64, 256])
+    def test_matches_ref_artifact_shapes(self, batch, max_len):
+        """The exact (n_q=6, n_kv=3, d=64) config compiled into artifacts."""
+        q = _rand(1, (batch, 6, 64), jnp.float32)
+        k = _rand(2, (batch, 3, max_len, 64), jnp.float32)
+        v = _rand(3, (batch, 3, max_len, 64), jnp.float32)
+        lens = jnp.arange(1, batch + 1, dtype=jnp.int32) * (max_len // batch)
+        out = A.decode_attention(q, k, v, lens)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_length_one(self):
+        """Shortest possible valid KV (freshly prefilled single token)."""
+        q = _rand(1, (2, 4, 32), jnp.float32)
+        k = _rand(2, (2, 2, 128, 32), jnp.float32)
+        v = _rand(3, (2, 2, 128, 32), jnp.float32)
+        lens = jnp.array([1, 1], jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_full_cache(self):
+        """KV cache completely full (length == max_len)."""
+        q = _rand(1, (1, 4, 64), jnp.float32)
+        k = _rand(2, (1, 4, 256, 64), jnp.float32)
+        v = _rand(3, (1, 4, 256, 64), jnp.float32)
+        lens = jnp.array([256], jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_zero_length_slot_yields_finite(self):
+        """Empty batch slots must produce zeros, never NaN (coordinator
+        relies on this for padded decode batches)."""
+        q = _rand(1, (2, 4, 32), jnp.float32)
+        k = _rand(2, (2, 2, 64, 32), jnp.float32)
+        v = _rand(3, (2, 2, 64, 32), jnp.float32)
+        lens = jnp.array([0, 5], jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        assert np.isfinite(np.asarray(out)).all()
+        assert np.allclose(np.asarray(out[0]), 0.0)
+
+    def test_mask_ignores_garbage_tail(self):
+        """Bytes beyond `length` must not affect the result (paged-cache
+        invariant: stale KV from evicted requests is invisible)."""
+        q = _rand(1, (1, 4, 32), jnp.float32)
+        k = _rand(2, (1, 2, 128, 32), jnp.float32)
+        v = _rand(3, (1, 2, 128, 32), jnp.float32)
+        lens = jnp.array([40], jnp.int32)
+        out1 = A.decode_attention(q, k, v, lens)
+        k2 = k.at[:, :, 40:].set(1e9)
+        v2 = v.at[:, :, 40:].set(-1e9)
+        out2 = A.decode_attention(q, k2, v2, lens)
+        np.testing.assert_allclose(out1, out2, rtol=0, atol=0)
+
+    @pytest.mark.parametrize("block_k", [16, 32, 128])
+    def test_block_size_invariance(self, block_k):
+        """Tiling must not change the math."""
+        q = _rand(1, (2, 8, 64), jnp.float32)
+        k = _rand(2, (2, 4, 128, 64), jnp.float32)
+        v = _rand(3, (2, 4, 128, 64), jnp.float32)
+        lens = jnp.array([77, 128], jnp.int32)
+        out = A.decode_attention(q, k, v, lens, block_k=block_k)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_bfloat16(self):
+        q = _rand(1, (2, 4, 64), jnp.bfloat16)
+        k = _rand(2, (2, 2, 64, 64), jnp.bfloat16)
+        v = _rand(3, (2, 2, 64, 64), jnp.bfloat16)
+        lens = jnp.array([33, 64], jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   **_tol(jnp.bfloat16))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 5),
+        n_kv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([16, 32, 64]),
+        max_len=st.sampled_from([32, 64, 160]),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, batch, n_kv, group, d, max_len, data):
+        n_q = n_kv * group
+        lens_list = data.draw(st.lists(
+            st.integers(1, max_len), min_size=batch, max_size=batch))
+        q = _rand(1, (batch, n_q, d), jnp.float32)
+        k = _rand(2, (batch, n_kv, max_len, d), jnp.float32)
+        v = _rand(3, (batch, n_kv, max_len, d), jnp.float32)
+        lens = jnp.array(lens_list, jnp.int32)
+        out = A.decode_attention(q, k, v, lens)
+        ref = R.decode_attention_ref(q, k, v, lens)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Prefill attention
+# ---------------------------------------------------------------------------
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("seq", [16, 32, 64, 128])
+    def test_matches_ref_artifact_shapes(self, seq):
+        q = _rand(1, (1, 6, seq, 64), jnp.float32)
+        k = _rand(2, (1, 3, seq, 64), jnp.float32)
+        v = _rand(3, (1, 3, seq, 64), jnp.float32)
+        out = A.prefill_attention(q, k, v)
+        ref = R.prefill_attention_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_causality(self):
+        """Changing future tokens must not change past outputs."""
+        seq = 64
+        q = _rand(1, (1, 4, seq, 32), jnp.float32)
+        k = _rand(2, (1, 2, seq, 32), jnp.float32)
+        v = _rand(3, (1, 2, seq, 32), jnp.float32)
+        out1 = A.prefill_attention(q, k, v)
+        k2 = k.at[:, :, 48:].add(7.0)
+        v2 = v.at[:, :, 48:].add(-3.0)
+        out2 = A.prefill_attention(q, k2, v2)
+        np.testing.assert_allclose(out1[:, :, :48], out2[:, :, :48],
+                                   rtol=0, atol=0)
+
+    @pytest.mark.parametrize("bq,bk", [(16, 16), (32, 16), (64, 64), (128, 32)])
+    def test_block_size_invariance(self, bq, bk):
+        q = _rand(1, (1, 4, 128, 32), jnp.float32)
+        k = _rand(2, (1, 2, 128, 32), jnp.float32)
+        v = _rand(3, (1, 2, 128, 32), jnp.float32)
+        out = A.prefill_attention(q, k, v, block_q=bq, block_k=bk)
+        ref = R.prefill_attention_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, **_tol(jnp.float32))
+
+    def test_single_token_prompt(self):
+        q = _rand(1, (1, 2, 1, 16), jnp.float32)
+        k = _rand(2, (1, 1, 1, 16), jnp.float32)
+        v = _rand(3, (1, 1, 1, 16), jnp.float32)
+        out = A.prefill_attention(q, k, v)
+        # Single causal position attends only to itself: out == v broadcast.
+        np.testing.assert_allclose(
+            np.asarray(out[0, 0, 0]), np.asarray(v[0, 0, 0]), rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        batch=st.integers(1, 3),
+        n_kv=st.sampled_from([1, 2, 3]),
+        group=st.sampled_from([1, 2]),
+        d=st.sampled_from([16, 64]),
+        seq=st.sampled_from([8, 24, 64, 96]),
+    )
+    def test_hypothesis_sweep(self, batch, n_kv, group, d, seq):
+        n_q = n_kv * group
+        q = _rand(11, (batch, n_q, seq, d), jnp.float32)
+        k = _rand(12, (batch, n_kv, seq, d), jnp.float32)
+        v = _rand(13, (batch, n_kv, seq, d), jnp.float32)
+        out = A.prefill_attention(q, k, v)
+        ref = R.prefill_attention_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_prefill_vs_decode_consistency(self):
+        """Flash prefill and per-token decode must agree on the same data:
+        row i of the prefill output == decode attention with length i+1."""
+        seq, n_kv, group, d = 16, 2, 2, 32
+        n_q = n_kv * group
+        q = _rand(1, (1, n_q, seq, d), jnp.float32)
+        k = _rand(2, (1, n_kv, seq, d), jnp.float32)
+        v = _rand(3, (1, n_kv, seq, d), jnp.float32)
+        pre = A.prefill_attention(q, k, v)
+        for i in [0, 7, 15]:
+            dec = A.decode_attention(
+                q[:, :, i, :], k, v, jnp.array([i + 1], jnp.int32))
+            np.testing.assert_allclose(dec[0], pre[0, :, i], rtol=1e-4,
+                                       atol=1e-4)

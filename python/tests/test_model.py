@@ -1,0 +1,168 @@
+"""L2 model correctness: prefill/decode consistency, KV migration
+primitives, shape contracts the Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(n_layers=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 0)
+
+
+def _empty_caches(cfg, batch):
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, cfg.max_len, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def _insert(cfg, kcb, vcb, kc, vc, slot):
+    """Host-style slot insert (what the Rust KV manager does)."""
+    seq = kc.shape[2]
+    pad = cfg.max_len - seq
+    kreq = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vreq = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return M.kv_write_slot(kcb, vcb, kreq, vreq, jnp.int32(slot))
+
+
+class TestPrefill:
+    def test_shapes(self, params):
+        toks = jnp.arange(8, dtype=jnp.int32)[None] % CFG.vocab
+        logits, k, v = M.prefill(CFG, params, toks)
+        assert logits.shape == (1, CFG.vocab)
+        assert k.shape == (CFG.n_layers, CFG.n_kv_heads, 8, CFG.head_dim)
+        assert v.shape == k.shape
+
+    def test_deterministic(self, params):
+        toks = jnp.arange(6, dtype=jnp.int32)[None]
+        a = M.prefill(CFG, params, toks)
+        b = M.prefill(CFG, params, toks)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_padded_bucket_matches_exact(self, params):
+        """Right-padding to a bucket with the true `length` passed in must
+        reproduce the unpadded logits and KV prefix exactly — the Rust
+        runtime relies on this for bucketed prefill."""
+        toks = jnp.array([[9, 8, 7, 6, 5]], jnp.int32)
+        exact_logits, exact_k, exact_v = M.prefill(CFG, params, toks)
+        padded = jnp.pad(toks, ((0, 0), (0, 11)))  # bucket of 16
+        pl, pk, pv = M.prefill(CFG, params, padded, jnp.int32(5))
+        np.testing.assert_allclose(np.asarray(pl), np.asarray(exact_logits),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(pk[:, :, :5]),
+                                   np.asarray(exact_k), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(pv[:, :, :5]),
+                                   np.asarray(exact_v), rtol=1e-5, atol=1e-5)
+
+    def test_prompt_sensitivity(self, params):
+        a = M.prefill(CFG, params, jnp.array([[1, 2, 3, 4]], jnp.int32))
+        b = M.prefill(CFG, params, jnp.array([[1, 2, 3, 5]], jnp.int32))
+        assert not np.allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+
+class TestDecodeStep:
+    def test_incremental_matches_prefill(self, params):
+        """Gold consistency: prefill(t[0..n]) last logits == decode of
+        token n over the cache of prefill(t[0..n-1])."""
+        toks = (jnp.arange(8, dtype=jnp.int32) * 7 + 3)[None] % CFG.vocab
+        logits_full, _, _ = M.prefill(CFG, params, toks)
+        _, kc7, vc7 = M.prefill(CFG, params, toks[:, :7])
+        kcb, vcb = _empty_caches(CFG, 2)
+        kcb, vcb = _insert(CFG, kcb, vcb, kc7, vc7, 1)
+        logits_d, k_new, v_new = M.decode_step(
+            CFG, params,
+            jnp.array([0, int(toks[0, 7])], jnp.int32), kcb, vcb,
+            jnp.array([0, 7], jnp.int32))
+        np.testing.assert_allclose(np.asarray(logits_d[1]),
+                                   np.asarray(logits_full[0]),
+                                   rtol=2e-4, atol=2e-4)
+        # New KV lines must equal the full prefill's row 7.
+        _, kc8, vc8 = M.prefill(CFG, params, toks)
+        np.testing.assert_allclose(np.asarray(k_new[:, 1]),
+                                   np.asarray(kc8[:, :, 7]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_new_line_shapes(self, params):
+        B = 4
+        kcb, vcb = _empty_caches(CFG, B)
+        logits, k_new, v_new = M.decode_step(
+            CFG, params, jnp.zeros(B, jnp.int32), kcb, vcb,
+            jnp.zeros(B, jnp.int32))
+        assert logits.shape == (B, CFG.vocab)
+        assert k_new.shape == (CFG.n_layers, B, CFG.n_kv_heads, CFG.head_dim)
+        assert v_new.shape == k_new.shape
+
+    def test_empty_slots_are_finite(self, params):
+        """Garbage-in empty slots must not poison real slots with NaN."""
+        B = 2
+        kcb, vcb = _empty_caches(CFG, B)
+        _, kc, vc = M.prefill(CFG, params, jnp.array([[5, 6, 7]], jnp.int32))
+        kcb, vcb = _insert(CFG, kcb, vcb, kc, vc, 0)
+        logits, _, _ = M.decode_step(
+            CFG, params, jnp.array([3, 0], jnp.int32), kcb, vcb,
+            jnp.array([3, 0], jnp.int32))
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_slot_isolation(self, params):
+        """Decoding slot 0 must not depend on slot 1's contents."""
+        _, kc, vc = M.prefill(CFG, params, jnp.array([[5, 6, 7]], jnp.int32))
+        kcb1, vcb1 = _empty_caches(CFG, 2)
+        kcb1, vcb1 = _insert(CFG, kcb1, vcb1, kc, vc, 0)
+        kcb2 = kcb1.at[:, 1].set(123.0)
+        vcb2 = vcb1.at[:, 1].set(-42.0)
+        toks = jnp.array([3, 9], jnp.int32)
+        lens = jnp.array([3, 4], jnp.int32)
+        l1, _, _ = M.decode_step(CFG, params, toks, kcb1, vcb1, lens)
+        l2, _, _ = M.decode_step(CFG, params, toks, kcb2, vcb2, lens)
+        np.testing.assert_array_equal(np.asarray(l1[0]), np.asarray(l2[0]))
+
+
+class TestKvSlots:
+    def test_write_read_roundtrip(self, params):
+        _, kc, vc = M.prefill(CFG, params,
+                              jnp.arange(5, dtype=jnp.int32)[None])
+        kcb, vcb = _empty_caches(CFG, 4)
+        kcb, vcb = _insert(CFG, kcb, vcb, kc, vc, 2)
+        kr, vr = M.kv_read_slot(kcb, vcb, jnp.int32(2))
+        np.testing.assert_array_equal(np.asarray(kr[:, :, :5]),
+                                      np.asarray(kc))
+        np.testing.assert_array_equal(np.asarray(vr[:, :, :5]),
+                                      np.asarray(vc))
+
+    def test_write_does_not_touch_other_slots(self, params):
+        kcb, vcb = _empty_caches(CFG, 3)
+        kcb = kcb + 7.0
+        _, kc, vc = M.prefill(CFG, params, jnp.array([[1, 2]], jnp.int32))
+        kcb2, _ = _insert(CFG, kcb, vcb, kc, vc, 1)
+        np.testing.assert_array_equal(np.asarray(kcb2[:, 0]),
+                                      np.asarray(kcb[:, 0]))
+        np.testing.assert_array_equal(np.asarray(kcb2[:, 2]),
+                                      np.asarray(kcb[:, 2]))
+
+
+class TestParamContract:
+    def test_param_shapes_order_is_stable(self):
+        """The Rust runtime replays this exact order from manifest.json."""
+        names = [n for n, _ in CFG.param_shapes()]
+        assert names[0] == "embed"
+        assert names[-2:] == ["final_norm", "lm_head"]
+        assert names[1:10] == [
+            "layer0.attn_norm", "layer0.wq", "layer0.wk", "layer0.wv",
+            "layer0.wo", "layer0.ffn_norm", "layer0.w_gate", "layer0.w_up",
+            "layer0.w_down"]
+
+    def test_param_count_matches_shapes(self):
+        total = sum(int(np.prod(s)) for _, s in CFG.param_shapes())
+        assert total == CFG.param_count()
+
+    def test_presets_valid(self):
+        for name, cfg in M.PRESETS.items():
+            assert cfg.n_q_heads % cfg.n_kv_heads == 0, name
+            assert cfg.param_count() > 0

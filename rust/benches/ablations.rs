@@ -1,0 +1,13 @@
+//! Bench target: AcceLLM design ablations (redundancy / rebalancing /
+//! flip damping) — extension beyond the paper's own evaluation.
+fn main() {
+    let t0 = std::time::Instant::now();
+    std::fs::create_dir_all("results").unwrap();
+    for f in [accellm::eval::ablation_mechanisms(),
+              accellm::eval::ablation_flip_slack()] {
+        std::fs::write(format!("results/{}.csv", f.id), f.to_csv()).unwrap();
+        f.print();
+        println!();
+    }
+    eprintln!("[bench ablations] regenerated in {:?}", t0.elapsed());
+}

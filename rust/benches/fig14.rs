@@ -1,0 +1,10 @@
+//! Bench target: regenerate paper fig14 (see DESIGN.md §5 for the
+//! workload/parameters) and write results/fig14.csv.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let f = accellm::eval::figure_by_id("fig14").expect("known figure id");
+    std::fs::create_dir_all("results").unwrap();
+    std::fs::write(format!("results/{}.csv", f.id), f.to_csv()).unwrap();
+    f.print();
+    eprintln!("[bench fig14] {} rows regenerated in {:?}", f.rows.len(), t0.elapsed());
+}

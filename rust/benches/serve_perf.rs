@@ -1,0 +1,61 @@
+//! L1/L2 perf bench over the REAL artifacts: PJRT prefill latency per
+//! bucket and decode-step latency/throughput per compiled batch size.
+//! Skips gracefully when artifacts/ has not been built.
+//!
+//! These are the numbers behind EXPERIMENTS.md §Perf (CPU-PJRT testbed;
+//! TPU projections are derived analytically in DESIGN.md §8).
+
+use std::path::Path;
+use std::time::Instant;
+
+use accellm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[bench serve_perf] artifacts/ missing — run `make \
+                   artifacts`; skipping");
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let engine = Engine::load(Path::new("artifacts"))?;
+    eprintln!("[bench serve_perf] engine load+compile: {:?}", t0.elapsed());
+    let m = engine.model().clone();
+
+    println!("-- prefill latency per bucket (batch=1) --");
+    println!("{:>7} | {:>10} | {:>10}", "bucket", "ms (best)", "tok/s");
+    for bucket in engine.prefill_buckets() {
+        let tokens: Vec<i32> = (0..bucket as i32).map(|i| 1 + i % 200).collect();
+        let mut best = f64::INFINITY;
+        for _ in 0..5 {
+            let t = Instant::now();
+            let out = engine.prefill(&tokens)?;
+            std::hint::black_box(&out.logits);
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        println!("{:>7} | {:>10.2} | {:>10.0}", bucket, best * 1e3,
+                 bucket as f64 / best);
+    }
+
+    println!("-- decode step latency per compiled batch --");
+    println!("{:>6} | {:>10} | {:>12} | {:>14}",
+             "batch", "ms (best)", "tok/s", "upload MB/step");
+    for batch in engine.decode_batches() {
+        let cache = m.n_layers * batch * m.n_kv_heads * m.max_len * m.head_dim;
+        let k = vec![0.01f32; cache];
+        let v = vec![0.02f32; cache];
+        let toks = vec![42i32; batch];
+        let lens = vec![37i32; batch];
+        let mut best = f64::INFINITY;
+        for _ in 0..8 {
+            let t = Instant::now();
+            let out = engine.decode_step(batch, &toks, &k, &v, &lens)?;
+            std::hint::black_box(&out.logits);
+            best = best.min(t.elapsed().as_secs_f64());
+        }
+        println!("{:>6} | {:>10.2} | {:>12.0} | {:>14.1}",
+                 batch, best * 1e3, batch as f64 / best,
+                 2.0 * cache as f64 * 4.0 / 1e6);
+    }
+    eprintln!("[bench serve_perf] done in {:?}", t0.elapsed());
+    Ok(())
+}

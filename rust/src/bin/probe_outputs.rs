@@ -1,0 +1,27 @@
+// Empirical probe: how does the xla crate return tuple outputs?
+// (one tuple buffer vs one buffer per leaf) — decides the runtime design.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("artifacts/kv_read_b4.hlo.txt")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    // kv_read(k_cache[6,4,3,256,64], v_cache, slot) -> (k[6,3,256,64], v)
+    let n = 6 * 4 * 3 * 256 * 64;
+    let k = vec![1f32; n];
+    let kb = client.buffer_from_host_buffer(&k, &[6, 4, 3, 256, 64], None)?;
+    let vb = client.buffer_from_host_buffer(&k, &[6, 4, 3, 256, 64], None)?;
+    let slot = client.buffer_from_host_buffer(&[1i32], &[], None)?;
+    let t0 = std::time::Instant::now();
+    let out = exe.execute_b(&[&kb, &vb, &slot])?;
+    println!("replicas={} outputs_per_replica={}", out.len(), out[0].len());
+    for (i, b) in out[0].iter().enumerate() {
+        println!("  out[{}] shape={:?}", i, b.on_device_shape()?);
+    }
+    println!("exec time {:?}", t0.elapsed());
+    // Can we feed an output buffer back in as an input?
+    let out2 = exe.execute_b(&[&kb, &vb, &slot])?;
+    drop(out2);
+    Ok(())
+}

@@ -1,0 +1,38 @@
+// End-to-end smoke test: serve a handful of real requests through the
+// PJRT model under each policy.
+use std::time::Duration;
+
+use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
+
+fn main() -> anyhow::Result<()> {
+    let policy = std::env::args().nth(1).unwrap_or_else(|| "accellm".into());
+    let policy = ServePolicy::by_name(&policy).expect("bad policy");
+    let n: usize = std::env::args().nth(2).map(|s| s.parse().unwrap()).unwrap_or(2);
+    let cfg = ClusterConfig {
+        artifacts_dir: "artifacts".into(),
+        n_instances: n,
+        policy,
+        slots: 8,
+    };
+    let prompts = [
+        "The quick brown fox jumps over the lazy dog.",
+        "In a distributed serving system, the KV cache",
+        "Redundancy for load balancing",
+        "pair instances can flip roles",
+        "prefill is compute bound while decode is bandwidth bound",
+        "hello world",
+    ];
+    let reqs: Vec<ServeRequest> = (0..12)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: prompts[i % prompts.len()].to_string(),
+            max_new_tokens: 20 + (i % 3) * 10,
+            arrival_offset: Duration::from_millis(150 * i as u64),
+        })
+        .collect();
+    let report = serve_trace(&cfg, &reqs)?;
+    report.print_summary();
+    assert_eq!(report.completed, reqs.len());
+    println!("smoke_serve OK");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Minimal CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `accellm <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument '{arg}'"));
+            };
+            // `--key=value` or `--key value` or bare switch.
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                out.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("simulate --rate 8 --device h100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get("rate"), Some("8"));
+        assert_eq!(a.get("device"), Some("h100"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("figures --fig=fig11 --out=results");
+        assert_eq!(a.get("fig"), Some("fig11"));
+        assert_eq!(a.get("out"), Some("results"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("simulate --rate 8.5 --instances 16");
+        assert_eq!(a.get_f64("rate", 1.0).unwrap(), 8.5);
+        assert_eq!(a.get_usize("instances", 4).unwrap(), 16);
+        assert_eq!(a.get_usize("missing", 4).unwrap(), 4);
+        assert!(a.get_f64("instances", 0.0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = parse("x --rate abc");
+        assert!(a.get_f64("rate", 1.0).is_err());
+    }
+
+    #[test]
+    fn positional_after_flags_rejected() {
+        assert!(Args::parse(
+            ["sim", "--a", "1", "stray"].map(String::from)).is_err()
+            || Args::parse(["sim", "--a", "1", "stray"].map(String::from))
+                .unwrap()
+                .get("a")
+                == Some("1")); // "stray" consumed as value of nothing => err
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,161 @@
+//! Config-file support: JSON experiment descriptions for `simulate` /
+//! `serve` / sweeps, so full evaluation campaigns are reproducible from
+//! a checked-in file instead of CLI flags.
+//!
+//! ```json
+//! {
+//!   "kind": "simulate",
+//!   "scheduler": "accellm",
+//!   "device": "h100",
+//!   "workload": "mixed",
+//!   "instances": 4,
+//!   "rates": [2, 5, 8, 11],
+//!   "duration": 60,
+//!   "seed": 7,
+//!   "interconnect_gbs": 900
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sim::{DeviceSpec, InstanceSpec, PerfModel, SimConfig, LLAMA2_70B};
+use crate::util::json::Json;
+use crate::workload::WorkloadSpec;
+
+/// A parsed experiment description.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub kind: String,
+    pub scheduler: String,
+    pub device: DeviceSpec,
+    pub workload: WorkloadSpec,
+    pub instances: usize,
+    pub rates: Vec<f64>,
+    pub duration: f64,
+    pub seed: u64,
+    /// Interconnect override in bytes/s.
+    pub interconnect_bw: Option<f64>,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            kind: "simulate".into(),
+            scheduler: "accellm".into(),
+            device: crate::sim::H100,
+            workload: crate::workload::MIXED,
+            instances: 4,
+            rates: vec![8.0],
+            duration: 60.0,
+            seed: 7,
+            interconnect_bw: None,
+        }
+    }
+}
+
+impl Experiment {
+    pub fn from_file(path: &Path) -> Result<Experiment> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Experiment> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let mut exp = Experiment::default();
+        if let Some(v) = j.get("kind").and_then(|x| x.as_str()) {
+            exp.kind = v.to_string();
+        }
+        if let Some(v) = j.get("scheduler").and_then(|x| x.as_str()) {
+            exp.scheduler = v.to_string();
+        }
+        if let Some(v) = j.get("device").and_then(|x| x.as_str()) {
+            exp.device = DeviceSpec::by_name(v)
+                .ok_or_else(|| anyhow!("unknown device '{v}'"))?;
+        }
+        if let Some(v) = j.get("workload").and_then(|x| x.as_str()) {
+            exp.workload = WorkloadSpec::by_name(v)
+                .ok_or_else(|| anyhow!("unknown workload '{v}'"))?;
+        }
+        if let Some(v) = j.get("instances").and_then(|x| x.as_usize()) {
+            exp.instances = v;
+        }
+        if let Some(arr) = j.get("rates").and_then(|x| x.as_arr()) {
+            exp.rates = arr.iter().filter_map(|x| x.as_f64()).collect();
+        } else if let Some(r) = j.get("rate").and_then(|x| x.as_f64()) {
+            exp.rates = vec![r];
+        }
+        if let Some(v) = j.get("duration").and_then(|x| x.as_f64()) {
+            exp.duration = v;
+        }
+        if let Some(v) = j.get("seed").and_then(|x| x.as_u64()) {
+            exp.seed = v;
+        }
+        if let Some(v) = j.get("interconnect_gbs").and_then(|x| x.as_f64()) {
+            exp.interconnect_bw = Some(v * 1e9);
+        }
+        if exp.instances == 0 || exp.rates.is_empty() || exp.duration <= 0.0 {
+            return Err(anyhow!("config: instances/rates/duration invalid"));
+        }
+        Ok(exp)
+    }
+
+    /// Simulator config for this experiment.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            model: PerfModel::new(InstanceSpec::new(self.device), LLAMA2_70B),
+            n_instances: self.instances,
+            interconnect_bw: self.interconnect_bw,
+            record_timeline: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let e = Experiment::from_json_text(
+            r#"{"kind":"simulate","scheduler":"splitwise","device":"910b2",
+                "workload":"heavy","instances":8,"rates":[2,4,6],
+                "duration":30,"seed":9,"interconnect_gbs":100}"#,
+        )
+        .unwrap();
+        assert_eq!(e.scheduler, "splitwise");
+        assert_eq!(e.device.name, "910B2");
+        assert_eq!(e.workload.name, "heavy");
+        assert_eq!(e.instances, 8);
+        assert_eq!(e.rates, vec![2.0, 4.0, 6.0]);
+        assert_eq!(e.interconnect_bw, Some(100e9));
+    }
+
+    #[test]
+    fn defaults_fill_gaps() {
+        let e = Experiment::from_json_text(r#"{"rate": 12}"#).unwrap();
+        assert_eq!(e.scheduler, "accellm");
+        assert_eq!(e.device.name, "H100");
+        assert_eq!(e.rates, vec![12.0]);
+    }
+
+    #[test]
+    fn rejects_bad_device_and_values() {
+        assert!(Experiment::from_json_text(r#"{"device":"tpu9"}"#).is_err());
+        assert!(Experiment::from_json_text(r#"{"instances":0}"#).is_err());
+        assert!(Experiment::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn sim_config_wires_through() {
+        let e = Experiment::from_json_text(
+            r#"{"device":"h100","instances":16,"interconnect_gbs":50}"#,
+        )
+        .unwrap();
+        let c = e.sim_config();
+        assert_eq!(c.n_instances, 16);
+        assert_eq!(c.interconnect_bw, Some(50e9));
+    }
+}

@@ -1,0 +1,559 @@
+//! AcceLLM: redundancy-based serving (paper Section 4).
+//!
+//! Instances are organized in pairs (Section 4.2.1).  Every request's KV
+//! cache is kept on BOTH pair members — one primary, one continuously-
+//! updated replica (Section 4.1.2) — which buys three things:
+//!
+//! 1. **Dynamic instances** (4.1.1): when prompts arrive, one pair member
+//!    flips to prefill *at a step boundary* while its partner absorbs the
+//!    whole decode load by promoting its replicas to primaries — a role
+//!    conversion with ZERO KV migration.  When no prompts are pending the
+//!    instance flips back and the pair rebalances, again free of charge.
+//! 2. **No prefill/decode interference**: an instance never serves both
+//!    phases in one step, so decode TBT has no Figure 5 spikes; and the
+//!    pair keeps decoding during prefill, so decodes do not stall either
+//!    (as long as replicas exist — under memory pressure the scheduler
+//!    degrades gracefully by evicting replicas, Section 4.2.5).
+//! 3. **Load balancing** (4.1.3): after every role change the pair
+//!    equalizes per-instance batch size and total KV length by swapping
+//!    primary/replica roles instead of moving bytes.
+//!
+//! Replica freshness is maintained by streaming each newly generated KV
+//! line to the partner (metered by the engine as ReplicaUpdate traffic);
+//! the prefill→partner replica copy is per-layer pipelined (4.2.4), so
+//! only the residual beyond the prefill compute lands on the critical
+//! path.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::set_kv_tokens;
+use crate::sim::{InstId, ReqId, Role, Scheduler, SimCtx, Work, XferKind};
+
+/// Prompts folded into one prefill work item.
+const MAX_PREFILL_BATCH: usize = 8;
+
+/// A pair member only flips to prefill when prompts have queued long
+/// enough (or enough of them wait) to amortize the role conversion —
+/// without this, a saturated pair thrashes between roles at every step
+/// boundary, decoding in tiny inefficient batches in between.  25 ms is
+/// well under any TTFT target and ~2 decode steps long.
+const FLIP_SLACK_S: f64 = 0.015;
+const FLIP_QUEUE_LEN: usize = 4;
+
+pub struct AcceLlm {
+    /// pair p = instances (2p, 2p+1).
+    n_pairs: usize,
+    /// Keep redundant replicas (ablation: without them, role flips
+    /// cannot migrate decodes and paused requests stall — paper Case A).
+    replicate: bool,
+    /// Rebalance pair decode sets after role changes (ablation).
+    rebalance: bool,
+    /// Flip-damping window in seconds (ablation sweep).
+    flip_slack: f64,
+    /// Per-instance decode sets (requests whose KV *primary* is here).
+    sets: Vec<Vec<ReqId>>,
+    /// Per-pair prompt queues.
+    queues: Vec<VecDeque<ReqId>>,
+    /// Per-instance list of requests with a replica here (eviction index).
+    replicas_on: Vec<Vec<ReqId>>,
+    /// Requests whose prefill→partner replica stream is still in flight:
+    /// (req, prefill instance).
+    in_handoff: Vec<(ReqId, InstId)>,
+    /// Per-instance flag: currently serving prefill work.
+    prefilling: Vec<bool>,
+}
+
+impl AcceLlm {
+    pub fn new(n_instances: usize) -> Self {
+        assert!(n_instances >= 2 && n_instances % 2 == 0,
+                "AcceLLM requires an even number of instances (pairs)");
+        AcceLlm {
+            n_pairs: n_instances / 2,
+            replicate: true,
+            rebalance: true,
+            flip_slack: FLIP_SLACK_S,
+            sets: vec![Vec::new(); n_instances],
+            queues: vec![VecDeque::new(); n_instances / 2],
+            replicas_on: vec![Vec::new(); n_instances],
+            in_handoff: Vec::new(),
+            prefilling: vec![false; n_instances],
+        }
+    }
+
+    /// Ablation variant: dynamic pairs WITHOUT redundant replicas.
+    pub fn without_redundancy(n_instances: usize) -> Self {
+        let mut s = Self::new(n_instances);
+        s.replicate = false;
+        s
+    }
+
+    /// Ablation variant: redundancy but NO intra-pair rebalancing.
+    pub fn without_rebalance(n_instances: usize) -> Self {
+        let mut s = Self::new(n_instances);
+        s.rebalance = false;
+        s
+    }
+
+    /// Ablation variant: custom flip-damping window.
+    pub fn with_flip_slack(n_instances: usize, slack_s: f64) -> Self {
+        let mut s = Self::new(n_instances);
+        s.flip_slack = slack_s;
+        s
+    }
+
+    pub fn partner(inst: InstId) -> InstId {
+        inst ^ 1
+    }
+
+    pub fn pair_of(inst: InstId) -> usize {
+        inst / 2
+    }
+
+    /// Pair with the most free KV memory receives the next prompt
+    /// (Section 4.2.2: "among available pairs, the one with the most
+    /// free space handles the next prefill").
+    fn pick_pair(&self, ctx: &SimCtx) -> usize {
+        (0..self.n_pairs)
+            .max_by(|&a, &b| {
+                let fa = ctx.free_bytes(2 * a) + ctx.free_bytes(2 * a + 1);
+                let fb = ctx.free_bytes(2 * b) + ctx.free_bytes(2 * b + 1);
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .expect("no pairs")
+    }
+
+    /// May `inst` take prefill work now?  Only when idle, and only if its
+    /// partner keeps decoding (or there is nothing to decode in the pair)
+    /// — the no-interference rule.
+    fn can_prefill(&self, ctx: &SimCtx, inst: InstId) -> bool {
+        if ctx.is_busy(inst) || self.prefilling[inst] {
+            return false;
+        }
+        let partner = Self::partner(inst);
+        let pair_has_decode =
+            !self.sets[inst].is_empty() || !self.sets[partner].is_empty();
+        !(self.prefilling[partner] && pair_has_decode)
+    }
+
+    /// Flip `inst` to prefill: hand its decode set to the partner by
+    /// promoting replicas (zero transfer), then start the prompt batch.
+    fn start_prefill_on(&mut self, ctx: &mut SimCtx, inst: InstId) {
+        let pair = Self::pair_of(inst);
+        let partner = Self::partner(inst);
+        debug_assert!(!ctx.is_busy(inst));
+
+        // Migrate decodable requests to the partner (replica promotion).
+        let set = std::mem::take(&mut self.sets[inst]);
+        let mut kept = Vec::new();
+        for r in set {
+            if ctx.requests[r].has_replica_on(partner) {
+                ctx.swap_primary_with_replica(r, partner);
+                // Bookkeeping: replica moved sides.
+                self.replicas_on[partner].retain(|&x| x != r);
+                self.replicas_on[inst].push(r);
+                self.sets[partner].push(r);
+            } else {
+                // No replica (memory pressure): the request pauses until
+                // this instance returns to decoding.
+                kept.push(r);
+            }
+        }
+        self.sets[inst] = kept;
+
+        let n = self.queues[pair].len().min(MAX_PREFILL_BATCH);
+        let reqs: Vec<ReqId> = self.queues[pair].drain(..n).collect();
+        for &r in &reqs {
+            ctx.place_primary(r, inst);
+        }
+        self.prefilling[inst] = true;
+        ctx.set_role(inst, Role::Prefill);
+        ctx.start_prefill(inst, reqs);
+        // The partner may have just received work while idle.
+        self.kick_decode(ctx, partner);
+    }
+
+    fn kick_decode(&mut self, ctx: &mut SimCtx, inst: InstId) {
+        if ctx.is_busy(inst) || self.prefilling[inst] || self.sets[inst].is_empty() {
+            return;
+        }
+        let batch = crate::coordinator::capped_batch(&self.sets[inst]);
+        ctx.start_decode_step(inst, batch, vec![]);
+    }
+
+    /// Should this pair convert a member to prefill now?  Yes when the
+    /// backlog is worth the flip, or the oldest prompt has waited past
+    /// the slack, or the pair has nothing to decode anyway.
+    fn flip_worthwhile(&self, ctx: &SimCtx, pair: usize) -> bool {
+        let q = &self.queues[pair];
+        if q.is_empty() {
+            return false;
+        }
+        if q.len() >= FLIP_QUEUE_LEN {
+            return true;
+        }
+        let (a, b) = (2 * pair, 2 * pair + 1);
+        if self.sets[a].is_empty() && self.sets[b].is_empty() {
+            return true; // idle pair: serve immediately
+        }
+        let oldest = ctx.requests[*q.front().unwrap()].arrival;
+        ctx.now - oldest >= self.flip_slack
+    }
+
+    /// Try to start prefill somewhere in the pair.
+    fn kick_pair(&mut self, ctx: &mut SimCtx, pair: usize) {
+        while self.flip_worthwhile(ctx, pair) {
+            let (a, b) = (2 * pair, 2 * pair + 1);
+            // Prefer the member with the smaller decode set (cheaper flip).
+            let first = if self.sets[a].len() <= self.sets[b].len() { a } else { b };
+            let second = Self::partner(first);
+            if self.can_prefill(ctx, first) {
+                self.start_prefill_on(ctx, first);
+            } else if self.can_prefill(ctx, second) {
+                self.start_prefill_on(ctx, second);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Equalize the pair's decode sets by request count, preferring swaps
+    /// that also narrow the KV-length gap (Section 4.1.3).  Only requests
+    /// with a replica on the other side can move (the move is then free).
+    fn rebalance_pair(&mut self, ctx: &mut SimCtx, pair: usize) {
+        let (a, b) = (2 * pair, 2 * pair + 1);
+        if !self.rebalance || self.prefilling[a] || self.prefilling[b] {
+            return; // only balance when both members decode
+        }
+        loop {
+            let (big, small) = if self.sets[a].len() > self.sets[b].len() {
+                (a, b)
+            } else {
+                (b, a)
+            };
+            if self.sets[big].len() - self.sets[small].len() <= 1 {
+                break;
+            }
+            // A busy instance's in-flight step already holds a snapshot of
+            // its batch; shedding a request now would let both instances
+            // decode it in the same interval.  Only shed from idle members.
+            if ctx.is_busy(big) {
+                break;
+            }
+            // Movable = has replica on `small`; choose the one whose move
+            // best narrows the token imbalance.
+            let tok_big = set_kv_tokens(ctx, &self.sets[big]) as i64;
+            let tok_small = set_kv_tokens(ctx, &self.sets[small]) as i64;
+            let gap = tok_big - tok_small;
+            let mut best: Option<(usize, i64)> = None;
+            for (i, &r) in self.sets[big].iter().enumerate() {
+                if !ctx.requests[r].has_replica_on(small) {
+                    continue;
+                }
+                let t = ctx.kv_tokens(r) as i64;
+                let new_gap = (gap - 2 * t).abs();
+                if best.map_or(true, |(_, g)| new_gap < g) {
+                    best = Some((i, new_gap));
+                }
+            }
+            let Some((idx, _)) = best else { break };
+            let r = self.sets[big].swap_remove(idx);
+            ctx.swap_primary_with_replica(r, small);
+            self.replicas_on[small].retain(|&x| x != r);
+            self.replicas_on[big].push(r);
+            self.sets[small].push(r);
+        }
+    }
+
+    /// Ensure `bytes` fit on `inst` by evicting redundant replicas
+    /// (largest first — they free the most and are the cheapest loss).
+    fn make_room_for_replica(&mut self, ctx: &mut SimCtx, inst: InstId,
+                             bytes: f64) -> bool {
+        while ctx.free_bytes(inst) < bytes {
+            let victim = self.replicas_on[inst]
+                .iter()
+                .copied()
+                .max_by_key(|&r| ctx.kv_tokens(r));
+            match victim {
+                Some(r) => {
+                    ctx.drop_replica(r, inst);
+                    self.replicas_on[inst].retain(|&x| x != r);
+                }
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Prune completed requests from the scheduler-side indexes.  A
+    /// request completing on `inst` can only appear in `sets[inst]` (its
+    /// primary was there) and in the pair's replica lists — restricting
+    /// the scans keeps completion O(pair) instead of O(cluster).
+    fn forget(&mut self, inst: InstId, completed: &[ReqId]) {
+        if completed.is_empty() {
+            return;
+        }
+        let partner = Self::partner(inst);
+        self.sets[inst].retain(|r| !completed.contains(r));
+        self.replicas_on[inst].retain(|r| !completed.contains(r));
+        self.replicas_on[partner].retain(|r| !completed.contains(r));
+        self.in_handoff.retain(|(r, _)| !completed.contains(r));
+    }
+}
+
+impl Scheduler for AcceLlm {
+    fn name(&self) -> &'static str {
+        "accellm"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        assert_eq!(ctx.n_instances(), self.n_pairs * 2);
+        for i in 0..ctx.n_instances() {
+            ctx.set_role(i, Role::Decode);
+        }
+    }
+
+    fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+        ctx.pending.retain(|&r| r != req);
+        let pair = self.pick_pair(ctx);
+        self.queues[pair].push_back(req);
+        self.kick_pair(ctx, pair);
+    }
+
+    fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                    completed: Vec<ReqId>) {
+        let pair = Self::pair_of(inst);
+        self.forget(inst, &completed);
+        match work {
+            Work::Prefill { reqs } => {
+                self.prefilling[inst] = false;
+                ctx.set_role(inst, Role::Decode);
+                // Per-layer pipelined replica stream to the partner: only
+                // the residual beyond the prefill compute remains.
+                let partner = Self::partner(inst);
+                for &r in &reqs {
+                    let tokens = ctx.requests[r].prompt_len as f64;
+                    let compute = ctx.now
+                        - ctx.requests[r].prefill_start.expect("no prefill ts");
+                    ctx.start_transfer_pipelined(
+                        inst, partner, r, tokens, XferKind::PrefillHandoff,
+                        compute);
+                    self.in_handoff.push((r, inst));
+                }
+                // More prompts? keep prefilling; else return to decode.
+                self.kick_pair(ctx, pair);
+                if !self.prefilling[inst] {
+                    self.rebalance_pair(ctx, pair);
+                    self.kick_decode(ctx, inst);
+                    self.kick_decode(ctx, Self::partner(inst));
+                }
+            }
+            Work::DecodeStep { .. } => {
+                // Prompts waiting? flip at the step boundary (the partner
+                // keeps decoding via replicas — no stall, Figure 6).
+                self.kick_pair(ctx, pair);
+                if !self.prefilling[inst] {
+                    self.rebalance_pair(ctx, pair);
+                    self.kick_decode(ctx, inst);
+                }
+                // Partner may be idle with work after rebalancing.
+                self.kick_decode(ctx, Self::partner(inst));
+            }
+        }
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
+                        dst: InstId, req: ReqId) {
+        // Prefill→partner replica stream finished.
+        let Some(pos) = self.in_handoff.iter().position(|&(r, _)| r == req)
+        else {
+            return; // request completed meanwhile
+        };
+        self.in_handoff.swap_remove(pos);
+        if ctx.requests[req].is_finished() {
+            return;
+        }
+        let bytes = ctx.kv_bytes(req);
+        let replica_ok = self.replicate
+            && self.make_room_for_replica(ctx, dst, bytes);
+        if replica_ok {
+            ctx.place_replica(req, dst);
+            self.replicas_on[dst].push(req);
+        }
+        // Decode on the less-loaded *decoding* member; primary must live
+        // where decode happens (swap is free thanks to the fresh replica).
+        let primary_side = if self.prefilling[src]
+            || (replica_ok
+                && !self.prefilling[dst]
+                && self.sets[dst].len() < self.sets[src].len())
+        {
+            dst
+        } else {
+            src
+        };
+        if primary_side == dst {
+            if replica_ok {
+                ctx.swap_primary_with_replica(req, dst);
+                self.replicas_on[dst].retain(|&x| x != req);
+                self.replicas_on[src].push(req);
+            } else {
+                // No replica fit: a real migration would be required; fall
+                // back to decoding at the prefill site.
+                self.sets[src].push(req);
+                self.kick_decode(ctx, src);
+                return;
+            }
+        }
+        self.sets[primary_side].push(req);
+        self.kick_decode(ctx, primary_side);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, ASCEND_910B2, H100,
+                     LLAMA2_70B};
+    use crate::workload::{Trace, HEAVY, LIGHT, MIXED};
+
+    fn cfg_dev(n: usize, dev: crate::sim::DeviceSpec) -> SimConfig {
+        SimConfig {
+            model: PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B),
+            n_instances: n,
+            interconnect_bw: None,
+            record_timeline: true,
+        }
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        for seed in [1, 2, 3] {
+            let trace = Trace::poisson(MIXED, 5.0, 60.0, seed);
+            let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+            assert_eq!(r.completed, trace.len(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn no_prefill_interference_spikes() {
+        // Disaggregated within the pair: worst TBT stays near the mean
+        // (Figure 16, AcceLLM side).
+        let trace = Trace::poisson(MIXED, 6.0, 60.0, 11);
+        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        assert_eq!(r.completed, trace.len());
+        assert!(r.tbt_max / r.tbt_mean < 4.0,
+                "max/mean {}", r.tbt_max / r.tbt_mean);
+    }
+
+    #[test]
+    fn beats_splitwise_on_cost_efficiency() {
+        // The headline claim: ~30% more tokens/instance/s at load
+        // (Figures 11a/12a) because no instance idles.
+        use crate::coordinator::Splitwise;
+        // 20 req/s x ~510 decode tokens ≈ 10.2k tok/s: past saturation
+        // for both systems.  Splitwise decodes on 3 of 4 instances while
+        // AcceLLM decodes on all 4 (its prefill work interleaves), so at
+        // saturation throughput-per-instance differs by ≈4/3 — the ~30%
+        // gap of Figure 11(a).
+        let trace = Trace::poisson(MIXED, 20.0, 120.0, 21);
+        let acc = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        let spl = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        assert_eq!(acc.completed, trace.len());
+        assert_eq!(spl.completed, trace.len());
+        assert!(acc.cost_efficiency > 1.08 * spl.cost_efficiency,
+                "acc {} vs spl {}", acc.cost_efficiency, spl.cost_efficiency);
+        // AcceLLM drains the same trace markedly sooner (no idle prefill
+        // fleet): Figure 11(d)'s JCT gap shows up as makespan here.
+        assert!(acc.makespan < 0.95 * spl.makespan,
+                "acc makespan {} vs spl {}", acc.makespan, spl.makespan);
+    }
+
+    #[test]
+    fn prefill_faster_than_splitwise_under_load() {
+        // Figure 11(b)/12(b): dynamic prefill allocation halves prompt
+        // latency vs Splitwise's fixed single prefill instance.
+        use crate::coordinator::Splitwise;
+        let trace = Trace::poisson(MIXED, 8.0, 80.0, 23);
+        let acc = run(&cfg_dev(4, ASCEND_910B2), &trace, &mut AcceLlm::new(4));
+        let spl = run(&cfg_dev(4, ASCEND_910B2), &trace, &mut Splitwise::new(4));
+        assert!(acc.ttft_mean < 0.7 * spl.ttft_mean,
+                "acc {} spl {}", acc.ttft_mean, spl.ttft_mean);
+    }
+
+    #[test]
+    fn replica_traffic_is_metered_but_small() {
+        // Section 5.3 "Impact of Interconnect Bandwidth": replica updates
+        // are minor next to prefill hand-off.
+        let trace = Trace::poisson(MIXED, 6.0, 60.0, 29);
+        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        assert!(r.xfer_replica_bytes > 0.0);
+        assert!(r.xfer_prefill_bytes > 0.0);
+    }
+
+    #[test]
+    fn pair_sets_stay_balanced() {
+        // Property 5 (DESIGN.md §7): when both members decode, batch
+        // sizes differ by <= 1 after rebalancing.  Spot-check via a
+        // custom scheduler wrapper would be invasive; instead verify the
+        // observable: heavy workload, AcceLLM JCT beats vLLM (imbalance
+        // is vLLM's failure mode, Figure 15d).
+        use crate::coordinator::Vllm;
+        let trace = Trace::poisson(HEAVY, 3.0, 120.0, 31);
+        let acc = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        let vll = run(&cfg_dev(4, H100), &trace, &mut Vllm::new(4));
+        assert_eq!(acc.completed, trace.len());
+        assert!(acc.jct_mean < vll.jct_mean,
+                "acc {} vllm {}", acc.jct_mean, vll.jct_mean);
+    }
+
+    #[test]
+    fn light_workload_all_metrics_reasonable() {
+        let trace = Trace::poisson(LIGHT, 8.0, 60.0, 37);
+        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        assert_eq!(r.completed, trace.len());
+        assert!(r.ttft_mean < 0.5, "ttft {}", r.ttft_mean);
+        assert!(r.utilization > 0.2, "util {}", r.utilization);
+    }
+
+    #[test]
+    fn works_with_16_instances() {
+        let trace = Trace::poisson(MIXED, 20.0, 40.0, 41);
+        let r = run(&cfg_dev(16, H100), &trace, &mut AcceLlm::new(16));
+        assert_eq!(r.completed, trace.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "even number")]
+    fn rejects_odd_instance_count() {
+        AcceLlm::new(3);
+    }
+}
+#[cfg(test)]
+mod diag {
+    /// Manual calibration sweep: `cargo test diag_sweep -- --ignored --nocapture`.
+#[test]
+#[ignore]
+fn diag_sweep() {
+    use crate::coordinator::{AcceLlm, Splitwise, Vllm};
+    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+    use crate::workload::{Trace, MIXED};
+    let cfg = SimConfig {
+        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+        n_instances: 4,
+        interconnect_bw: None,
+        record_timeline: false,
+    };
+    println!("rate | sched      | cost_eff | util  | ttft   | tbt    | jct     | makespan");
+    for rate in [8.0, 12.0, 16.0, 20.0, 24.0] {
+        let trace = Trace::poisson(MIXED, rate, 120.0, 21);
+        for (name, mut s) in [
+            ("accellm", Box::new(AcceLlm::new(4)) as Box<dyn crate::sim::Scheduler>),
+            ("splitwise", Box::new(Splitwise::new(4))),
+            ("vllm", Box::new(Vllm::new(4))),
+        ] {
+            let r = run(&cfg, &trace, s.as_mut());
+            println!("{:4} | {:10} | {:8.0} | {:.3} | {:6.3} | {:6.4} | {:7.2} | {:7.1} | done {}",
+                rate, name, r.cost_efficiency, r.utilization, r.ttft_mean, r.tbt_mean, r.jct_mean, r.makespan, r.completed);
+        }
+    }
+}
+}

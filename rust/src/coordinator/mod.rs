@@ -1,0 +1,56 @@
+//! Scheduling policies — the paper's coordination contribution.
+//!
+//! Three policies implement [`crate::sim::Scheduler`] (and drive the real
+//! serving path in `server/` through the same decision logic):
+//!
+//! * [`accellm::AcceLlm`] — the paper's system: instance pairs, redundant
+//!   KV replicas, dynamic prefill⇄decode role flips, intra-pair decode
+//!   load balancing (Section 4).
+//! * [`splitwise::Splitwise`] — static prefill/decode disaggregation
+//!   baseline (Patel et al. 2023), configured per paper Section 5.2:
+//!   1/2/4 prefill instances for 4/8/16-instance clusters.
+//! * [`vllm::Vllm`] — continuous-batching baseline (Kwon et al. 2023):
+//!   prefill-prioritized, prefill and decode batched together on every
+//!   instance (the Figure 5 latency-spike regime).
+
+pub mod accellm;
+pub mod splitwise;
+pub mod validator;
+pub mod vllm;
+
+pub use accellm::AcceLlm;
+pub use validator::Validated;
+pub use splitwise::Splitwise;
+pub use vllm::Vllm;
+
+use crate::sim::{ReqId, Scheduler, SimCtx};
+
+/// Construct a scheduler by name (CLI / config entry point).
+pub fn by_name(name: &str, n_instances: usize) -> Option<Box<dyn Scheduler>> {
+    match name.to_ascii_lowercase().as_str() {
+        "accellm" | "acc" => Some(Box::new(AcceLlm::new(n_instances))),
+        "splitwise" | "spl" => Some(Box::new(Splitwise::new(n_instances))),
+        "vllm" => Some(Box::new(Vllm::new(n_instances))),
+        _ => None,
+    }
+}
+
+/// All scheduler names, for sweeps.
+pub const ALL_SCHEDULERS: [&str; 3] = ["accellm", "splitwise", "vllm"];
+
+/// Shared helper: total KV tokens of a request set (load-balance weight).
+pub(crate) fn set_kv_tokens(ctx: &SimCtx, set: &[ReqId]) -> u64 {
+    set.iter().map(|&r| ctx.kv_tokens(r) as u64).sum()
+}
+
+/// Per-instance decode batch cap, matching vLLM 0.4.2's default
+/// `max_num_seqs` (the paper builds every instance on vLLM 0.4.2,
+/// Section 4.2.3).  Requests beyond the cap wait for a slot — this is
+/// what turns soft throughput saturation into the post-peak decline of
+/// Figures 11a/12a.
+pub const MAX_DECODE_BATCH: usize = 256;
+
+/// FIFO slice of at most `MAX_DECODE_BATCH` requests for the next step.
+pub(crate) fn capped_batch(set: &[ReqId]) -> Vec<ReqId> {
+    set[..set.len().min(MAX_DECODE_BATCH)].to_vec()
+}

@@ -1,0 +1,253 @@
+//! Splitwise baseline: static prefill/decode disaggregation.
+//!
+//! Models Splitwise (Patel et al. 2023) as configured in the paper's
+//! evaluation (Section 5.2):
+//! * a fixed quarter of the instances (1/2/4 of 4/8/16) are dedicated
+//!   prefill machines; the rest are decode-only — "we prioritize
+//!   decoding for Splitwise ... and exclude non-disaggregated instances";
+//! * prompts queue FIFO across prefill instances (cluster-level
+//!   scheduler); each prefill machine processes its queue in batches;
+//! * finished prefills hand their KV cache to the decode instance with
+//!   the most free memory; the transfer is per-layer pipelined (the
+//!   paper applies "the same inter-accelerator optimizations as
+//!   AcceLLM"), so it overlaps the prefill compute and decode starts at
+//!   transfer completion;
+//! * decode instances run continuous decode-only steps — no prefill
+//!   interference, but also **no load balancing after placement**: a
+//!   machine stuck with long-decode requests cannot shed them, and
+//!   prefill machines idle whenever no prompts are queued (Figure 6).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::set_kv_tokens;
+use crate::sim::{InstId, ReqId, Role, Scheduler, SimCtx, Work, XferKind};
+
+/// How many prompts a prefill machine folds into one batch (queue drain
+/// cap; prefill time is linear in tokens so batching mostly reduces
+/// per-step overhead).
+const MAX_PREFILL_BATCH: usize = 4;
+
+pub struct Splitwise {
+    n_prefill: usize,
+    /// Cluster-level FIFO of prompts not yet assigned to a prefill machine.
+    queue: VecDeque<ReqId>,
+    /// Per-decode-instance sets.
+    sets: Vec<Vec<ReqId>>,
+    /// Requests whose KV is in flight to a decode instance.
+    in_transfer: Vec<(ReqId, InstId)>,
+}
+
+impl Splitwise {
+    pub fn new(n_instances: usize) -> Self {
+        // Paper Section 5.2: 1, 2, 4 prefill instances for 4, 8, 16.
+        let n_prefill = (n_instances / 4).max(1);
+        Splitwise {
+            n_prefill,
+            queue: VecDeque::new(),
+            sets: vec![Vec::new(); n_instances],
+            in_transfer: Vec::new(),
+        }
+    }
+
+    pub fn n_prefill_instances(&self) -> usize {
+        self.n_prefill
+    }
+
+    fn is_prefill_inst(&self, inst: InstId) -> bool {
+        inst < self.n_prefill
+    }
+
+    /// Drain the prompt queue onto any idle prefill machine.
+    fn kick_prefill(&mut self, ctx: &mut SimCtx) {
+        for inst in 0..self.n_prefill {
+            if ctx.is_busy(inst) || self.queue.is_empty() {
+                continue;
+            }
+            let n = self.queue.len().min(MAX_PREFILL_BATCH);
+            let reqs: Vec<ReqId> = self.queue.drain(..n).collect();
+            for &r in &reqs {
+                // KV materializes on the prefill machine during prefill.
+                ctx.place_primary(r, inst);
+            }
+            ctx.start_prefill(inst, reqs);
+        }
+    }
+
+    /// Per-layer pipelined KV hand-off (Section 4.2.4): the transfer ran
+    /// concurrently with the prefill compute, so at prefill completion
+    /// only the residual `bytes/bw - prefill_time` (if the link was the
+    /// bottleneck) remains on the critical path.
+    fn handoff(&mut self, ctx: &mut SimCtx, src: InstId, reqs: &[ReqId]) {
+        for &r in reqs {
+            let dst = self.least_loaded_decode(ctx);
+            let tokens = ctx.requests[r].prompt_len as f64;
+            let compute = ctx.now
+                - ctx.requests[r].prefill_start.expect("prefill not started");
+            ctx.start_transfer_pipelined(src, dst, r, tokens,
+                                         XferKind::PrefillHandoff, compute);
+            self.in_transfer.push((r, dst));
+        }
+    }
+
+    /// Decode instance with the most free KV memory (paper's two-level
+    /// scheduler placement rule).
+    fn least_loaded_decode(&self, ctx: &SimCtx) -> InstId {
+        (self.n_prefill..ctx.n_instances())
+            .max_by(|&a, &b| {
+                ctx.free_bytes(a)
+                    .partial_cmp(&ctx.free_bytes(b))
+                    .unwrap()
+            })
+            .expect("no decode instances")
+    }
+
+    fn kick_decode(&mut self, ctx: &mut SimCtx, inst: InstId) {
+        if ctx.is_busy(inst) || self.sets[inst].is_empty() {
+            return;
+        }
+        let batch = crate::coordinator::capped_batch(&self.sets[inst]);
+        ctx.start_decode_step(inst, batch, vec![]);
+    }
+}
+
+impl Scheduler for Splitwise {
+    fn name(&self) -> &'static str {
+        "splitwise"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        let n = ctx.n_instances();
+        assert!(n > self.n_prefill, "need at least one decode instance");
+        for i in 0..n {
+            ctx.set_role(i, if self.is_prefill_inst(i) {
+                Role::Prefill
+            } else {
+                Role::Decode
+            });
+        }
+    }
+
+    fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+        ctx.pending.retain(|&r| r != req);
+        self.queue.push_back(req);
+        self.kick_prefill(ctx);
+    }
+
+    fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                    completed: Vec<ReqId>) {
+        match work {
+            Work::Prefill { reqs } => {
+                // Residual pipelined hand-off; decode begins on
+                // on_transfer_done.
+                self.handoff(ctx, inst, &reqs);
+                self.kick_prefill(ctx);
+            }
+            Work::DecodeStep { .. } => {
+                if !completed.is_empty() {
+                    self.sets[inst].retain(|r| !completed.contains(r));
+                }
+                self.kick_decode(ctx, inst);
+            }
+        }
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, _src: InstId,
+                        dst: InstId, req: ReqId) {
+        // Hand-off transfers are scheduled at prefill completion, so the
+        // prefill is always done by now; the residual link time (if any)
+        // has elapsed and the request can start decoding on `dst`.
+        let pos = self
+            .in_transfer
+            .iter()
+            .position(|&(r, _)| r == req)
+            .expect("unknown transfer");
+        self.in_transfer.swap_remove(pos);
+        debug_assert!(ctx.requests[req].first_token.is_some());
+        ctx.move_primary(req, dst);
+        self.sets[dst].push(req);
+        self.kick_decode(ctx, dst);
+    }
+}
+
+/// Expose the per-instance decode balance for tests/figures.
+impl Splitwise {
+    pub fn decode_imbalance(&self, ctx: &SimCtx) -> u64 {
+        let loads: Vec<u64> = (self.n_prefill..ctx.n_instances())
+            .map(|i| set_kv_tokens(ctx, &self.sets[i]))
+            .collect();
+        let max = loads.iter().max().copied().unwrap_or(0);
+        let min = loads.iter().min().copied().unwrap_or(0);
+        max - min
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, ASCEND_910B2, H100,
+                     LLAMA2_70B};
+    use crate::workload::{Trace, LIGHT, MIXED};
+
+    fn cfg_dev(n: usize, dev: crate::sim::DeviceSpec) -> SimConfig {
+        SimConfig {
+            model: PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B),
+            n_instances: n,
+            interconnect_bw: None,
+            record_timeline: false,
+        }
+    }
+
+    #[test]
+    fn prefill_split_matches_paper() {
+        assert_eq!(Splitwise::new(4).n_prefill_instances(), 1);
+        assert_eq!(Splitwise::new(8).n_prefill_instances(), 2);
+        assert_eq!(Splitwise::new(16).n_prefill_instances(), 4);
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let trace = Trace::poisson(MIXED, 4.0, 60.0, 5);
+        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        assert_eq!(r.completed, trace.len());
+    }
+
+    #[test]
+    fn clean_tbt_no_prefill_interference() {
+        // Decode machines never run prefill: worst TBT stays near mean.
+        let trace = Trace::poisson(MIXED, 4.0, 60.0, 5);
+        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        assert!(r.tbt_max / r.tbt_mean < 3.0,
+                "max/mean {}", r.tbt_max / r.tbt_mean);
+    }
+
+    #[test]
+    fn ascend_prefill_queue_blows_up_near_6rps() {
+        // Paper Figure 12(b): with one prefill instance on 910B2, mixed
+        // workload, queuing appears around 6 req/s.
+        let lo = run(&cfg_dev(4, ASCEND_910B2),
+                     &Trace::poisson(MIXED, 3.0, 80.0, 9),
+                     &mut Splitwise::new(4));
+        let hi = run(&cfg_dev(4, ASCEND_910B2),
+                     &Trace::poisson(MIXED, 8.0, 80.0, 9),
+                     &mut Splitwise::new(4));
+        assert!(hi.ttft_mean > 4.0 * lo.ttft_mean,
+                "lo {} hi {}", lo.ttft_mean, hi.ttft_mean);
+    }
+
+    #[test]
+    fn h100_no_queue_blowup_in_range() {
+        // Figure 11(b): H100 prefill keeps up across the swept range.
+        let r = run(&cfg_dev(4, H100),
+                    &Trace::poisson(LIGHT, 10.0, 60.0, 9),
+                    &mut Splitwise::new(4));
+        assert!(r.ttft_mean < 1.0, "ttft {}", r.ttft_mean);
+    }
+
+    #[test]
+    fn prefill_handoff_traffic_metered() {
+        let trace = Trace::poisson(MIXED, 4.0, 30.0, 5);
+        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        assert!(r.xfer_prefill_bytes > 0.0);
+        assert_eq!(r.xfer_replica_bytes, 0.0);
+    }
+}

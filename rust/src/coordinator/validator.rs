@@ -1,0 +1,157 @@
+//! Invariant-checking scheduler wrapper.
+//!
+//! Wraps any [`Scheduler`] and validates the DESIGN.md §7 invariants
+//! against the engine state after every callback:
+//!
+//! 1. a replica is never the only copy of a live request's KV
+//!    (`primary` must exist whenever replicas do);
+//! 2. per-instance KV bytes never exceed device capacity;
+//! 3. no request is decoded past its decode length;
+//! 4. a request's primary and replicas never share an instance;
+//! 5. memory accounting is consistent: the sum of per-request bytes
+//!    placed on an instance equals the instance's counters.
+//!
+//! Used by the property tests in `rust/tests/` to check every policy on
+//! randomized traces; the checks are O(requests) per event, so this is
+//! a test-only harness, not a production wrapper.
+
+use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
+
+/// Wraps a scheduler and panics on the first invariant violation.
+pub struct Validated<S: Scheduler> {
+    inner: S,
+    /// Number of validations performed (exposed for test sanity).
+    pub checks: u64,
+}
+
+impl<S: Scheduler> Validated<S> {
+    pub fn new(inner: S) -> Self {
+        Validated { inner, checks: 0 }
+    }
+
+    fn validate(&mut self, ctx: &SimCtx, site: &str) {
+        self.checks += 1;
+        let n = ctx.n_instances();
+        let mut primary_bytes = vec![0.0f64; n];
+        let mut replica_bytes = vec![0.0f64; n];
+        for req in &ctx.requests {
+            if req.is_finished() {
+                assert!(req.primary.is_none() && req.replicas.is_empty(),
+                        "[{site}] finished request {} still holds KV", req.id);
+                continue;
+            }
+            // Inv 3: never decode past the requested length.
+            assert!(req.generated <= req.decode_len,
+                    "[{site}] request {} over-decoded {}/{}", req.id,
+                    req.generated, req.decode_len);
+            // Inv 1: replicas imply a live primary.
+            if !req.replicas.is_empty() {
+                assert!(req.primary.is_some(),
+                        "[{site}] request {} has replicas but no primary",
+                        req.id);
+            }
+            // Inv 4: copies are on distinct instances.
+            if let Some(p) = req.primary {
+                assert!(!req.replicas.contains(&p),
+                        "[{site}] request {} replica co-located with primary",
+                        req.id);
+                primary_bytes[p] += ctx.model.kv_bytes(req.kv_tokens() as f64);
+            }
+            let mut seen = req.replicas.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), req.replicas.len(),
+                       "[{site}] request {} has duplicate replicas", req.id);
+            for &r in &req.replicas {
+                replica_bytes[r] += ctx.model.kv_bytes(req.kv_tokens() as f64);
+            }
+        }
+        let cap = ctx.model.kv_capacity_bytes();
+        for i in 0..n {
+            // Inv 5: accounting agrees with per-request placement (the
+            // engine grows copies by one line per token, so byte counts
+            // must match exactly up to float ulps).
+            let inst = &ctx.instances[i];
+            assert!((inst.primary_bytes - primary_bytes[i]).abs() < 1.0,
+                    "[{site}] instance {i} primary accounting {} != {}",
+                    inst.primary_bytes, primary_bytes[i]);
+            assert!((inst.replica_bytes - replica_bytes[i]).abs() < 1.0,
+                    "[{site}] instance {i} replica accounting {} != {}",
+                    inst.replica_bytes, replica_bytes[i]);
+            // Inv 2: capacity.
+            assert!(inst.kv_bytes() <= cap + 1.0,
+                    "[{site}] instance {i} over capacity: {} > {cap}",
+                    inst.kv_bytes());
+        }
+    }
+}
+
+impl<S: Scheduler> Scheduler for Validated<S> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.inner.init(ctx);
+        self.validate(ctx, "init");
+    }
+
+    fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+        self.inner.on_arrival(ctx, req);
+        self.validate(ctx, "on_arrival");
+    }
+
+    fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                    completed: Vec<ReqId>) {
+        self.inner.on_work_done(ctx, inst, work, completed);
+        self.validate(ctx, "on_work_done");
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
+                        dst: InstId, req: ReqId) {
+        self.inner.on_transfer_done(ctx, src, dst, req);
+        self.validate(ctx, "on_transfer_done");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AcceLlm, Splitwise, Vllm};
+    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+    use crate::workload::{Trace, MIXED};
+
+    fn cfg() -> SimConfig {
+        SimConfig {
+            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+            n_instances: 4,
+            interconnect_bw: None,
+            record_timeline: false,
+        }
+    }
+
+    #[test]
+    fn accellm_upholds_invariants() {
+        let trace = Trace::poisson(MIXED, 10.0, 30.0, 3);
+        let mut v = Validated::new(AcceLlm::new(4));
+        let r = run(&cfg(), &trace, &mut v);
+        assert_eq!(r.completed, trace.len());
+        assert!(v.checks > 1000, "validator barely ran: {}", v.checks);
+    }
+
+    #[test]
+    fn splitwise_upholds_invariants() {
+        let trace = Trace::poisson(MIXED, 8.0, 30.0, 4);
+        let mut v = Validated::new(Splitwise::new(4));
+        let r = run(&cfg(), &trace, &mut v);
+        assert_eq!(r.completed, trace.len());
+    }
+
+    #[test]
+    fn vllm_upholds_invariants() {
+        let trace = Trace::poisson(MIXED, 8.0, 30.0, 5);
+        let mut v = Validated::new(Vllm::new(4));
+        let r = run(&cfg(), &trace, &mut v);
+        assert_eq!(r.completed, trace.len());
+    }
+}

@@ -1,0 +1,137 @@
+//! Ablation studies over AcceLLM's design choices (DESIGN.md §5 calls
+//! these out; the paper motivates each mechanism separately in §4.1):
+//!
+//! * **redundancy** — with vs without replica copies: without them a
+//!   role flip strands the flipping instance's decodes (they pause for
+//!   the whole prefill — the paper's Figure 1 Case A cost), so worst-
+//!   case TBT and JCT degrade;
+//! * **rebalancing** — with vs without intra-pair batch equalization
+//!   (paper §4.1.3): without it, pair members drift apart in batch size
+//!   and the per-step C_REQ asymmetry inflates TBT;
+//! * **flip damping** — the role-flip slack window trades TTFT (prompts
+//!   wait for the window) against cost-efficiency (fewer thrashing
+//!   flips).
+
+use crate::coordinator::AcceLlm;
+use crate::eval::figures::FigureOutput;
+use crate::sim::{run, InstanceSpec, PerfModel, Scheduler, SimConfig, H100,
+                 LLAMA2_70B};
+use crate::workload::{Trace, MIXED};
+
+fn cfg(n: usize) -> SimConfig {
+    SimConfig {
+        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+        n_instances: n,
+        interconnect_bw: None,
+        record_timeline: true,
+    }
+}
+
+fn row(name: &str, rate: f64, sched: &mut dyn Scheduler, trace: &Trace)
+       -> String {
+    let r = run(&cfg(4), trace, sched);
+    assert_eq!(r.completed, trace.len(), "{name} dropped requests");
+    format!(
+        "{},{:.1},{:.1},{:.4},{:.5},{:.5},{:.2},{:.3}",
+        name, rate, r.cost_efficiency, r.ttft_mean, r.tbt_mean, r.tbt_max,
+        r.jct_mean, r.utilization)
+}
+
+/// Redundancy + rebalancing ablation grid.
+pub fn ablation_mechanisms() -> FigureOutput {
+    let mut rows = Vec::new();
+    for &rate in &[8.0, 14.0, 20.0] {
+        let trace = Trace::poisson(MIXED, rate, 60.0, 7);
+        rows.push(row("full", rate, &mut AcceLlm::new(4), &trace));
+        rows.push(row("no-redundancy", rate,
+                      &mut AcceLlm::without_redundancy(4), &trace));
+        rows.push(row("no-rebalance", rate,
+                      &mut AcceLlm::without_rebalance(4), &trace));
+    }
+    FigureOutput {
+        id: "ablation_mechanisms".into(),
+        title: "AcceLLM ablations: redundancy and rebalancing (mixed, 4x H100)"
+            .into(),
+        header: "variant,rate,cost_eff_tok_inst_s,ttft_mean_s,tbt_mean_s,\
+                 tbt_max_s,jct_mean_s,utilization"
+            .into(),
+        rows,
+    }
+}
+
+/// Flip-damping window sweep.
+pub fn ablation_flip_slack() -> FigureOutput {
+    let trace = Trace::poisson(MIXED, 14.0, 60.0, 7);
+    let mut rows = Vec::new();
+    for &slack_ms in &[0.0, 5.0, 15.0, 50.0, 150.0] {
+        let name = format!("slack{slack_ms:.0}ms");
+        rows.push(row(&name, 14.0,
+                      &mut AcceLlm::with_flip_slack(4, slack_ms / 1e3),
+                      &trace));
+    }
+    FigureOutput {
+        id: "ablation_flip_slack".into(),
+        title: "AcceLLM ablation: role-flip damping window (mixed @14 req/s)"
+            .into(),
+        header: "variant,rate,cost_eff_tok_inst_s,ttft_mean_s,tbt_mean_s,\
+                 tbt_max_s,jct_mean_s,utilization"
+            .into(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(row: &str, i: usize) -> f64 {
+        row.split(',').nth(i).unwrap().parse().unwrap()
+    }
+
+    #[test]
+    fn redundancy_pays_for_itself() {
+        let f = ablation_mechanisms();
+        // At moderate load (8 req/s — below the batch cap, the regime of
+        // the paper's Figure 16 claim): without replicas, a role flip
+        // strands the flipping member's decodes for the whole prefill,
+        // so the worst-case TBT spikes several-fold.
+        let full = f.rows.iter().find(|r| r.starts_with("full,8")).unwrap();
+        let nored = f
+            .rows
+            .iter()
+            .find(|r| r.starts_with("no-redundancy,8"))
+            .unwrap();
+        assert!(col(nored, 5) > 2.0 * col(full, 5),
+                "tbt_max: no-red {} vs full {}", col(nored, 5), col(full, 5));
+        assert!(col(nored, 6) >= col(full, 6) * 0.999,
+                "jct: no-red {} vs full {}", col(nored, 6), col(full, 6));
+    }
+
+    #[test]
+    fn rebalancing_is_load_bearing() {
+        // Disabling intra-pair rebalancing collapses throughput and JCT
+        // at load (the paper's §4.1.3 load-balancing claim, strongest
+        // single effect in the ablation grid).
+        let f = ablation_mechanisms();
+        let full = f.rows.iter().find(|r| r.starts_with("full,20")).unwrap();
+        let norb = f
+            .rows
+            .iter()
+            .find(|r| r.starts_with("no-rebalance,20"))
+            .unwrap();
+        assert!(col(full, 2) > 1.2 * col(norb, 2),
+                "cost-eff: full {} vs no-rb {}", col(full, 2), col(norb, 2));
+        assert!(col(norb, 6) > 1.3 * col(full, 6),
+                "jct: no-rb {} vs full {}", col(norb, 6), col(full, 6));
+    }
+
+    #[test]
+    fn flip_slack_tradeoff_direction() {
+        let f = ablation_flip_slack();
+        let s0 = f.rows.iter().find(|r| r.starts_with("slack0ms")).unwrap();
+        let s150 = f.rows.iter().find(|r| r.starts_with("slack150ms")).unwrap();
+        // More damping => strictly higher TTFT (prompts wait).
+        assert!(col(s150, 3) > col(s0, 3),
+                "ttft: 150ms {} vs 0ms {}", col(s150, 3), col(s0, 3));
+    }
+}

@@ -1,0 +1,458 @@
+//! One generator per paper table/figure.
+
+use crate::coordinator::{by_name, ALL_SCHEDULERS};
+use crate::sim::{run, DeviceSpec, InstanceSpec, PerfModel, SimConfig,
+                 ASCEND_910B2, H100, LLAMA2_70B};
+use crate::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
+
+/// A regenerated table/figure: CSV header + rows.
+#[derive(Clone, Debug)]
+pub struct FigureOutput {
+    pub id: String,
+    pub title: String,
+    pub header: String,
+    pub rows: Vec<String>,
+}
+
+impl FigureOutput {
+    pub fn print(&self) {
+        println!("# {} — {}", self.id, self.title);
+        println!("{}", self.header);
+        for r in &self.rows {
+            println!("{r}");
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.header);
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(r);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+fn model(dev: DeviceSpec) -> PerfModel {
+    PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B)
+}
+
+fn sim_cfg(dev: DeviceSpec, n: usize) -> SimConfig {
+    SimConfig {
+        model: model(dev),
+        n_instances: n,
+        interconnect_bw: None,
+        record_timeline: false,
+    }
+}
+
+/// Default seed for figure traces (fixed: figures are deterministic).
+const SEED: u64 = 7;
+/// Default per-point trace duration (seconds of simulated arrivals).
+const DUR: f64 = 60.0;
+
+/// Request rates swept in the latency figures (req/s), matching the
+/// paper's 0–25 x-axis.
+pub const RATE_SWEEP: [f64; 8] = [2.0, 5.0, 8.0, 11.0, 14.0, 17.0, 20.0, 23.0];
+
+// ---------------------------------------------------------------------------
+// Tables
+// ---------------------------------------------------------------------------
+
+/// Table 1: accelerator device specifications.
+pub fn table1() -> FigureOutput {
+    let mut rows = Vec::new();
+    for d in [ASCEND_910B2, H100] {
+        rows.push(format!(
+            "{},{:.0},{:.0},{:.2},{:.0}",
+            d.name,
+            d.fp16_flops / 1e12,
+            d.hbm_bytes / 1e9,
+            d.hbm_bw / 1e12,
+            d.local_conn_bw / 1e9
+        ));
+    }
+    FigureOutput {
+        id: "table1".into(),
+        title: "Accelerator Device Specifications".into(),
+        header: "device,fp16_tflops,hbm_gb,hbm_tbs,local_conn_gbs".into(),
+        rows,
+    }
+}
+
+/// Table 2: workload characteristics.
+pub fn table2() -> FigureOutput {
+    let rows = [LIGHT, MIXED, HEAVY]
+        .iter()
+        .map(|w| {
+            format!("{},{}-{},{}-{},{:.0}", w.name, w.prefill_min,
+                    w.prefill_max, w.decode_min, w.decode_max,
+                    (w.mean_prefill() + w.mean_decode()) / 2.0)
+        })
+        .collect();
+    FigureOutput {
+        id: "table2".into(),
+        title: "Workload Characteristics".into(),
+        header: "workload,prefill,decoding,mean".into(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microbenchmark figures (pure perf-model)
+// ---------------------------------------------------------------------------
+
+/// Figure 3: prefill-phase execution time and throughput vs prompt
+/// length x batch size.
+pub fn fig3(dev: DeviceSpec) -> FigureOutput {
+    let m = model(dev);
+    let mut rows = Vec::new();
+    for &plen in &[128u32, 256, 512, 1024, 2048] {
+        for &batch in &[1usize, 2, 4, 8, 16] {
+            let lens = vec![plen; batch];
+            let t = m.prefill_time(&lens);
+            let thpt = batch as f64 * plen as f64 / t;
+            rows.push(format!("{},{},{},{:.4},{:.0}", dev.name, plen, batch,
+                              t, thpt));
+        }
+    }
+    FigureOutput {
+        id: "fig3".into(),
+        title: "Prefill-phase execution time and throughput".into(),
+        header: "device,prompt_len,batch,time_s,tokens_per_s".into(),
+        rows,
+    }
+}
+
+/// Figure 4: decoding-phase execution time and throughput vs input
+/// length x batch size.
+pub fn fig4(dev: DeviceSpec) -> FigureOutput {
+    let m = model(dev);
+    let mut rows = Vec::new();
+    for &len in &[128.0f64, 256.0, 512.0, 1024.0, 2048.0] {
+        for &batch in &[1usize, 4, 16, 64, 128, 256] {
+            let t = m.decode_step_time(batch, batch as f64 * len);
+            let thpt = batch as f64 / t;
+            rows.push(format!("{},{},{},{:.5},{:.0}", dev.name, len, batch,
+                              t, thpt));
+        }
+    }
+    FigureOutput {
+        id: "fig4".into(),
+        title: "Decoding-phase execution time and throughput".into(),
+        header: "device,input_len,batch,step_time_s,tokens_per_s".into(),
+        rows,
+    }
+}
+
+/// Figure 5: (left) TBT inflation when a prefill is batched into the
+/// decode step; (right) one batch of 40 vs two parallel batches of 20.
+pub fn fig5(dev: DeviceSpec) -> FigureOutput {
+    let m = model(dev);
+    let mut rows = Vec::new();
+    for &len in &[250.0f64, 500.0, 750.0, 1000.0] {
+        let clean = m.decode_step_time(20, 20.0 * len);
+        // Interference from a single arriving prompt at the top of the
+        // mixed range (paper Figure 5 shows the worst-case spike).
+        let spiked = m.mixed_step_time(20, 20.0 * len, &[1000]);
+        let b40 = m.decode_step_time(40, 40.0 * len);
+        let b20 = m.decode_step_time(20, 20.0 * len);
+        rows.push(format!(
+            "{},{:.0},{:.5},{:.5},{:.1},{:.5},{:.5},{:.5}",
+            dev.name, len, clean, spiked, 100.0 * (spiked - clean) / clean,
+            b40, b20, b40 - b20));
+    }
+    FigureOutput {
+        id: "fig5".into(),
+        title: "Prefill interference (+%TBT) and batch imbalance (40 vs 2x20)"
+            .into(),
+        header: "device,input_len,tbt_clean_s,tbt_with_prefill_s,\
+                 inflation_pct,step_b40_s,step_b20_s,imbalance_gap_s"
+            .into(),
+        rows,
+    }
+}
+
+/// Figure 6: idle time — baseline (Splitwise) vs AcceLLM on a bursty
+/// trace; per-instance utilization.
+pub fn fig6(dev: DeviceSpec) -> FigureOutput {
+    let trace = Trace::phased(MIXED, &[(20.0, 12.0), (20.0, 1.0), (20.0, 12.0)],
+                              SEED);
+    let mut rows = Vec::new();
+    for name in ["splitwise", "accellm"] {
+        let mut s = by_name(name, 4).unwrap();
+        let r = run(&sim_cfg(dev, 4), &trace, s.as_mut());
+        rows.push(format!("{},{},{:.3},{:.3},{:.2}", dev.name, name,
+                          r.utilization, r.cost_efficiency, r.jct_mean));
+    }
+    FigureOutput {
+        id: "fig6".into(),
+        title: "Bursty arrivals: utilization (no idle instances in AcceLLM)"
+            .into(),
+        header: "device,scheduler,utilization,cost_eff_tok_inst_s,jct_mean_s"
+            .into(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resource figures
+// ---------------------------------------------------------------------------
+
+/// Figure 9: peak per-instance KV memory to serve the mixed workload,
+/// 4 instances, at 4/8/12 req/s.
+pub fn fig9(dev: DeviceSpec) -> FigureOutput {
+    let mut rows = Vec::new();
+    for &rate in &[4.0, 8.0, 12.0] {
+        let trace = Trace::poisson(MIXED, rate, DUR, SEED);
+        let mut per_sched = Vec::new();
+        for name in ALL_SCHEDULERS {
+            let mut s = by_name(name, 4).unwrap();
+            let r = run(&sim_cfg(dev, 4), &trace, s.as_mut());
+            per_sched.push((name, r.peak_kv_bytes / 1e9));
+        }
+        let acc = per_sched[0].1;
+        let base = per_sched[1].1.max(per_sched[2].1);
+        for (name, gb) in &per_sched {
+            rows.push(format!("{},{:.1},{},{:.2},{:.2}", dev.name, rate, name,
+                              gb, acc - base));
+        }
+    }
+    FigureOutput {
+        id: "fig9".into(),
+        title: "Memory requirements per instance (mixed, 4 instances)".into(),
+        header: "device,rate,scheduler,peak_kv_gb,accellm_extra_gb".into(),
+        rows,
+    }
+}
+
+/// Figure 10: token throughput and JCT vs interconnect bandwidth
+/// (mixed workload, 4 instances).
+pub fn fig10(dev: DeviceSpec) -> FigureOutput {
+    let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
+    let mut rows = Vec::new();
+    for &gbs in &[1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 200.0, 400.0, 900.0] {
+        for name in ["accellm", "splitwise"] {
+            let mut cfg = sim_cfg(dev, 4);
+            cfg.interconnect_bw = Some(gbs * 1e9);
+            let mut s = by_name(name, 4).unwrap();
+            let r = run(&cfg, &trace, s.as_mut());
+            rows.push(format!(
+                "{},{:.0},{},{:.1},{:.2},{:.2},{:.2}",
+                dev.name, gbs, name, r.cost_efficiency, r.jct_mean,
+                r.xfer_prefill_bytes / 1e9, r.xfer_replica_bytes / 1e9));
+        }
+    }
+    FigureOutput {
+        id: "fig10".into(),
+        title: "Interconnect bandwidth sweep (mixed, 4 instances)".into(),
+        header: "device,interconnect_gbs,scheduler,cost_eff_tok_inst_s,\
+                 jct_mean_s,xfer_prefill_gb,xfer_replica_gb"
+            .into(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Main latency grids (figs 11-15)
+// ---------------------------------------------------------------------------
+
+/// Shared generator for Figures 11-15: rate sweep x cluster sizes x
+/// schedulers on one device+workload.
+fn latency_grid(id: &str, dev: DeviceSpec, wl: WorkloadSpec,
+                sizes: &[usize]) -> FigureOutput {
+    let mut rows = Vec::new();
+    for &n in sizes {
+        for &rate in &RATE_SWEEP {
+            let trace = Trace::poisson(wl, rate, DUR, SEED);
+            for name in ALL_SCHEDULERS {
+                let mut s = by_name(name, n).unwrap();
+                let r = run(&sim_cfg(dev, n), &trace, s.as_mut());
+                rows.push(format!(
+                    "{},{},{},{},{:.1},{:.1},{:.4},{:.4},{:.5},{:.5},{:.2},{:.2}",
+                    dev.name, wl.name, n, name, rate, r.cost_efficiency,
+                    r.ttft_mean, r.ttft_p99, r.tbt_mean, r.tbt_p99,
+                    r.jct_mean, r.jct_p99));
+            }
+        }
+    }
+    FigureOutput {
+        id: id.into(),
+        title: format!("Latency results, {} workload, {} instances",
+                       wl.name, dev.name),
+        header: "device,workload,n_instances,scheduler,rate,\
+                 cost_eff_tok_inst_s,ttft_mean_s,ttft_p99_s,tbt_mean_s,\
+                 tbt_p99_s,jct_mean_s,jct_p99_s"
+            .into(),
+        rows,
+    }
+}
+
+/// Figure 11: mixed workload, H100, 4/8/16 instances.
+pub fn fig11() -> FigureOutput {
+    latency_grid("fig11", H100, MIXED, &[4, 8, 16])
+}
+
+/// Figure 12: mixed workload, Ascend 910B2.
+pub fn fig12() -> FigureOutput {
+    latency_grid("fig12", ASCEND_910B2, MIXED, &[4, 8, 16])
+}
+
+/// Figure 13: light workload, H100.
+pub fn fig13() -> FigureOutput {
+    latency_grid("fig13", H100, LIGHT, &[4, 8, 16])
+}
+
+/// Figure 14: light workload, Ascend 910B2.
+pub fn fig14() -> FigureOutput {
+    latency_grid("fig14", ASCEND_910B2, LIGHT, &[4, 8, 16])
+}
+
+/// Figure 15: heavy workload, H100.
+pub fn fig15() -> FigureOutput {
+    latency_grid("fig15", H100, HEAVY, &[4, 8, 16])
+}
+
+/// Figure 16: worst-case TBT latencies (mixed, 4 instances, moderate
+/// rate; full token-gap timeline recorded).
+pub fn fig16(dev: DeviceSpec) -> FigureOutput {
+    let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
+    let mut rows = Vec::new();
+    for name in ALL_SCHEDULERS {
+        let mut cfg = sim_cfg(dev, 4);
+        cfg.record_timeline = true;
+        let mut s = by_name(name, 4).unwrap();
+        let r = run(&cfg, &trace, s.as_mut());
+        let mut gaps: Vec<f64> =
+            r.tbt_timeline.iter().map(|&(_, g)| g).collect();
+        gaps.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let p999 = gaps.get(gaps.len() / 1000).copied().unwrap_or(0.0);
+        rows.push(format!("{},{},{:.5},{:.5},{:.5},{:.5}", dev.name, name,
+                          r.tbt_max, p999, r.tbt_p99, r.tbt_mean));
+    }
+    FigureOutput {
+        id: "fig16".into(),
+        title: "Worst-case TBT latencies (mixed, 4 instances)".into(),
+        header: "device,scheduler,tbt_max_s,tbt_p99_9_s,tbt_p99_s,tbt_mean_s"
+            .into(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Index
+// ---------------------------------------------------------------------------
+
+/// Generate one figure/table by id ("table1", "fig3" … "fig16").
+pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
+    Some(match id {
+        "table1" => table1(),
+        "table2" => table2(),
+        "fig3" => fig3(H100),
+        "fig3a" => fig3(ASCEND_910B2),
+        "fig4" => fig4(H100),
+        "fig4a" => fig4(ASCEND_910B2),
+        "fig5" => fig5(H100),
+        "fig6" => fig6(H100),
+        "fig9" => fig9(H100),
+        "fig10" => fig10(H100),
+        "fig11" => fig11(),
+        "fig12" => fig12(),
+        "fig13" => fig13(),
+        "fig14" => fig14(),
+        "fig15" => fig15(),
+        "fig16" => fig16(H100),
+        "ablation_mechanisms" => crate::eval::ablations::ablation_mechanisms(),
+        "ablation_flip_slack" => crate::eval::ablations::ablation_flip_slack(),
+        _ => return None,
+    })
+}
+
+/// Every regenerable artifact in paper order.
+pub const ALL_IDS: [&str; 14] = [
+    "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+];
+
+/// Generate everything (the `make bench` payload).
+pub fn all_figures() -> Vec<FigureOutput> {
+    ALL_IDS.iter().map(|id| figure_by_id(id).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_have_expected_rows() {
+        assert_eq!(table1().rows.len(), 2);
+        assert_eq!(table2().rows.len(), 3);
+    }
+
+    #[test]
+    fn fig3_shapes() {
+        let f = fig3(H100);
+        assert_eq!(f.rows.len(), 25);
+        // Time grows with prompt length at fixed batch.
+        let t = |plen: &str| -> f64 {
+            f.rows
+                .iter()
+                .find(|r| r.contains(&format!(",{plen},1,")))
+                .unwrap()
+                .split(',')
+                .nth(3)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(t("2048") > t("128"));
+    }
+
+    #[test]
+    fn fig5_reproduces_anchors() {
+        let f = fig5(H100);
+        for row in &f.rows {
+            let cols: Vec<&str> = row.split(',').collect();
+            let len: f64 = cols[1].parse().unwrap();
+            let inflation: f64 = cols[4].parse().unwrap();
+            let gap: f64 = cols[7].parse().unwrap();
+            // Paper Figure 5 (left) quotes ">300%" for the mixed workload
+            // (inputs >= 500 tokens); shorter inputs inflate slightly less.
+            if len >= 500.0 {
+                assert!(inflation > 300.0, "row {row}");
+            } else {
+                assert!(inflation > 200.0, "row {row}");
+            }
+            assert!(gap > 0.0072 && gap < 0.010, "row {row}");
+        }
+    }
+
+    #[test]
+    fn figure_index_complete() {
+        for id in ALL_IDS {
+            assert!(figure_by_id(id).is_some(), "{id}");
+        }
+        assert!(figure_by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn fig16_ordering() {
+        // vLLM's worst-case TBT must dominate AcceLLM's (paper Fig 16).
+        let f = fig16(H100);
+        let max_of = |name: &str| -> f64 {
+            f.rows
+                .iter()
+                .find(|r| r.contains(name))
+                .unwrap()
+                .split(',')
+                .nth(2)
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(max_of("vllm") > 1.5 * max_of("accellm"),
+                "vllm {} acc {}", max_of("vllm"), max_of("accellm"));
+    }
+}

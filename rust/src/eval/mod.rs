@@ -1,0 +1,13 @@
+//! Figure/table regeneration harness (DESIGN.md §5).
+//!
+//! One function per paper table/figure; each returns a [`FigureOutput`]
+//! whose rows the benches and the `accellm figures` CLI print / write
+//! to `results/`.  Absolute numbers come from this testbed's simulator;
+//! the SHAPES (who wins, where curves cross, where queues blow up) are
+//! the reproduction target — see EXPERIMENTS.md for the side-by-side.
+
+pub mod ablations;
+pub mod figures;
+
+pub use ablations::{ablation_flip_slack, ablation_mechanisms};
+pub use figures::{all_figures, figure_by_id, FigureOutput};

@@ -1,0 +1,22 @@
+//! Host-side KV cache management for the real serving path.
+//!
+//! Mirrors the paper's data model (Section 4.1.2): each request has one
+//! *primary* KV copy on the instance that decodes it and, under
+//! AcceLLM, a continuously-updated *replica* on the pair partner.  The
+//! slot pool maps requests onto the fixed-size decode batch the AOT
+//! decode executable was compiled for.
+
+pub mod reqkv;
+pub mod slots;
+
+pub use reqkv::RequestKv;
+pub use slots::{SlotError, SlotPool};
+
+/// Replica freshness state (DESIGN.md §7 invariant 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Byte-identical with the primary up to `synced_tokens`.
+    Synced,
+    /// Missing recent KV lines (stream in flight / backpressure).
+    Lagging,
+}

@@ -1,0 +1,165 @@
+//! Per-request KV cache: the unit that moves between instances.
+//!
+//! Layout is `[n_layers, n_kv_heads, tokens, head_dim]` row-major f32 —
+//! the exact layout the prefill executable returns, so a hand-off is a
+//! single memcpy.
+
+use crate::runtime::manifest::ModelCfg;
+
+/// One request's KV cache lines (host-resident, growable).
+#[derive(Clone, Debug)]
+pub struct RequestKv {
+    pub n_layers: usize,
+    pub n_kv: usize,
+    pub head_dim: usize,
+    /// Valid token count.
+    pub tokens: usize,
+    /// K data, [L, n_kv, tokens, hd] (exactly `tokens` rows per head).
+    pub k: Vec<f32>,
+    /// V data, same layout.
+    pub v: Vec<f32>,
+}
+
+impl RequestKv {
+    /// Wrap a prefill result (already unpadded by the engine).
+    pub fn from_prefill(cfg: &ModelCfg, tokens: usize, k: Vec<f32>,
+                        v: Vec<f32>) -> Self {
+        let expect = cfg.n_layers * cfg.n_kv_heads * tokens * cfg.head_dim;
+        assert_eq!(k.len(), expect, "k size mismatch");
+        assert_eq!(v.len(), expect, "v size mismatch");
+        RequestKv {
+            n_layers: cfg.n_layers,
+            n_kv: cfg.n_kv_heads,
+            head_dim: cfg.head_dim,
+            tokens,
+            k,
+            v,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Append one token's KV lines (from a decode step's `k_new`/`v_new`
+    /// slice for this slot): `k_line`/`v_line` are [L, n_kv, hd].
+    pub fn append_line(&mut self, k_line: &[f32], v_line: &[f32]) {
+        let (l, h, d) = (self.n_layers, self.n_kv, self.head_dim);
+        assert_eq!(k_line.len(), l * h * d);
+        assert_eq!(v_line.len(), l * h * d);
+        let old = self.tokens;
+        let new = old + 1;
+        let mut k = Vec::with_capacity(l * h * new * d);
+        let mut v = Vec::with_capacity(l * h * new * d);
+        for li in 0..l {
+            for hi in 0..h {
+                let src = (li * h + hi) * old * d;
+                k.extend_from_slice(&self.k[src..src + old * d]);
+                let line = (li * h + hi) * d;
+                k.extend_from_slice(&k_line[line..line + d]);
+                v.extend_from_slice(&self.v[src..src + old * d]);
+                v.extend_from_slice(&v_line[line..line + d]);
+            }
+        }
+        self.k = k;
+        self.v = v;
+        self.tokens = new;
+    }
+
+    /// Copy this KV into a batch-cache slot:
+    /// dst caches are [L, B, n_kv, max_len, hd]; rows beyond `tokens`
+    /// are left untouched (masked by `lengths` at execution).
+    pub fn write_into_slot(&self, k_cache: &mut [f32], v_cache: &mut [f32],
+                           batch: usize, max_len: usize, slot: usize) {
+        assert!(slot < batch);
+        assert!(self.tokens <= max_len, "request KV exceeds max_len");
+        let (l, h, d) = (self.n_layers, self.n_kv, self.head_dim);
+        for li in 0..l {
+            for hi in 0..h {
+                let src = (li * h + hi) * self.tokens * d;
+                let dst = (((li * batch + slot) * h + hi) * max_len) * d;
+                k_cache[dst..dst + self.tokens * d]
+                    .copy_from_slice(&self.k[src..src + self.tokens * d]);
+                v_cache[dst..dst + self.tokens * d]
+                    .copy_from_slice(&self.v[src..src + self.tokens * d]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelCfg {
+        ModelCfg {
+            name: "t".into(),
+            vocab: 16,
+            dim: 8,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 4,
+            ffn: 16,
+            max_len: 8,
+            param_count: 0,
+        }
+    }
+
+    fn mk(tokens: usize) -> RequestKv {
+        let c = cfg();
+        let n = c.n_layers * c.n_kv_heads * tokens * c.head_dim;
+        RequestKv::from_prefill(&c, tokens,
+                                (0..n).map(|x| x as f32).collect(),
+                                (0..n).map(|x| -(x as f32)).collect())
+    }
+
+    #[test]
+    fn append_grows_by_one_token() {
+        let mut kv = mk(3);
+        let line: Vec<f32> = (0..2 * 2 * 4).map(|x| 100.0 + x as f32).collect();
+        let vline: Vec<f32> = line.iter().map(|x| -x).collect();
+        kv.append_line(&line, &vline);
+        assert_eq!(kv.tokens, 4);
+        // Layer 0, head 0: first 3 rows preserved, 4th row = line[0..4].
+        assert_eq!(&kv.k[0..12], &(0..12).map(|x| x as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(&kv.k[12..16], &line[0..4]);
+        // Layer 0, head 1 starts after 4 rows now.
+        assert_eq!(kv.k[16], 12.0);
+    }
+
+    #[test]
+    fn slot_write_layout() {
+        let kv = mk(2);
+        let c = cfg();
+        let (batch, max_len) = (3, 8);
+        let n = c.n_layers * batch * c.n_kv_heads * max_len * c.head_dim;
+        let mut kc = vec![9.9f32; n];
+        let mut vc = vec![9.9f32; n];
+        kv.write_into_slot(&mut kc, &mut vc, batch, max_len, 1);
+        // Element [l=0, b=1, h=0, t=0, d=0] = kv.k[0].
+        let idx = ((0 * batch + 1) * c.n_kv_heads + 0) * max_len * c.head_dim;
+        assert_eq!(kc[idx], kv.k[0]);
+        // Slot 0 untouched.
+        assert_eq!(kc[0], 9.9);
+        // Rows beyond tokens untouched.
+        assert_eq!(kc[idx + 2 * c.head_dim], 9.9);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let kv = mk(5);
+        assert_eq!(kv.bytes(), 2 * 2 * 2 * 5 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_len")]
+    fn overlong_request_rejected() {
+        let kv = mk(9);
+        let c = cfg();
+        let n = c.n_layers * 1 * c.n_kv_heads * 8 * c.head_dim;
+        let mut kc = vec![0.0; n];
+        let mut vc = vec![0.0; n];
+        kv.write_into_slot(&mut kc, &mut vc, 1, 8, 0);
+    }
+}

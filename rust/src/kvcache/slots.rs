@@ -1,0 +1,177 @@
+//! Slot pool: maps live requests onto the fixed-size decode batch the
+//! AOT executable was compiled for (static shapes — the standard
+//! slot-based continuous batching of real serving engines).
+
+use std::collections::HashMap;
+
+/// Errors from slot operations.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SlotError {
+    #[error("no free slot (batch is full)")]
+    Full,
+    #[error("request {0} not resident")]
+    NotResident(u64),
+}
+
+/// Fixed-capacity slot allocator, request-id -> slot index.
+#[derive(Clone, Debug)]
+pub struct SlotPool {
+    capacity: usize,
+    by_req: HashMap<u64, usize>,
+    by_slot: Vec<Option<u64>>,
+}
+
+impl SlotPool {
+    pub fn new(capacity: usize) -> Self {
+        SlotPool {
+            capacity,
+            by_req: HashMap::new(),
+            by_slot: vec![None; capacity],
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_req.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_req.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.by_req.len() == self.capacity
+    }
+
+    pub fn slot_of(&self, req: u64) -> Option<usize> {
+        self.by_req.get(&req).copied()
+    }
+
+    pub fn req_at(&self, slot: usize) -> Option<u64> {
+        self.by_slot[slot]
+    }
+
+    /// Occupied (slot, request) pairs in slot order.
+    pub fn occupied(&self) -> Vec<(usize, u64)> {
+        self.by_slot
+            .iter()
+            .enumerate()
+            .filter_map(|(s, r)| r.map(|r| (s, r)))
+            .collect()
+    }
+
+    /// Claim the lowest free slot for `req`.
+    pub fn insert(&mut self, req: u64) -> Result<usize, SlotError> {
+        if self.by_req.contains_key(&req) {
+            return Ok(self.by_req[&req]); // idempotent
+        }
+        let slot = self
+            .by_slot
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or(SlotError::Full)?;
+        self.by_slot[slot] = Some(req);
+        self.by_req.insert(req, slot);
+        Ok(slot)
+    }
+
+    /// Release `req`'s slot.
+    pub fn remove(&mut self, req: u64) -> Result<usize, SlotError> {
+        let slot = self
+            .by_req
+            .remove(&req)
+            .ok_or(SlotError::NotResident(req))?;
+        self.by_slot[slot] = None;
+        Ok(slot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, prop_assert};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut p = SlotPool::new(3);
+        let s0 = p.insert(100).unwrap();
+        let s1 = p.insert(101).unwrap();
+        assert_ne!(s0, s1);
+        assert_eq!(p.slot_of(100), Some(s0));
+        assert_eq!(p.remove(100).unwrap(), s0);
+        assert_eq!(p.slot_of(100), None);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn fills_lowest_first() {
+        let mut p = SlotPool::new(3);
+        assert_eq!(p.insert(1).unwrap(), 0);
+        assert_eq!(p.insert(2).unwrap(), 1);
+        p.remove(1).unwrap();
+        assert_eq!(p.insert(3).unwrap(), 0); // reuses freed slot
+    }
+
+    #[test]
+    fn full_pool_rejects() {
+        let mut p = SlotPool::new(1);
+        p.insert(1).unwrap();
+        assert_eq!(p.insert(2), Err(SlotError::Full));
+    }
+
+    #[test]
+    fn remove_unknown_rejects() {
+        let mut p = SlotPool::new(1);
+        assert_eq!(p.remove(7), Err(SlotError::NotResident(7)));
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let mut p = SlotPool::new(2);
+        let a = p.insert(5).unwrap();
+        let b = p.insert(5).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(p.len(), 1);
+    }
+
+    /// Property: after any random op sequence, by_req and by_slot agree
+    /// and no slot is double-assigned.
+    #[test]
+    fn prop_bijection_invariant() {
+        #[derive(Debug)]
+        struct Ops(Vec<(bool, u64)>);
+
+        check(
+            150,
+            |rng: &mut Pcg64| {
+                let n = rng.uniform_usize(1, 60);
+                Ops((0..n)
+                    .map(|_| (rng.next_f64() < 0.6, rng.uniform_u64(0, 12)))
+                    .collect())
+            },
+            |Ops(ops)| {
+                let mut p = SlotPool::new(4);
+                for &(ins, req) in ops {
+                    if ins {
+                        let _ = p.insert(req);
+                    } else {
+                        let _ = p.remove(req);
+                    }
+                    // invariant: bijection between maps
+                    let occ = p.occupied();
+                    prop_assert(occ.len() == p.len(), "count mismatch")?;
+                    for (slot, req) in occ {
+                        prop_assert(p.slot_of(req) == Some(slot),
+                                    "slot_of mismatch")?;
+                    }
+                    prop_assert(p.len() <= p.capacity(), "over capacity")?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! # AcceLLM — reproduction library
+//!
+//! Implementation of *AcceLLM: Accelerating LLM Inference using
+//! Redundancy for Load Balancing and Data Locality* (Bournias,
+//! Cavigelli, Zacharopoulos; Huawei ZRC, 2024) as a three-layer
+//! Rust + JAX + Pallas serving stack.
+//!
+//! Layers:
+//! * **L3 (this crate)** — the coordinator: AcceLLM's pair scheduler with
+//!   redundant KV caches ([`coordinator`]), the discrete-event cluster
+//!   simulator behind the paper's evaluation ([`sim`]), the workload
+//!   generator ([`workload`]), the PJRT runtime ([`runtime`]) and the
+//!   real-model serving engine ([`server`]).
+//! * **L2** — `python/compile/model.py`: JAX Llama-style model lowered
+//!   once to HLO text (`make artifacts`).
+//! * **L1** — `python/compile/kernels/attention.py`: Pallas flash
+//!   attention kernels called by L2.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use coordinator::{AcceLlm, Splitwise, Vllm};
+pub use sim::{run, PerfModel, RunReport, Scheduler, SimConfig};
+pub use workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};

@@ -1,0 +1,211 @@
+//! `accellm` — leader binary: cluster simulation, figure regeneration,
+//! and real-model serving over the AOT PJRT artifacts.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use accellm::cli::Args;
+use accellm::coordinator;
+use accellm::eval::{all_figures, figure_by_id};
+use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
+use accellm::sim::{run, DeviceSpec, InstanceSpec, PerfModel, RunReport,
+                   SimConfig, LLAMA2_70B};
+use accellm::util::rng::Pcg64;
+use accellm::workload::{Trace, WorkloadSpec};
+
+const USAGE: &str = "\
+accellm — AcceLLM reproduction (redundancy-based LLM serving)
+
+USAGE:
+  accellm simulate [--scheduler accellm|splitwise|vllm] [--device h100|910b2]
+                   [--workload light|mixed|heavy] [--instances N] [--rate R]
+                   [--duration S] [--seed K] [--bw GB/s] [--json]
+  accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
+  accellm serve    [--policy accellm|splitwise|vllm] [--instances N]
+                   [--requests N] [--rate R] [--max-new N] [--slots B]
+                   [--artifacts DIR] [--seed K]   # real model over PJRT
+  accellm sweep    [--device ...] [--workload ...] [--instances N]
+                   [--duration S]                  # rate sweep, all schedulers
+
+Run `make artifacts` once before `accellm serve`.";
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return;
+    }
+    let result = match args.subcommand.as_deref().unwrap() {
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<(DeviceSpec, WorkloadSpec,
+                                                usize, f64, f64, u64)> {
+    let device = DeviceSpec::by_name(args.get_or("device", "h100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --device"))?;
+    let workload = WorkloadSpec::by_name(args.get_or("workload", "mixed"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --workload"))?;
+    let instances = args.get_usize("instances", 4).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 8.0).map_err(anyhow::Error::msg)?;
+    let duration = args.get_f64("duration", 60.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    Ok((device, workload, instances, rate, duration, seed))
+}
+
+fn print_report(r: &RunReport, json: bool) {
+    if json {
+        println!("{}", r.to_json().encode());
+    } else {
+        println!("{}", RunReport::csv_header());
+        println!("{}", r.csv_row());
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    // Config file runs an entire experiment (possibly a rate sweep).
+    if let Some(path) = args.get("config") {
+        let exp = accellm::config::Experiment::from_file(Path::new(path))?;
+        println!("{}", RunReport::csv_header());
+        for &rate in &exp.rates {
+            let trace = Trace::poisson(exp.workload, rate, exp.duration,
+                                       exp.seed);
+            let mut sched = coordinator::by_name(&exp.scheduler, exp.instances)
+                .ok_or_else(|| anyhow::anyhow!("unknown scheduler in config"))?;
+            let report = run(&exp.sim_config(), &trace, sched.as_mut());
+            println!("{}", report.csv_row());
+        }
+        return Ok(());
+    }
+    let (device, workload, instances, rate, duration, seed) =
+        parse_common(args)?;
+    let sched_name = args.get_or("scheduler", "accellm");
+    let mut sched = coordinator::by_name(sched_name, instances)
+        .ok_or_else(|| anyhow::anyhow!("unknown --scheduler"))?;
+    let cfg = SimConfig {
+        model: PerfModel::new(InstanceSpec::new(device), LLAMA2_70B),
+        n_instances: instances,
+        interconnect_bw: match args.get("bw") {
+            Some(v) => Some(v.parse::<f64>().map_err(|_| {
+                anyhow::anyhow!("--bw expects GB/s")
+            })? * 1e9),
+            None => None,
+        },
+        record_timeline: false,
+    };
+    let trace = Trace::poisson(workload, rate, duration, seed);
+    let report = run(&cfg, &trace, sched.as_mut());
+    print_report(&report, args.has("json"));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let (device, workload, instances, _, duration, seed) = parse_common(args)?;
+    println!("{}", RunReport::csv_header());
+    for &rate in &accellm::eval::figures::RATE_SWEEP {
+        let trace = Trace::poisson(workload, rate, duration, seed);
+        for name in coordinator::ALL_SCHEDULERS {
+            let mut sched = coordinator::by_name(name, instances).unwrap();
+            let cfg = SimConfig {
+                model: PerfModel::new(InstanceSpec::new(device), LLAMA2_70B),
+                n_instances: instances,
+                interconnect_bw: None,
+                record_timeline: false,
+            };
+            let report = run(&cfg, &trace, sched.as_mut());
+            println!("{}", report.csv_row());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    let outputs = match args.get("fig") {
+        Some(id) => vec![figure_by_id(id)
+            .ok_or_else(|| anyhow::anyhow!("unknown figure id '{id}'"))?],
+        None => all_figures(),
+    };
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        for f in &outputs {
+            let path = PathBuf::from(dir).join(format!("{}.csv", f.id));
+            std::fs::write(&path, f.to_csv())?;
+            println!("wrote {}", path.display());
+        }
+    } else {
+        for f in &outputs {
+            f.print();
+            println!();
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let policy = ServePolicy::by_name(args.get_or("policy", "accellm"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --policy"))?;
+    let instances = args.get_usize("instances", 2).map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_usize("requests", 16).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 4.0).map_err(anyhow::Error::msg)?;
+    let max_new = args.get_usize("max-new", 32).map_err(anyhow::Error::msg)?;
+    let slots = args.get_usize("slots", 8).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    // Synthesize prompts with Poisson arrivals (workload-shaped).
+    let mut rng = Pcg64::new(seed);
+    let corpus = ["The key insight of disaggregated serving is",
+                  "Redundant KV caches allow an instance to",
+                  "In large-scale inference clusters, load balancing",
+                  "Prefill is compute-bound; decoding is limited by",
+                  "When a new request arrives, the scheduling manager",
+                  "Dynamic instances can serve either phase because"];
+    let mut t = 0.0;
+    let reqs: Vec<ServeRequest> = (0..n_requests)
+        .map(|i| {
+            t += rng.exponential(rate);
+            let base = corpus[i % corpus.len()];
+            let reps = rng.uniform_usize(1, 2);
+            ServeRequest {
+                id: i as u64,
+                prompt: base.repeat(reps),
+                max_new_tokens: max_new / 2
+                    + rng.uniform_usize(0, max_new.max(2) / 2),
+                arrival_offset: Duration::from_secs_f64(t),
+            }
+        })
+        .collect();
+
+    let cfg = ClusterConfig {
+        artifacts_dir: artifacts,
+        n_instances: instances,
+        policy,
+        slots,
+    };
+    let report = serve_trace(&cfg, &reqs)?;
+    report.print_summary();
+    if args.has("show-text") {
+        for r in report.responses.iter().take(3) {
+            println!("--- req {} ({} tok): {:?}", r.id, r.n_generated,
+                     &r.text[..r.text.len().min(80)]);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,281 @@
+//! PJRT execution engine: loads the AOT artifacts (HLO text), compiles
+//! them once on the CPU PJRT client, uploads the weights once, and
+//! exposes typed prefill / decode entry points to the serving layer.
+//!
+//! Design constraints discovered empirically (see `probe_outputs.rs`):
+//! PJRT returns multi-output computations as ONE tuple buffer which
+//! cannot be re-fed as separate inputs, so the canonical KV cache lives
+//! HOST-side (`server::kvstate`); decode outputs only the new KV lines
+//! (~36 KB) and the caches are uploaded per step (a memcpy on the CPU
+//! plugin).  Weights stay device-resident across all calls.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Manifest, ModelCfg};
+
+/// Result of a prefill call.
+pub struct PrefillOut {
+    /// Last-position logits, length = vocab.
+    pub logits: Vec<f32>,
+    /// K cache lines, [n_layers, n_kv, seq, head_dim] flattened (valid
+    /// prefix only — bucket padding is stripped).
+    pub k: Vec<f32>,
+    /// Same for V.
+    pub v: Vec<f32>,
+    /// Device execution time (excludes upload of tokens).
+    pub exec_time: std::time::Duration,
+}
+
+/// Result of one decode step.
+pub struct DecodeOut {
+    /// [batch, vocab] flattened.
+    pub logits: Vec<f32>,
+    /// New K lines, [n_layers, batch, n_kv, head_dim] flattened.
+    pub k_new: Vec<f32>,
+    /// New V lines, same shape.
+    pub v_new: Vec<f32>,
+    pub exec_time: std::time::Duration,
+}
+
+/// One compiled model: PJRT client + executables + device-resident weights.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    prefill_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    decode_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    /// Device-resident weight buffers in canonical parameter order.
+    params: Vec<xla::PjRtBuffer>,
+}
+
+impl Engine {
+    /// Load manifest + weights + compile every artifact. One-time cost.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+
+        // Weights: raw little-endian f32, canonical order.
+        let wpath = artifacts_dir.join("weights.bin");
+        let bytes = std::fs::read(&wpath)
+            .with_context(|| format!("reading {}", wpath.display()))?;
+        if bytes.len() != manifest.model.param_count * 4 {
+            bail!("weights.bin is {} bytes, manifest says {}",
+                  bytes.len(), manifest.model.param_count * 4);
+        }
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut params = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let data = &all[p.offset..p.offset + p.numel];
+            let buf = client
+                .buffer_from_host_buffer(data, &p.shape, None)
+                .map_err(|e| anyhow!("uploading {}: {e}", p.name))?;
+            params.push(buf);
+        }
+
+        let mut prefill_exes = HashMap::new();
+        let mut decode_exes = HashMap::new();
+        for a in &manifest.artifacts {
+            let path = artifacts_dir.join(&a.file);
+            match a.kind.as_str() {
+                "prefill" | "decode" => {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().unwrap(),
+                    )
+                    .map_err(|e| anyhow!("parsing {}: {e}", a.file))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {}: {e}", a.file))?;
+                    if a.kind == "prefill" {
+                        prefill_exes.insert(a.seq.unwrap(), exe);
+                    } else {
+                        decode_exes.insert(a.batch.unwrap(), exe);
+                    }
+                }
+                _ => {} // kv_write/kv_read: host-side KV design; unused
+            }
+        }
+        if prefill_exes.is_empty() || decode_exes.is_empty() {
+            bail!("artifact set incomplete (prefill: {}, decode: {})",
+                  prefill_exes.len(), decode_exes.len());
+        }
+        Ok(Engine { manifest, client, prefill_exes, decode_exes, params })
+    }
+
+    pub fn model(&self) -> &ModelCfg {
+        &self.manifest.model
+    }
+
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.decode_exes.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    pub fn prefill_buckets(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.prefill_exes.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// Run prefill for one prompt (batch = 1).  The prompt is padded to
+    /// the smallest compiled bucket; KV rows beyond `tokens.len()` are
+    /// stripped from the result.
+    pub fn prefill(&self, tokens: &[i32]) -> Result<PrefillOut> {
+        let m = &self.manifest.model;
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        let bucket = self
+            .manifest
+            .prefill_bucket(tokens.len())
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds largest \
+                                    bucket", tokens.len()))?;
+        let exe = &self.prefill_exes[&bucket];
+
+        // Right-pad to the bucket; the compiled graph takes the true
+        // length and reads logits at position length-1 (pad positions are
+        // causally invisible to it — verified by
+        // test_model.py::test_padded_bucket_matches_exact).
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket, 0);
+
+        let tb = self
+            .client
+            .buffer_from_host_buffer(&padded, &[1, bucket], None)
+            .map_err(|e| anyhow!("upload tokens: {e}"))?;
+        let len_in = [tokens.len() as i32];
+        let lb = self
+            .client
+            .buffer_from_host_buffer(&len_in, &[], None)
+            .map_err(|e| anyhow!("upload length: {e}"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tb);
+        args.push(&lb);
+
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("prefill exec: {e}"))?;
+        let exec_time = t0.elapsed();
+
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill download: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        let [logits_l, k_l, v_l]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("prefill must return 3 outputs"))?;
+        let logits = logits_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let k_full = k_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let v_full = v_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+
+        // Strip bucket padding: [L, n_kv, bucket, hd] -> [L, n_kv, len, hd].
+        let (l, kvh, hd) = (m.n_layers, m.n_kv_heads, m.head_dim);
+        let len = tokens.len();
+        let mut k = Vec::with_capacity(l * kvh * len * hd);
+        let mut v = Vec::with_capacity(l * kvh * len * hd);
+        for li in 0..l {
+            for h in 0..kvh {
+                let base = (li * kvh + h) * bucket * hd;
+                k.extend_from_slice(&k_full[base..base + len * hd]);
+                v.extend_from_slice(&v_full[base..base + len * hd]);
+            }
+        }
+        Ok(PrefillOut { logits, k, v, exec_time })
+    }
+
+    /// One decode step for a fixed-size slot batch.
+    ///
+    /// * `tokens`: `batch` token ids (garbage ok for empty slots).
+    /// * `k_cache`/`v_cache`: host caches, [L, batch, n_kv, max_len, hd].
+    /// * `lengths`: per-slot valid lengths (0 = empty slot).
+    pub fn decode_step(&self, batch: usize, tokens: &[i32], k_cache: &[f32],
+                       v_cache: &[f32], lengths: &[i32]) -> Result<DecodeOut> {
+        let m = &self.manifest.model;
+        let exe = self
+            .decode_exes
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no decode executable for batch {batch} \
+                                    (have {:?})", self.decode_batches()))?;
+        let cache_dims = [m.n_layers, batch, m.n_kv_heads, m.max_len, m.head_dim];
+        let cache_els: usize = cache_dims.iter().product();
+        if tokens.len() != batch || lengths.len() != batch {
+            bail!("tokens/lengths must have length {batch}");
+        }
+        if k_cache.len() != cache_els || v_cache.len() != cache_els {
+            bail!("cache must have {cache_els} elements, got {}",
+                  k_cache.len());
+        }
+        for (i, &len) in lengths.iter().enumerate() {
+            if len as usize >= m.max_len {
+                bail!("slot {i} length {len} >= max_len {} (evict first)",
+                      m.max_len);
+            }
+        }
+
+        let c = &self.client;
+        let tb = c.buffer_from_host_buffer(tokens, &[batch], None)
+            .map_err(|e| anyhow!("upload tokens: {e}"))?;
+        let kb = c.buffer_from_host_buffer(k_cache, &cache_dims, None)
+            .map_err(|e| anyhow!("upload k_cache: {e}"))?;
+        let vb = c.buffer_from_host_buffer(v_cache, &cache_dims, None)
+            .map_err(|e| anyhow!("upload v_cache: {e}"))?;
+        let lb = c.buffer_from_host_buffer(lengths, &[batch], None)
+            .map_err(|e| anyhow!("upload lengths: {e}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.extend([&tb, &kb, &vb, &lb]);
+
+        let t0 = Instant::now();
+        let out = exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("decode exec: {e}"))?;
+        let exec_time = t0.elapsed();
+
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode download: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        let [logits_l, k_l, v_l]: [xla::Literal; 3] = parts
+            .try_into()
+            .map_err(|_| anyhow!("decode must return 3 outputs"))?;
+        Ok(DecodeOut {
+            logits: logits_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            k_new: k_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            v_new: v_l.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?,
+            exec_time,
+        })
+    }
+}
+
+/// Greedy sampler: argmax over one slot's logits.
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

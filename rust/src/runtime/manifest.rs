@@ -1,0 +1,210 @@
+//! `artifacts/manifest.json` — the build-time contract between the
+//! Python AOT compiler (`python/compile/aot.py`) and this runtime:
+//! model architecture, canonical parameter order/offsets into
+//! `weights.bin`, and the artifact index.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Architecture of the AOT-compiled model (mirror of Python ModelConfig).
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub max_len: usize,
+    pub param_count: usize,
+}
+
+impl ModelCfg {
+    /// f32 elements of KV cache per token (all layers, K+V).
+    pub fn kv_els_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim
+    }
+
+    /// Bytes of KV cache per token (f32 host representation).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        self.kv_els_per_token() * 4
+    }
+}
+
+/// One weight tensor's placement in `weights.bin`.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements from the start of weights.bin.
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// One compiled HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Prefill bucket length (kind == "prefill").
+    pub seq: Option<usize>,
+    /// Batch size (kind == "decode" / "kv_write" / "kv_read").
+    pub batch: Option<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelCfg,
+    pub seed: u64,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub prefill_buckets: Vec<usize>,
+    pub decode_batches: Vec<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)",
+                                     path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+
+        let m = j.req("model")?;
+        let get = |k: &str| -> Result<usize> {
+            m.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("model.{k} not an integer"))
+        };
+        let model = ModelCfg {
+            name: m.req("name")?.as_str().unwrap_or("?").to_string(),
+            vocab: get("vocab")?,
+            dim: get("dim")?,
+            n_layers: get("n_layers")?,
+            n_q_heads: get("n_q_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            head_dim: get("head_dim")?,
+            ffn: get("ffn")?,
+            max_len: get("max_len")?,
+            param_count: get("param_count")?,
+        };
+
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: p.req("name")?.as_str().unwrap_or("?").to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect(),
+                    offset: p.req("offset")?.as_usize().unwrap_or(0),
+                    numel: p.req("numel")?.as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifacts not an array"))?
+            .iter()
+            .map(|a| -> Result<ArtifactEntry> {
+                Ok(ArtifactEntry {
+                    name: a.req("name")?.as_str().unwrap_or("?").to_string(),
+                    file: a.req("file")?.as_str().unwrap_or("?").to_string(),
+                    kind: a.req("kind")?.as_str().unwrap_or("?").to_string(),
+                    seq: a.get("seq").and_then(|x| x.as_usize()),
+                    batch: a.get("batch").and_then(|x| x.as_usize()),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let usizes = |key: &str| -> Vec<usize> {
+            j.get(key)
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default()
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            seed: j.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+            params,
+            artifacts,
+            prefill_buckets: usizes("prefill_buckets"),
+            decode_batches: usizes("decode_batches"),
+        })
+    }
+
+    /// Smallest prefill bucket that fits `len` tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.prefill_buckets.iter().copied().find(|&b| b >= len)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.vocab > 0);
+        assert_eq!(m.model.n_q_heads % m.model.n_kv_heads, 0);
+        assert!(!m.params.is_empty());
+        assert_eq!(m.params[0].name, "embed");
+        // Param table must tile weights.bin exactly.
+        let mut expect = 0;
+        for p in &m.params {
+            assert_eq!(p.offset, expect, "param {} misaligned", p.name);
+            assert_eq!(p.numel, p.shape.iter().product::<usize>());
+            expect += p.numel;
+        }
+        assert_eq!(expect, m.model.param_count);
+        assert!(m.prefill_bucket(10).is_some());
+        assert!(m.prefill_bucket(100_000).is_none());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.prefill_bucket(1), Some(16));
+        assert_eq!(m.prefill_bucket(16), Some(16));
+        assert_eq!(m.prefill_bucket(17), Some(32));
+        assert_eq!(m.prefill_bucket(128), Some(128));
+    }
+}

@@ -1,0 +1,31 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compiles them once, and executes them from
+//! the serving hot path.  Python never runs at serving time.
+
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+
+pub use engine::{argmax, DecodeOut, Engine, PrefillOut};
+pub use manifest::{Manifest, ModelCfg};
+
+/// `Engine` wrapper asserting thread-safety.
+///
+/// SAFETY: the xla crate's pointer wrappers carry no Send/Sync impls,
+/// but the underlying XLA PjRt CPU client is documented thread-safe
+/// (all PJRT client/executable entry points take const pointers and XLA
+/// serializes internally); executables and uploaded weight buffers are
+/// immutable after construction.  Each server instance thread only
+/// issues execute calls.
+pub struct SharedEngine(pub Engine);
+
+unsafe impl Send for SharedEngine {}
+unsafe impl Sync for SharedEngine {}
+
+impl std::ops::Deref for SharedEngine {
+    type Target = Engine;
+
+    fn deref(&self) -> &Engine {
+        &self.0
+    }
+}

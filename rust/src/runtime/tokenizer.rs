@@ -1,0 +1,55 @@
+//! Byte-level tokenizer (vocab = 256): every byte is a token.
+//!
+//! No pretrained vocabulary is available offline, and the served model is
+//! randomly initialized (DESIGN.md §3), so a byte tokenizer is the
+//! honest choice: lossless, deterministic, zero external data.
+
+/// Token id used as end-of-sequence marker.  Byte 0 never occurs in
+/// UTF-8 text prompts, so using it as EOS is collision-free.
+pub const EOS: i32 = 0;
+
+/// Encode text as token ids (one per byte).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.as_bytes().iter().map(|&b| b as i32).collect()
+}
+
+/// Decode token ids back into a lossy UTF-8 string (EOS and out-of-range
+/// ids are dropped).
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t > 0 && t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let ids = encode("hello, world");
+        assert_eq!(decode(&ids), "hello, world");
+        assert_eq!(ids.len(), 12);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo ☃";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn eos_dropped() {
+        assert_eq!(decode(&[104, 0, 105]), "hi");
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for id in encode("any text at all…") {
+            assert!((0..256).contains(&id));
+        }
+    }
+}

@@ -1,0 +1,430 @@
+//! Cluster coordinator: routes requests to instance workers per the
+//! configured policy, replays an open-loop arrival trace, and collects
+//! the serving report.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{tokenizer, Engine, SharedEngine};
+use crate::server::instance::{InstanceWorker, Msg};
+use crate::server::messages::{InstanceStats, ServeRequest, ServeResponse,
+                              ToCoord, ToInstance};
+use crate::util::stats::Summary;
+
+/// Scheduling policy for the real serving path (mirrors `coordinator/`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServePolicy {
+    /// Pairs + replica mirroring + zero-byte handover role flips.
+    AcceLlm,
+    /// First quarter of instances prefill-only; KV handed off by copy.
+    Splitwise,
+    /// Every instance prefills and decodes its own requests.
+    Vllm,
+}
+
+impl ServePolicy {
+    pub fn by_name(name: &str) -> Option<ServePolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "accellm" | "acc" => Some(ServePolicy::AcceLlm),
+            "splitwise" | "spl" => Some(ServePolicy::Splitwise),
+            "vllm" => Some(ServePolicy::Vllm),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServePolicy::AcceLlm => "accellm",
+            ServePolicy::Splitwise => "splitwise",
+            ServePolicy::Vllm => "vllm",
+        }
+    }
+}
+
+/// Serving-cluster configuration.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub artifacts_dir: PathBuf,
+    pub n_instances: usize,
+    pub policy: ServePolicy,
+    /// Decode slot count per instance (must be a compiled decode batch).
+    pub slots: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            n_instances: 2,
+            policy: ServePolicy::AcceLlm,
+            slots: 8,
+        }
+    }
+}
+
+/// Aggregate report of one serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub policy: &'static str,
+    pub n_instances: usize,
+    pub n_requests: usize,
+    pub completed: usize,
+    pub wall: Duration,
+    pub total_generated: u64,
+    /// Decode tokens per second, whole cluster.
+    pub tokens_per_s: f64,
+    /// Decode tokens per instance per second (paper's cost efficiency).
+    pub cost_efficiency: f64,
+    pub ttft: Summary,
+    pub tbt: Summary,
+    pub jct: Summary,
+    pub responses: Vec<ServeResponse>,
+    pub per_instance: Vec<InstanceStats>,
+    pub handoff_bytes: u64,
+    pub mirror_bytes: u64,
+}
+
+impl ServeReport {
+    pub fn print_summary(&self) {
+        let mut t = self.clone_summaries();
+        println!("== serve report: {} x{} instances ==",
+                 self.policy, self.n_instances);
+        println!("requests completed : {}/{}", self.completed, self.n_requests);
+        println!("wall time          : {:.2}s", self.wall.as_secs_f64());
+        println!("decode tokens      : {}", self.total_generated);
+        println!("throughput         : {:.1} tok/s  ({:.1} tok/inst/s)",
+                 self.tokens_per_s, self.cost_efficiency);
+        println!("TTFT  mean/p50/p99 : {:.1} / {:.1} / {:.1} ms",
+                 t.0.mean() * 1e3, t.0.p50() * 1e3, t.0.p99() * 1e3);
+        println!("TBT   mean/p99/max : {:.1} / {:.1} / {:.1} ms",
+                 t.1.mean() * 1e3, t.1.p99() * 1e3, t.1.max() * 1e3);
+        println!("JCT   mean/p50/p99 : {:.2} / {:.2} / {:.2} s",
+                 t.2.mean(), t.2.p50(), t.2.p99());
+        println!("KV hand-off        : {:.2} MB", self.handoff_bytes as f64 / 1e6);
+        println!("KV replica traffic : {:.2} MB", self.mirror_bytes as f64 / 1e6);
+    }
+
+    fn clone_summaries(&self) -> (Summary, Summary, Summary) {
+        (self.ttft.clone(), self.tbt.clone(), self.jct.clone())
+    }
+}
+
+/// Per-request coordinator-side bookkeeping.
+struct Tracked {
+    arrival: Instant,
+    first_token: Option<Instant>,
+    last_token: Option<Instant>,
+    tbt: Vec<f64>,
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    owner: usize,
+    done: bool,
+}
+
+/// Serve a trace of requests; blocks until every request completes.
+pub fn serve_trace(cfg: &ClusterConfig, requests: &[ServeRequest])
+                   -> Result<ServeReport> {
+    if cfg.policy == ServePolicy::AcceLlm && cfg.n_instances % 2 != 0 {
+        bail!("AcceLLM policy needs an even instance count");
+    }
+    if cfg.n_instances == 0 || requests.is_empty() {
+        bail!("need at least one instance and one request");
+    }
+
+    let engine = Engine::load(&cfg.artifacts_dir).context("loading engine")?;
+    if !engine.decode_batches().contains(&cfg.slots) {
+        bail!("slots={} is not a compiled decode batch (have {:?})",
+              cfg.slots, engine.decode_batches());
+    }
+    let max_prompt = *engine.prefill_buckets().last().unwrap();
+    let max_len = engine.model().max_len;
+    let engine = Arc::new(SharedEngine(engine));
+
+    // Spawn instance workers.
+    let (coord_tx, coord_rx): (Sender<ToCoord>, Receiver<ToCoord>) = channel();
+    let mut inboxes: Vec<Sender<Msg>> = Vec::new();
+    let mut rxs: Vec<Receiver<Msg>> = Vec::new();
+    for _ in 0..cfg.n_instances {
+        let (tx, rx) = channel();
+        inboxes.push(tx);
+        rxs.push(rx);
+    }
+    let mut joins = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let partner = if cfg.policy == ServePolicy::AcceLlm {
+            Some(inboxes[i ^ 1].clone())
+        } else {
+            None
+        };
+        let w = InstanceWorker::new(i, engine.clone(), cfg.slots, rx,
+                                    coord_tx.clone(), partner);
+        joins.push(std::thread::Builder::new()
+            .name(format!("instance-{i}"))
+            .spawn(move || w.run())
+            .context("spawning instance thread")?);
+    }
+
+    // Sort arrivals and replay open-loop.
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by_key(|&i| requests[i].arrival_offset);
+
+    let n_prefill_spl = (cfg.n_instances / 4).max(1);
+    let start = Instant::now();
+    let mut tracked: HashMap<u64, Tracked> = HashMap::new();
+    let mut active_count = vec![0usize; cfg.n_instances];
+    let mut prefill_inflight = vec![0usize; cfg.n_instances];
+    let mut next_arrival = 0usize;
+    let mut completed = 0usize;
+    let mut rr = 0usize;
+
+    let route = |policy: ServePolicy, active: &[usize],
+                 prefills: &[usize], rr: &mut usize| -> usize {
+        match policy {
+            ServePolicy::Vllm => {
+                let i = *rr % active.len();
+                *rr += 1;
+                i
+            }
+            ServePolicy::Splitwise => (0..n_prefill_spl)
+                .min_by_key(|&i| prefills[i])
+                .unwrap(),
+            ServePolicy::AcceLlm => {
+                // Pair with least total active load; within it, the member
+                // with fewer active decodes becomes the prefiller.
+                let n_pairs = active.len() / 2;
+                let pair = (0..n_pairs)
+                    .min_by_key(|&p| {
+                        active[2 * p] + active[2 * p + 1]
+                            + prefills[2 * p] + prefills[2 * p + 1]
+                    })
+                    .unwrap();
+                let (a, b) = (2 * pair, 2 * pair + 1);
+                if active[a] + prefills[a] * 2 <= active[b] + prefills[b] * 2 {
+                    a
+                } else {
+                    b
+                }
+            }
+        }
+    };
+
+    loop {
+        // Dispatch due arrivals.
+        let now = Instant::now();
+        while next_arrival < order.len() {
+            let req = &requests[order[next_arrival]];
+            if now.duration_since(start) < req.arrival_offset {
+                break;
+            }
+            let mut toks = tokenizer::encode(&req.prompt);
+            toks.truncate(max_prompt);
+            if toks.is_empty() {
+                toks.push(1);
+            }
+            let max_new = req
+                .max_new_tokens
+                .min(max_len - 1 - toks.len())
+                .max(1);
+            let inst = route(cfg.policy, &active_count, &prefill_inflight,
+                             &mut rr);
+            if cfg.policy == ServePolicy::AcceLlm && prefill_inflight[inst] == 0
+            {
+                // Flip: partner takes over this member's decodes first
+                // (zero-byte handover; replicas are already synced).  An
+                // instance already in prefill mode has no active decodes
+                // to shed — skipping the message avoids handover thrash.
+                let _ = inboxes[inst].send(Msg::C(
+                    ToInstance::HandoverAllToPartner));
+            }
+            prefill_inflight[inst] += 1;
+            tracked.insert(req.id, Tracked {
+                arrival: start + req.arrival_offset,
+                first_token: None,
+                last_token: None,
+                tbt: Vec::new(),
+                tokens: Vec::new(),
+                prompt_len: toks.len(),
+                owner: inst,
+                done: false,
+            });
+            let _ = inboxes[inst].send(Msg::C(ToInstance::Prefill(
+                req.id, toks, max_new)));
+            next_arrival += 1;
+        }
+
+        if completed == requests.len() {
+            break;
+        }
+
+        // Wait for events (or the next arrival, whichever is sooner).
+        let timeout = if next_arrival < order.len() {
+            let due = start + requests[order[next_arrival]].arrival_offset;
+            due.saturating_duration_since(Instant::now())
+                .min(Duration::from_millis(50))
+        } else {
+            Duration::from_millis(50)
+        };
+        let ev = match coord_rx.recv_timeout(timeout) {
+            Ok(ev) => ev,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => bail!("workers died"),
+        };
+        match ev {
+            ToCoord::PrefillDone(inst, id, kv, first, _exec, remaining) => {
+                prefill_inflight[inst] = prefill_inflight[inst].saturating_sub(1);
+                let t = tracked.get_mut(&id).expect("tracked");
+                let now = Instant::now();
+                t.first_token = Some(now);
+                t.last_token = Some(now);
+                t.tokens.push(first);
+                match cfg.policy {
+                    ServePolicy::Vllm => {
+                        t.owner = inst;
+                        active_count[inst] += 1;
+                        let _ = inboxes[inst].send(Msg::C(ToInstance::Admit(
+                            id, kv, first, remaining, false)));
+                    }
+                    ServePolicy::Splitwise => {
+                        // Decode instance with the fewest active requests.
+                        let dst = (n_prefill_spl..cfg.n_instances)
+                            .min_by_key(|&i| active_count[i])
+                            .unwrap();
+                        t.owner = dst;
+                        active_count[dst] += 1;
+                        let _ = inboxes[dst].send(Msg::C(ToInstance::Admit(
+                            id, kv, first, remaining, true)));
+                    }
+                    ServePolicy::AcceLlm => {
+                        // Less-loaded pair member decodes; the other holds
+                        // the replica.  Mirror is sent BEFORE Admit so the
+                        // replica exists before any MirrorLine for it.
+                        let partner = inst ^ 1;
+                        let dst = if active_count[partner] < active_count[inst]
+                        {
+                            partner
+                        } else {
+                            inst
+                        };
+                        let other = dst ^ 1;
+                        t.owner = dst;
+                        active_count[dst] += 1;
+                        let _ = inboxes[other]
+                            .send(Msg::C(ToInstance::Mirror(id, kv.clone())));
+                        let _ = inboxes[dst].send(Msg::C(ToInstance::Admit(
+                            id, kv, first, remaining, dst != inst)));
+                    }
+                }
+            }
+            ToCoord::Token(_inst, id, tok, stamp) => {
+                let t = tracked.get_mut(&id).expect("tracked");
+                if let Some(prev) = t.last_token {
+                    t.tbt.push(stamp.duration_since(prev).as_secs_f64());
+                }
+                t.last_token = Some(stamp);
+                t.tokens.push(tok);
+            }
+            ToCoord::Activated(inst, id) => {
+                let t = tracked.get_mut(&id).expect("tracked");
+                if !t.done {
+                    active_count[t.owner] = active_count[t.owner].saturating_sub(1);
+                    active_count[inst] += 1;
+                    t.owner = inst;
+                }
+            }
+            ToCoord::Completed(inst, id, _stamp) => {
+                let t = tracked.get_mut(&id).expect("tracked");
+                t.done = true;
+                active_count[t.owner] = active_count[t.owner].saturating_sub(1);
+                completed += 1;
+                if cfg.policy == ServePolicy::AcceLlm {
+                    let _ = inboxes[inst ^ 1]
+                        .send(Msg::C(ToInstance::DropReplica(id)));
+                }
+            }
+            ToCoord::Exited(..) => bail!("instance exited early"),
+        }
+    }
+    let wall = start.elapsed();
+
+    // Shut workers down and collect stats.
+    for tx in &inboxes {
+        let _ = tx.send(Msg::C(ToInstance::Shutdown));
+    }
+    let mut per_instance = vec![InstanceStats::default(); cfg.n_instances];
+    let mut exited = 0;
+    while exited < cfg.n_instances {
+        match coord_rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(ToCoord::Exited(i, stats)) => {
+                per_instance[i] = stats;
+                exited += 1;
+            }
+            Ok(_) => {}
+            Err(_) => bail!("timed out waiting for workers to exit"),
+        }
+    }
+    for j in joins {
+        let _ = j.join();
+    }
+
+    // Build the report.
+    let mut ttft = Summary::new();
+    let mut tbt = Summary::new();
+    let mut jct = Summary::new();
+    let mut responses = Vec::new();
+    let mut total_generated = 0u64;
+    for r in requests {
+        let t = &tracked[&r.id];
+        let first = t.first_token.expect("completed without first token");
+        let last = t.last_token.expect("completed without tokens");
+        let ttft_d = first.duration_since(t.arrival);
+        let jct_d = last.duration_since(t.arrival);
+        ttft.add(ttft_d.as_secs_f64());
+        jct.add(jct_d.as_secs_f64());
+        for &g in &t.tbt {
+            tbt.add(g);
+        }
+        total_generated += t.tokens.len() as u64;
+        let tbt_mean = if t.tbt.is_empty() {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(t.tbt.iter().sum::<f64>() / t.tbt.len() as f64)
+        };
+        let tbt_max = Duration::from_secs_f64(
+            t.tbt.iter().cloned().fold(0.0, f64::max));
+        responses.push(ServeResponse {
+            id: r.id,
+            text: tokenizer::decode(&t.tokens),
+            n_prompt_tokens: t.prompt_len,
+            n_generated: t.tokens.len(),
+            ttft: ttft_d,
+            jct: jct_d,
+            tbt_mean,
+            tbt_max,
+        });
+    }
+    let handoff: u64 = per_instance.iter().map(|s| s.handoff_bytes).sum();
+    let mirror: u64 = per_instance.iter().map(|s| s.mirror_bytes).sum();
+    Ok(ServeReport {
+        policy: cfg.policy.name(),
+        n_instances: cfg.n_instances,
+        n_requests: requests.len(),
+        completed,
+        wall,
+        total_generated,
+        tokens_per_s: total_generated as f64 / wall.as_secs_f64(),
+        cost_efficiency: total_generated as f64
+            / (wall.as_secs_f64() * cfg.n_instances as f64),
+        ttft,
+        tbt,
+        jct,
+        responses,
+        per_instance,
+        handoff_bytes: handoff,
+        mirror_bytes: mirror,
+    })
+}

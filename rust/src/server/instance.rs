@@ -1,0 +1,325 @@
+//! Instance worker: owns a fixed-size slot batch over the AOT decode
+//! executable, a prefill queue, and (AcceLLM) a replica store mirrored
+//! from its pair partner.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::kvcache::{RequestKv, SlotPool};
+use crate::runtime::tokenizer::EOS;
+use crate::runtime::SharedEngine;
+use crate::server::messages::{InstanceStats, ToCoord, ToInstance, ToPartner};
+
+/// Unified inbox: coordinator and pair partner share one channel so a
+/// single blocking `recv` covers both (std mpsc has no select; FIFO per
+/// sender is exactly the ordering the handover protocol needs).
+pub enum Msg {
+    C(ToInstance),
+    P(ToPartner),
+}
+
+/// One active (decoding) request's slot-side state.
+struct Active {
+    next_token: i32,
+    remaining: usize,
+}
+
+pub struct InstanceWorker {
+    pub id: usize,
+    engine: Arc<SharedEngine>,
+    batch: usize,
+    max_len: usize,
+    rx: Receiver<Msg>,
+    coord: Sender<ToCoord>,
+    /// AcceLLM: the pair partner's inbox (replica mirroring + handover).
+    partner: Option<Sender<Msg>>,
+
+    slots: SlotPool,
+    k_cache: Vec<f32>,
+    v_cache: Vec<f32>,
+    lengths: Vec<i32>,
+    active: HashMap<u64, Active>,
+    /// Replicas of requests decoding on the partner: kv + resume state.
+    replicas: HashMap<u64, (RequestKv, i32, usize)>,
+    /// Handovers waiting for a free slot.
+    pending_activation: VecDeque<u64>,
+    prefill_q: VecDeque<(u64, Vec<i32>, usize)>,
+    stats: InstanceStats,
+    shutdown: bool,
+}
+
+impl InstanceWorker {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(id: usize, engine: Arc<SharedEngine>, batch: usize,
+               rx: Receiver<Msg>, coord: Sender<ToCoord>,
+               partner: Option<Sender<Msg>>) -> Self {
+        let m = engine.model();
+        let cache_els = m.n_layers * batch * m.n_kv_heads * m.max_len * m.head_dim;
+        InstanceWorker {
+            id,
+            batch,
+            max_len: m.max_len,
+            rx,
+            coord,
+            partner,
+            slots: SlotPool::new(batch),
+            k_cache: vec![0.0; cache_els],
+            v_cache: vec![0.0; cache_els],
+            lengths: vec![0; batch],
+            active: HashMap::new(),
+            replicas: HashMap::new(),
+            pending_activation: VecDeque::new(),
+            prefill_q: VecDeque::new(),
+            stats: InstanceStats::default(),
+            shutdown: false,
+            engine,
+        }
+    }
+
+    /// Main loop; consumes the worker.
+    pub fn run(mut self) {
+        loop {
+            // Drain the inbox without blocking.
+            while let Ok(msg) = self.rx.try_recv() {
+                self.handle(msg);
+            }
+            self.drain_pending_activations();
+            let has_work = !self.prefill_q.is_empty() || !self.slots.is_empty();
+            if !has_work {
+                if self.shutdown {
+                    break;
+                }
+                // Idle: block until something arrives.
+                match self.rx.recv() {
+                    Ok(msg) => {
+                        self.handle(msg);
+                        continue;
+                    }
+                    Err(_) => break, // coordinator gone
+                }
+            }
+            // Prefill is prompt-exclusive (never batched with decode —
+            // AcceLLM's no-interference rule; also vLLM 0.4.2 semantics).
+            if let Some((id, tokens, max_new)) = self.prefill_q.pop_front() {
+                if let Err(e) = self.do_prefill(id, tokens, max_new) {
+                    log::error!("instance {}: prefill {id}: {e}", self.id);
+                }
+                continue;
+            }
+            if !self.slots.is_empty() {
+                if let Err(e) = self.do_decode_step() {
+                    log::error!("instance {}: decode: {e}", self.id);
+                }
+            }
+        }
+        let _ = self.coord.send(ToCoord::Exited(self.id, self.stats.clone()));
+    }
+
+    fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::C(ToInstance::Prefill(id, tokens, max_new)) => {
+                self.prefill_q.push_back((id, tokens, max_new));
+            }
+            Msg::C(ToInstance::Admit(id, kv, next, remaining, transferred)) => {
+                if transferred {
+                    self.stats.handoff_bytes += kv.bytes() as u64;
+                }
+                self.admit(id, kv, next, remaining);
+            }
+            Msg::C(ToInstance::Mirror(id, kv)) => {
+                self.stats.mirror_bytes += kv.bytes() as u64;
+                self.replicas.insert(id, (kv, 0, 0));
+            }
+            Msg::C(ToInstance::DropReplica(id)) => {
+                self.replicas.remove(&id);
+            }
+            Msg::C(ToInstance::HandoverAllToPartner) => {
+                self.handover_all();
+            }
+            Msg::C(ToInstance::Shutdown) => {
+                self.shutdown = true;
+            }
+            Msg::P(ToPartner::MirrorLine(id, k, v, next, remaining)) => {
+                self.stats.mirror_bytes += ((k.len() + v.len()) * 4) as u64;
+                if let Some((kv, nt, rem)) = self.replicas.get_mut(&id) {
+                    kv.append_line(&k, &v);
+                    *nt = next;
+                    *rem = remaining;
+                }
+            }
+            Msg::P(ToPartner::Handover(id, next, remaining)) => {
+                // FIFO guarantees every MirrorLine for `id` arrived first.
+                if let Some((kv, _, _)) = self.replicas.remove(&id) {
+                    self.admit_local(id, kv, next, remaining, true);
+                    let _ = self.coord.send(ToCoord::Activated(self.id, id));
+                } else {
+                    log::error!("instance {}: handover of unknown replica {id}",
+                                self.id);
+                }
+            }
+        }
+    }
+
+    /// Admit a request from outside (bytes already metered by caller).
+    fn admit(&mut self, id: u64, kv: RequestKv, next: i32, remaining: usize) {
+        self.admit_local(id, kv, next, remaining, false);
+    }
+
+    /// `keep_replica`: on a pair handover the sender keeps its copy and
+    /// we hold the other — the request stays redundant; our copy becomes
+    /// the live slot and the kv value is retained as the mirror base for
+    /// lines we send BACK on the next flip.
+    fn admit_local(&mut self, id: u64, kv: RequestKv, next: i32,
+                   remaining: usize, _keep_replica: bool) {
+        match self.slots.insert(id) {
+            Ok(slot) => {
+                kv.write_into_slot(&mut self.k_cache, &mut self.v_cache,
+                                   self.batch, self.max_len, slot);
+                self.lengths[slot] = kv.tokens as i32;
+                self.active.insert(id, Active {
+                    next_token: next,
+                    remaining,
+                });
+            }
+            Err(_) => {
+                // Batch full: park the KV as a replica and activate when
+                // a slot frees.
+                self.replicas.insert(id, (kv, next, remaining));
+                self.pending_activation.push_back(id);
+            }
+        }
+    }
+
+    /// Activate parked handovers/admissions while slots are free.
+    fn drain_pending_activations(&mut self) {
+        while !self.pending_activation.is_empty() && !self.slots.is_full() {
+            let id = self.pending_activation.pop_front().unwrap();
+            if let Some((kv, nt, rem)) = self.replicas.remove(&id) {
+                self.admit_local(id, kv, nt, rem, true);
+                let _ = self.coord.send(ToCoord::Activated(self.id, id));
+            }
+        }
+    }
+
+    fn handover_all(&mut self) {
+        let Some(partner) = self.partner.clone() else {
+            return;
+        };
+        for (slot, id) in self.slots.occupied() {
+            let Some(a) = self.active.remove(&id) else { continue };
+            // Extract the live rows into a local replica copy (pure
+            // host memcpy — no inter-instance bytes; the partner already
+            // holds the synced replica it will decode from).
+            let kv = self.extract_slot(slot);
+            self.replicas.insert(id, (kv, a.next_token, a.remaining));
+            let _ = partner.send(Msg::P(ToPartner::Handover(
+                id, a.next_token, a.remaining)));
+            self.slots.remove(id).expect("occupied slot");
+            self.lengths[slot] = 0;
+        }
+    }
+
+    fn extract_slot(&self, slot: usize) -> RequestKv {
+        let m = self.engine.model();
+        let tokens = self.lengths[slot] as usize;
+        let (l, h, d, big_m) = (m.n_layers, m.n_kv_heads, m.head_dim,
+                                self.max_len);
+        let mut k = Vec::with_capacity(l * h * tokens * d);
+        let mut v = Vec::with_capacity(l * h * tokens * d);
+        for li in 0..l {
+            for hi in 0..h {
+                let base = (((li * self.batch + slot) * h + hi) * big_m) * d;
+                k.extend_from_slice(&self.k_cache[base..base + tokens * d]);
+                v.extend_from_slice(&self.v_cache[base..base + tokens * d]);
+            }
+        }
+        RequestKv::from_prefill(m, tokens, k, v)
+    }
+
+    fn do_prefill(&mut self, id: u64, tokens: Vec<i32>, max_new: usize)
+                  -> Result<()> {
+        let out = self.engine.prefill(&tokens)?;
+        self.stats.prefill_steps += 1;
+        self.stats.prefill_time += out.exec_time;
+        let kv = RequestKv::from_prefill(self.engine.model(), tokens.len(),
+                                         out.k, out.v);
+        let first = crate::runtime::argmax(&out.logits);
+        let _ = self.coord.send(ToCoord::PrefillDone(
+            self.id, id, kv, first, out.exec_time, max_new.saturating_sub(1)));
+        Ok(())
+    }
+
+    fn do_decode_step(&mut self) -> Result<()> {
+        let m = self.engine.model();
+        let vocab = m.vocab;
+        let (l, h, d) = (m.n_layers, m.n_kv_heads, m.head_dim);
+        let mut tokens = vec![0i32; self.batch];
+        let occupied = self.slots.occupied();
+        for &(slot, id) in &occupied {
+            tokens[slot] = self.active[&id].next_token;
+        }
+        let out = self.engine.decode_step(self.batch, &tokens, &self.k_cache,
+                                          &self.v_cache, &self.lengths)?;
+        self.stats.decode_steps += 1;
+        self.stats.decode_time += out.exec_time;
+        let now = Instant::now();
+
+        let mut completed = Vec::new();
+        for &(slot, id) in &occupied {
+            let tok = crate::runtime::argmax(
+                &out.logits[slot * vocab..(slot + 1) * vocab]);
+            let pos = self.lengths[slot] as usize;
+            // Apply the new KV line into the batch cache at `pos`.
+            let mut k_line = Vec::with_capacity(l * h * d);
+            let mut v_line = Vec::with_capacity(l * h * d);
+            for li in 0..l {
+                for hi in 0..h {
+                    let src = ((li * self.batch + slot) * h + hi) * d;
+                    let dst = ((((li * self.batch + slot) * h + hi)
+                        * self.max_len)
+                        + pos)
+                        * d;
+                    self.k_cache[dst..dst + d]
+                        .copy_from_slice(&out.k_new[src..src + d]);
+                    self.v_cache[dst..dst + d]
+                        .copy_from_slice(&out.v_new[src..src + d]);
+                    k_line.extend_from_slice(&out.k_new[src..src + d]);
+                    v_line.extend_from_slice(&out.v_new[src..src + d]);
+                }
+            }
+            self.lengths[slot] += 1;
+            self.stats.tokens_generated += 1;
+
+            let a = self.active.get_mut(&id).expect("active entry");
+            a.remaining = a.remaining.saturating_sub(1);
+            let cache_full = self.lengths[slot] as usize >= self.max_len - 1;
+            let done = a.remaining == 0 || tok == EOS || cache_full;
+            let next = a.next_token;
+            a.next_token = tok;
+            let remaining = a.remaining;
+            let _ = next;
+
+            if let Some(p) = &self.partner {
+                let _ = p.send(Msg::P(ToPartner::MirrorLine(
+                    id, k_line, v_line, tok, remaining)));
+            }
+            let _ = self.coord.send(ToCoord::Token(self.id, id, tok, now));
+            if done {
+                completed.push((slot, id));
+            }
+        }
+        for (slot, id) in completed {
+            self.active.remove(&id).expect("active");
+            self.slots.remove(id).expect("slot");
+            self.lengths[slot] = 0;
+            let _ = self.coord.send(ToCoord::Completed(self.id, id, now));
+        }
+        // Parked handovers/admissions can now take the freed slots.
+        self.drain_pending_activations();
+        Ok(())
+    }
+}

@@ -1,0 +1,91 @@
+//! Message types between the coordinator and instance workers.
+
+use std::time::{Duration, Instant};
+
+use crate::kvcache::RequestKv;
+
+/// A request submitted to the cluster.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// Offset from serving start at which this request "arrives"
+    /// (open-loop replay of a workload trace).
+    pub arrival_offset: Duration,
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub id: u64,
+    pub text: String,
+    pub n_prompt_tokens: usize,
+    pub n_generated: usize,
+    pub ttft: Duration,
+    pub jct: Duration,
+    /// Mean time between tokens.
+    pub tbt_mean: Duration,
+    pub tbt_max: Duration,
+}
+
+/// Coordinator -> instance.
+pub enum ToInstance {
+    /// Enqueue a prefill: (req id, tokens, max_new_tokens).
+    Prefill(u64, Vec<i32>, usize),
+    /// Admit a request for decoding with its KV (Splitwise hand-off /
+    /// AcceLLM initial placement): (id, kv, next token, remaining,
+    /// transferred — false when the KV never left this instance, so no
+    /// interconnect bytes are metered).
+    Admit(u64, RequestKv, i32, usize, bool),
+    /// Store a full replica (AcceLLM initial mirror).
+    Mirror(u64, RequestKv),
+    /// Drop a stored replica (request completed elsewhere).
+    DropReplica(u64),
+    /// Deactivate all active requests and hand them to the pair partner
+    /// via the direct channel (AcceLLM role flip).
+    HandoverAllToPartner,
+    /// Finish outstanding work, then exit.
+    Shutdown,
+}
+
+/// Instance -> pair partner (AcceLLM only; FIFO with mirrored lines).
+pub enum ToPartner {
+    /// One new KV line for a replica: (id, k_line, v_line, next token,
+    /// remaining AFTER this token).
+    MirrorLine(u64, Vec<f32>, Vec<f32>, i32, usize),
+    /// Activate the (synced) replica: (id, next token, remaining).
+    /// Always sent AFTER every MirrorLine of that request.
+    Handover(u64, i32, usize),
+}
+
+/// Instance -> coordinator.
+pub enum ToCoord {
+    /// Prefill finished: (inst, id, kv, first generated token,
+    /// prefill exec time, remaining tokens after the first).
+    PrefillDone(usize, u64, RequestKv, i32, Duration, usize),
+    /// One decode token emitted: (inst, id, token, stamp).  The
+    /// coordinator assembles the generated text from these so token
+    /// history survives pair handovers.
+    Token(usize, u64, i32, Instant),
+    /// Request hit EOS / token budget: (inst, id, stamp).
+    Completed(usize, u64, Instant),
+    /// A request was activated here after a handover (inst, id).
+    Activated(usize, u64),
+    /// Worker exited its loop.
+    Exited(usize, InstanceStats),
+}
+
+/// Per-instance accounting for the report.
+#[derive(Clone, Debug, Default)]
+pub struct InstanceStats {
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    pub tokens_generated: u64,
+    /// Bytes of KV received via Admit (inter-instance hand-off).
+    pub handoff_bytes: u64,
+    /// Bytes of KV replica traffic received (Mirror + MirrorLine).
+    pub mirror_bytes: u64,
+}

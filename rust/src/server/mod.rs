@@ -1,0 +1,37 @@
+//! Real-model serving engine: N instance worker threads executing the
+//! AOT-compiled model via PJRT, driven by the same scheduling policies
+//! as the simulator (AcceLLM pairs with host-side KV replica mirroring,
+//! Splitwise static disaggregation, vLLM continuous batching).
+//!
+//! This is the end-to-end proof that the three layers compose: requests
+//! are tokenized (L3), prefilled/decoded by the JAX model (L2) whose
+//! attention is the Pallas kernel (L1), all through AOT HLO artifacts,
+//! with Python nowhere on the path.
+//!
+//! Concurrency model: one thread per instance + a coordinator thread,
+//! std::sync::mpsc channels (the offline crate set has no tokio — see
+//! DESIGN.md §3).  AcceLLM replica updates flow over direct
+//! instance-to-instance channels so a role handover is a pure-metadata
+//! message *behind* the last mirrored KV line (FIFO ⇒ replicas are
+//! always synced at activation — invariant 6 of DESIGN.md §7).
+
+pub mod cluster;
+pub mod instance;
+pub mod messages;
+
+pub use cluster::{serve_trace, ClusterConfig, ServePolicy, ServeReport};
+pub use messages::{ServeRequest, ServeResponse};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(ServePolicy::by_name("accellm"), Some(ServePolicy::AcceLlm));
+        assert_eq!(ServePolicy::by_name("splitwise"),
+                   Some(ServePolicy::Splitwise));
+        assert_eq!(ServePolicy::by_name("vllm"), Some(ServePolicy::Vllm));
+        assert_eq!(ServePolicy::by_name("nope"), None);
+    }
+}

@@ -1,0 +1,121 @@
+//! Accelerator device specifications (paper Table 1) and instance
+//! topology (Section 4.2.3: one instance = 4 accelerators, TP=4).
+
+/// One accelerator device (H100 SXM5 or Ascend 910B2), per paper Table 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Peak fp16 dense throughput, FLOP/s.
+    pub fp16_flops: f64,
+    /// HBM capacity, bytes.
+    pub hbm_bytes: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Device-to-device interconnect bandwidth (NVLink / HCCS), bytes/s.
+    pub local_conn_bw: f64,
+    /// Model FLOPs utilization achieved on large dense matmuls (prefill).
+    /// Calibrated so the paper's own anchors hold — see `perfmodel.rs`
+    /// tests: Splitwise-on-910B2 prefill saturates near 6 req/s with one
+    /// 4-device prefill instance on the mixed workload (paper §5.3,
+    /// "Overloading Prefill Instances" + Figure 12(b)).
+    pub mfu: f64,
+    /// Fraction of peak HBM bandwidth achieved by decode-phase reads.
+    pub hbm_eff: f64,
+}
+
+pub const GB: f64 = 1e9;
+pub const TB: f64 = 1e12;
+
+/// Nvidia H100 SXM5 (Table 1: 989 TFLOPS, 80 GB, 3.35 TB/s, 900 GB/s).
+pub const H100: DeviceSpec = DeviceSpec {
+    name: "H100",
+    fp16_flops: 989e12,
+    hbm_bytes: 80.0 * GB,
+    hbm_bw: 3.35 * TB,
+    local_conn_bw: 900.0 * GB,
+    mfu: 0.50,
+    hbm_eff: 0.80,
+};
+
+/// Huawei Ascend 910B2 (Table 1: 400 TFLOPS, 64 GB, 1.8 TB/s, 392 GB/s).
+pub const ASCEND_910B2: DeviceSpec = DeviceSpec {
+    name: "910B2",
+    fp16_flops: 400e12,
+    hbm_bytes: 64.0 * GB,
+    hbm_bw: 1.8 * TB,
+    local_conn_bw: 392.0 * GB,
+    mfu: 0.33,
+    hbm_eff: 0.80,
+};
+
+impl DeviceSpec {
+    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" => Some(H100),
+            "910b2" | "ascend" | "ascend910b2" => Some(ASCEND_910B2),
+            _ => None,
+        }
+    }
+}
+
+/// An inference instance: `tp` devices running the model tensor-parallel.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceSpec {
+    pub device: DeviceSpec,
+    /// Tensor-parallel degree = number of devices (paper: 4).
+    pub tp: usize,
+}
+
+impl InstanceSpec {
+    pub fn new(device: DeviceSpec) -> Self {
+        InstanceSpec { device, tp: 4 }
+    }
+
+    /// Aggregate compute across the instance's devices, FLOP/s (peak).
+    pub fn flops(&self) -> f64 {
+        self.device.fp16_flops * self.tp as f64
+    }
+
+    /// Aggregate HBM bandwidth, bytes/s (peak).
+    pub fn hbm_bw(&self) -> f64 {
+        self.device.hbm_bw * self.tp as f64
+    }
+
+    /// Total HBM capacity, bytes.
+    pub fn hbm_bytes(&self) -> f64 {
+        self.device.hbm_bytes * self.tp as f64
+    }
+
+    /// Instance-to-instance interconnect bandwidth, bytes/s.
+    pub fn interconnect_bw(&self) -> f64 {
+        self.device.local_conn_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        assert_eq!(H100.fp16_flops, 989e12);
+        assert_eq!(H100.hbm_bytes, 80e9);
+        assert_eq!(ASCEND_910B2.hbm_bw, 1.8e12);
+        assert_eq!(ASCEND_910B2.local_conn_bw, 392e9);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(DeviceSpec::by_name("h100").unwrap().name, "H100");
+        assert_eq!(DeviceSpec::by_name("910B2").unwrap().name, "910B2");
+        assert!(DeviceSpec::by_name("a100").is_none());
+    }
+
+    #[test]
+    fn instance_aggregates() {
+        let inst = InstanceSpec::new(H100);
+        assert_eq!(inst.tp, 4);
+        assert_eq!(inst.flops(), 4.0 * 989e12);
+        assert_eq!(inst.hbm_bytes(), 320e9);
+    }
+}

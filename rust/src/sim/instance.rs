@@ -1,0 +1,115 @@
+//! Per-instance simulation state: role, current work, memory accounting.
+
+use crate::sim::engine::Work;
+use crate::sim::request::InstId;
+
+/// What an instance is currently provisioned for.  In AcceLLM instances
+/// flip between roles dynamically (Section 4.1.1); in Splitwise the role
+/// is fixed at startup; vLLM instances are always `Mixed`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Prefill,
+    Decode,
+    /// Serves both phases batched together (vLLM) or alternating
+    /// (AcceLLM's dual-phase instance under memory pressure, §4.2.5).
+    Mixed,
+}
+
+/// Engine-owned instance state.
+#[derive(Debug)]
+pub struct SimInstance {
+    pub id: InstId,
+    pub role: Role,
+    /// Work in flight (None = idle).
+    pub running: Option<Work>,
+    /// Accumulated busy seconds (utilization metric).
+    pub busy_acc: f64,
+
+    /// Bytes of primary (authoritative) KV copies resident here.
+    pub primary_bytes: f64,
+    /// Bytes of redundant replicas resident here.
+    pub replica_bytes: f64,
+    /// High-water mark of primary+replica bytes.
+    pub peak_kv_bytes: f64,
+}
+
+impl SimInstance {
+    pub fn new(id: InstId) -> Self {
+        SimInstance {
+            id,
+            role: Role::Mixed,
+            running: None,
+            busy_acc: 0.0,
+            primary_bytes: 0.0,
+            replica_bytes: 0.0,
+            peak_kv_bytes: 0.0,
+        }
+    }
+
+    pub fn kv_bytes(&self) -> f64 {
+        self.primary_bytes + self.replica_bytes
+    }
+
+    fn bump_peak(&mut self) {
+        if self.kv_bytes() > self.peak_kv_bytes {
+            self.peak_kv_bytes = self.kv_bytes();
+        }
+    }
+
+    pub fn add_primary(&mut self, bytes: f64) {
+        self.primary_bytes += bytes;
+        self.bump_peak();
+    }
+
+    pub fn remove_primary(&mut self, bytes: f64) {
+        self.primary_bytes -= bytes;
+        debug_assert!(self.primary_bytes > -1.0, "negative primary bytes");
+        self.primary_bytes = self.primary_bytes.max(0.0);
+    }
+
+    pub fn add_replica(&mut self, bytes: f64) {
+        self.replica_bytes += bytes;
+        self.bump_peak();
+    }
+
+    pub fn remove_replica(&mut self, bytes: f64) {
+        self.replica_bytes -= bytes;
+        debug_assert!(self.replica_bytes > -1.0, "negative replica bytes");
+        self.replica_bytes = self.replica_bytes.max(0.0);
+    }
+
+    pub fn primary_to_replica(&mut self, bytes: f64) {
+        self.remove_primary(bytes);
+        self.add_replica(bytes);
+    }
+
+    pub fn replica_to_primary(&mut self, bytes: f64) {
+        self.remove_replica(bytes);
+        self.add_primary(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut i = SimInstance::new(0);
+        i.add_primary(10.0);
+        i.add_replica(5.0);
+        assert_eq!(i.peak_kv_bytes, 15.0);
+        i.remove_replica(5.0);
+        assert_eq!(i.peak_kv_bytes, 15.0);
+        assert_eq!(i.kv_bytes(), 10.0);
+    }
+
+    #[test]
+    fn swap_conserves_total() {
+        let mut i = SimInstance::new(0);
+        i.add_replica(7.0);
+        i.replica_to_primary(7.0);
+        assert_eq!(i.primary_bytes, 7.0);
+        assert_eq!(i.replica_bytes, 0.0);
+    }
+}

@@ -1,0 +1,98 @@
+//! LLM architecture cost model — parameter counts, per-token KV bytes,
+//! FLOP counts for prefill and decode.
+//!
+//! The paper evaluates Llama-2-70B (Section 5.2); the constants here are
+//! the public architecture numbers.  All simulator costs derive from
+//! these plus the `DeviceSpec` — nothing is fit to the paper's result
+//! curves except the two efficiency scalars documented in `hardware.rs`
+//! and `perfmodel.rs`.
+
+/// Architecture description of the served model.
+#[derive(Clone, Copy, Debug)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub n_params: f64,
+    pub n_layers: usize,
+    pub dim: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// Bytes per weight/KV element (2 = fp16).
+    pub bytes_per_el: f64,
+}
+
+/// Llama-2-70B: 80 layers, d=8192, 64 Q heads, 8 KV heads (GQA), fp16.
+pub const LLAMA2_70B: LlmSpec = LlmSpec {
+    name: "llama2-70b",
+    n_params: 70e9,
+    n_layers: 80,
+    dim: 8192,
+    n_q_heads: 64,
+    n_kv_heads: 8,
+    head_dim: 128,
+    ffn: 28672,
+    vocab: 32000,
+    bytes_per_el: 2.0,
+};
+
+impl LlmSpec {
+    /// Total weight bytes (fp16).
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params * self.bytes_per_el
+    }
+
+    /// KV cache bytes per token: 2 (K and V) x layers x kv_heads x head_dim.
+    /// Llama-2-70B: 2*80*8*128*2B = 320 KiB/token — the quantity that
+    /// drives every memory/transfer number in the paper.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64
+            * self.n_kv_heads as f64
+            * self.head_dim as f64
+            * self.bytes_per_el
+    }
+
+    /// Dense FLOPs to process `t` tokens through the weights (fwd only).
+    pub fn linear_flops(&self, t: f64) -> f64 {
+        2.0 * self.n_params * t
+    }
+
+    /// Attention FLOPs for a full causal prefill of length `p`:
+    /// QK^T + PV, each 2*d_q FLOP per (query, key) pair, causal half.
+    pub fn prefill_attn_flops(&self, p: f64) -> f64 {
+        let d_q = (self.n_q_heads * self.head_dim) as f64;
+        2.0 * 2.0 * self.n_layers as f64 * d_q * p * p / 2.0
+    }
+
+    /// Attention FLOPs for one decode step attending over `k` cached tokens.
+    pub fn decode_attn_flops(&self, k: f64) -> f64 {
+        let d_q = (self.n_q_heads * self.head_dim) as f64;
+        2.0 * 2.0 * self.n_layers as f64 * d_q * k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_bytes_per_token_is_320kib() {
+        // The paper's implicit constant: 2*80*8*128*2 = 327,680 bytes.
+        assert_eq!(LLAMA2_70B.kv_bytes_per_token(), 327_680.0);
+    }
+
+    #[test]
+    fn weights_are_140gb() {
+        assert_eq!(LLAMA2_70B.weight_bytes(), 140e9);
+    }
+
+    #[test]
+    fn prefill_flops_dominated_by_linear() {
+        // At p=1000 the quadratic attention term is a small fraction of
+        // the linear term (Section 3.2's compute-bound claim).
+        let lin = LLAMA2_70B.linear_flops(1000.0);
+        let attn = LLAMA2_70B.prefill_attn_flops(1000.0);
+        assert!(attn / lin < 0.05, "attn/lin = {}", attn / lin);
+    }
+}

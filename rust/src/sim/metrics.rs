@@ -1,0 +1,176 @@
+//! Metric collection and the per-run report.
+//!
+//! The paper's four target metrics (Section 3.4):
+//! * **TTFT** — time to first token (arrival -> end of prefill),
+//! * **TBT**  — time between tokens (every inter-token gap is a sample),
+//! * **JCT**  — job completion time (arrival -> EOS),
+//! * **cost efficiency** — decode tokens per instance per second.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Collects samples during a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsCollector {
+    pub ttft: Summary,
+    pub tbt: Summary,
+    pub jct: Summary,
+    /// (time, gap) pairs for worst-case TBT timelines (Figure 16);
+    /// only recorded when enabled to bound memory.
+    pub tbt_timeline: Vec<(f64, f64)>,
+    pub record_timeline: bool,
+    pub decode_tokens: u64,
+    pub completed: usize,
+    /// Total bytes moved over the interconnect, by cause.
+    pub xfer_prefill_bytes: f64,
+    pub xfer_replica_bytes: f64,
+    pub xfer_migration_bytes: f64,
+}
+
+impl MetricsCollector {
+    pub fn new(record_timeline: bool) -> Self {
+        MetricsCollector {
+            record_timeline,
+            ..Default::default()
+        }
+    }
+
+    pub fn token_gap(&mut self, now: f64, gap: f64) {
+        self.tbt.add(gap);
+        self.decode_tokens += 1;
+        if self.record_timeline {
+            self.tbt_timeline.push((now, gap));
+        }
+    }
+}
+
+/// Immutable summary of one finished simulation run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub scheduler: String,
+    pub device: String,
+    pub workload: String,
+    pub n_instances: usize,
+    pub rate: f64,
+    pub n_requests: usize,
+    pub completed: usize,
+    pub makespan: f64,
+
+    pub ttft_mean: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tbt_mean: f64,
+    pub tbt_p99: f64,
+    pub tbt_max: f64,
+    pub jct_mean: f64,
+    pub jct_p50: f64,
+    pub jct_p99: f64,
+
+    /// Decode tokens generated per instance per second — the paper's
+    /// cost-efficiency metric (Figures 11a/12a).
+    pub cost_efficiency: f64,
+    /// Mean fraction of time instances were computing.
+    pub utilization: f64,
+    /// Peak per-instance KV memory (bytes), max over instances.
+    pub peak_kv_bytes: f64,
+    /// Mean per-instance KV memory at completion-weighted sampling.
+    pub mean_kv_bytes: f64,
+    /// Interconnect traffic totals (bytes).
+    pub xfer_prefill_bytes: f64,
+    pub xfer_replica_bytes: f64,
+    pub xfer_migration_bytes: f64,
+    /// Peak interconnect utilization estimate (bytes/s over busiest 1s).
+    pub xfer_total_bytes: f64,
+
+    /// Raw timeline for Figure 16, if recorded.
+    pub tbt_timeline: Vec<(f64, f64)>,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheduler", Json::str(&self.scheduler)),
+            ("device", Json::str(&self.device)),
+            ("workload", Json::str(&self.workload)),
+            ("n_instances", Json::num(self.n_instances as f64)),
+            ("rate", Json::num(self.rate)),
+            ("n_requests", Json::num(self.n_requests as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("makespan", Json::num(self.makespan)),
+            ("ttft_mean", Json::num(self.ttft_mean)),
+            ("ttft_p50", Json::num(self.ttft_p50)),
+            ("ttft_p99", Json::num(self.ttft_p99)),
+            ("tbt_mean", Json::num(self.tbt_mean)),
+            ("tbt_p99", Json::num(self.tbt_p99)),
+            ("tbt_max", Json::num(self.tbt_max)),
+            ("jct_mean", Json::num(self.jct_mean)),
+            ("jct_p50", Json::num(self.jct_p50)),
+            ("jct_p99", Json::num(self.jct_p99)),
+            ("cost_efficiency", Json::num(self.cost_efficiency)),
+            ("utilization", Json::num(self.utilization)),
+            ("peak_kv_gb", Json::num(self.peak_kv_bytes / 1e9)),
+            ("mean_kv_gb", Json::num(self.mean_kv_bytes / 1e9)),
+            ("xfer_prefill_gb", Json::num(self.xfer_prefill_bytes / 1e9)),
+            ("xfer_replica_gb", Json::num(self.xfer_replica_bytes / 1e9)),
+            ("xfer_migration_gb", Json::num(self.xfer_migration_bytes / 1e9)),
+        ])
+    }
+
+    /// One CSV row (matches `csv_header`).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2}",
+            self.scheduler,
+            self.device,
+            self.workload,
+            self.n_instances,
+            self.rate,
+            self.n_requests,
+            self.completed,
+            self.makespan,
+            self.ttft_mean,
+            self.ttft_p50,
+            self.ttft_p99,
+            self.tbt_mean,
+            self.tbt_p99,
+            self.tbt_max,
+            self.jct_mean,
+            self.jct_p50,
+            self.jct_p99,
+            self.cost_efficiency,
+            self.utilization,
+            self.peak_kv_bytes / 1e9,
+            (self.xfer_prefill_bytes + self.xfer_replica_bytes
+                + self.xfer_migration_bytes)
+                / 1e9,
+        )
+    }
+
+    pub fn csv_header() -> &'static str {
+        "scheduler,device,workload,n_instances,rate,n_requests,completed,makespan,\
+         ttft_mean,ttft_p50,ttft_p99,tbt_mean,tbt_p99,tbt_max,\
+         jct_mean,jct_p50,jct_p99,cost_eff_tok_inst_s,utilization,peak_kv_gb,xfer_gb"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_counts_tokens() {
+        let mut m = MetricsCollector::new(true);
+        m.token_gap(1.0, 0.02);
+        m.token_gap(1.02, 0.02);
+        assert_eq!(m.decode_tokens, 2);
+        assert_eq!(m.tbt_timeline.len(), 2);
+    }
+
+    #[test]
+    fn collector_timeline_disabled() {
+        let mut m = MetricsCollector::new(false);
+        m.token_gap(1.0, 0.02);
+        assert!(m.tbt_timeline.is_empty());
+        assert_eq!(m.decode_tokens, 1);
+    }
+}

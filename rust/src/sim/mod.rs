@@ -1,0 +1,22 @@
+//! Discrete-event cluster simulator (paper Section 5.1): analytic
+//! performance model + event engine + metric pipeline.
+//!
+//! The paper's evaluation is entirely simulator-based; this module IS
+//! the reproduction substrate.  See DESIGN.md §4 for the model and the
+//! calibration anchors (each encoded as a unit test in `perfmodel.rs`).
+
+pub mod engine;
+pub mod hardware;
+pub mod instance;
+pub mod llm;
+pub mod metrics;
+pub mod perfmodel;
+pub mod request;
+
+pub use engine::{run, Scheduler, SimConfig, SimCtx, Work, XferKind};
+pub use hardware::{DeviceSpec, InstanceSpec, ASCEND_910B2, H100};
+pub use instance::{Role, SimInstance};
+pub use llm::{LlmSpec, LLAMA2_70B};
+pub use metrics::{MetricsCollector, RunReport};
+pub use perfmodel::PerfModel;
+pub use request::{InstId, ReqId, SimRequest};

@@ -1,0 +1,249 @@
+//! Analytic performance model — the quantitative core of the simulator.
+//!
+//! Section 5.1 of the paper: "a simulator that faithfully simulates the
+//! computation, HBM bandwidth, memory requirements and KV cache transfer
+//! costs".  We implement exactly that decomposition:
+//!
+//! * **Prefill** is compute-bound (Section 3.2): time = FLOPs / (instance
+//!   peak x MFU).
+//! * **Decode** is HBM-bandwidth-bound (Section 3.3): time per step =
+//!   (weight bytes + batch KV bytes) / (instance HBM BW x efficiency),
+//!   plus a per-request framework overhead and a fixed step overhead.
+//! * **KV transfer** time = bytes / interconnect BW; per-layer pipelined
+//!   transfers (Section 4.2.4) overlap with compute and only delay the
+//!   critical path when the link is the bottleneck.
+//!
+//! Calibration constants (documented, not curve-fit):
+//! * `mfu`, `hbm_eff` — on `DeviceSpec` (hardware.rs).
+//! * `C_REQ` — per-request per-step overhead.  The paper's own anchor
+//!   (Figure 5 right): one batch of 40 is 7.2 ms slower per step than
+//!   two parallel batches of 20 *independent of input length* — a
+//!   length-independent per-request cost of 7.2/20 = 0.36 ms.
+//! * `C_STEP` — fixed per-step launch overhead.
+
+use super::hardware::InstanceSpec;
+use super::llm::LlmSpec;
+
+/// Per-request per-decode-step overhead in seconds (see module docs).
+pub const C_REQ: f64 = 0.36e-3;
+/// Fixed per-decode-step overhead in seconds.
+pub const C_STEP: f64 = 0.5e-3;
+
+/// Analytic cost model for one instance type serving one model.
+#[derive(Clone, Copy, Debug)]
+pub struct PerfModel {
+    pub inst: InstanceSpec,
+    pub llm: LlmSpec,
+}
+
+impl PerfModel {
+    pub fn new(inst: InstanceSpec, llm: LlmSpec) -> Self {
+        PerfModel { inst, llm }
+    }
+
+    /// Effective compute throughput for prefill, FLOP/s.
+    fn eff_flops(&self) -> f64 {
+        self.inst.flops() * self.inst.device.mfu
+    }
+
+    /// Effective HBM bandwidth for decode, bytes/s.
+    fn eff_bw(&self) -> f64 {
+        self.inst.hbm_bw() * self.inst.device.hbm_eff
+    }
+
+    /// Time to prefill a batch of prompts with the given lengths (tokens).
+    /// Compute-bound: linear FLOPs on total tokens + quadratic attention
+    /// per prompt.  Batching prompts amortizes nothing here (compute
+    /// scales with tokens), matching Figure 3's linear completion time.
+    pub fn prefill_time(&self, prompt_lens: &[u32]) -> f64 {
+        let total: f64 = prompt_lens.iter().map(|&p| p as f64).sum();
+        let mut flops = self.llm.linear_flops(total);
+        for &p in prompt_lens {
+            flops += self.llm.prefill_attn_flops(p as f64);
+        }
+        flops / self.eff_flops()
+    }
+
+    /// Convenience: single prompt.
+    pub fn prefill_time_one(&self, prompt_len: u32) -> f64 {
+        self.prefill_time(&[prompt_len])
+    }
+
+    /// Time for one decode step of a batch whose requests currently hold
+    /// `kv_tokens` cached tokens in total.  Bandwidth-bound (Section 3.3):
+    /// the full weights are read once per step (amortized over the batch —
+    /// this is why batching helps), the live KV is read per request.
+    pub fn decode_step_time(&self, batch: usize, kv_tokens: f64) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let weight_t = self.llm.weight_bytes() / self.eff_bw();
+        let kv_t = kv_tokens * self.llm.kv_bytes_per_token() / self.eff_bw();
+        // Compute floor: decode math is tiny but not zero.
+        let flops = self.llm.linear_flops(batch as f64)
+            + self.llm.decode_attn_flops(kv_tokens);
+        let compute_t = flops / self.eff_flops();
+        (weight_t + kv_t).max(compute_t) + batch as f64 * C_REQ + C_STEP
+    }
+
+    /// Combined step when prefill is batched WITH decoding (vLLM-style
+    /// continuous batching, Section 3.5.1): every decode token in the
+    /// batch also waits for the prompt compute — the latency-spike
+    /// mechanism of Figure 5 (left).
+    pub fn mixed_step_time(&self, batch: usize, kv_tokens: f64,
+                           prefill_lens: &[u32]) -> f64 {
+        let d = self.decode_step_time(batch, kv_tokens);
+        let p = if prefill_lens.is_empty() {
+            0.0
+        } else {
+            self.prefill_time(prefill_lens)
+        };
+        d + p
+    }
+
+    /// Time to move `tokens` worth of KV cache across the instance
+    /// interconnect at the given bandwidth (bytes/s).
+    pub fn kv_transfer_time(&self, tokens: f64, bw: f64) -> f64 {
+        tokens * self.llm.kv_bytes_per_token() / bw
+    }
+
+    /// Decode-phase token throughput at a steady batch size and mean KV
+    /// length (tokens/s) — used by Figure 4.
+    pub fn decode_throughput(&self, batch: usize, mean_len: f64) -> f64 {
+        batch as f64 / self.decode_step_time(batch, batch as f64 * mean_len)
+    }
+
+    /// Prefill-phase token throughput for uniform prompts (Figure 3).
+    pub fn prefill_throughput(&self, batch: usize, prompt_len: u32) -> f64 {
+        let lens: Vec<u32> = vec![prompt_len; batch];
+        (batch as f64 * prompt_len as f64) / self.prefill_time(&lens)
+    }
+
+    /// Bytes of KV cache for `tokens` tokens.
+    pub fn kv_bytes(&self, tokens: f64) -> f64 {
+        tokens * self.llm.kv_bytes_per_token()
+    }
+
+    /// HBM bytes available for KV after the (TP-sharded) weights.
+    pub fn kv_capacity_bytes(&self) -> f64 {
+        self.inst.hbm_bytes() - self.llm.weight_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::hardware::{ASCEND_910B2, H100, InstanceSpec};
+    use crate::sim::llm::LLAMA2_70B;
+
+    fn h100() -> PerfModel {
+        PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B)
+    }
+
+    fn ascend() -> PerfModel {
+        PerfModel::new(InstanceSpec::new(ASCEND_910B2), LLAMA2_70B)
+    }
+
+    #[test]
+    fn prefill_scales_linearly_with_prompt() {
+        let m = h100();
+        let t500 = m.prefill_time_one(500);
+        let t1000 = m.prefill_time_one(1000);
+        // Near-linear (small quadratic attention term on top).
+        assert!(t1000 / t500 > 1.9 && t1000 / t500 < 2.2, "{}", t1000 / t500);
+    }
+
+    #[test]
+    fn decode_is_bandwidth_bound() {
+        // Weight-read floor: 140e9 / (4*3.35e12*0.8) ≈ 13.1 ms on H100.
+        let m = h100();
+        let t = m.decode_step_time(1, 100.0);
+        assert!(t > 0.013 && t < 0.016, "t = {t}");
+        // Compute term must NOT be the max for realistic batches.
+        let flops = LLAMA2_70B.linear_flops(32.0);
+        assert!(flops / (m.inst.flops() * 0.5) < 0.010);
+    }
+
+    #[test]
+    fn paper_anchor_fig5_right_7_2ms() {
+        // One batch of 40 vs two parallel batches of 20: the per-step gap
+        // is 40*C_REQ + KV(40L) - (20*C_REQ + KV(20L)).  The paper reports
+        // 7.2 ms "for any input length"; our length-independent component
+        // is 20*C_REQ = 7.2 ms exactly, with a small KV term on top.
+        let m = h100();
+        for len in [100.0, 500.0, 1000.0] {
+            let t40 = m.decode_step_time(40, 40.0 * len);
+            let t20 = m.decode_step_time(20, 20.0 * len);
+            let gap = t40 - t20;
+            assert!(gap > 7.2e-3 && gap < 10.0e-3, "len {len}: gap {gap}");
+        }
+    }
+
+    #[test]
+    fn paper_anchor_fig5_left_300pct_spike() {
+        // Batching a mixed-workload prefill (500-1000 tokens) into a
+        // decode step inflates token latency by >300% (Figure 5 left).
+        let m = h100();
+        let batch = 20;
+        let kv = batch as f64 * 500.0;
+        let clean = m.decode_step_time(batch, kv);
+        let spiked = m.mixed_step_time(batch, kv, &[750]);
+        assert!(spiked / clean > 3.0, "ratio {}", spiked / clean);
+    }
+
+    #[test]
+    fn paper_anchor_ascend_prefill_saturation() {
+        // Figure 12(b): Splitwise with one 4-device prefill instance on
+        // 910B2 saturates near 6 req/s on the mixed workload (mean prompt
+        // 500) => per-prefill time ≈ 1/6 s.
+        let m = ascend();
+        let t = m.prefill_time_one(500);
+        let rate = 1.0 / t;
+        assert!(rate > 5.0 && rate < 8.5, "rate {rate}");
+    }
+
+    #[test]
+    fn h100_prefill_roughly_2_5x_faster_than_ascend() {
+        let r = ascend().prefill_time_one(750) / h100().prefill_time_one(750);
+        // 989*0.50 / (400*0.33) ≈ 3.7
+        assert!(r > 2.0 && r < 4.5, "ratio {r}");
+    }
+
+    #[test]
+    fn decode_throughput_saturates_with_batch() {
+        // Figure 4: throughput rises with batch then flattens; larger
+        // inputs flatten lower.
+        let m = h100();
+        let t8 = m.decode_throughput(8, 500.0);
+        let t64 = m.decode_throughput(64, 500.0);
+        let t256 = m.decode_throughput(256, 500.0);
+        assert!(t64 > 1.5 * t8);
+        assert!(t256 / t64 < 1.6, "t256/t64 = {}", t256 / t64);
+        // Longer inputs -> lower plateau.
+        assert!(m.decode_throughput(256, 2000.0) < t256);
+    }
+
+    #[test]
+    fn kv_capacity_positive_on_both_devices() {
+        assert!(h100().kv_capacity_bytes() > 100e9);
+        assert!(ascend().kv_capacity_bytes() > 80e9);
+    }
+
+    #[test]
+    fn transfer_time_matches_bytes_over_bw() {
+        let m = h100();
+        // 1000 tokens * 320 KiB / 900 GB/s
+        let t = m.kv_transfer_time(1000.0, 900e9);
+        assert!((t - 327.68e6 / 900e9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_throughput_plateaus_with_batch() {
+        // Figure 3: throughput grows then plateaus once compute-bound.
+        let m = h100();
+        let t1 = m.prefill_throughput(1, 512);
+        let t8 = m.prefill_throughput(8, 512);
+        // Already compute-bound at batch 1 in this model: plateau ~flat.
+        assert!((t8 - t1).abs() / t1 < 0.25);
+    }
+}

@@ -1,0 +1,94 @@
+//! Per-request simulation state and metric timestamps.
+
+pub type ReqId = usize;
+pub type InstId = usize;
+
+/// Lifecycle of one inference request inside the simulator.
+#[derive(Clone, Debug)]
+pub struct SimRequest {
+    pub id: ReqId,
+    pub arrival: f64,
+    pub prompt_len: u32,
+    pub decode_len: u32,
+
+    /// Decode tokens generated so far (the prefill's first token is
+    /// counted separately via `first_token`).
+    pub generated: u32,
+
+    /// Timestamp prefill computation started (queueing ends).
+    pub prefill_start: Option<f64>,
+    /// Timestamp the first token was produced (end of prefill) — TTFT.
+    pub first_token: Option<f64>,
+    /// Timestamp the last decode token was produced — JCT when complete.
+    pub finish: Option<f64>,
+    /// Time of the most recent token (for TBT gap computation).
+    pub last_token_at: f64,
+
+    /// Instance holding the primary (authoritative) KV copy.
+    pub primary: Option<InstId>,
+    /// Instances holding redundant, continuously-updated KV replicas
+    /// (AcceLLM Section 4.1.2).
+    pub replicas: Vec<InstId>,
+}
+
+impl SimRequest {
+    pub fn new(id: ReqId, arrival: f64, prompt_len: u32, decode_len: u32) -> Self {
+        SimRequest {
+            id,
+            arrival,
+            prompt_len,
+            decode_len,
+            generated: 0,
+            prefill_start: None,
+            first_token: None,
+            finish: None,
+            last_token_at: 0.0,
+            primary: None,
+            replicas: Vec::new(),
+        }
+    }
+
+    /// Tokens currently in the KV cache (prompt + generated so far).
+    pub fn kv_tokens(&self) -> u32 {
+        self.prompt_len + self.generated
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finish.is_some()
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token.map(|t| t - self.arrival)
+    }
+
+    pub fn jct(&self) -> Option<f64> {
+        self.finish.map(|t| t - self.arrival)
+    }
+
+    pub fn has_replica_on(&self, inst: InstId) -> bool {
+        self.replicas.contains(&inst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_derive_from_timestamps() {
+        let mut r = SimRequest::new(0, 10.0, 500, 100);
+        assert_eq!(r.ttft(), None);
+        r.first_token = Some(10.5);
+        r.finish = Some(14.0);
+        assert_eq!(r.ttft(), Some(0.5));
+        assert_eq!(r.jct(), Some(4.0));
+    }
+
+    #[test]
+    fn kv_grows_with_generation() {
+        let mut r = SimRequest::new(0, 0.0, 300, 50);
+        assert_eq!(r.kv_tokens(), 300);
+        r.generated = 20;
+        assert_eq!(r.kv_tokens(), 320);
+    }
+}

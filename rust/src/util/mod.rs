@@ -1,0 +1,49 @@
+//! Self-built substrates: the offline crate set contains only the `xla`
+//! closure (+ anyhow/thiserror/log), so RNG, JSON, statistics and the
+//! property-test harness are implemented here from scratch
+//! (DESIGN.md §3, substitution table).
+
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+/// f64 ordered for use as a BinaryHeap key (simulation timestamps are
+/// always finite; NaN is a logic error and panics in debug).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        debug_assert!(!self.0.is_nan() && !other.0.is_nan());
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordf64_heap_order() {
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        let mut h = BinaryHeap::new();
+        for x in [3.0, 1.0, 2.0] {
+            h.push(Reverse(OrdF64(x)));
+        }
+        assert_eq!(h.pop().unwrap().0 .0, 1.0);
+        assert_eq!(h.pop().unwrap().0 .0, 2.0);
+        assert_eq!(h.pop().unwrap().0 .0, 3.0);
+    }
+}

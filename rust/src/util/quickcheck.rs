@@ -1,0 +1,152 @@
+//! Mini property-based testing harness (no `proptest` in the offline
+//! crate set).
+//!
+//! Usage pattern (see `coordinator/` and `kvcache/` tests):
+//!
+//! ```ignore
+//! check(200, |rng| gen_scenario(rng), |scenario| {
+//!     prop_assert(invariant_holds(scenario), "kv replica invariant")
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the generator with the failing seed and
+//! panics with the case index + seed so the exact input can be replayed
+//! deterministically (`replay(seed, gen, prop)`).
+
+use crate::util::rng::Pcg64;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with a formatted message.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, ctx: &str) -> PropResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a:?} != {b:?}"))
+    }
+}
+
+/// Run `cases` random cases: generate an input from a forked RNG, apply the
+/// property. Panics with seed + message on the first failure.
+pub fn check<T, G, P>(cases: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    check_seeded(0xacce11, cases, &mut gen, &mut prop);
+}
+
+/// Like `check` but with an explicit base seed (used by `replay`).
+pub fn check_seeded<T, G, P>(base_seed: u64, cases: u64, gen: &mut G, prop: &mut P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+        let mut rng = Pcg64::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (paste the seed from the panic).
+pub fn replay<T, G, P>(seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Pcg64::new(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("replay seed {seed:#x} failed: {msg}");
+    }
+}
+
+// -- common generators -------------------------------------------------------
+
+/// Vec of length in [min_len, max_len] with elements from `elem`.
+pub fn gen_vec<T>(
+    rng: &mut Pcg64,
+    min_len: usize,
+    max_len: usize,
+    mut elem: impl FnMut(&mut Pcg64) -> T,
+) -> Vec<T> {
+    let n = rng.uniform_usize(min_len, max_len);
+    (0..n).map(|_| elem(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0u64;
+        check(
+            50,
+            |rng| rng.uniform_u64(0, 100),
+            |x| {
+                ran += 1;
+                prop_assert(*x <= 100, "bound")
+            },
+        );
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            100,
+            |rng| rng.uniform_u64(0, 100),
+            |x| prop_assert(*x < 90, "x must be < 90"),
+        );
+    }
+
+    #[test]
+    fn failure_is_reproducible() {
+        // Find a failing seed, then replay must fail the same way.
+        let mut failing_seed = None;
+        for case in 0..200u64 {
+            let seed = 0xacce11 ^ case.wrapping_mul(0x9e3779b97f4a7c15);
+            let mut rng = Pcg64::new(seed);
+            if rng.uniform_u64(0, 100) > 90 {
+                failing_seed = Some(seed);
+                break;
+            }
+        }
+        let seed = failing_seed.expect("some case must exceed 90");
+        let result = std::panic::catch_unwind(|| {
+            replay(
+                seed,
+                |rng| rng.uniform_u64(0, 100),
+                |x| prop_assert(*x <= 90, "x must be <= 90"),
+            )
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn gen_vec_bounds() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            let v = gen_vec(&mut rng, 2, 5, |r| r.next_u64());
+            assert!((2..=5).contains(&v.len()));
+        }
+    }
+}

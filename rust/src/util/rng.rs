@@ -1,0 +1,229 @@
+//! PCG64-DXSM pseudo-random number generator + distribution helpers.
+//!
+//! The offline crate set has no `rand`, so the workload generator, the
+//! simulator and the property-test harness all draw from this small,
+//! fully deterministic PRNG.  PCG-DXSM is the same generator family
+//! NumPy uses by default, which makes cross-checking workload traces
+//! against the Python side straightforward.
+
+/// PCG64-DXSM: 128-bit LCG state, DXSM output permutation.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0xda942042e4dd58b5;
+
+impl Pcg64 {
+    /// Seed with an arbitrary 64-bit value; stream constant fixed.
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((seed as u128).wrapping_mul(0x9e3779b97f4a7c15) << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_add(rng.inc);
+        rng.next_u64();
+        rng.state = rng
+            .state
+            .wrapping_add((seed as u128) << 64 | 0x853c49e6748fea9b);
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child stream (for per-instance / per-request
+    /// determinism regardless of interleaving).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64() ^ tag.wrapping_mul(0xd1342543de82ef95);
+        Pcg64::new(s)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // DXSM output permutation over the *pre-advance* state.
+        let mut hi = (self.state >> 64) as u64;
+        let lo = ((self.state as u64) | 1) as u64;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(PCG_MULT as u64);
+        hi ^= hi >> 48;
+        hi = hi.wrapping_mul(lo);
+        self.state = self
+            .state
+            .wrapping_mul(PCG_MULT)
+            .wrapping_add(self.inc);
+        hi
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] inclusive (unbiased via rejection).
+    pub fn uniform_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        let range = hi - lo + 1;
+        if range == 0 {
+            return self.next_u64(); // full range
+        }
+        // Lemire's method with rejection on the biased zone.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(range as u128);
+            let l = m as u64;
+            if l >= range.wrapping_neg() % range {
+                return lo + (m >> 64) as u64;
+            }
+        }
+    }
+
+    pub fn uniform_usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.uniform_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn uniform_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Exponential with the given rate (mean 1/rate) — Poisson inter-arrivals.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Standard normal via Box–Muller (cached spare not kept: simplicity
+    /// over the last nanosecond; this is not on the serving hot path).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        mean + std * z
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.uniform_usize(0, i);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> Option<&'a T> {
+        if xs.is_empty() {
+            None
+        } else {
+            Some(&xs[self.uniform_usize(0, xs.len() - 1)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_bounds_inclusive() {
+        let mut r = Pcg64::new(7);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let x = r.uniform_u64(3, 10);
+            assert!((3..=10).contains(&x));
+            seen_lo |= x == 3;
+            seen_hi |= x == 10;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn uniform_mean_is_centred() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let sum: u64 = (0..n).map(|_| r.uniform_u64(20, 1000)).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((mean - 510.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(13);
+        let rate = 4.0;
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| r.exponential(rate)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(5.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!((mean - 5.0).abs() < 0.05, "mean {mean}");
+        assert!((var - 4.0).abs() < 0.15, "var {var}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(19);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(23);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Pcg64::new(3);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,298 @@
+//! Streaming statistics: running moments, exact percentile sets, and
+//! fixed-resolution latency histograms.
+//!
+//! The metric pipeline (TTFT / TBT / JCT / cost-efficiency, Section 3.4 of
+//! the paper) is built on these.  `Summary` keeps every sample (exact
+//! percentiles — the figure harness wants faithful p50/p99, and sample
+//! counts are bounded by simulated requests), `Histogram` is the O(1)
+//! alternative used on the real serving hot path.
+
+/// Exact-sample summary: O(n) memory, exact quantiles.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (n - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated quantile, q in [0, 1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.samples[lo]
+        } else {
+            let frac = pos - lo as f64;
+            self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+        }
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&mut self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+/// Log-bucketed histogram: O(1) insert, ~2% quantile error over 9 decades.
+/// Used on the serving hot path where keeping every sample would allocate.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// buckets[i] counts samples in [lo * GROWTH^i, lo * GROWTH^(i+1)).
+    buckets: Vec<u64>,
+    lo: f64,
+    growth: f64,
+    inv_log_growth: f64,
+    count: u64,
+    sum: f64,
+    max: f64,
+    min: f64,
+}
+
+impl Histogram {
+    /// `lo` = smallest resolvable value (e.g. 1e-6 s), `decades` = dynamic
+    /// range in powers of ten, `per_decade` = buckets per decade.
+    pub fn new(lo: f64, decades: u32, per_decade: u32) -> Self {
+        let growth = 10f64.powf(1.0 / per_decade as f64);
+        Histogram {
+            buckets: vec![0; (decades * per_decade) as usize + 2],
+            lo,
+            growth,
+            inv_log_growth: 1.0 / growth.ln(),
+            count: 0,
+            sum: 0.0,
+            max: f64::NEG_INFINITY,
+            min: f64::INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 1 µs .. 1000 s, 32 buckets/decade.
+    pub fn latency() -> Self {
+        Histogram::new(1e-6, 9, 32)
+    }
+
+    fn index(&self, x: f64) -> usize {
+        if x < self.lo {
+            return 0;
+        }
+        let i = ((x / self.lo).ln() * self.inv_log_growth) as usize + 1;
+        i.min(self.buckets.len() - 1)
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let i = self.index(x);
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.max = self.max.max(x);
+        self.min = self.min.min(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                if i == 0 {
+                    return self.lo;
+                }
+                // Geometric midpoint of the bucket.
+                let lo = self.lo * self.growth.powi(i as i32 - 1);
+                return (lo * lo * self.growth).sqrt().min(self.max).max(self.min);
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.buckets.len(), other.buckets.len());
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn summary_mean_std() {
+        let mut s = Summary::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.add(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_quantiles_exact() {
+        let mut s = Summary::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+        }
+        assert!((s.p50() - 50.5).abs() < 1e-9);
+        assert!((s.quantile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.quantile(1.0) - 100.0).abs() < 1e-9);
+        assert!((s.p99() - 99.01).abs() < 0.011);
+    }
+
+    #[test]
+    fn summary_empty_safe() {
+        let mut s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+        assert_eq!(s.len(), 0);
+    }
+
+    #[test]
+    fn histogram_quantile_accuracy() {
+        let mut h = Histogram::latency();
+        let mut s = Summary::new();
+        let mut rng = Pcg64::new(5);
+        for _ in 0..50_000 {
+            // log-uniform over 1e-4 .. 1e1 seconds
+            let x = 10f64.powf(rng.uniform_f64(-4.0, 1.0));
+            h.add(x);
+            s.add(x);
+        }
+        for q in [0.5, 0.9, 0.99] {
+            let exact = s.quantile(q);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.08, "q={q}: exact {exact} approx {approx}");
+        }
+        assert!((h.mean() - s.mean()).abs() / s.mean() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.add(0.1);
+        b.add(0.2);
+        b.add(0.3);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert!((a.max() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_out_of_range_clamps() {
+        let mut h = Histogram::new(1e-3, 3, 8);
+        h.add(1e-9); // below lo -> bucket 0
+        h.add(1e9); // above hi -> last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) >= 0.0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Workload generation — paper Table 2 + open-loop Poisson arrivals.
+//!
+//! | Workload | Prefill    | Decoding   | Mean |
+//! |----------|-----------|------------|------|
+//! | Light    | 20–500    | 20–500     | 250  |
+//! | Mixed    | 20–1000   | 20–1000    | 500  |
+//! | Heavy    | 500–1000  | 500–1000   | 750  |
+//!
+//! "every request drawn from a uniform distribution" (Section 5.2);
+//! arrivals are open-loop Poisson at the configured rate, the standard
+//! serving-evaluation methodology (and the only one that can exhibit the
+//! queueing blow-ups of Figures 12b/14b).
+
+use crate::util::rng::Pcg64;
+
+/// Length distribution of one workload class (inclusive token ranges).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub prefill_min: u32,
+    pub prefill_max: u32,
+    pub decode_min: u32,
+    pub decode_max: u32,
+}
+
+pub const LIGHT: WorkloadSpec = WorkloadSpec {
+    name: "light",
+    prefill_min: 20,
+    prefill_max: 500,
+    decode_min: 20,
+    decode_max: 500,
+};
+
+pub const MIXED: WorkloadSpec = WorkloadSpec {
+    name: "mixed",
+    prefill_min: 20,
+    prefill_max: 1000,
+    decode_min: 20,
+    decode_max: 1000,
+};
+
+pub const HEAVY: WorkloadSpec = WorkloadSpec {
+    name: "heavy",
+    prefill_min: 500,
+    prefill_max: 1000,
+    decode_min: 500,
+    decode_max: 1000,
+};
+
+impl WorkloadSpec {
+    pub fn by_name(name: &str) -> Option<WorkloadSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "light" => Some(LIGHT),
+            "mixed" => Some(MIXED),
+            "heavy" => Some(HEAVY),
+            _ => None,
+        }
+    }
+
+    /// Mean of prompt-length distribution.
+    pub fn mean_prefill(&self) -> f64 {
+        (self.prefill_min + self.prefill_max) as f64 / 2.0
+    }
+
+    /// Mean of decode-length distribution.
+    pub fn mean_decode(&self) -> f64 {
+        (self.decode_min + self.decode_max) as f64 / 2.0
+    }
+}
+
+/// One generated request: arrival time + prompt/decode token counts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestTemplate {
+    pub arrival: f64,
+    pub prompt_len: u32,
+    pub decode_len: u32,
+}
+
+/// Deterministic workload trace (record/replay: the same seed + spec +
+/// rate always yields the identical trace, so every scheduler is
+/// evaluated on *exactly* the same request sequence).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub spec: WorkloadSpec,
+    pub rate: f64,
+    pub seed: u64,
+    pub requests: Vec<RequestTemplate>,
+}
+
+impl Trace {
+    /// Generate an open-loop Poisson trace of `rate` req/s for `duration`
+    /// seconds.
+    pub fn poisson(spec: WorkloadSpec, rate: f64, duration: f64, seed: u64) -> Trace {
+        assert!(rate > 0.0 && duration > 0.0);
+        let mut rng = Pcg64::new(seed);
+        let mut t = 0.0;
+        let mut requests = Vec::new();
+        loop {
+            t += rng.exponential(rate);
+            if t >= duration {
+                break;
+            }
+            requests.push(RequestTemplate {
+                arrival: t,
+                prompt_len: rng.uniform_u64(spec.prefill_min as u64,
+                                            spec.prefill_max as u64) as u32,
+                decode_len: rng.uniform_u64(spec.decode_min as u64,
+                                            spec.decode_max as u64) as u32,
+            });
+        }
+        Trace { spec, rate, seed, requests }
+    }
+
+    /// A burst of `n` simultaneous requests at t=0 (closed experiments,
+    /// Figure 5/6 style).
+    pub fn burst(spec: WorkloadSpec, n: usize, seed: u64) -> Trace {
+        let mut rng = Pcg64::new(seed);
+        let requests = (0..n)
+            .map(|_| RequestTemplate {
+                arrival: 0.0,
+                prompt_len: rng.uniform_u64(spec.prefill_min as u64,
+                                            spec.prefill_max as u64) as u32,
+                decode_len: rng.uniform_u64(spec.decode_min as u64,
+                                            spec.decode_max as u64) as u32,
+            })
+            .collect();
+        Trace { spec, rate: f64::INFINITY, seed, requests }
+    }
+
+    /// Piecewise-rate trace for dynamic-workload experiments (Section
+    /// 3.5.3): `phases` = (duration, rate) segments.
+    pub fn phased(spec: WorkloadSpec, phases: &[(f64, f64)], seed: u64) -> Trace {
+        let mut rng = Pcg64::new(seed);
+        let mut requests = Vec::new();
+        let mut base = 0.0;
+        for &(dur, rate) in phases {
+            if rate > 0.0 {
+                let mut t = 0.0;
+                loop {
+                    t += rng.exponential(rate);
+                    if t >= dur {
+                        break;
+                    }
+                    requests.push(RequestTemplate {
+                        arrival: base + t,
+                        prompt_len: rng.uniform_u64(spec.prefill_min as u64,
+                                                    spec.prefill_max as u64)
+                            as u32,
+                        decode_len: rng.uniform_u64(spec.decode_min as u64,
+                                                    spec.decode_max as u64)
+                            as u32,
+                    });
+                }
+            }
+            base += dur;
+        }
+        let mean_rate = requests.len() as f64 / base.max(1e-9);
+        Trace { spec, rate: mean_rate, seed, requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Total tokens (prompt + decode) in the trace.
+    pub fn total_tokens(&self) -> u64 {
+        self.requests
+            .iter()
+            .map(|r| (r.prompt_len + r.decode_len) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_means() {
+        assert_eq!(LIGHT.mean_prefill(), 260.0); // (20+500)/2; paper rounds to 250
+        assert_eq!(MIXED.mean_prefill(), 510.0);
+        assert_eq!(HEAVY.mean_decode(), 750.0);
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let t = Trace::poisson(MIXED, 10.0, 500.0, 1);
+        let measured = t.len() as f64 / 500.0;
+        assert!((measured - 10.0).abs() < 0.5, "rate {measured}");
+    }
+
+    #[test]
+    fn lengths_within_spec() {
+        let t = Trace::poisson(HEAVY, 5.0, 100.0, 2);
+        assert!(!t.is_empty());
+        for r in &t.requests {
+            assert!((500..=1000).contains(&r.prompt_len));
+            assert!((500..=1000).contains(&r.decode_len));
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let a = Trace::poisson(LIGHT, 8.0, 50.0, 42);
+        let b = Trace::poisson(LIGHT, 8.0, 50.0, 42);
+        assert_eq!(a.requests, b.requests);
+        let c = Trace::poisson(LIGHT, 8.0, 50.0, 43);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn arrivals_sorted_and_in_range() {
+        let t = Trace::poisson(MIXED, 20.0, 30.0, 3);
+        let mut prev = 0.0;
+        for r in &t.requests {
+            assert!(r.arrival >= prev && r.arrival < 30.0);
+            prev = r.arrival;
+        }
+    }
+
+    #[test]
+    fn burst_all_at_zero() {
+        let t = Trace::burst(MIXED, 40, 1);
+        assert_eq!(t.len(), 40);
+        assert!(t.requests.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn phased_rates() {
+        let t = Trace::phased(LIGHT, &[(100.0, 2.0), (100.0, 0.0), (100.0, 20.0)], 9);
+        let phase1 = t.requests.iter().filter(|r| r.arrival < 100.0).count();
+        let phase2 = t
+            .requests
+            .iter()
+            .filter(|r| r.arrival >= 100.0 && r.arrival < 200.0)
+            .count();
+        let phase3 = t.requests.iter().filter(|r| r.arrival >= 200.0).count();
+        assert!((phase1 as f64 - 200.0).abs() < 60.0);
+        assert_eq!(phase2, 0);
+        assert!((phase3 as f64 - 2000.0).abs() < 200.0);
+    }
+
+    #[test]
+    fn uniform_mean_matches_table() {
+        let t = Trace::poisson(MIXED, 50.0, 200.0, 7);
+        let mean_p: f64 = t.requests.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+            / t.len() as f64;
+        assert!((mean_p - 510.0).abs() < 20.0, "mean prompt {mean_p}");
+    }
+}

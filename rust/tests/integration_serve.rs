@@ -1,0 +1,125 @@
+//! Integration tests over the REAL serving path (PJRT + AOT artifacts).
+//! Skipped (pass trivially with a notice) when artifacts/ is missing so
+//! `cargo test` works before `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
+
+fn artifacts_ready() -> bool {
+    let ok = Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("artifacts/ not built — skipping real-path test");
+    }
+    ok
+}
+
+fn reqs(n: usize, gap_ms: u64, max_new: usize) -> Vec<ServeRequest> {
+    let prompts = [
+        "the pair partner holds a replica",
+        "prefill produces the first token",
+        "decode reads the whole cache every step",
+        "zero-cost role conversion needs synced replicas",
+    ];
+    (0..n)
+        .map(|i| ServeRequest {
+            id: i as u64,
+            prompt: prompts[i % prompts.len()].to_string(),
+            max_new_tokens: max_new,
+            arrival_offset: Duration::from_millis(gap_ms * i as u64),
+        })
+        .collect()
+}
+
+fn cfg(policy: ServePolicy, n: usize) -> ClusterConfig {
+    ClusterConfig {
+        artifacts_dir: "artifacts".into(),
+        n_instances: n,
+        policy,
+        slots: 8,
+    }
+}
+
+#[test]
+fn accellm_serves_and_mirrors() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rs = reqs(8, 120, 12);
+    let report = serve_trace(&cfg(ServePolicy::AcceLlm, 2), &rs).unwrap();
+    assert_eq!(report.completed, 8);
+    assert!(report.mirror_bytes > 0, "replica mirroring must be metered");
+    // Handover is metadata-only: admits on the prefilling instance are
+    // local, and cross-member placement is counted.  Every response has
+    // a first token and sane latencies.
+    for r in &report.responses {
+        assert!(r.n_generated >= 1);
+        assert!(r.ttft > Duration::ZERO);
+        assert!(r.jct >= r.ttft);
+    }
+}
+
+#[test]
+fn greedy_text_identical_across_policies() {
+    // The end-to-end correctness pillar: greedy decode is deterministic
+    // and slot-isolated, so policy/placement MUST NOT change the output.
+    // Catches stale-replica activation, slot corruption and KV layout
+    // bugs anywhere in L1-L3.
+    if !artifacts_ready() {
+        return;
+    }
+    let rs = reqs(6, 80, 10);
+    let mut texts: Vec<HashMap<u64, String>> = Vec::new();
+    for policy in [ServePolicy::AcceLlm, ServePolicy::Vllm,
+                   ServePolicy::Splitwise] {
+        let report = serve_trace(&cfg(policy, 2), &rs).unwrap();
+        assert_eq!(report.completed, rs.len(), "{policy:?}");
+        texts.push(report.responses.iter()
+            .map(|r| (r.id, r.text.clone()))
+            .collect());
+    }
+    for id in rs.iter().map(|r| r.id) {
+        assert_eq!(texts[0][&id], texts[1][&id], "accellm vs vllm, req {id}");
+        assert_eq!(texts[0][&id], texts[2][&id],
+                   "accellm vs splitwise, req {id}");
+    }
+}
+
+#[test]
+fn splitwise_transfers_kv() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rs = reqs(6, 100, 8);
+    let report = serve_trace(&cfg(ServePolicy::Splitwise, 2), &rs).unwrap();
+    assert_eq!(report.completed, 6);
+    assert!(report.handoff_bytes > 0,
+            "disaggregated prefill must move KV bytes");
+    assert_eq!(report.mirror_bytes, 0);
+}
+
+#[test]
+fn vllm_no_interconnect_traffic() {
+    if !artifacts_ready() {
+        return;
+    }
+    let rs = reqs(4, 100, 8);
+    let report = serve_trace(&cfg(ServePolicy::Vllm, 2), &rs).unwrap();
+    assert_eq!(report.completed, 4);
+    assert_eq!(report.handoff_bytes, 0);
+    assert_eq!(report.mirror_bytes, 0);
+}
+
+#[test]
+fn slot_overflow_queues_not_drops() {
+    // More concurrent requests than slots: extras must be parked and
+    // served as slots free up, never dropped.
+    if !artifacts_ready() {
+        return;
+    }
+    let rs = reqs(12, 5, 6); // arrive nearly simultaneously, 8 slots/inst
+    let report = serve_trace(&cfg(ServePolicy::Vllm, 1), &rs).unwrap();
+    assert_eq!(report.completed, 12);
+}
