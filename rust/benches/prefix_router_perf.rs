@@ -1,0 +1,83 @@
+//! Prefix-routing micro-benchmark: CHWBL route throughput vs holder
+//! count, plus trie insert/lookup throughput at chat-like depths.
+//!
+//! The router sits on the per-arrival hot path of `accellm-prefix`, so
+//! the target is routes/s far above any plausible cluster arrival rate
+//! (millions/s; arrivals are thousands/s).  Run with:
+//! `cargo bench --bench prefix_router_perf`
+
+use std::time::Instant;
+
+use accellm::prefix::{chunk_hash, ChwblRouter, PrefixIndex};
+use accellm::util::rng::Pcg64;
+
+const KEYS: usize = 200_000;
+const REPS: usize = 4;
+
+fn bench_router() {
+    println!("{:>8} | {:>10} | {:>12} | {:>10}",
+             "holders", "vnodes", "routes/s", "ns/route");
+    for &n in &[2usize, 4, 8, 16, 32, 64] {
+        let router = ChwblRouter::new(n, 64, 1.25);
+        let mut rng = Pcg64::new(7);
+        let keys: Vec<u64> = (0..KEYS).map(|_| rng.next_u64()).collect();
+        let mut best = f64::INFINITY;
+        let mut sink = 0usize;
+        for _ in 0..REPS {
+            let mut loads = vec![0usize; n];
+            let t0 = Instant::now();
+            for &k in &keys {
+                let h = router.route(k, &loads);
+                loads[h] += 1;
+                sink = sink.wrapping_add(h);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let per_sec = KEYS as f64 / best;
+        println!("{:>8} | {:>10} | {:>12.0} | {:>10.1}   (sink {})",
+                 n, router.n_vnodes(), per_sec, 1e9 / per_sec,
+                 sink % 10);
+    }
+}
+
+fn bench_index() {
+    // Chat-like streams: 64 sessions, prefixes growing to 192 chunks.
+    println!();
+    println!("{:>10} | {:>14} | {:>14}",
+             "depth", "inserts/s", "lookups/s");
+    for &depth in &[16usize, 64, 192] {
+        let streams: Vec<u64> = (0..64u64).map(|s| s * 0x9e37 + 1).collect();
+        let chunk_lists: Vec<Vec<u64>> = streams
+            .iter()
+            .map(|&s| (0..depth as u64).map(|j| chunk_hash(s, j)).collect())
+            .collect();
+        let mut best_ins = f64::INFINITY;
+        let mut best_look = f64::INFINITY;
+        for _ in 0..REPS {
+            let mut ix = PrefixIndex::new(8, 1 << 20);
+            let t0 = Instant::now();
+            for (i, c) in chunk_lists.iter().enumerate() {
+                ix.insert(i % 8, c, i as f64);
+            }
+            best_ins = best_ins.min(t0.elapsed().as_secs_f64());
+
+            let t1 = Instant::now();
+            let mut matched = 0usize;
+            for c in &chunk_lists {
+                if let Some((_, d)) = ix.best_match(c) {
+                    matched += d;
+                }
+            }
+            best_look = best_look.min(t1.elapsed().as_secs_f64());
+            assert!(matched > 0);
+        }
+        let n = chunk_lists.len() as f64;
+        println!("{:>10} | {:>14.0} | {:>14.0}",
+                 depth, n / best_ins, n / best_look);
+    }
+}
+
+fn main() {
+    bench_router();
+    bench_index();
+}

@@ -149,6 +149,30 @@ mod tests {
     }
 
     #[test]
+    fn prefix_workloads_and_scheduler_round_trip() {
+        let e = Experiment::from_json_text(
+            r#"{"scheduler":"accellm-prefix","workload":"chat",
+                "instances":4,"rate":6,"duration":30}"#,
+        )
+        .unwrap();
+        assert_eq!(e.scheduler, "accellm-prefix");
+        assert_eq!(e.workload.name, "chat");
+        assert_eq!(e.workload.kind, crate::workload::WorkloadKind::Chat);
+        // The scheduler name written in the config must resolve.
+        assert!(crate::coordinator::by_name(&e.scheduler, e.instances)
+            .is_some());
+        // And the parsed spec must generate the session trace.
+        let t = crate::workload::Trace::generate(e.workload, e.rates[0],
+                                                 e.duration, e.seed);
+        assert!(t.requests.iter().any(|r| !r.prefix_chunks.is_empty()));
+
+        let d = Experiment::from_json_text(r#"{"workload":"shared-doc"}"#)
+            .unwrap();
+        assert_eq!(d.workload.name, "shared-doc");
+        assert_eq!(d.workload.kind, crate::workload::WorkloadKind::SharedDoc);
+    }
+
+    #[test]
     fn sim_config_wires_through() {
         let e = Experiment::from_json_text(
             r#"{"device":"h100","instances":16,"interconnect_gbs":50}"#,

@@ -109,6 +109,30 @@ impl AcceLlm {
         inst / 2
     }
 
+    pub fn n_pairs(&self) -> usize {
+        self.n_pairs
+    }
+
+    /// Scheduling load of a pair: queued prompts plus both members'
+    /// active decode sets.  This is the load signal the prefix-locality
+    /// router bounds (`prefix::ChwblRouter`).
+    pub fn pair_load(&self, pair: usize) -> usize {
+        self.queues[pair].len()
+            + self.sets[2 * pair].len()
+            + self.sets[2 * pair + 1].len()
+    }
+
+    /// Enqueue an arrived request on a specific pair and kick it.
+    /// `on_arrival` routes by free memory; compositions that override
+    /// placement (the `accellm-prefix` scheduler) call this directly.
+    pub fn enqueue_on_pair(&mut self, ctx: &mut SimCtx, req: ReqId,
+                           pair: usize) {
+        assert!(pair < self.n_pairs, "pair {pair} out of range");
+        ctx.pending.retain(|&r| r != req);
+        self.queues[pair].push_back(req);
+        self.kick_pair(ctx, pair);
+    }
+
     /// Pair with the most free KV memory receives the next prompt
     /// (Section 4.2.2: "among available pairs, the one with the most
     /// free space handles the next prefill").
@@ -313,10 +337,8 @@ impl Scheduler for AcceLlm {
     }
 
     fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
-        ctx.pending.retain(|&r| r != req);
         let pair = self.pick_pair(ctx);
-        self.queues[pair].push_back(req);
-        self.kick_pair(ctx, pair);
+        self.enqueue_on_pair(ctx, req, pair);
     }
 
     fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,

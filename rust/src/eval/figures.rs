@@ -1,6 +1,6 @@
 //! One generator per paper table/figure.
 
-use crate::coordinator::{by_name, ALL_SCHEDULERS};
+use crate::coordinator::{by_name, PAPER_SCHEDULERS};
 use crate::sim::{run, DeviceSpec, InstanceSpec, PerfModel, SimConfig,
                  ASCEND_910B2, H100, LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
@@ -208,7 +208,7 @@ pub fn fig9(dev: DeviceSpec) -> FigureOutput {
     for &rate in &[4.0, 8.0, 12.0] {
         let trace = Trace::poisson(MIXED, rate, DUR, SEED);
         let mut per_sched = Vec::new();
-        for name in ALL_SCHEDULERS {
+        for name in PAPER_SCHEDULERS {
             let mut s = by_name(name, 4).unwrap();
             let r = run(&sim_cfg(dev, 4), &trace, s.as_mut());
             per_sched.push((name, r.peak_kv_bytes / 1e9));
@@ -267,7 +267,7 @@ fn latency_grid(id: &str, dev: DeviceSpec, wl: WorkloadSpec,
     for &n in sizes {
         for &rate in &RATE_SWEEP {
             let trace = Trace::poisson(wl, rate, DUR, SEED);
-            for name in ALL_SCHEDULERS {
+            for name in PAPER_SCHEDULERS {
                 let mut s = by_name(name, n).unwrap();
                 let r = run(&sim_cfg(dev, n), &trace, s.as_mut());
                 rows.push(format!(
@@ -320,7 +320,7 @@ pub fn fig15() -> FigureOutput {
 pub fn fig16(dev: DeviceSpec) -> FigureOutput {
     let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
     let mut rows = Vec::new();
-    for name in ALL_SCHEDULERS {
+    for name in PAPER_SCHEDULERS {
         let mut cfg = sim_cfg(dev, 4);
         cfg.record_timeline = true;
         let mut s = by_name(name, 4).unwrap();
@@ -366,14 +366,15 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "fig16" => fig16(H100),
         "ablation_mechanisms" => crate::eval::ablations::ablation_mechanisms(),
         "ablation_flip_slack" => crate::eval::ablations::ablation_flip_slack(),
+        "prefix_locality" => crate::eval::prefix::prefix_locality(),
         _ => return None,
     })
 }
 
-/// Every regenerable artifact in paper order.
-pub const ALL_IDS: [&str; 14] = [
+/// Every regenerable artifact: paper order, then repo extensions.
+pub const ALL_IDS: [&str; 15] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
-    "fig11", "fig12", "fig13", "fig14", "fig15", "fig16",
+    "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
 ];
 
 /// Generate everything (the `make bench` payload).

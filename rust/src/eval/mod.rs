@@ -8,6 +8,8 @@
 
 pub mod ablations;
 pub mod figures;
+pub mod prefix;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
 pub use figures::{all_figures, figure_by_id, FigureOutput};
+pub use prefix::prefix_locality;

@@ -1,0 +1,76 @@
+//! Prefix-locality evaluation: `accellm` vs `accellm-prefix` on the
+//! session workloads.
+//!
+//! Not a paper figure — it quantifies what the prefix subsystem adds on
+//! top of the paper's system: on `chat` and `shared-doc` traffic the
+//! prefix-aware router turns repeated prompt prefixes into skipped
+//! prefill work, which shows up as a nonzero hit rate, saved prefill
+//! tokens, and lower TTFT at identical request streams.
+
+use crate::coordinator::by_name;
+use crate::eval::figures::FigureOutput;
+use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+use crate::workload::{Trace, CHAT, SHARED_DOC};
+
+/// Fixed seed/duration, matching the figure harness conventions.
+const SEED: u64 = 7;
+const DUR: f64 = 60.0;
+
+/// Compare plain AcceLLM against the prefix-locality composition on
+/// both session workloads (H100, 4 instances).
+pub fn prefix_locality() -> FigureOutput {
+    let cfg = SimConfig {
+        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+        n_instances: 4,
+        interconnect_bw: None,
+        record_timeline: false,
+    };
+    let mut rows = Vec::new();
+    for (wl, rate) in [(CHAT, 6.0), (SHARED_DOC, 4.0)] {
+        let trace = Trace::generate(wl, rate, DUR, SEED);
+        for name in ["accellm", "accellm-prefix"] {
+            let mut s = by_name(name, 4).unwrap();
+            let r = run(&cfg, &trace, s.as_mut());
+            rows.push(format!(
+                "{},{},{:.1},{:.4},{:.4},{:.2},{:.3},{}",
+                wl.name, name, rate, r.ttft_mean, r.ttft_p99, r.jct_mean,
+                r.prefix_hit_rate, r.prefix_saved_tokens));
+        }
+    }
+    FigureOutput {
+        id: "prefix_locality".into(),
+        title: "Prefix-locality routing: accellm vs accellm-prefix on \
+                session workloads (H100, 4 instances)"
+            .into(),
+        header: "workload,scheduler,rate,ttft_mean_s,ttft_p99_s,jct_mean_s,\
+                 prefix_hit_rate,saved_prefill_tokens"
+            .into(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(row: &str, i: usize) -> f64 {
+        row.split(',').nth(i).unwrap().parse().unwrap()
+    }
+
+    #[test]
+    fn prefix_scheduler_wins_ttft_with_nonzero_hits() {
+        let f = prefix_locality();
+        assert_eq!(f.rows.len(), 4);
+        for pair in f.rows.chunks(2) {
+            let (plain, pfx) = (&pair[0], &pair[1]);
+            assert!(plain.contains(",accellm,"), "row order: {plain}");
+            assert!(pfx.contains(",accellm-prefix,"), "row order: {pfx}");
+            let (ttft_plain, ttft_pfx) = (col(plain, 3), col(pfx, 3));
+            assert!(ttft_pfx < ttft_plain,
+                    "prefix TTFT {ttft_pfx} !< plain {ttft_plain}");
+            assert!(col(pfx, 6) > 0.2, "hit rate too low: {pfx}");
+            assert_eq!(col(plain, 6), 0.0);
+            assert!(col(pfx, 7) > 0.0, "no saved tokens: {pfx}");
+        }
+    }
+}

@@ -5,13 +5,22 @@
 use std::collections::HashMap;
 
 /// Errors from slot operations.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum SlotError {
-    #[error("no free slot (batch is full)")]
     Full,
-    #[error("request {0} not resident")]
     NotResident(u64),
 }
+
+impl std::fmt::Display for SlotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlotError::Full => write!(f, "no free slot (batch is full)"),
+            SlotError::NotResident(id) => write!(f, "request {id} not resident"),
+        }
+    }
+}
+
+impl std::error::Error for SlotError {}
 
 /// Fixed-capacity slot allocator, request-id -> slot index.
 #[derive(Clone, Debug)]

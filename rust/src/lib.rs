@@ -7,14 +7,33 @@
 //!
 //! Layers:
 //! * **L3 (this crate)** — the coordinator: AcceLLM's pair scheduler with
-//!   redundant KV caches ([`coordinator`]), the discrete-event cluster
-//!   simulator behind the paper's evaluation ([`sim`]), the workload
-//!   generator ([`workload`]), the PJRT runtime ([`runtime`]) and the
-//!   real-model serving engine ([`server`]).
+//!   redundant KV caches ([`coordinator`]), the cross-request
+//!   prefix-locality subsystem ([`prefix`]: global prefix index +
+//!   consistent-hashing-with-bounded-loads router), the discrete-event
+//!   cluster simulator behind the paper's evaluation ([`sim`]), the
+//!   workload generator ([`workload`]), the PJRT runtime ([`runtime`])
+//!   and the real-model serving engine (`server`, behind the `pjrt`
+//!   feature).
 //! * **L2** — `python/compile/model.py`: JAX Llama-style model lowered
 //!   once to HLO text (`make artifacts`).
 //! * **L1** — `python/compile/kernels/attention.py`: Pallas flash
 //!   attention kernels called by L2.
+//!
+//! ## Scheduler zoo
+//!
+//! | name | module | idea |
+//! |------|--------|------|
+//! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips |
+//! | `accellm-prefix` | [`prefix::scheduler`] | AcceLLM pairs + global prefix index + CHWBL routing |
+//! | `splitwise` | [`coordinator::splitwise`] | static prefill/decode disaggregation baseline |
+//! | `vllm` | [`coordinator::vllm`] | continuous-batching baseline |
+//!
+//! ## Workload families
+//!
+//! `light` / `mixed` / `heavy` are the paper's Table 2 i.i.d. uniform
+//! workloads; `chat` (multi-turn sessions with growing shared context)
+//! and `shared-doc` (concurrent queries over long shared documents)
+//! exercise cross-request prefix locality — see [`workload::sessions`].
 //!
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
@@ -24,12 +43,15 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
+pub mod prefix;
 pub mod runtime;
+#[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
 pub mod util;
 pub mod workload;
 
-pub use coordinator::{AcceLlm, Splitwise, Vllm};
+pub use coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Vllm};
+pub use prefix::{ChwblRouter, PrefixIndex};
 pub use sim::{run, PerfModel, RunReport, Scheduler, SimConfig};
-pub use workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
+pub use workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED, SHARED_DOC};

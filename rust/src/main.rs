@@ -2,14 +2,17 @@
 //! and real-model serving over the AOT PJRT artifacts.
 
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::time::Duration;
 
 use accellm::cli::Args;
 use accellm::coordinator;
 use accellm::eval::{all_figures, figure_by_id};
+#[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
 use accellm::sim::{run, DeviceSpec, InstanceSpec, PerfModel, RunReport,
                    SimConfig, LLAMA2_70B};
+#[cfg(feature = "pjrt")]
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec};
 
@@ -17,8 +20,10 @@ const USAGE: &str = "\
 accellm — AcceLLM reproduction (redundancy-based LLM serving)
 
 USAGE:
-  accellm simulate [--scheduler accellm|splitwise|vllm] [--device h100|910b2]
-                   [--workload light|mixed|heavy] [--instances N] [--rate R]
+  accellm simulate [--scheduler accellm|accellm-prefix|splitwise|vllm]
+                   [--device h100|910b2]
+                   [--workload light|mixed|heavy|chat|shared-doc]
+                   [--instances N] [--rate R]
                    [--duration S] [--seed K] [--bw GB/s] [--json]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm serve    [--policy accellm|splitwise|vllm] [--instances N]
@@ -27,7 +32,10 @@ USAGE:
   accellm sweep    [--device ...] [--workload ...] [--instances N]
                    [--duration S]                  # rate sweep, all schedulers
 
-Run `make artifacts` once before `accellm serve`.";
+`chat` and `shared-doc` are session workloads with shared prompt
+prefixes; pair them with `--scheduler accellm-prefix` to exercise the
+prefix-locality router.  Run `make artifacts` once before
+`accellm serve` (needs a build with `--features pjrt`).";
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -85,8 +93,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let exp = accellm::config::Experiment::from_file(Path::new(path))?;
         println!("{}", RunReport::csv_header());
         for &rate in &exp.rates {
-            let trace = Trace::poisson(exp.workload, rate, exp.duration,
-                                       exp.seed);
+            let trace = Trace::generate(exp.workload, rate, exp.duration,
+                                        exp.seed);
             let mut sched = coordinator::by_name(&exp.scheduler, exp.instances)
                 .ok_or_else(|| anyhow::anyhow!("unknown scheduler in config"))?;
             let report = run(&exp.sim_config(), &trace, sched.as_mut());
@@ -110,7 +118,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         },
         record_timeline: false,
     };
-    let trace = Trace::poisson(workload, rate, duration, seed);
+    let trace = Trace::generate(workload, rate, duration, seed);
     let report = run(&cfg, &trace, sched.as_mut());
     print_report(&report, args.has("json"));
     Ok(())
@@ -120,7 +128,7 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let (device, workload, instances, _, duration, seed) = parse_common(args)?;
     println!("{}", RunReport::csv_header());
     for &rate in &accellm::eval::figures::RATE_SWEEP {
-        let trace = Trace::poisson(workload, rate, duration, seed);
+        let trace = Trace::generate(workload, rate, duration, seed);
         for name in coordinator::ALL_SCHEDULERS {
             let mut sched = coordinator::by_name(name, instances).unwrap();
             let cfg = SimConfig {
@@ -158,6 +166,14 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!("`serve` drives the real model through PJRT; rebuild \
+                   with `--features pjrt` (plus the xla dependency) to \
+                   enable it")
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let policy = ServePolicy::by_name(args.get_or("policy", "accellm"))
         .ok_or_else(|| anyhow::anyhow!("unknown --policy"))?;

@@ -1,0 +1,357 @@
+//! Global prefix index: a trie over hashed prompt chunks recording
+//! which holder (instance pair) has which prefixes KV-resident.
+//!
+//! Each trie node represents one chunk extension of its parent's
+//! prefix; a holder id attached to a node means "this pair has the KV
+//! for the whole chunk chain ending here".  Because a chunk's KV is
+//! only usable when every preceding chunk is also cached, holder
+//! presence is kept *prefix-closed*: evicting a node for a holder
+//! cascades to all its descendants for that holder.
+//!
+//! Capacity is per holder, in chunks (a notional slice of HBM set
+//! aside for prefix reuse); eviction is LRU over the holder's resident
+//! chunk set.  Lookups refresh recency stamps along the matched path,
+//! and parents are touched whenever descendants are, so the LRU victim
+//! is always a deepest-first frontier node.
+//!
+//! All containers are `BTreeMap`s: iteration order (and therefore
+//! tie-breaking, and therefore the whole simulation) is deterministic.
+
+use std::collections::BTreeMap;
+
+/// Hit/miss/churn counters (cheap, copied out by callers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IndexStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub inserted_chunks: u64,
+    pub evicted_chunks: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    children: BTreeMap<u64, usize>,
+    /// holder id -> last-use timestamp.
+    holders: BTreeMap<usize, f64>,
+}
+
+impl Node {
+    fn new() -> Node {
+        Node { children: BTreeMap::new(), holders: BTreeMap::new() }
+    }
+}
+
+/// Trie-backed prefix-to-holder index with per-holder LRU capacity.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    /// Arena; node 0 is the root (empty prefix, never holds entries).
+    nodes: Vec<Node>,
+    /// Resident chunk count per holder.
+    resident: Vec<usize>,
+    /// Max resident chunks per holder.
+    capacity: usize,
+    stats: IndexStats,
+}
+
+impl PrefixIndex {
+    pub fn new(n_holders: usize, capacity_chunks: usize) -> PrefixIndex {
+        assert!(n_holders > 0, "index needs at least one holder");
+        assert!(capacity_chunks > 0, "capacity must be positive");
+        PrefixIndex {
+            nodes: vec![Node::new()],
+            resident: vec![0; n_holders],
+            capacity: capacity_chunks,
+            stats: IndexStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> IndexStats {
+        self.stats
+    }
+
+    pub fn n_holders(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn resident_chunks(&self, holder: usize) -> usize {
+        self.resident[holder]
+    }
+
+    /// Deepest match of `chunks` over all holders: returns the holder
+    /// with the longest cached prefix and the matched chunk count.
+    /// Ties prefer the smallest holder id (deterministic).  Counts a
+    /// lookup; a hit is any match of depth >= 1.
+    pub fn best_match(&mut self, chunks: &[u64]) -> Option<(usize, usize)> {
+        self.stats.lookups += 1;
+        let mut best: Option<(usize, usize)> = None;
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        for &c in chunks {
+            let Some(child) = self.nodes[node].children.get(&c).copied() else {
+                break;
+            };
+            node = child;
+            depth += 1;
+            // Smallest holder id at this node (BTreeMap => min key).
+            if let Some((&h, _)) = self.nodes[node].holders.iter().next() {
+                if best.map_or(true, |(_, d)| d < depth) {
+                    best = Some((h, depth));
+                }
+            }
+        }
+        if best.is_some() {
+            self.stats.hits += 1;
+        }
+        best
+    }
+
+    /// Matched chunk count of `chunks` on one specific holder,
+    /// refreshing the LRU stamp of every matched node.
+    pub fn touch_match(&mut self, holder: usize, chunks: &[u64], now: f64)
+                       -> usize {
+        let mut node = 0usize;
+        let mut depth = 0usize;
+        for &c in chunks {
+            let Some(child) = self.nodes[node].children.get(&c).copied() else {
+                break;
+            };
+            if !self.nodes[child].holders.contains_key(&holder) {
+                break;
+            }
+            node = child;
+            depth += 1;
+            self.nodes[node].holders.insert(holder, now);
+        }
+        depth
+    }
+
+    /// Record that `holder` now caches the full prefix `chunks`
+    /// (called when its prefill completes).  Evicts the holder's LRU
+    /// entries if this pushes it over capacity; returns chunks evicted.
+    /// A prefix longer than the whole capacity is truncated to its
+    /// capacity-sized head — caching the head still serves partial
+    /// hits, whereas inserting the full chain would immediately evict
+    /// itself (and everything else the holder caches) on the way out.
+    pub fn insert(&mut self, holder: usize, chunks: &[u64], now: f64) -> usize {
+        let chunks = &chunks[..chunks.len().min(self.capacity)];
+        let mut node = 0usize;
+        for &c in chunks {
+            node = match self.nodes[node].children.get(&c).copied() {
+                Some(n) => n,
+                None => {
+                    let id = self.nodes.len();
+                    self.nodes.push(Node::new());
+                    self.nodes[node].children.insert(c, id);
+                    id
+                }
+            };
+            if self.nodes[node].holders.insert(holder, now).is_none() {
+                self.resident[holder] += 1;
+                self.stats.inserted_chunks += 1;
+            }
+        }
+        let mut evicted = 0;
+        while self.resident[holder] > self.capacity {
+            let n = self.evict_lru(holder);
+            debug_assert!(n > 0, "eviction made no progress");
+            evicted += n;
+        }
+        self.stats.evicted_chunks += evicted as u64;
+        evicted
+    }
+
+    /// Drop everything a holder caches (scale-down / holder failure).
+    pub fn remove_holder(&mut self, holder: usize) -> usize {
+        let mut removed = 0;
+        for n in &mut self.nodes {
+            if n.holders.remove(&holder).is_some() {
+                removed += 1;
+            }
+        }
+        self.resident[holder] -= removed;
+        self.stats.evicted_chunks += removed as u64;
+        removed
+    }
+
+    /// Evict the holder's least-recently-used entry (tie: smallest node
+    /// id) plus, for prefix-closure, all its descendants the holder
+    /// still caches.  O(nodes) scan — eviction is off the routing hot
+    /// path and simulation-scale tries are small.
+    fn evict_lru(&mut self, holder: usize) -> usize {
+        let mut victim: Option<(f64, usize)> = None;
+        for (id, n) in self.nodes.iter().enumerate() {
+            if let Some(&ts) = n.holders.get(&holder) {
+                if victim.map_or(true, |(vts, _)| ts < vts) {
+                    victim = Some((ts, id));
+                }
+            }
+        }
+        let Some((_, vid)) = victim else { return 0 };
+        self.remove_subtree(holder, vid)
+    }
+
+    fn remove_subtree(&mut self, holder: usize, root: usize) -> usize {
+        let mut removed = 0;
+        let mut stack = vec![root];
+        while let Some(id) = stack.pop() {
+            if self.nodes[id].holders.remove(&holder).is_some() {
+                removed += 1;
+                self.resident[holder] -= 1;
+            }
+            let children: Vec<usize> =
+                self.nodes[id].children.values().copied().collect();
+            stack.extend(children);
+        }
+        removed
+    }
+
+    /// Prefix-closure invariant check (test helper): if a holder is
+    /// present at a node, it is present at every ancestor.
+    #[cfg(test)]
+    fn closure_holds(&self) -> bool {
+        // Walk every (parent, child) edge; the root (id 0) holds the
+        // empty prefix and is exempt.
+        for (pid, parent) in self.nodes.iter().enumerate() {
+            for &child_id in parent.children.values() {
+                for &h in self.nodes[child_id].holders.keys() {
+                    if pid != 0 && !parent.holders.contains_key(&h) {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prefix::chunk_hash;
+    use crate::util::quickcheck::{check, gen_vec, prop_assert};
+
+    fn chunks(stream: u64, n: usize) -> Vec<u64> {
+        (0..n as u64).map(|j| chunk_hash(stream, j)).collect()
+    }
+
+    #[test]
+    fn insert_then_match() {
+        let mut ix = PrefixIndex::new(2, 100);
+        ix.insert(0, &chunks(7, 10), 1.0);
+
+        // Full-prefix query from the same stream matches all 10 chunks;
+        // a longer query still matches the cached 10.
+        assert_eq!(ix.best_match(&chunks(7, 10)), Some((0, 10)));
+        assert_eq!(ix.best_match(&chunks(7, 15)), Some((0, 10)));
+        // A shorter query matches its own length.
+        assert_eq!(ix.best_match(&chunks(7, 4)), Some((0, 4)));
+        // A different stream shares no chunks.
+        assert_eq!(ix.best_match(&chunks(8, 10)), None);
+        assert_eq!(ix.resident_chunks(0), 10);
+        assert_eq!(ix.resident_chunks(1), 0);
+
+        let s = ix.stats();
+        assert_eq!(s.lookups, 4);
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.inserted_chunks, 10);
+    }
+
+    #[test]
+    fn deeper_match_wins_ties_go_to_smaller_holder() {
+        let mut ix = PrefixIndex::new(3, 100);
+        ix.insert(2, &chunks(7, 4), 1.0);
+        ix.insert(1, &chunks(7, 8), 2.0);
+        // Holder 1 has the deeper prefix.
+        assert_eq!(ix.best_match(&chunks(7, 10)), Some((1, 8)));
+        // At equal depth the smaller holder id wins.
+        ix.insert(0, &chunks(9, 5), 3.0);
+        ix.insert(2, &chunks(9, 5), 4.0);
+        assert_eq!(ix.best_match(&chunks(9, 5)), Some((0, 5)));
+    }
+
+    #[test]
+    fn touch_match_is_holder_specific() {
+        let mut ix = PrefixIndex::new(2, 100);
+        ix.insert(1, &chunks(3, 6), 1.0);
+        assert_eq!(ix.touch_match(1, &chunks(3, 9), 2.0), 6);
+        assert_eq!(ix.touch_match(0, &chunks(3, 9), 2.0), 0);
+    }
+
+    #[test]
+    fn lru_eviction_respects_capacity_and_recency() {
+        let mut ix = PrefixIndex::new(1, 10);
+        ix.insert(0, &chunks(1, 6), 1.0); // old stream
+        ix.insert(0, &chunks(2, 6), 2.0); // 12 resident -> evict from 1
+        assert!(ix.resident_chunks(0) <= 10);
+        // The fresh stream survives in full.
+        assert_eq!(ix.best_match(&chunks(2, 6)), Some((0, 6)));
+        // The old stream lost (at least) its tail.
+        let old = ix.best_match(&chunks(1, 6));
+        assert!(old.map_or(true, |(_, d)| d < 6), "old kept fully: {old:?}");
+        assert!(ix.stats().evicted_chunks >= 2);
+    }
+
+    #[test]
+    fn oversized_prefix_is_truncated_not_thrashed() {
+        // A stream longer than the whole budget keeps its head cached
+        // (partial hits) instead of evicting itself on insert.
+        let mut ix = PrefixIndex::new(1, 8);
+        ix.insert(0, &chunks(5, 20), 1.0);
+        assert_eq!(ix.resident_chunks(0), 8);
+        assert_eq!(ix.best_match(&chunks(5, 20)), Some((0, 8)));
+        assert_eq!(ix.stats().evicted_chunks, 0);
+        // Re-inserting the same oversized stream is a no-op.
+        ix.insert(0, &chunks(5, 20), 2.0);
+        assert_eq!(ix.resident_chunks(0), 8);
+    }
+
+    #[test]
+    fn eviction_keeps_prefix_closure() {
+        let mut ix = PrefixIndex::new(2, 8);
+        for s in 0..6u64 {
+            ix.insert((s % 2) as usize, &chunks(s, 5), s as f64);
+            assert!(ix.closure_holds(), "closure broken after stream {s}");
+        }
+        assert!(ix.resident_chunks(0) <= 8 && ix.resident_chunks(1) <= 8);
+    }
+
+    #[test]
+    fn remove_holder_clears_everything() {
+        let mut ix = PrefixIndex::new(2, 100);
+        ix.insert(0, &chunks(1, 7), 1.0);
+        ix.insert(1, &chunks(1, 7), 1.0);
+        assert_eq!(ix.remove_holder(0), 7);
+        assert_eq!(ix.resident_chunks(0), 0);
+        // Holder 1 is untouched.
+        assert_eq!(ix.best_match(&chunks(1, 7)), Some((1, 7)));
+    }
+
+    #[test]
+    fn prop_capacity_and_closure_under_random_workload() {
+        check(
+            60,
+            |rng| {
+                // A random schedule of inserts across 3 holders and up
+                // to 8 streams.
+                gen_vec(rng, 1, 40, |r| {
+                    (r.uniform_usize(0, 2),            // holder
+                     r.uniform_u64(0, 7),              // stream
+                     r.uniform_usize(1, 12),           // depth
+                     r.uniform_f64(0.0, 100.0))        // timestamp
+                })
+            },
+            |ops| {
+                let mut ix = PrefixIndex::new(3, 16);
+                for &(h, s, d, t) in ops {
+                    ix.insert(h, &chunks(s, d), t);
+                    for holder in 0..3 {
+                        prop_assert(ix.resident_chunks(holder) <= 16,
+                                    "capacity exceeded")?;
+                    }
+                    prop_assert(ix.closure_holds(), "prefix closure broken")?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

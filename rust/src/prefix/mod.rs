@@ -1,0 +1,51 @@
+//! Cross-request prefix locality: global prefix index + CHWBL router.
+//!
+//! The paper exploits KV redundancy *within* a request (primary +
+//! replica copies, Section 4.1.2).  This subsystem extends the same
+//! data-locality idea *across* requests: multi-turn chat sessions and
+//! shared-document fan-out repeat long prompt prefixes, and an instance
+//! that already computed a prefix's KV can skip that part of prefill
+//! entirely (vLLM-style automatic prefix caching).  Routing therefore
+//! matters: a prefix hit only pays off if the request lands where the
+//! cached KV lives, while naive affinity routing destroys load balance
+//! ("LLM Load Balancing at Scale", kubeai's CHWBL router).
+//!
+//! Three pieces:
+//!
+//! * [`index::PrefixIndex`] — a global trie keyed on hashed
+//!   [`CHUNK_TOKENS`]-sized prompt chunks, tracking which *pair* holds
+//!   which cached prefixes, with per-pair capacity, LRU eviction and
+//!   hit/miss/eviction accounting.
+//! * [`router::ChwblRouter`] — Consistent Hashing With Bounded Loads
+//!   (Mirrokni et al. 2016): virtual nodes on a hash ring, walk
+//!   clockwise from the key, skip holders whose load exceeds
+//!   `ceil(c * (total+1) / n)`.  Scale changes (add/remove holder) only
+//!   remap the ~1/n of keys adjacent to the changed virtual nodes.
+//! * [`scheduler::AcceLlmPrefix`] — the `accellm-prefix` policy:
+//!   AcceLLM's redundancy pairs with prefix-locality placement.  The
+//!   index is keyed per pair because a pair's KV is replicated across
+//!   both members, so a cached prefix is usable by whichever member
+//!   flips to prefill — the two locality mechanisms compose.
+//!
+//! The simulator honours hits by charging prefill compute only for the
+//! uncached prompt suffix (`SimCtx::set_cached_prefix`); metrics report
+//! the hit rate and saved prefill tokens.  The cached prefix KV itself
+//! is modelled inside the index's per-pair chunk budget rather than the
+//! per-request KV accounting, keeping request memory bookkeeping
+//! identical across schedulers.
+
+pub mod hash;
+pub mod index;
+pub mod router;
+pub mod scheduler;
+
+pub use hash::{chunk_hash, splitmix64};
+pub use index::{IndexStats, PrefixIndex};
+pub use router::ChwblRouter;
+pub use scheduler::AcceLlmPrefix;
+
+/// Tokens per prefix chunk.  Chunked (rather than whole-prompt) hashing
+/// is what lets a request reuse a *partial* prefix match, and 32 tokens
+/// per chunk keeps the index fine-grained without blowing up trie depth
+/// (a 6k-token chat context is ~190 chunks).
+pub const CHUNK_TOKENS: u32 = 32;

@@ -1,0 +1,219 @@
+//! `accellm-prefix`: AcceLLM redundancy pairs + prefix-locality
+//! placement.
+//!
+//! Placement decision per arrival:
+//!
+//! 1. Look the request's prefix chunks up in the global
+//!    [`PrefixIndex`].  If some pair caches a nonempty prefix AND that
+//!    pair's load is under the CHWBL bound, send the request there —
+//!    its prefill charges only the uncached suffix.
+//! 2. Otherwise route by consistent-hashing-with-bounded-loads on the
+//!    request's first chunk hash (so all requests of one session /
+//!    document cold-start on the same pair), falling back to a
+//!    per-request key when the prompt has no chunk structure (the
+//!    uniform paper workloads) — which degrades to plain bounded-load
+//!    balancing.
+//!
+//! Everything after placement — pair queues, role flips, replica
+//! promotion, intra-pair rebalancing — is inherited unchanged from
+//! [`AcceLlm`]: the index is keyed per *pair* precisely because the
+//! pair's KV redundancy makes a cached prefix reachable from either
+//! member.  The index learns a pair's new prefixes when its prefill
+//! completes (that is when the KV physically exists), and forgets them
+//! by per-pair LRU when the chunk budget overflows.
+
+use crate::coordinator::AcceLlm;
+use crate::prefix::hash::splitmix64;
+use crate::prefix::index::{IndexStats, PrefixIndex};
+use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
+use crate::prefix::CHUNK_TOKENS;
+use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
+
+/// Default per-pair prefix-cache budget, in chunks.  2048 chunks x 32
+/// tokens x ~320 KiB/token (Llama-2-70B) ~= 21 GB of the pair's HBM
+/// set aside for reuse — comfortably inside the post-weights headroom
+/// on both evaluated devices.
+pub const DEFAULT_CACHE_CHUNKS: usize = 2048;
+
+/// CHWBL load slack: a pair may run up to 50% above the fair share
+/// before affinity spills (kubeai ships 1.25; we trade a little more
+/// imbalance for locality because a hit skips real prefill work).
+const LOAD_FACTOR: f64 = 1.5;
+
+/// AcceLLM pairs composed with the prefix index + CHWBL router.
+pub struct AcceLlmPrefix {
+    inner: AcceLlm,
+    index: PrefixIndex,
+    router: ChwblRouter,
+}
+
+impl AcceLlmPrefix {
+    pub fn new(n_instances: usize) -> Self {
+        Self::with_cache_chunks(n_instances, DEFAULT_CACHE_CHUNKS)
+    }
+
+    /// Custom per-pair prefix-cache budget (ablation / tests).
+    pub fn with_cache_chunks(n_instances: usize, cache_chunks: usize) -> Self {
+        let inner = AcceLlm::new(n_instances);
+        let n_pairs = inner.n_pairs();
+        AcceLlmPrefix {
+            inner,
+            index: PrefixIndex::new(n_pairs, cache_chunks),
+            router: ChwblRouter::new(n_pairs, DEFAULT_VNODES, LOAD_FACTOR),
+        }
+    }
+
+    /// Index counters (lookups/hits/insertions/evictions).
+    pub fn index_stats(&self) -> IndexStats {
+        self.index.stats()
+    }
+}
+
+impl Scheduler for AcceLlmPrefix {
+    fn name(&self) -> &'static str {
+        "accellm-prefix"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.inner.init(ctx);
+    }
+
+    fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+        let n_pairs = self.inner.n_pairs();
+        let loads: Vec<usize> =
+            (0..n_pairs).map(|p| self.inner.pair_load(p)).collect();
+        let bound = self.router.load_bound(&loads);
+
+        let pair = match self.index.best_match(&ctx.requests[req].prefix_chunks)
+        {
+            Some((p, _)) if loads[p] < bound => p,
+            _ => {
+                // Cold start or locality overruled by load: CHWBL.
+                let key = ctx.requests[req]
+                    .prefix_chunks
+                    .first()
+                    .copied()
+                    .unwrap_or_else(|| splitmix64(req as u64));
+                self.router.route(key, &loads)
+            }
+        };
+        // Credit whatever the chosen pair actually caches (a CHWBL
+        // spill may still land a partial match) and refresh its LRU.
+        let matched = self.index.touch_match(
+            pair, &ctx.requests[req].prefix_chunks, ctx.now);
+        ctx.set_cached_prefix(req, matched as u32 * CHUNK_TOKENS);
+        self.inner.enqueue_on_pair(ctx, req, pair);
+    }
+
+    fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                    completed: Vec<ReqId>) {
+        if let Work::Prefill { reqs } = &work {
+            // The pair now physically holds these prompts' KV: publish
+            // them to the index (and meter any LRU churn).
+            let pair = AcceLlm::pair_of(inst);
+            for &r in reqs {
+                if !ctx.requests[r].prefix_chunks.is_empty() {
+                    let evicted = self.index.insert(
+                        pair, &ctx.requests[r].prefix_chunks, ctx.now);
+                    ctx.metrics.prefix_evictions += evicted as u64;
+                }
+            }
+        }
+        self.inner.on_work_done(ctx, inst, work, completed);
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
+                        dst: InstId, req: ReqId) {
+        self.inner.on_transfer_done(ctx, src, dst, req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::by_name;
+    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100,
+                     LLAMA2_70B};
+    use crate::workload::{Trace, CHAT, MIXED, SHARED_DOC};
+
+    fn cfg(n: usize) -> SimConfig {
+        SimConfig {
+            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+            n_instances: n,
+            interconnect_bw: None,
+            record_timeline: false,
+        }
+    }
+
+    #[test]
+    fn completes_uniform_workload_with_zero_hits() {
+        // No chunk structure -> pure CHWBL balancing, all misses.
+        let trace = Trace::poisson(MIXED, 5.0, 40.0, 3);
+        let r = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        assert_eq!(r.completed, trace.len());
+        assert_eq!(r.prefix_hits, 0);
+        assert_eq!(r.prefix_misses, trace.len() as u64);
+        assert_eq!(r.prefix_hit_rate, 0.0);
+    }
+
+    #[test]
+    fn chat_sessions_hit_the_prefix_cache() {
+        let trace = Trace::generate(CHAT, 4.0, 60.0, 7);
+        let r = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        assert_eq!(r.completed, trace.len());
+        assert!(r.prefix_hit_rate > 0.3, "hit rate {}", r.prefix_hit_rate);
+        assert!(r.prefix_saved_tokens > 0);
+    }
+
+    #[test]
+    fn chat_ttft_beats_plain_accellm() {
+        // The point of the subsystem: skipping cached prefill lowers
+        // time-to-first-token on session workloads.
+        let trace = Trace::generate(CHAT, 6.0, 60.0, 11);
+        let pfx = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        let acc = run(&cfg(4), &trace,
+                      by_name("accellm", 4).unwrap().as_mut());
+        assert_eq!(pfx.completed, trace.len());
+        assert_eq!(acc.completed, trace.len());
+        assert!(pfx.ttft_mean < acc.ttft_mean,
+                "prefix {} vs accellm {}", pfx.ttft_mean, acc.ttft_mean);
+    }
+
+    #[test]
+    fn shared_doc_ttft_beats_plain_accellm() {
+        let trace = Trace::generate(SHARED_DOC, 4.0, 60.0, 13);
+        let pfx = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        let acc = run(&cfg(4), &trace,
+                      by_name("accellm", 4).unwrap().as_mut());
+        assert_eq!(pfx.completed, trace.len());
+        assert!(pfx.prefix_hit_rate > 0.5, "hit rate {}", pfx.prefix_hit_rate);
+        assert!(pfx.ttft_mean < acc.ttft_mean,
+                "prefix {} vs accellm {}", pfx.ttft_mean, acc.ttft_mean);
+    }
+
+    #[test]
+    fn tiny_cache_budget_forces_evictions() {
+        let trace = Trace::generate(SHARED_DOC, 4.0, 40.0, 17);
+        let mut s = AcceLlmPrefix::with_cache_chunks(4, 64);
+        let r = run(&cfg(4), &trace, &mut s);
+        assert_eq!(r.completed, trace.len());
+        assert!(r.prefix_evictions > 0, "no evictions with a 64-chunk cache");
+        // A starved cache still routes correctly, just hits less.
+        assert!(s.index_stats().evicted_chunks > 0);
+    }
+
+    #[test]
+    fn works_at_16_instances_and_2_instances() {
+        for n in [2usize, 16] {
+            let trace = Trace::generate(CHAT, 3.0, 30.0, 19);
+            let r = run(&cfg(n), &trace, &mut AcceLlmPrefix::new(n));
+            assert_eq!(r.completed, trace.len(), "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "even number")]
+    fn rejects_odd_instance_count() {
+        AcceLlmPrefix::new(5);
+    }
+}

@@ -1,11 +1,19 @@
 //! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
 //! `python/compile/aot.py`), compiles them once, and executes them from
 //! the serving hot path.  Python never runs at serving time.
+//!
+//! The execution engine needs the `xla` PJRT bindings, which are not
+//! part of the offline crate set — it is gated behind the `pjrt` cargo
+//! feature (see `Cargo.toml`).  The manifest and tokenizer are pure
+//! Rust and always available (the simulator-side `kvcache` layout code
+//! depends on [`manifest::ModelCfg`]).
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 pub mod tokenizer;
 
+#[cfg(feature = "pjrt")]
 pub use engine::{argmax, DecodeOut, Engine, PrefillOut};
 pub use manifest::{Manifest, ModelCfg};
 
@@ -17,11 +25,15 @@ pub use manifest::{Manifest, ModelCfg};
 /// serializes internally); executables and uploaded weight buffers are
 /// immutable after construction.  Each server instance thread only
 /// issues execute calls.
+#[cfg(feature = "pjrt")]
 pub struct SharedEngine(pub Engine);
 
+#[cfg(feature = "pjrt")]
 unsafe impl Send for SharedEngine {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for SharedEngine {}
 
+#[cfg(feature = "pjrt")]
 impl std::ops::Deref for SharedEngine {
     type Target = Engine;
 

@@ -121,6 +121,30 @@ impl SimCtx {
         self.requests[req].kv_tokens()
     }
 
+    // ---- prefix caching --------------------------------------------------
+
+    /// Record that `tokens` of this request's prompt are covered by a
+    /// prefix-cache hit where it will prefill: the engine then charges
+    /// prefill compute only for the uncached remainder.  At least one
+    /// prompt token is always computed (a hit cannot produce the first
+    /// output token's logits), mirroring vLLM's automatic-prefix-cache
+    /// rule.  Also meters the hit/miss/saved-token statistics, so call
+    /// this exactly once per request (schedulers without prefix support
+    /// simply never call it).
+    pub fn set_cached_prefix(&mut self, req: ReqId, tokens: u32) {
+        debug_assert!(self.requests[req].prefill_start.is_none(),
+                      "cached prefix set after prefill started");
+        let r = &mut self.requests[req];
+        let capped = tokens.min(r.prompt_len.saturating_sub(1));
+        r.cached_prefix = capped;
+        if capped > 0 {
+            self.metrics.prefix_hits += 1;
+            self.metrics.prefix_saved_tokens += capped as u64;
+        } else {
+            self.metrics.prefix_misses += 1;
+        }
+    }
+
     pub fn kv_bytes(&self, req: ReqId) -> f64 {
         self.model.kv_bytes(self.requests[req].kv_tokens() as f64)
     }
@@ -202,11 +226,16 @@ impl SimCtx {
     // ---- actions ---------------------------------------------------------
 
     /// Begin a disaggregated prefill on `inst`. Duration comes from the
-    /// perf model; completion fires `on_work_done`.
+    /// perf model, charged only for each prompt's uncached suffix (a
+    /// prefix-cache hit skips the cached portion).  Completion fires
+    /// `on_work_done`.
     pub fn start_prefill(&mut self, inst: InstId, reqs: Vec<ReqId>) {
         assert!(!self.is_busy(inst), "instance {inst} is busy");
         assert!(!reqs.is_empty());
-        let lens: Vec<u32> = reqs.iter().map(|&r| self.requests[r].prompt_len).collect();
+        let lens: Vec<u32> = reqs
+            .iter()
+            .map(|&r| self.requests[r].uncached_prompt_tokens())
+            .collect();
         let dur = self.model.prefill_time(&lens);
         for &r in &reqs {
             debug_assert!(self.requests[r].prefill_start.is_none());
@@ -226,8 +255,10 @@ impl SimCtx {
         assert!(!self.is_busy(inst), "instance {inst} is busy");
         assert!(!batch.is_empty() || !prefills.is_empty());
         let kv: f64 = batch.iter().map(|&r| self.kv_tokens(r) as f64).sum();
-        let plens: Vec<u32> =
-            prefills.iter().map(|&r| self.requests[r].prompt_len).collect();
+        let plens: Vec<u32> = prefills
+            .iter()
+            .map(|&r| self.requests[r].uncached_prompt_tokens())
+            .collect();
         for &r in &prefills {
             debug_assert!(self.requests[r].prefill_start.is_none());
             self.requests[r].prefill_start = Some(self.now);
@@ -327,7 +358,12 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
             .requests
             .iter()
             .enumerate()
-            .map(|(i, r)| SimRequest::new(i, r.arrival, r.prompt_len, r.decode_len))
+            .map(|(i, r)| {
+                let mut req =
+                    SimRequest::new(i, r.arrival, r.prompt_len, r.decode_len);
+                req.prefix_chunks = r.prefix_chunks.clone();
+                req
+            })
             .collect(),
         instances: (0..cfg.n_instances).map(SimInstance::new).collect(),
         pending: VecDeque::new(),
@@ -467,6 +503,15 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         xfer_migration_bytes: m.xfer_migration_bytes,
         xfer_total_bytes: m.xfer_prefill_bytes + m.xfer_replica_bytes
             + m.xfer_migration_bytes,
+        prefix_hits: m.prefix_hits,
+        prefix_misses: m.prefix_misses,
+        prefix_hit_rate: if m.prefix_hits + m.prefix_misses > 0 {
+            m.prefix_hits as f64 / (m.prefix_hits + m.prefix_misses) as f64
+        } else {
+            0.0
+        },
+        prefix_saved_tokens: m.prefix_saved_tokens,
+        prefix_evictions: m.prefix_evictions,
         tbt_timeline: std::mem::take(&mut m.tbt_timeline),
     }
 }
@@ -548,6 +593,77 @@ mod tests {
         let report = run(&cfg(1), &trace, &mut SerialSched);
         assert_eq!(report.completed, trace.len());
         assert!(report.peak_kv_bytes > 0.0);
+    }
+
+    /// SerialSched variant that declares a fixed cached-prefix fraction
+    /// on every arrival (exercises the prefix-hit charging path).
+    struct CachedSerialSched {
+        cached_tokens: u32,
+    }
+
+    impl Scheduler for CachedSerialSched {
+        fn name(&self) -> &'static str {
+            "cached-serial"
+        }
+
+        fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+            ctx.set_cached_prefix(req, self.cached_tokens);
+            if !ctx.is_busy(0) {
+                if let Some(r) = ctx.pending.pop_front() {
+                    ctx.start_prefill(0, vec![r]);
+                }
+            }
+        }
+
+        fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                        _completed: Vec<ReqId>) {
+            match work {
+                Work::Prefill { reqs } => {
+                    let r = reqs[0];
+                    ctx.place_primary(r, inst);
+                    ctx.start_decode_step(inst, vec![r], vec![]);
+                }
+                Work::DecodeStep { batch, .. } => {
+                    let r = batch[0];
+                    if !ctx.requests[r].is_finished() {
+                        ctx.start_decode_step(inst, vec![r], vec![]);
+                    } else if !ctx.is_busy(0) {
+                        if let Some(nxt) = ctx.pending.pop_front() {
+                            ctx.start_prefill(0, vec![nxt]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_prefix_shortens_prefill_and_is_metered() {
+        // Short decodes so TTFT is prefill-dominated, not queue-dominated.
+        let mut trace = Trace::poisson(MIXED, 0.5, 20.0, 1);
+        for r in &mut trace.requests {
+            r.decode_len = 2;
+        }
+        let cold = run(&cfg(1), &trace, &mut CachedSerialSched { cached_tokens: 0 });
+        let warm = run(&cfg(1), &trace,
+                       &mut CachedSerialSched { cached_tokens: u32::MAX });
+        assert_eq!(cold.completed, trace.len());
+        assert_eq!(warm.completed, trace.len());
+        // Full hits (capped at prompt_len - 1) nearly eliminate prefill.
+        assert!(warm.ttft_mean < 0.5 * cold.ttft_mean,
+                "warm {} vs cold {}", warm.ttft_mean, cold.ttft_mean);
+        assert_eq!(warm.prefix_hits, trace.len() as u64);
+        assert_eq!(cold.prefix_hits, 0);
+        assert_eq!(cold.prefix_misses, trace.len() as u64);
+        assert!(warm.prefix_hit_rate == 1.0 && cold.prefix_hit_rate == 0.0);
+        let want_saved: u64 = trace
+            .requests
+            .iter()
+            .map(|r| (r.prompt_len - 1) as u64)
+            .sum();
+        assert_eq!(warm.prefix_saved_tokens, want_saved);
+        // Decode work is untouched by prefix hits.
+        assert_eq!(warm.completed, cold.completed);
     }
 
     #[test]

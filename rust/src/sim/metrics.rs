@@ -25,6 +25,14 @@ pub struct MetricsCollector {
     pub xfer_prefill_bytes: f64,
     pub xfer_replica_bytes: f64,
     pub xfer_migration_bytes: f64,
+    /// Prefix-cache accounting (`SimCtx::set_cached_prefix`): requests
+    /// that reused a cached prefix / found none, prompt tokens whose
+    /// prefill was skipped, and chunks the index evicted under its
+    /// capacity budget.
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_saved_tokens: u64,
+    pub prefix_evictions: u64,
 }
 
 impl MetricsCollector {
@@ -82,6 +90,16 @@ pub struct RunReport {
     /// Peak interconnect utilization estimate (bytes/s over busiest 1s).
     pub xfer_total_bytes: f64,
 
+    /// Prefix-cache outcome counts (zero for prefix-unaware schedulers).
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    /// hits / (hits + misses); 0 when the scheduler never looked up.
+    pub prefix_hit_rate: f64,
+    /// Prompt tokens whose prefill was skipped via cached prefixes.
+    pub prefix_saved_tokens: u64,
+    /// Chunks evicted from the prefix index (capacity churn).
+    pub prefix_evictions: u64,
+
     /// Raw timeline for Figure 16, if recorded.
     pub tbt_timeline: Vec<(f64, f64)>,
 }
@@ -113,13 +131,17 @@ impl RunReport {
             ("xfer_prefill_gb", Json::num(self.xfer_prefill_bytes / 1e9)),
             ("xfer_replica_gb", Json::num(self.xfer_replica_bytes / 1e9)),
             ("xfer_migration_gb", Json::num(self.xfer_migration_bytes / 1e9)),
+            ("prefix_hit_rate", Json::num(self.prefix_hit_rate)),
+            ("prefix_saved_tokens",
+             Json::num(self.prefix_saved_tokens as f64)),
+            ("prefix_evictions", Json::num(self.prefix_evictions as f64)),
         ])
     }
 
     /// One CSV row (matches `csv_header`).
     pub fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2}",
+            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{}",
             self.scheduler,
             self.device,
             self.workload,
@@ -143,13 +165,16 @@ impl RunReport {
             (self.xfer_prefill_bytes + self.xfer_replica_bytes
                 + self.xfer_migration_bytes)
                 / 1e9,
+            self.prefix_hit_rate,
+            self.prefix_saved_tokens,
         )
     }
 
     pub fn csv_header() -> &'static str {
         "scheduler,device,workload,n_instances,rate,n_requests,completed,makespan,\
          ttft_mean,ttft_p50,ttft_p99,tbt_mean,tbt_p99,tbt_max,\
-         jct_mean,jct_p50,jct_p99,cost_eff_tok_inst_s,utilization,peak_kv_gb,xfer_gb"
+         jct_mean,jct_p50,jct_p99,cost_eff_tok_inst_s,utilization,peak_kv_gb,xfer_gb,\
+         prefix_hit_rate,prefix_saved_tok"
     }
 }
 

@@ -29,6 +29,15 @@ pub struct SimRequest {
     /// Instances holding redundant, continuously-updated KV replicas
     /// (AcceLLM Section 4.1.2).
     pub replicas: Vec<InstId>,
+
+    /// Hashes of the prompt's prefix chunks (from the workload
+    /// template; empty when the workload has no shared-prefix
+    /// structure).
+    pub prefix_chunks: Vec<u64>,
+    /// Prompt tokens covered by a prefix-cache hit at the assigned
+    /// instance; prefill charges only the remainder.  Set by the
+    /// scheduler via `SimCtx::set_cached_prefix` before prefill starts.
+    pub cached_prefix: u32,
 }
 
 impl SimRequest {
@@ -45,7 +54,14 @@ impl SimRequest {
             last_token_at: 0.0,
             primary: None,
             replicas: Vec::new(),
+            prefix_chunks: Vec::new(),
+            cached_prefix: 0,
         }
+    }
+
+    /// Prompt tokens the prefill must actually compute.
+    pub fn uncached_prompt_tokens(&self) -> u32 {
+        self.prompt_len - self.cached_prefix
     }
 
     /// Tokens currently in the KV cache (prompt + generated so far).

@@ -1,7 +1,7 @@
-//! Self-built substrates: the offline crate set contains only the `xla`
-//! closure (+ anyhow/thiserror/log), so RNG, JSON, statistics and the
-//! property-test harness are implemented here from scratch
-//! (DESIGN.md §3, substitution table).
+//! Self-built substrates: the offline crate set has no registry access
+//! (`anyhow` is a vendored shim, the `xla` PJRT closure is feature-
+//! gated), so RNG, JSON, statistics and the property-test harness are
+//! implemented here from scratch (DESIGN.md §3, substitution table).
 
 pub mod json;
 pub mod quickcheck;

@@ -1,4 +1,5 @@
-//! Workload generation — paper Table 2 + open-loop Poisson arrivals.
+//! Workload generation — paper Table 2 + open-loop Poisson arrivals,
+//! plus session-structured workloads with shared prompt prefixes.
 //!
 //! | Workload | Prefill    | Decoding   | Mean |
 //! |----------|-----------|------------|------|
@@ -10,13 +11,35 @@
 //! arrivals are open-loop Poisson at the configured rate, the standard
 //! serving-evaluation methodology (and the only one that can exhibit the
 //! queueing blow-ups of Figures 12b/14b).
+//!
+//! Two additional families exercise cross-request prefix locality (the
+//! [`crate::prefix`] subsystem): `chat` (multi-turn sessions whose
+//! context grows turn over turn) and `shared-doc` (concurrent queries
+//! over a small set of long documents) — see [`sessions`].
 
 use crate::util::rng::Pcg64;
 
+pub mod sessions;
+
+/// How a workload's requests are structured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// i.i.d. uniform lengths, no shared prefixes (paper Table 2).
+    Uniform,
+    /// Multi-turn chat sessions with growing shared context.
+    Chat,
+    /// Concurrent queries over a few long shared documents.
+    SharedDoc,
+}
+
 /// Length distribution of one workload class (inclusive token ranges).
+/// For `Chat` the prefill range is the *per-turn user input*; for
+/// `SharedDoc` it is the per-request query suffix appended to the
+/// shared document.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WorkloadSpec {
     pub name: &'static str,
+    pub kind: WorkloadKind,
     pub prefill_min: u32,
     pub prefill_max: u32,
     pub decode_min: u32,
@@ -25,6 +48,7 @@ pub struct WorkloadSpec {
 
 pub const LIGHT: WorkloadSpec = WorkloadSpec {
     name: "light",
+    kind: WorkloadKind::Uniform,
     prefill_min: 20,
     prefill_max: 500,
     decode_min: 20,
@@ -33,6 +57,7 @@ pub const LIGHT: WorkloadSpec = WorkloadSpec {
 
 pub const MIXED: WorkloadSpec = WorkloadSpec {
     name: "mixed",
+    kind: WorkloadKind::Uniform,
     prefill_min: 20,
     prefill_max: 1000,
     decode_min: 20,
@@ -41,10 +66,33 @@ pub const MIXED: WorkloadSpec = WorkloadSpec {
 
 pub const HEAVY: WorkloadSpec = WorkloadSpec {
     name: "heavy",
+    kind: WorkloadKind::Uniform,
     prefill_min: 500,
     prefill_max: 1000,
     decode_min: 500,
     decode_max: 1000,
+};
+
+/// Multi-turn chat: 20–200 fresh user tokens per turn on top of the
+/// accumulated context, 50–300 decoded tokens per reply.
+pub const CHAT: WorkloadSpec = WorkloadSpec {
+    name: "chat",
+    kind: WorkloadKind::Chat,
+    prefill_min: 20,
+    prefill_max: 200,
+    decode_min: 50,
+    decode_max: 300,
+};
+
+/// Shared-document fan-out: 20–120-token queries appended to a long
+/// shared document, short extractive answers.
+pub const SHARED_DOC: WorkloadSpec = WorkloadSpec {
+    name: "shared-doc",
+    kind: WorkloadKind::SharedDoc,
+    prefill_min: 20,
+    prefill_max: 120,
+    decode_min: 20,
+    decode_max: 150,
 };
 
 impl WorkloadSpec {
@@ -53,6 +101,10 @@ impl WorkloadSpec {
             "light" => Some(LIGHT),
             "mixed" => Some(MIXED),
             "heavy" => Some(HEAVY),
+            "chat" => Some(CHAT),
+            "shared-doc" | "shareddoc" | "shared_doc" | "doc" => {
+                Some(SHARED_DOC)
+            }
             _ => None,
         }
     }
@@ -68,12 +120,18 @@ impl WorkloadSpec {
     }
 }
 
-/// One generated request: arrival time + prompt/decode token counts.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// One generated request: arrival time + prompt/decode token counts +
+/// prefix identity.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestTemplate {
     pub arrival: f64,
     pub prompt_len: u32,
     pub decode_len: u32,
+    /// Hashes of the prompt's leading [`crate::prefix::CHUNK_TOKENS`]-
+    /// sized chunks (only the *shareable* part of the prompt; empty for
+    /// the uniform workloads).  Invariant: `prefix_chunks.len() *
+    /// CHUNK_TOKENS <= prompt_len`.
+    pub prefix_chunks: Vec<u64>,
 }
 
 /// Deterministic workload trace (record/replay: the same seed + spec +
@@ -88,8 +146,24 @@ pub struct Trace {
 }
 
 impl Trace {
+    /// Generate a trace according to the spec's [`WorkloadKind`]: the
+    /// single entry point the CLI / config / eval layers use, so every
+    /// workload family is selectable by name.
+    pub fn generate(spec: WorkloadSpec, rate: f64, duration: f64,
+                    seed: u64) -> Trace {
+        match spec.kind {
+            WorkloadKind::Uniform => Trace::poisson(spec, rate, duration, seed),
+            WorkloadKind::Chat => {
+                sessions::chat_trace(spec, rate, duration, seed)
+            }
+            WorkloadKind::SharedDoc => {
+                sessions::shared_doc_trace(spec, rate, duration, seed)
+            }
+        }
+    }
+
     /// Generate an open-loop Poisson trace of `rate` req/s for `duration`
-    /// seconds.
+    /// seconds with i.i.d. uniform lengths (the paper's methodology).
     pub fn poisson(spec: WorkloadSpec, rate: f64, duration: f64, seed: u64) -> Trace {
         assert!(rate > 0.0 && duration > 0.0);
         let mut rng = Pcg64::new(seed);
@@ -106,6 +180,7 @@ impl Trace {
                                             spec.prefill_max as u64) as u32,
                 decode_len: rng.uniform_u64(spec.decode_min as u64,
                                             spec.decode_max as u64) as u32,
+                prefix_chunks: Vec::new(),
             });
         }
         Trace { spec, rate, seed, requests }
@@ -122,6 +197,7 @@ impl Trace {
                                             spec.prefill_max as u64) as u32,
                 decode_len: rng.uniform_u64(spec.decode_min as u64,
                                             spec.decode_max as u64) as u32,
+                prefix_chunks: Vec::new(),
             })
             .collect();
         Trace { spec, rate: f64::INFINITY, seed, requests }
@@ -149,6 +225,7 @@ impl Trace {
                         decode_len: rng.uniform_u64(spec.decode_min as u64,
                                                     spec.decode_max as u64)
                             as u32,
+                        prefix_chunks: Vec::new(),
                     });
                 }
             }

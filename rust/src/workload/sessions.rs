@@ -1,0 +1,239 @@
+//! Session-structured workloads with shared prompt prefixes.
+//!
+//! These are the traffic shapes where cross-request data locality pays
+//! off (the motivation for [`crate::prefix`]):
+//!
+//! * **chat** — sessions arrive Poisson; each runs several turns whose
+//!   prompt is the whole accumulated conversation (previous prompt +
+//!   previous reply + fresh user tokens), so consecutive turns share a
+//!   long, growing prefix.  Turn arrivals are spaced by the previous
+//!   reply's decode time plus an exponential think time, open-loop (the
+//!   trace does not depend on the scheduler under test).
+//! * **shared-doc** — a small set of long documents; every request is
+//!   one document plus a short unique query suffix, so requests for
+//!   the same document share the document-sized prefix.
+//!
+//! Chunk identity is positional: chunk `j` of a session/document stream
+//! hashes `chunk_hash(stream_key, j)`.  Chat context only appends, so
+//! chunk `j` denotes the same tokens in every turn and turn `k`'s chunk
+//! list literally prefix-extends turn `k-1`'s — exactly the structure
+//! the trie index matches on.  Only whole chunks are shareable; the
+//! prompt tail beyond the last full chunk boundary is never cached.
+//!
+//! Determinism: a (spec, rate, duration, seed) tuple always yields an
+//! identical trace, chunks included — every scheduler is evaluated on
+//! exactly the same request sequence, and per-session RNG streams are
+//! forked so session contents do not depend on arrival interleaving.
+
+use crate::prefix::{chunk_hash, CHUNK_TOKENS};
+use crate::util::rng::Pcg64;
+use crate::workload::{RequestTemplate, Trace, WorkloadSpec};
+
+/// Turns per chat session (uniform, inclusive).
+pub const TURNS_MIN: usize = 3;
+pub const TURNS_MAX: usize = 6;
+/// Mean user think time between turns, seconds (exponential).
+const THINK_MEAN_S: f64 = 4.0;
+/// Decode pacing assumed when spacing turn arrivals (~20 ms/token at a
+/// moderate decode batch) so a turn rarely arrives before the previous
+/// reply would have finished.
+const TOKEN_PACE_S: f64 = 0.02;
+/// Context cap: keeps late-session prompts within device KV budgets.
+pub const MAX_CONTEXT_TOKENS: u32 = 6144;
+
+/// Documents in the shared-doc pool and their length range (tokens).
+pub const N_DOCS: u64 = 6;
+const DOC_MIN_TOKENS: u64 = 1024;
+const DOC_MAX_TOKENS: u64 = 3072;
+
+/// Chunk-hash list covering the first `shared_len` tokens of a stream
+/// (whole chunks only).
+fn prompt_chunks(stream_key: u64, shared_len: u32) -> Vec<u64> {
+    (0..(shared_len / CHUNK_TOKENS) as u64)
+        .map(|j| chunk_hash(stream_key, j))
+        .collect()
+}
+
+/// Multi-turn chat trace.  `rate` is the target *request* rate; session
+/// arrivals run at `rate / E[turns]` so the generated request rate
+/// matches the uniform workloads at the same `--rate`.
+pub fn chat_trace(spec: WorkloadSpec, rate: f64, duration: f64,
+                  seed: u64) -> Trace {
+    assert!(rate > 0.0 && duration > 0.0);
+    let mut rng = Pcg64::new(seed);
+    let mean_turns = (TURNS_MIN + TURNS_MAX) as f64 / 2.0;
+    let session_rate = rate / mean_turns;
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    let mut session = 0u64;
+    loop {
+        t += rng.exponential(session_rate);
+        if t >= duration {
+            break;
+        }
+        let mut srng = rng.fork(session);
+        let stream_key = srng.next_u64();
+        let turns = srng.uniform_usize(TURNS_MIN, TURNS_MAX);
+        let mut context: u32 = 0;
+        let mut at = t;
+        for _ in 0..turns {
+            if at >= duration {
+                break;
+            }
+            let user = srng.uniform_u64(spec.prefill_min as u64,
+                                        spec.prefill_max as u64) as u32;
+            let prompt_len = (context + user).min(MAX_CONTEXT_TOKENS);
+            let decode_len = srng.uniform_u64(spec.decode_min as u64,
+                                              spec.decode_max as u64) as u32;
+            requests.push(RequestTemplate {
+                arrival: at,
+                prompt_len,
+                decode_len,
+                prefix_chunks: prompt_chunks(stream_key, prompt_len),
+            });
+            context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
+            at += decode_len as f64 * TOKEN_PACE_S
+                + srng.exponential(1.0 / THINK_MEAN_S);
+        }
+        session += 1;
+    }
+    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+    Trace { spec, rate, seed, requests }
+}
+
+/// Shared-document fan-out trace: Poisson request arrivals at `rate`,
+/// each picking one of [`N_DOCS`] documents uniformly and appending a
+/// short query suffix.  Only the document part carries prefix chunks.
+pub fn shared_doc_trace(spec: WorkloadSpec, rate: f64, duration: f64,
+                        seed: u64) -> Trace {
+    assert!(rate > 0.0 && duration > 0.0);
+    let mut rng = Pcg64::new(seed);
+    let docs: Vec<(u64, u32)> = (0..N_DOCS)
+        .map(|d| {
+            let mut drng = rng.fork(d);
+            let key = drng.next_u64();
+            let len =
+                drng.uniform_u64(DOC_MIN_TOKENS, DOC_MAX_TOKENS) as u32;
+            (key, len)
+        })
+        .collect();
+    let mut requests = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(rate);
+        if t >= duration {
+            break;
+        }
+        let (doc_key, doc_len) = docs[rng.uniform_usize(0, docs.len() - 1)];
+        let suffix = rng.uniform_u64(spec.prefill_min as u64,
+                                     spec.prefill_max as u64) as u32;
+        requests.push(RequestTemplate {
+            arrival: t,
+            prompt_len: doc_len + suffix,
+            decode_len: rng.uniform_u64(spec.decode_min as u64,
+                                        spec.decode_max as u64) as u32,
+            prefix_chunks: prompt_chunks(doc_key, doc_len),
+        });
+    }
+    Trace { spec, rate, seed, requests }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{CHAT, SHARED_DOC};
+
+    #[test]
+    fn chat_is_deterministic_per_seed() {
+        let a = chat_trace(CHAT, 6.0, 50.0, 42);
+        let b = chat_trace(CHAT, 6.0, 50.0, 42);
+        assert_eq!(a.requests, b.requests);
+        let c = chat_trace(CHAT, 6.0, 50.0, 43);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn shared_doc_is_deterministic_per_seed() {
+        let a = shared_doc_trace(SHARED_DOC, 5.0, 50.0, 7);
+        let b = shared_doc_trace(SHARED_DOC, 5.0, 50.0, 7);
+        assert_eq!(a.requests, b.requests);
+    }
+
+    #[test]
+    fn chat_request_rate_tracks_target() {
+        let t = chat_trace(CHAT, 8.0, 400.0, 1);
+        let measured = t.len() as f64 / 400.0;
+        // Sessions truncated at the horizon lose late turns, so the
+        // realized rate sits slightly under target.
+        assert!(measured > 5.0 && measured < 10.0, "rate {measured}");
+    }
+
+    #[test]
+    fn chunks_stay_within_prompt_and_context_cap() {
+        for trace in [chat_trace(CHAT, 6.0, 80.0, 3),
+                      shared_doc_trace(SHARED_DOC, 6.0, 80.0, 3)] {
+            assert!(!trace.is_empty());
+            for r in &trace.requests {
+                assert!(r.prefix_chunks.len() as u32 * CHUNK_TOKENS
+                        <= r.prompt_len,
+                        "chunks overrun prompt");
+                assert!(r.prompt_len <= MAX_CONTEXT_TOKENS + DOC_MAX_TOKENS as u32);
+                assert!(r.decode_len > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn chat_turns_share_growing_prefixes() {
+        let t = chat_trace(CHAT, 6.0, 120.0, 5);
+        // Group requests by their first chunk hash (session identity
+        // for prompts past one chunk) and check prefix-extension.
+        let mut by_first: std::collections::HashMap<u64, Vec<&RequestTemplate>> =
+            std::collections::HashMap::new();
+        for r in &t.requests {
+            if let Some(&c0) = r.prefix_chunks.first() {
+                by_first.entry(c0).or_default().push(r);
+            }
+        }
+        let mut multi_turn = 0;
+        for turns in by_first.values() {
+            if turns.len() < 2 {
+                continue;
+            }
+            multi_turn += 1;
+            let mut sorted: Vec<_> = turns.clone();
+            sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+            for w in sorted.windows(2) {
+                let (prev, next) = (&w[0].prefix_chunks, &w[1].prefix_chunks);
+                assert!(next.len() >= prev.len(),
+                        "later turn has a shorter chunk list");
+                assert_eq!(&next[..prev.len()], &prev[..],
+                           "later turn does not prefix-extend the earlier");
+            }
+        }
+        assert!(multi_turn > 3, "too few multi-turn sessions: {multi_turn}");
+    }
+
+    #[test]
+    fn shared_doc_requests_share_documents() {
+        let t = shared_doc_trace(SHARED_DOC, 8.0, 60.0, 9);
+        let mut firsts: Vec<u64> =
+            t.requests.iter().filter_map(|r| r.prefix_chunks.first().copied())
+                .collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        // Everything funnels into at most N_DOCS distinct documents.
+        assert!(firsts.len() as u64 <= N_DOCS, "{} docs", firsts.len());
+        assert!(t.len() > firsts.len(), "no sharing");
+    }
+
+    #[test]
+    fn arrivals_sorted_within_horizon() {
+        let t = chat_trace(CHAT, 6.0, 40.0, 13);
+        let mut prev = 0.0;
+        for r in &t.requests {
+            assert!(r.arrival >= prev && r.arrival < 40.0);
+            prev = r.arrival;
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Cross-module integration + property tests for the prefix-locality
+//! subsystem: session workloads -> accellm-prefix -> engine -> metrics.
+
+use accellm::coordinator::by_name;
+use accellm::prefix::{ChwblRouter, PrefixIndex, CHUNK_TOKENS};
+use accellm::sim::{run, InstanceSpec, PerfModel, SimConfig, H100,
+                   LLAMA2_70B};
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::util::rng::Pcg64;
+use accellm::workload::{Trace, WorkloadSpec, CHAT, SHARED_DOC};
+
+fn cfg(n: usize) -> SimConfig {
+    SimConfig {
+        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
+        n_instances: n,
+        interconnect_bw: None,
+        record_timeline: false,
+    }
+}
+
+/// End-to-end acceptance path: the CLI-equivalent invocation
+/// (`simulate --scheduler accellm-prefix --workload chat`) completes
+/// and reports a nonzero cache-hit rate.
+#[test]
+fn chat_end_to_end_nonzero_hit_rate() {
+    let trace = Trace::generate(CHAT, 6.0, 60.0, 7);
+    assert!(!trace.is_empty());
+    let mut s = by_name("accellm-prefix", 4).unwrap();
+    let r = run(&cfg(4), &trace, s.as_mut());
+    assert_eq!(r.completed, trace.len());
+    assert!(r.prefix_hit_rate > 0.0, "hit rate {}", r.prefix_hit_rate);
+    assert!(r.prefix_saved_tokens > 0);
+    // The CSV row (the `simulate` output) must carry the hit rate.
+    let row = r.csv_row();
+    let cols: Vec<&str> = row.split(',').collect();
+    let header_cols: Vec<&str> =
+        accellm::RunReport::csv_header().split(',').collect();
+    assert_eq!(cols.len(), header_cols.len());
+    let hit_col = header_cols
+        .iter()
+        .position(|c| c.trim() == "prefix_hit_rate")
+        .expect("prefix_hit_rate column");
+    let reported: f64 = cols[hit_col].parse().unwrap();
+    assert!(reported > 0.0);
+}
+
+/// The headline property: on both session workloads, prefix-locality
+/// routing beats plain AcceLLM on mean TTFT for the identical trace.
+#[test]
+fn prefix_beats_accellm_ttft_on_session_workloads() {
+    for (wl, rate, seed) in [(CHAT, 6.0, 21), (SHARED_DOC, 4.0, 22)] {
+        let trace = Trace::generate(wl, rate, 60.0, seed);
+        let pfx = run(&cfg(4), &trace,
+                      by_name("accellm-prefix", 4).unwrap().as_mut());
+        let acc = run(&cfg(4), &trace,
+                      by_name("accellm", 4).unwrap().as_mut());
+        assert_eq!(pfx.completed, trace.len(), "{}", wl.name);
+        assert_eq!(acc.completed, trace.len(), "{}", wl.name);
+        assert!(pfx.ttft_mean < acc.ttft_mean,
+                "{}: prefix ttft {} !< accellm {}", wl.name, pfx.ttft_mean,
+                acc.ttft_mean);
+        assert!(pfx.prefix_hit_rate > 0.2,
+                "{}: hit rate {}", wl.name, pfx.prefix_hit_rate);
+    }
+}
+
+/// Determinism: identical (trace, scheduler) -> bit-identical report,
+/// including the prefix counters (the index/router use no randomized
+/// containers).
+#[test]
+fn prefix_sim_is_deterministic() {
+    let trace = Trace::generate(CHAT, 6.0, 40.0, 5);
+    let r1 = run(&cfg(4), &trace,
+                 by_name("accellm-prefix", 4).unwrap().as_mut());
+    let r2 = run(&cfg(4), &trace,
+                 by_name("accellm-prefix", 4).unwrap().as_mut());
+    assert_eq!(r1.jct_mean, r2.jct_mean);
+    assert_eq!(r1.ttft_p99, r2.ttft_p99);
+    assert_eq!(r1.prefix_hits, r2.prefix_hits);
+    assert_eq!(r1.prefix_saved_tokens, r2.prefix_saved_tokens);
+    assert_eq!(r1.prefix_evictions, r2.prefix_evictions);
+}
+
+/// Property: accellm-prefix completes every request and conserves
+/// decode tokens on randomized session scenarios, and saved prefill
+/// tokens never exceed what the trace's shared chunks could provide.
+#[test]
+fn prop_prefix_scheduler_sound_on_random_sessions() {
+    #[derive(Debug)]
+    struct Scenario {
+        wl: WorkloadSpec,
+        rate: f64,
+        duration: f64,
+        n: usize,
+        seed: u64,
+    }
+
+    check(
+        12,
+        |rng: &mut Pcg64| Scenario {
+            wl: if rng.next_f64() < 0.5 { CHAT } else { SHARED_DOC },
+            rate: rng.uniform_f64(1.0, 8.0),
+            duration: rng.uniform_f64(10.0, 40.0),
+            n: *rng.choose(&[2usize, 4, 8]).unwrap(),
+            seed: rng.next_u64(),
+        },
+        |sc| {
+            let trace = Trace::generate(sc.wl, sc.rate, sc.duration, sc.seed);
+            if trace.is_empty() {
+                return Ok(());
+            }
+            let mut s = by_name("accellm-prefix", sc.n).unwrap();
+            let r = run(&cfg(sc.n), &trace, s.as_mut());
+            prop_assert(r.completed == trace.len(),
+                        &format!("{}/{} completed", r.completed, trace.len()))?;
+            let want: u64 =
+                trace.requests.iter().map(|q| q.decode_len as u64).sum();
+            let got = (r.cost_efficiency * r.makespan * r.n_instances as f64)
+                .round() as u64;
+            prop_assert(got == want, "decode tokens not conserved")?;
+            // Every request is looked up exactly once.
+            prop_assert(r.prefix_hits + r.prefix_misses
+                        == trace.len() as u64,
+                        "lookup count != request count")?;
+            let max_shareable: u64 = trace
+                .requests
+                .iter()
+                .map(|q| (q.prefix_chunks.len() as u64) * CHUNK_TOKENS as u64)
+                .sum();
+            prop_assert(r.prefix_saved_tokens <= max_shareable,
+                        "saved more than shareable")?;
+            Ok(())
+        },
+    );
+}
+
+/// The trie and the router compose deterministically with loads taken
+/// mid-simulation: replaying a recorded routing sequence reproduces
+/// identical decisions (guards against hidden nondeterminism in the
+/// data structures).
+#[test]
+fn routing_decisions_replay_identically() {
+    let trace = Trace::generate(SHARED_DOC, 5.0, 30.0, 9);
+    let replay = |_tag: u64| -> Vec<usize> {
+        let mut ix = PrefixIndex::new(4, 512);
+        let router = ChwblRouter::new(4, 64, 1.25);
+        let mut loads = vec![0usize; 4];
+        let mut decisions = Vec::new();
+        for (i, req) in trace.requests.iter().enumerate() {
+            let bound = router.load_bound(&loads);
+            let pair = match ix.best_match(&req.prefix_chunks) {
+                Some((p, _)) if loads[p] < bound => p,
+                _ => router.route(
+                    req.prefix_chunks.first().copied().unwrap_or(i as u64),
+                    &loads),
+            };
+            ix.insert(pair, &req.prefix_chunks, req.arrival);
+            loads[pair] = (loads[pair] + 1) % 17; // churn the load signal
+            decisions.push(pair);
+        }
+        decisions
+    };
+    assert_eq!(replay(0), replay(1));
+}

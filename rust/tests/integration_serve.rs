@@ -1,6 +1,7 @@
 //! Integration tests over the REAL serving path (PJRT + AOT artifacts).
 //! Skipped (pass trivially with a notice) when artifacts/ is missing so
 //! `cargo test` works before `make artifacts`.
+#![cfg(feature = "pjrt")]
 
 use std::collections::HashMap;
 use std::path::Path;

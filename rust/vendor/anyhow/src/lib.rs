@@ -1,0 +1,157 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline crate set has no registry access, so this path
+//! dependency provides the small slice of anyhow's API the codebase
+//! uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] macros and
+//! the [`Context`] extension trait.  Errors are string-backed — the
+//! source chain is flattened into the message at conversion time, which
+//! is all the callers (CLI error reporting, config/manifest parsing)
+//! need.
+
+use std::fmt;
+
+/// String-backed error value.
+///
+/// Deliberately does NOT implement `std::error::Error`: that is what
+/// permits the blanket `From<E: std::error::Error>` conversion below
+/// (the same coherence trick the real anyhow uses), which is what makes
+/// `?` work on `io::Error` and friends inside `anyhow::Result` fns.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prefix the error with higher-level context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e: Error = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+
+        fn bails() -> Result<()> {
+            bail!("nope");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope");
+
+        let r: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| "missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn error_msg_from_string() {
+        let r: std::result::Result<(), String> = Err("boom".to_string());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+}
