@@ -6,16 +6,11 @@
 use std::time::Instant;
 
 use accellm::coordinator::by_name;
-use accellm::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+use accellm::sim::{run, SimConfig, H100};
 use accellm::workload::{Trace, MIXED};
 
 fn main() {
-    let cfg = SimConfig {
-        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-        n_instances: 8,
-        interconnect_bw: None,
-        record_timeline: false,
-    };
+    let cfg = SimConfig::homogeneous(H100, 8);
     // Heavy trace: ~2.4k requests, ~1.2M simulated decode tokens.
     let trace = Trace::poisson(MIXED, 20.0, 120.0, 99);
     println!("trace: {} requests, {} total tokens", trace.len(),
@@ -27,7 +22,7 @@ fn main() {
         let mut best = f64::INFINITY;
         let mut tokens = 0u64;
         for _ in 0..4 {
-            let mut s = by_name(name, 8).unwrap();
+            let mut s = by_name(name, &cfg.cluster).unwrap();
             let t0 = Instant::now();
             let r = run(&cfg, &trace, s.as_mut());
             let dt = t0.elapsed().as_secs_f64();

@@ -6,21 +6,28 @@
 //! {
 //!   "kind": "simulate",
 //!   "scheduler": "accellm",
-//!   "device": "h100",
+//!   "cluster": "mixed:h100x4+910b2x4",
 //!   "workload": "mixed",
-//!   "instances": 4,
 //!   "rates": [2, 5, 8, 11],
 //!   "duration": 60,
 //!   "seed": 7,
-//!   "interconnect_gbs": 900
+//!   "network_gbs": 100,
+//!   "links": [[0, 5, 25]]
 //! }
 //! ```
+//!
+//! The legacy homogeneous shape (`"device": "h100", "instances": 4`)
+//! still parses; `"cluster"` supersedes it.  `"network_gbs"` switches
+//! the topology to an inter-node network model (intra-pair links keep
+//! NVLink/HCCS), `"links"` overrides individual links as
+//! `[src, dst, GB/s]` triples, and `"interconnect_gbs"` remains the
+//! global flat override used by the Figure 10 sweeps.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::sim::{DeviceSpec, InstanceSpec, PerfModel, SimConfig, LLAMA2_70B};
+use crate::sim::{ClusterSpec, DeviceSpec, SimConfig, LLAMA2_70B};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
@@ -29,13 +36,12 @@ use crate::workload::WorkloadSpec;
 pub struct Experiment {
     pub kind: String,
     pub scheduler: String,
-    pub device: DeviceSpec,
+    pub cluster: ClusterSpec,
     pub workload: WorkloadSpec,
-    pub instances: usize,
     pub rates: Vec<f64>,
     pub duration: f64,
     pub seed: u64,
-    /// Interconnect override in bytes/s.
+    /// Global flat interconnect override in bytes/s.
     pub interconnect_bw: Option<f64>,
 }
 
@@ -44,9 +50,8 @@ impl Default for Experiment {
         Experiment {
             kind: "simulate".into(),
             scheduler: "accellm".into(),
-            device: crate::sim::H100,
+            cluster: ClusterSpec::homogeneous(crate::sim::H100, 4),
             workload: crate::workload::MIXED,
-            instances: 4,
             rates: vec![8.0],
             duration: 60.0,
             seed: 7,
@@ -71,16 +76,46 @@ impl Experiment {
         if let Some(v) = j.get("scheduler").and_then(|x| x.as_str()) {
             exp.scheduler = v.to_string();
         }
-        if let Some(v) = j.get("device").and_then(|x| x.as_str()) {
-            exp.device = DeviceSpec::by_name(v)
-                .ok_or_else(|| anyhow!("unknown device '{v}'"))?;
+        let cluster_key = j.get("cluster").and_then(|x| x.as_str());
+        let device_key = j.get("device").and_then(|x| x.as_str());
+        let instances_key = j.get("instances").and_then(|x| x.as_usize());
+        match (cluster_key, device_key) {
+            (Some(_), Some(_)) => {
+                return Err(anyhow!(
+                    "config: specify either \"cluster\" or \
+                     \"device\"/\"instances\", not both"
+                ));
+            }
+            (Some(spec), None) => {
+                exp.cluster = ClusterSpec::parse(spec)
+                    .map_err(|e| anyhow!("config: {e}"))?;
+                if let Some(n) = instances_key {
+                    if n != exp.cluster.len() {
+                        return Err(anyhow!(
+                            "config: \"instances\" = {n} conflicts with \
+                             cluster '{}' ({} instances)",
+                            exp.cluster.name(),
+                            exp.cluster.len()
+                        ));
+                    }
+                }
+            }
+            (None, device) => {
+                let dev = match device {
+                    Some(name) => DeviceSpec::by_name(name)
+                        .map_err(|e| anyhow!("config: {e}"))?,
+                    None => crate::sim::H100,
+                };
+                let n = instances_key.unwrap_or(4);
+                if n == 0 {
+                    return Err(anyhow!("config: instances must be >= 1"));
+                }
+                exp.cluster = ClusterSpec::homogeneous(dev, n);
+            }
         }
         if let Some(v) = j.get("workload").and_then(|x| x.as_str()) {
             exp.workload = WorkloadSpec::by_name(v)
                 .ok_or_else(|| anyhow!("unknown workload '{v}'"))?;
-        }
-        if let Some(v) = j.get("instances").and_then(|x| x.as_usize()) {
-            exp.instances = v;
         }
         if let Some(arr) = j.get("rates").and_then(|x| x.as_arr()) {
             exp.rates = arr.iter().filter_map(|x| x.as_f64()).collect();
@@ -93,23 +128,51 @@ impl Experiment {
         if let Some(v) = j.get("seed").and_then(|x| x.as_u64()) {
             exp.seed = v;
         }
+        if let Some(v) = j.get("network_gbs").and_then(|x| x.as_f64()) {
+            if v <= 0.0 {
+                return Err(anyhow!("config: network_gbs must be positive"));
+            }
+            exp.cluster.set_network_bw(v * 1e9);
+        }
+        if let Some(links) = j.get("links").and_then(|x| x.as_arr()) {
+            for link in links {
+                let triple = link
+                    .as_arr()
+                    .filter(|t| t.len() == 3)
+                    .ok_or_else(|| {
+                        anyhow!("config: links entries must be [src, dst, GB/s]")
+                    })?;
+                let a = triple[0]
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("config: link src must be an index"))?;
+                let b = triple[1]
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("config: link dst must be an index"))?;
+                let gbs = triple[2]
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("config: link bw must be GB/s"))?;
+                exp.cluster
+                    .set_link_bw(a, b, gbs * 1e9)
+                    .map_err(|e| anyhow!("config: {e}"))?;
+            }
+        }
         if let Some(v) = j.get("interconnect_gbs").and_then(|x| x.as_f64()) {
+            if v <= 0.0 {
+                return Err(anyhow!("config: interconnect_gbs must be positive"));
+            }
             exp.interconnect_bw = Some(v * 1e9);
         }
-        if exp.instances == 0 || exp.rates.is_empty() || exp.duration <= 0.0 {
-            return Err(anyhow!("config: instances/rates/duration invalid"));
+        if exp.rates.is_empty() || exp.duration <= 0.0 {
+            return Err(anyhow!("config: rates/duration invalid"));
         }
         Ok(exp)
     }
 
     /// Simulator config for this experiment.
     pub fn sim_config(&self) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(self.device), LLAMA2_70B),
-            n_instances: self.instances,
-            interconnect_bw: self.interconnect_bw,
-            record_timeline: false,
-        }
+        let mut cfg = SimConfig::new(self.cluster.clone(), LLAMA2_70B);
+        cfg.interconnect_bw = self.interconnect_bw;
+        cfg
     }
 }
 
@@ -126,9 +189,10 @@ mod tests {
         )
         .unwrap();
         assert_eq!(e.scheduler, "splitwise");
-        assert_eq!(e.device.name, "910B2");
+        assert_eq!(e.cluster.name(), "910b2x8");
+        assert!(e.cluster.is_homogeneous());
         assert_eq!(e.workload.name, "heavy");
-        assert_eq!(e.instances, 8);
+        assert_eq!(e.cluster.len(), 8);
         assert_eq!(e.rates, vec![2.0, 4.0, 6.0]);
         assert_eq!(e.interconnect_bw, Some(100e9));
     }
@@ -137,15 +201,69 @@ mod tests {
     fn defaults_fill_gaps() {
         let e = Experiment::from_json_text(r#"{"rate": 12}"#).unwrap();
         assert_eq!(e.scheduler, "accellm");
-        assert_eq!(e.device.name, "H100");
+        assert_eq!(e.cluster.name(), "h100x4");
         assert_eq!(e.rates, vec![12.0]);
     }
 
     #[test]
     fn rejects_bad_device_and_values() {
-        assert!(Experiment::from_json_text(r#"{"device":"tpu9"}"#).is_err());
+        let err = Experiment::from_json_text(r#"{"device":"tpu9"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("known devices"), "{err}");
         assert!(Experiment::from_json_text(r#"{"instances":0}"#).is_err());
         assert!(Experiment::from_json_text("not json").is_err());
+    }
+
+    #[test]
+    fn parses_mixed_cluster_spec() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"mixed:h100x4+910b2x4","scheduler":"accellm",
+                "rate":8,"duration":30}"#,
+        )
+        .unwrap();
+        assert_eq!(e.cluster.len(), 8);
+        assert!(!e.cluster.is_homogeneous());
+        assert_eq!(e.cluster.name(), "h100x4+910b2x4");
+        // The scheduler resolves against the parsed cluster.
+        assert!(crate::coordinator::by_name(&e.scheduler, &e.cluster)
+            .is_some());
+        // A consistent instance count is accepted; a conflict is not.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","instances":4}"#
+        )
+        .is_ok());
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","instances":8}"#
+        )
+        .is_err());
+        // cluster + device together is ambiguous.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","device":"h100"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_topology_overrides() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","network_gbs":100,"links":[[1,2,25]]}"#,
+        )
+        .unwrap();
+        let t = e.cluster.topology();
+        assert_eq!(t.link_bw(0, 1), 900e9); // intra-pair NVLink
+        assert_eq!(t.link_bw(0, 3), 100e9); // inter-node network
+        assert_eq!(t.link_bw(1, 2), 25e9); // explicit override
+        assert_eq!(t.link_bw(2, 1), 25e9);
+        // Bad link entries are rejected.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","links":[[0,9,25]]}"#
+        )
+        .is_err());
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","links":[[0,1]]}"#
+        )
+        .is_err());
     }
 
     #[test]
@@ -159,7 +277,7 @@ mod tests {
         assert_eq!(e.workload.name, "chat");
         assert_eq!(e.workload.kind, crate::workload::WorkloadKind::Chat);
         // The scheduler name written in the config must resolve.
-        assert!(crate::coordinator::by_name(&e.scheduler, e.instances)
+        assert!(crate::coordinator::by_name(&e.scheduler, &e.cluster)
             .is_some());
         // And the parsed spec must generate the session trace.
         let t = crate::workload::Trace::generate(e.workload, e.rates[0],
@@ -179,7 +297,7 @@ mod tests {
         )
         .unwrap();
         let c = e.sim_config();
-        assert_eq!(c.n_instances, 16);
+        assert_eq!(c.cluster.len(), 16);
         assert_eq!(c.interconnect_bw, Some(50e9));
     }
 }

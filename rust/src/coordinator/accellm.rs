@@ -18,6 +18,16 @@
 //!    equalizes per-instance batch size and total KV length by swapping
 //!    primary/replica roles instead of moving bytes.
 //!
+//! **Hardware awareness** (PR 2): pairing is derived from the
+//! [`ClusterSpec`].  On a homogeneous cluster pairs are the identity
+//! layout (2p, 2p+1) — bit-identical to the pre-ClusterSpec scheduler.
+//! On a heterogeneous cluster each pair joins a prefill-leaning
+//! (high effective-FLOPs) instance with a decode-leaning one, and role
+//! flips prefer sending prefill to the pair's prefill-stronger member —
+//! so a mixed `h100x4+910b2x4` fleet prefills at H100 speed while the
+//! 910B2s keep decoding.  [`AcceLlm::with_identity_pairing`] keeps the
+//! capacity-blind layout as an evaluation baseline (`accellm-blind`).
+//!
 //! Replica freshness is maintained by streaming each newly generated KV
 //! line to the partner (metered by the engine as ReplicaUpdate traffic);
 //! the prefill→partner replica copy is per-layer pipelined (4.2.4), so
@@ -27,7 +37,8 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::set_kv_tokens;
-use crate::sim::{InstId, ReqId, Role, Scheduler, SimCtx, Work, XferKind};
+use crate::sim::{ClusterSpec, InstId, ReqId, Role, Scheduler, SimCtx, Work,
+                 XferKind};
 
 /// Prompts folded into one prefill work item.
 const MAX_PREFILL_BATCH: usize = 8;
@@ -35,14 +46,28 @@ const MAX_PREFILL_BATCH: usize = 8;
 /// A pair member only flips to prefill when prompts have queued long
 /// enough (or enough of them wait) to amortize the role conversion —
 /// without this, a saturated pair thrashes between roles at every step
-/// boundary, decoding in tiny inefficient batches in between.  25 ms is
+/// boundary, decoding in tiny inefficient batches in between.  15 ms is
 /// well under any TTFT target and ~2 decode steps long.
 const FLIP_SLACK_S: f64 = 0.015;
 const FLIP_QUEUE_LEN: usize = 4;
 
+/// Relative margin above which two pair members count as hardware-
+/// unequal for the flip preference (guards float noise; any real device
+/// mix differs by far more).
+const SCORE_MARGIN: f64 = 1.001;
+
 pub struct AcceLlm {
-    /// pair p = instances (2p, 2p+1).
     n_pairs: usize,
+    /// pair p -> its two member instances; identity layout is
+    /// (2p, 2p+1).
+    pairs: Vec<(InstId, InstId)>,
+    /// inst -> its pair partner.
+    partner_of: Vec<InstId>,
+    /// inst -> its pair index.
+    pair_idx: Vec<usize>,
+    /// inst -> effective prefill FLOP/s (hardware flip-preference
+    /// signal, from the cluster spec).
+    prefill_score: Vec<f64>,
     /// Keep redundant replicas (ablation: without them, role flips
     /// cannot migrate decodes and paused requests stall — paper Case A).
     replicate: bool,
@@ -64,49 +89,115 @@ pub struct AcceLlm {
 }
 
 impl AcceLlm {
-    pub fn new(n_instances: usize) -> Self {
-        assert!(n_instances >= 2 && n_instances % 2 == 0,
-                "AcceLLM requires an even number of instances (pairs)");
-        AcceLlm {
-            n_pairs: n_instances / 2,
-            replicate: true,
-            rebalance: true,
-            flip_slack: FLIP_SLACK_S,
-            sets: vec![Vec::new(); n_instances],
-            queues: vec![VecDeque::new(); n_instances / 2],
-            replicas_on: vec![Vec::new(); n_instances],
-            in_handoff: Vec::new(),
-            prefilling: vec![false; n_instances],
-        }
+    /// Hardware-aware pairing from the cluster spec (identity layout on
+    /// homogeneous clusters).
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        Self::with_pairing(cluster, Self::capacity_aware_pairing(cluster))
+    }
+
+    /// Capacity-blind baseline: pair by instance order (2p, 2p+1)
+    /// regardless of device types — what the scheduler did before it
+    /// could see the `ClusterSpec`.  Fully blind: the flip preference
+    /// is neutralized too (uniform scores fall back to the legacy
+    /// smaller-decode-set rule even inside a mixed identity pair).
+    pub fn with_identity_pairing(cluster: &ClusterSpec) -> Self {
+        let mut s =
+            Self::with_pairing(cluster, Self::identity_pairing(cluster.len()));
+        s.prefill_score = vec![1.0; cluster.len()];
+        s
     }
 
     /// Ablation variant: dynamic pairs WITHOUT redundant replicas.
-    pub fn without_redundancy(n_instances: usize) -> Self {
-        let mut s = Self::new(n_instances);
+    pub fn without_redundancy(cluster: &ClusterSpec) -> Self {
+        let mut s = Self::new(cluster);
         s.replicate = false;
         s
     }
 
     /// Ablation variant: redundancy but NO intra-pair rebalancing.
-    pub fn without_rebalance(n_instances: usize) -> Self {
-        let mut s = Self::new(n_instances);
+    pub fn without_rebalance(cluster: &ClusterSpec) -> Self {
+        let mut s = Self::new(cluster);
         s.rebalance = false;
         s
     }
 
     /// Ablation variant: custom flip-damping window.
-    pub fn with_flip_slack(n_instances: usize, slack_s: f64) -> Self {
-        let mut s = Self::new(n_instances);
+    pub fn with_flip_slack(cluster: &ClusterSpec, slack_s: f64) -> Self {
+        let mut s = Self::new(cluster);
         s.flip_slack = slack_s;
         s
     }
 
-    pub fn partner(inst: InstId) -> InstId {
-        inst ^ 1
+    fn identity_pairing(n: usize) -> Vec<(InstId, InstId)> {
+        (0..n / 2).map(|p| (2 * p, 2 * p + 1)).collect()
     }
 
-    pub fn pair_of(inst: InstId) -> usize {
-        inst / 2
+    /// Identity on homogeneous clusters (preserves pre-ClusterSpec
+    /// behavior exactly); otherwise sort by effective prefill FLOPs and
+    /// pair the k-th strongest with the k-th weakest, so every pair has
+    /// one prefill-leaning member and one decode-leaning member.
+    fn capacity_aware_pairing(cluster: &ClusterSpec) -> Vec<(InstId, InstId)> {
+        let n = cluster.len();
+        if cluster.is_homogeneous() {
+            return Self::identity_pairing(n);
+        }
+        let mut ids: Vec<usize> = (0..n).collect();
+        ids.sort_by(|&x, &y| {
+            cluster
+                .instance(y)
+                .prefill_flops()
+                .partial_cmp(&cluster.instance(x).prefill_flops())
+                .unwrap()
+                .then(x.cmp(&y))
+        });
+        (0..n / 2).map(|k| (ids[k], ids[n - 1 - k])).collect()
+    }
+
+    fn with_pairing(cluster: &ClusterSpec, pairs: Vec<(InstId, InstId)>) -> Self {
+        let n = cluster.len();
+        assert!(n >= 2 && n % 2 == 0,
+                "AcceLLM requires an even number of instances (pairs)");
+        let mut partner_of = vec![usize::MAX; n];
+        let mut pair_idx = vec![usize::MAX; n];
+        for (p, &(a, b)) in pairs.iter().enumerate() {
+            partner_of[a] = b;
+            partner_of[b] = a;
+            pair_idx[a] = p;
+            pair_idx[b] = p;
+        }
+        assert!(partner_of.iter().all(|&x| x != usize::MAX),
+                "pairing must cover every instance exactly once");
+        AcceLlm {
+            n_pairs: n / 2,
+            pairs,
+            partner_of,
+            pair_idx,
+            prefill_score: cluster
+                .instances()
+                .iter()
+                .map(|s| s.prefill_flops())
+                .collect(),
+            replicate: true,
+            rebalance: true,
+            flip_slack: FLIP_SLACK_S,
+            sets: vec![Vec::new(); n],
+            queues: vec![VecDeque::new(); n / 2],
+            replicas_on: vec![Vec::new(); n],
+            in_handoff: Vec::new(),
+            prefilling: vec![false; n],
+        }
+    }
+
+    pub fn partner(&self, inst: InstId) -> InstId {
+        self.partner_of[inst]
+    }
+
+    pub fn pair_of(&self, inst: InstId) -> usize {
+        self.pair_idx[inst]
+    }
+
+    pub fn pair_members(&self, pair: usize) -> (InstId, InstId) {
+        self.pairs[pair]
     }
 
     pub fn n_pairs(&self) -> usize {
@@ -117,9 +208,8 @@ impl AcceLlm {
     /// active decode sets.  This is the load signal the prefix-locality
     /// router bounds (`prefix::ChwblRouter`).
     pub fn pair_load(&self, pair: usize) -> usize {
-        self.queues[pair].len()
-            + self.sets[2 * pair].len()
-            + self.sets[2 * pair + 1].len()
+        let (a, b) = self.pairs[pair];
+        self.queues[pair].len() + self.sets[a].len() + self.sets[b].len()
     }
 
     /// Enqueue an arrived request on a specific pair and kick it.
@@ -135,12 +225,16 @@ impl AcceLlm {
 
     /// Pair with the most free KV memory receives the next prompt
     /// (Section 4.2.2: "among available pairs, the one with the most
-    /// free space handles the next prefill").
+    /// free space handles the next prefill").  On a heterogeneous
+    /// cluster this is implicitly capacity-aware: deeper-HBM pairs
+    /// absorb proportionally more requests.
     fn pick_pair(&self, ctx: &SimCtx) -> usize {
         (0..self.n_pairs)
             .max_by(|&a, &b| {
-                let fa = ctx.free_bytes(2 * a) + ctx.free_bytes(2 * a + 1);
-                let fb = ctx.free_bytes(2 * b) + ctx.free_bytes(2 * b + 1);
+                let (a0, a1) = self.pairs[a];
+                let (b0, b1) = self.pairs[b];
+                let fa = ctx.free_bytes(a0) + ctx.free_bytes(a1);
+                let fb = ctx.free_bytes(b0) + ctx.free_bytes(b1);
                 fa.partial_cmp(&fb).unwrap()
             })
             .expect("no pairs")
@@ -153,7 +247,7 @@ impl AcceLlm {
         if ctx.is_busy(inst) || self.prefilling[inst] {
             return false;
         }
-        let partner = Self::partner(inst);
+        let partner = self.partner(inst);
         let pair_has_decode =
             !self.sets[inst].is_empty() || !self.sets[partner].is_empty();
         !(self.prefilling[partner] && pair_has_decode)
@@ -162,8 +256,8 @@ impl AcceLlm {
     /// Flip `inst` to prefill: hand its decode set to the partner by
     /// promoting replicas (zero transfer), then start the prompt batch.
     fn start_prefill_on(&mut self, ctx: &mut SimCtx, inst: InstId) {
-        let pair = Self::pair_of(inst);
-        let partner = Self::partner(inst);
+        let pair = self.pair_of(inst);
+        let partner = self.partner(inst);
         debug_assert!(!ctx.is_busy(inst));
 
         // Migrate decodable requests to the partner (replica promotion).
@@ -215,7 +309,7 @@ impl AcceLlm {
         if q.len() >= FLIP_QUEUE_LEN {
             return true;
         }
-        let (a, b) = (2 * pair, 2 * pair + 1);
+        let (a, b) = self.pairs[pair];
         if self.sets[a].is_empty() && self.sets[b].is_empty() {
             return true; // idle pair: serve immediately
         }
@@ -226,10 +320,22 @@ impl AcceLlm {
     /// Try to start prefill somewhere in the pair.
     fn kick_pair(&mut self, ctx: &mut SimCtx, pair: usize) {
         while self.flip_worthwhile(ctx, pair) {
-            let (a, b) = (2 * pair, 2 * pair + 1);
-            // Prefer the member with the smaller decode set (cheaper flip).
-            let first = if self.sets[a].len() <= self.sets[b].len() { a } else { b };
-            let second = Self::partner(first);
+            let (a, b) = self.pairs[pair];
+            // Flip preference: on unequal hardware the prefill-stronger
+            // member takes the prompt batch (prefill is compute-bound);
+            // on equal hardware the member with the smaller decode set
+            // flips (cheaper hand-off) — the legacy rule.
+            let (sa, sb) = (self.prefill_score[a], self.prefill_score[b]);
+            let first = if sa > sb * SCORE_MARGIN {
+                a
+            } else if sb > sa * SCORE_MARGIN {
+                b
+            } else if self.sets[a].len() <= self.sets[b].len() {
+                a
+            } else {
+                b
+            };
+            let second = self.partner(first);
             if self.can_prefill(ctx, first) {
                 self.start_prefill_on(ctx, first);
             } else if self.can_prefill(ctx, second) {
@@ -244,7 +350,7 @@ impl AcceLlm {
     /// that also narrow the KV-length gap (Section 4.1.3).  Only requests
     /// with a replica on the other side can move (the move is then free).
     fn rebalance_pair(&mut self, ctx: &mut SimCtx, pair: usize) {
-        let (a, b) = (2 * pair, 2 * pair + 1);
+        let (a, b) = self.pairs[pair];
         if !self.rebalance || self.prefilling[a] || self.prefilling[b] {
             return; // only balance when both members decode
         }
@@ -316,7 +422,7 @@ impl AcceLlm {
         if completed.is_empty() {
             return;
         }
-        let partner = Self::partner(inst);
+        let partner = self.partner(inst);
         self.sets[inst].retain(|r| !completed.contains(r));
         self.replicas_on[inst].retain(|r| !completed.contains(r));
         self.replicas_on[partner].retain(|r| !completed.contains(r));
@@ -343,7 +449,7 @@ impl Scheduler for AcceLlm {
 
     fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
                     completed: Vec<ReqId>) {
-        let pair = Self::pair_of(inst);
+        let pair = self.pair_of(inst);
         self.forget(inst, &completed);
         match work {
             Work::Prefill { reqs } => {
@@ -351,7 +457,7 @@ impl Scheduler for AcceLlm {
                 ctx.set_role(inst, Role::Decode);
                 // Per-layer pipelined replica stream to the partner: only
                 // the residual beyond the prefill compute remains.
-                let partner = Self::partner(inst);
+                let partner = self.partner(inst);
                 for &r in &reqs {
                     let tokens = ctx.requests[r].prompt_len as f64;
                     let compute = ctx.now
@@ -366,7 +472,7 @@ impl Scheduler for AcceLlm {
                 if !self.prefilling[inst] {
                     self.rebalance_pair(ctx, pair);
                     self.kick_decode(ctx, inst);
-                    self.kick_decode(ctx, Self::partner(inst));
+                    self.kick_decode(ctx, partner);
                 }
             }
             Work::DecodeStep { .. } => {
@@ -378,7 +484,7 @@ impl Scheduler for AcceLlm {
                     self.kick_decode(ctx, inst);
                 }
                 // Partner may be idle with work after rebalancing.
-                self.kick_decode(ctx, Self::partner(inst));
+                self.kick_decode(ctx, self.partner(inst));
             }
         }
     }
@@ -433,24 +539,22 @@ impl Scheduler for AcceLlm {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, ASCEND_910B2, H100,
-                     LLAMA2_70B};
+    use crate::sim::{run, ClusterSpec, DeviceSpec, SimConfig, ASCEND_910B2,
+                     H100};
     use crate::workload::{Trace, HEAVY, LIGHT, MIXED};
 
-    fn cfg_dev(n: usize, dev: crate::sim::DeviceSpec) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B),
-            n_instances: n,
-            interconnect_bw: None,
-            record_timeline: true,
-        }
+    fn cfg_dev(n: usize, dev: DeviceSpec) -> SimConfig {
+        let mut cfg = SimConfig::homogeneous(dev, n);
+        cfg.record_timeline = true;
+        cfg
     }
 
     #[test]
     fn completes_all_requests() {
         for seed in [1, 2, 3] {
             let trace = Trace::poisson(MIXED, 5.0, 60.0, seed);
-            let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+            let cfg = cfg_dev(4, H100);
+            let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
             assert_eq!(r.completed, trace.len(), "seed {seed}");
         }
     }
@@ -460,7 +564,8 @@ mod tests {
         // Disaggregated within the pair: worst TBT stays near the mean
         // (Figure 16, AcceLLM side).
         let trace = Trace::poisson(MIXED, 6.0, 60.0, 11);
-        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
         assert!(r.tbt_max / r.tbt_mean < 4.0,
                 "max/mean {}", r.tbt_max / r.tbt_mean);
@@ -477,8 +582,9 @@ mod tests {
         // saturation throughput-per-instance differs by ≈4/3 — the ~30%
         // gap of Figure 11(a).
         let trace = Trace::poisson(MIXED, 20.0, 120.0, 21);
-        let acc = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
-        let spl = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, H100);
+        let acc = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        let spl = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert_eq!(acc.completed, trace.len());
         assert_eq!(spl.completed, trace.len());
         assert!(acc.cost_efficiency > 1.08 * spl.cost_efficiency,
@@ -495,8 +601,9 @@ mod tests {
         // latency vs Splitwise's fixed single prefill instance.
         use crate::coordinator::Splitwise;
         let trace = Trace::poisson(MIXED, 8.0, 80.0, 23);
-        let acc = run(&cfg_dev(4, ASCEND_910B2), &trace, &mut AcceLlm::new(4));
-        let spl = run(&cfg_dev(4, ASCEND_910B2), &trace, &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, ASCEND_910B2);
+        let acc = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        let spl = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert!(acc.ttft_mean < 0.7 * spl.ttft_mean,
                 "acc {} spl {}", acc.ttft_mean, spl.ttft_mean);
     }
@@ -506,7 +613,8 @@ mod tests {
         // Section 5.3 "Impact of Interconnect Bandwidth": replica updates
         // are minor next to prefill hand-off.
         let trace = Trace::poisson(MIXED, 6.0, 60.0, 29);
-        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
         assert!(r.xfer_replica_bytes > 0.0);
         assert!(r.xfer_prefill_bytes > 0.0);
     }
@@ -520,8 +628,9 @@ mod tests {
         // is vLLM's failure mode, Figure 15d).
         use crate::coordinator::Vllm;
         let trace = Trace::poisson(HEAVY, 3.0, 120.0, 31);
-        let acc = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
-        let vll = run(&cfg_dev(4, H100), &trace, &mut Vllm::new(4));
+        let cfg = cfg_dev(4, H100);
+        let acc = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        let vll = run(&cfg, &trace, &mut Vllm::new(4));
         assert_eq!(acc.completed, trace.len());
         assert!(acc.jct_mean < vll.jct_mean,
                 "acc {} vllm {}", acc.jct_mean, vll.jct_mean);
@@ -530,7 +639,8 @@ mod tests {
     #[test]
     fn light_workload_all_metrics_reasonable() {
         let trace = Trace::poisson(LIGHT, 8.0, 60.0, 37);
-        let r = run(&cfg_dev(4, H100), &trace, &mut AcceLlm::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
         assert!(r.ttft_mean < 0.5, "ttft {}", r.ttft_mean);
         assert!(r.utilization > 0.2, "util {}", r.utilization);
@@ -539,14 +649,54 @@ mod tests {
     #[test]
     fn works_with_16_instances() {
         let trace = Trace::poisson(MIXED, 20.0, 40.0, 41);
-        let r = run(&cfg_dev(16, H100), &trace, &mut AcceLlm::new(16));
+        let cfg = cfg_dev(16, H100);
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
     }
 
     #[test]
     #[should_panic(expected = "even number")]
     fn rejects_odd_instance_count() {
-        AcceLlm::new(3);
+        AcceLlm::new(&ClusterSpec::homogeneous(H100, 3));
+    }
+
+    #[test]
+    fn homogeneous_pairing_is_identity() {
+        let cluster = ClusterSpec::homogeneous(H100, 8);
+        let s = AcceLlm::new(&cluster);
+        for p in 0..4 {
+            assert_eq!(s.pair_members(p), (2 * p, 2 * p + 1));
+            assert_eq!(s.partner(2 * p), 2 * p + 1);
+            assert_eq!(s.pair_of(2 * p + 1), p);
+        }
+    }
+
+    #[test]
+    fn mixed_pairing_joins_fast_with_slow() {
+        // h100 ids 0..1, 910b2 ids 2..3: hardware-aware pairing must put
+        // one of each in every pair; the blind layout pairs like with
+        // like.
+        let cluster = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        let aware = AcceLlm::new(&cluster);
+        assert_eq!(aware.pair_members(0), (0, 3));
+        assert_eq!(aware.pair_members(1), (1, 2));
+        assert_eq!(aware.partner(0), 3);
+        let blind = AcceLlm::with_identity_pairing(&cluster);
+        assert_eq!(blind.pair_members(0), (0, 1));
+        assert_eq!(blind.pair_members(1), (2, 3));
+    }
+
+    #[test]
+    fn mixed_cluster_completes_all_requests() {
+        let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        let cfg = SimConfig::new(cluster, crate::sim::LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 8.0, 40.0, 43);
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        assert_eq!(r.per_device.len(), 2);
+        // Both device classes must actually work.
+        assert!(r.per_device.iter().all(|d| d.utilization > 0.05),
+                "idle device class: {:?}", r.per_device);
     }
 }
 #[cfg(test)]
@@ -556,20 +706,16 @@ mod diag {
 #[ignore]
 fn diag_sweep() {
     use crate::coordinator::{AcceLlm, Splitwise, Vllm};
-    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+    use crate::sim::{run, SimConfig, H100};
     use crate::workload::{Trace, MIXED};
-    let cfg = SimConfig {
-        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-        n_instances: 4,
-        interconnect_bw: None,
-        record_timeline: false,
-    };
+    let cfg = SimConfig::homogeneous(H100, 4);
     println!("rate | sched      | cost_eff | util  | ttft   | tbt    | jct     | makespan");
     for rate in [8.0, 12.0, 16.0, 20.0, 24.0] {
         let trace = Trace::poisson(MIXED, rate, 120.0, 21);
         for (name, mut s) in [
-            ("accellm", Box::new(AcceLlm::new(4)) as Box<dyn crate::sim::Scheduler>),
-            ("splitwise", Box::new(Splitwise::new(4))),
+            ("accellm",
+             Box::new(AcceLlm::new(&cfg.cluster)) as Box<dyn crate::sim::Scheduler>),
+            ("splitwise", Box::new(Splitwise::new(&cfg.cluster))),
             ("vllm", Box::new(Vllm::new(4))),
         ] {
             let r = run(&cfg, &trace, s.as_mut());

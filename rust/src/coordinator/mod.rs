@@ -27,17 +27,24 @@ pub use validator::Validated;
 pub use splitwise::Splitwise;
 pub use vllm::Vllm;
 
-use crate::sim::{ReqId, Scheduler, SimCtx};
+use crate::sim::{ClusterSpec, ReqId, Scheduler, SimCtx};
 
-/// Construct a scheduler by name (CLI / config entry point).
-pub fn by_name(name: &str, n_instances: usize) -> Option<Box<dyn Scheduler>> {
+/// Construct a scheduler by name (CLI / config entry point).  Schedulers
+/// receive the full [`ClusterSpec`] so they can make hardware-aware
+/// placement decisions on heterogeneous clusters.
+pub fn by_name(name: &str, cluster: &ClusterSpec) -> Option<Box<dyn Scheduler>> {
     match name.to_ascii_lowercase().as_str() {
-        "accellm" | "acc" => Some(Box::new(AcceLlm::new(n_instances))),
+        "accellm" | "acc" => Some(Box::new(AcceLlm::new(cluster))),
         "accellm-prefix" | "accellm_prefix" | "acc-prefix" | "prefix" => {
-            Some(Box::new(AcceLlmPrefix::new(n_instances)))
+            Some(Box::new(AcceLlmPrefix::new(cluster)))
         }
-        "splitwise" | "spl" => Some(Box::new(Splitwise::new(n_instances))),
-        "vllm" => Some(Box::new(Vllm::new(n_instances))),
+        // Capacity-blind AcceLLM (identity pairing) — the hetero
+        // evaluation's comparison point, not part of ALL_SCHEDULERS.
+        "accellm-blind" | "accellm_blind" | "blind" => {
+            Some(Box::new(AcceLlm::with_identity_pairing(cluster)))
+        }
+        "splitwise" | "spl" => Some(Box::new(Splitwise::new(cluster))),
+        "vllm" => Some(Box::new(Vllm::new(cluster.len()))),
         _ => None,
     }
 }
@@ -46,6 +53,25 @@ pub fn by_name(name: &str, n_instances: usize) -> Option<Box<dyn Scheduler>> {
 /// position-indexed consumers of the original trio stay valid.
 pub const ALL_SCHEDULERS: [&str; 4] =
     ["accellm", "splitwise", "vllm", "accellm-prefix"];
+
+/// (name, one-line description) for every constructible scheduler —
+/// `--list-schedulers` output.
+pub const SCHEDULER_HELP: [(&str, &str); 5] = [
+    ("accellm",
+     "paper §4: instance pairs, redundant KV, dynamic role flips; \
+      hardware-aware pairing on mixed clusters"),
+    ("accellm-prefix",
+     "AcceLLM pairs + global prefix index + capacity-weighted CHWBL \
+      routing"),
+    ("splitwise",
+     "static prefill/decode disaggregation; prefill pool picked by \
+      compute"),
+    ("vllm",
+     "continuous batching, round-robin, hardware-blind (naive baseline)"),
+    ("accellm-blind",
+     "AcceLLM with capacity-blind identity pairing (hetero-eval \
+      comparator)"),
+];
 
 /// The three systems the paper evaluates — regenerated paper figures
 /// iterate exactly these so their artifacts keep the paper's row

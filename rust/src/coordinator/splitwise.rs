@@ -5,6 +5,10 @@
 //! * a fixed quarter of the instances (1/2/4 of 4/8/16) are dedicated
 //!   prefill machines; the rest are decode-only — "we prioritize
 //!   decoding for Splitwise ... and exclude non-disaggregated instances";
+//! * the prefill pool is chosen by hardware: the highest effective-
+//!   compute instances prefill (prefill is compute-bound), so a mixed
+//!   `h100x4+910b2x4` fleet prefills on H100s.  On a homogeneous
+//!   cluster this degenerates to the legacy "first N instances" layout;
 //! * prompts queue FIFO across prefill instances (cluster-level
 //!   scheduler); each prefill machine processes its queue in batches;
 //! * finished prefills hand their KV cache to the decode instance with
@@ -20,7 +24,8 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::set_kv_tokens;
-use crate::sim::{InstId, ReqId, Role, Scheduler, SimCtx, Work, XferKind};
+use crate::sim::{ClusterSpec, InstId, ReqId, Role, Scheduler, SimCtx, Work,
+                 XferKind};
 
 /// How many prompts a prefill machine folds into one batch (queue drain
 /// cap; prefill time is linear in tokens so batching mostly reduces
@@ -28,7 +33,10 @@ use crate::sim::{InstId, ReqId, Role, Scheduler, SimCtx, Work, XferKind};
 const MAX_PREFILL_BATCH: usize = 4;
 
 pub struct Splitwise {
-    n_prefill: usize,
+    /// Dedicated prefill machines (ascending ids; picked by compute).
+    prefill_insts: Vec<InstId>,
+    /// Decode machines (ascending ids; the rest of the cluster).
+    decode_insts: Vec<InstId>,
     /// Cluster-level FIFO of prompts not yet assigned to a prefill machine.
     queue: VecDeque<ReqId>,
     /// Per-decode-instance sets.
@@ -38,28 +46,53 @@ pub struct Splitwise {
 }
 
 impl Splitwise {
-    pub fn new(n_instances: usize) -> Self {
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        let n = cluster.len();
         // Paper Section 5.2: 1, 2, 4 prefill instances for 4, 8, 16.
-        let n_prefill = (n_instances / 4).max(1);
+        let n_prefill = (n / 4).max(1);
+        assert!(n > n_prefill, "need at least one decode instance");
+        // Prefill pool = strongest effective compute first (stable by
+        // id, so a homogeneous cluster keeps the legacy 0..n/4 layout).
+        let mut ids: Vec<InstId> = (0..n).collect();
+        ids.sort_by(|&x, &y| {
+            cluster
+                .instance(y)
+                .prefill_flops()
+                .partial_cmp(&cluster.instance(x).prefill_flops())
+                .unwrap()
+                .then(x.cmp(&y))
+        });
+        let mut prefill_insts: Vec<InstId> = ids[..n_prefill].to_vec();
+        prefill_insts.sort_unstable();
+        let decode_insts: Vec<InstId> = (0..n)
+            .filter(|i| !prefill_insts.contains(i))
+            .collect();
         Splitwise {
-            n_prefill,
+            prefill_insts,
+            decode_insts,
             queue: VecDeque::new(),
-            sets: vec![Vec::new(); n_instances],
+            sets: vec![Vec::new(); n],
             in_transfer: Vec::new(),
         }
     }
 
     pub fn n_prefill_instances(&self) -> usize {
-        self.n_prefill
+        self.prefill_insts.len()
+    }
+
+    /// The chosen prefill machines (ascending instance ids).
+    pub fn prefill_instances(&self) -> &[InstId] {
+        &self.prefill_insts
     }
 
     fn is_prefill_inst(&self, inst: InstId) -> bool {
-        inst < self.n_prefill
+        self.prefill_insts.contains(&inst)
     }
 
     /// Drain the prompt queue onto any idle prefill machine.
     fn kick_prefill(&mut self, ctx: &mut SimCtx) {
-        for inst in 0..self.n_prefill {
+        let pool = self.prefill_insts.clone();
+        for inst in pool {
             if ctx.is_busy(inst) || self.queue.is_empty() {
                 continue;
             }
@@ -90,9 +123,12 @@ impl Splitwise {
     }
 
     /// Decode instance with the most free KV memory (paper's two-level
-    /// scheduler placement rule).
+    /// scheduler placement rule; per-instance capacities make this
+    /// hardware-aware on mixed clusters for free).
     fn least_loaded_decode(&self, ctx: &SimCtx) -> InstId {
-        (self.n_prefill..ctx.n_instances())
+        self.decode_insts
+            .iter()
+            .copied()
             .max_by(|&a, &b| {
                 ctx.free_bytes(a)
                     .partial_cmp(&ctx.free_bytes(b))
@@ -117,7 +153,8 @@ impl Scheduler for Splitwise {
 
     fn init(&mut self, ctx: &mut SimCtx) {
         let n = ctx.n_instances();
-        assert!(n > self.n_prefill, "need at least one decode instance");
+        assert_eq!(n, self.sets.len(),
+                   "cluster size changed since construction");
         for i in 0..n {
             ctx.set_role(i, if self.is_prefill_inst(i) {
                 Role::Prefill
@@ -172,8 +209,10 @@ impl Scheduler for Splitwise {
 /// Expose the per-instance decode balance for tests/figures.
 impl Splitwise {
     pub fn decode_imbalance(&self, ctx: &SimCtx) -> u64 {
-        let loads: Vec<u64> = (self.n_prefill..ctx.n_instances())
-            .map(|i| set_kv_tokens(ctx, &self.sets[i]))
+        let loads: Vec<u64> = self
+            .decode_insts
+            .iter()
+            .map(|&i| set_kv_tokens(ctx, &self.sets[i]))
             .collect();
         let max = loads.iter().max().copied().unwrap_or(0);
         let min = loads.iter().min().copied().unwrap_or(0);
@@ -184,30 +223,41 @@ impl Splitwise {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, ASCEND_910B2, H100,
-                     LLAMA2_70B};
+    use crate::sim::{run, ClusterSpec, DeviceSpec, SimConfig, ASCEND_910B2,
+                     H100};
     use crate::workload::{Trace, LIGHT, MIXED};
 
-    fn cfg_dev(n: usize, dev: crate::sim::DeviceSpec) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B),
-            n_instances: n,
-            interconnect_bw: None,
-            record_timeline: false,
-        }
+    fn cfg_dev(n: usize, dev: DeviceSpec) -> SimConfig {
+        SimConfig::homogeneous(dev, n)
+    }
+
+    fn homog(n: usize) -> Splitwise {
+        Splitwise::new(&ClusterSpec::homogeneous(H100, n))
     }
 
     #[test]
     fn prefill_split_matches_paper() {
-        assert_eq!(Splitwise::new(4).n_prefill_instances(), 1);
-        assert_eq!(Splitwise::new(8).n_prefill_instances(), 2);
-        assert_eq!(Splitwise::new(16).n_prefill_instances(), 4);
+        assert_eq!(homog(4).n_prefill_instances(), 1);
+        assert_eq!(homog(8).n_prefill_instances(), 2);
+        assert_eq!(homog(16).n_prefill_instances(), 4);
+        // Homogeneous pool keeps the legacy first-N layout.
+        assert_eq!(homog(8).prefill_instances(), &[0, 1]);
+    }
+
+    #[test]
+    fn mixed_cluster_prefills_on_the_compute_heavy_devices() {
+        // 910B2s listed first: a capacity-blind pool would pick them.
+        let cluster = ClusterSpec::parse("910b2x4+h100x4").unwrap();
+        let s = Splitwise::new(&cluster);
+        assert_eq!(s.prefill_instances(), &[4, 5],
+                   "prefill pool must be the H100s");
     }
 
     #[test]
     fn completes_all_requests() {
         let trace = Trace::poisson(MIXED, 4.0, 60.0, 5);
-        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
     }
 
@@ -215,7 +265,8 @@ mod tests {
     fn clean_tbt_no_prefill_interference() {
         // Decode machines never run prefill: worst TBT stays near mean.
         let trace = Trace::poisson(MIXED, 4.0, 60.0, 5);
-        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert!(r.tbt_max / r.tbt_mean < 3.0,
                 "max/mean {}", r.tbt_max / r.tbt_mean);
     }
@@ -224,12 +275,11 @@ mod tests {
     fn ascend_prefill_queue_blows_up_near_6rps() {
         // Paper Figure 12(b): with one prefill instance on 910B2, mixed
         // workload, queuing appears around 6 req/s.
-        let lo = run(&cfg_dev(4, ASCEND_910B2),
-                     &Trace::poisson(MIXED, 3.0, 80.0, 9),
-                     &mut Splitwise::new(4));
-        let hi = run(&cfg_dev(4, ASCEND_910B2),
-                     &Trace::poisson(MIXED, 8.0, 80.0, 9),
-                     &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, ASCEND_910B2);
+        let lo = run(&cfg, &Trace::poisson(MIXED, 3.0, 80.0, 9),
+                     &mut Splitwise::new(&cfg.cluster));
+        let hi = run(&cfg, &Trace::poisson(MIXED, 8.0, 80.0, 9),
+                     &mut Splitwise::new(&cfg.cluster));
         assert!(hi.ttft_mean > 4.0 * lo.ttft_mean,
                 "lo {} hi {}", lo.ttft_mean, hi.ttft_mean);
     }
@@ -237,17 +287,33 @@ mod tests {
     #[test]
     fn h100_no_queue_blowup_in_range() {
         // Figure 11(b): H100 prefill keeps up across the swept range.
-        let r = run(&cfg_dev(4, H100),
-                    &Trace::poisson(LIGHT, 10.0, 60.0, 9),
-                    &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &Trace::poisson(LIGHT, 10.0, 60.0, 9),
+                    &mut Splitwise::new(&cfg.cluster));
         assert!(r.ttft_mean < 1.0, "ttft {}", r.ttft_mean);
     }
 
     #[test]
     fn prefill_handoff_traffic_metered() {
         let trace = Trace::poisson(MIXED, 4.0, 30.0, 5);
-        let r = run(&cfg_dev(4, H100), &trace, &mut Splitwise::new(4));
+        let cfg = cfg_dev(4, H100);
+        let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert!(r.xfer_prefill_bytes > 0.0);
         assert_eq!(r.xfer_replica_bytes, 0.0);
+    }
+
+    #[test]
+    fn mixed_cluster_completes_and_uses_h100_prefill() {
+        let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        let cfg = SimConfig::new(cluster, crate::sim::LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 6.0, 40.0, 13);
+        let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        // Prefill ran on H100s only => every TTFT sample is H100-class.
+        let h100 = r.per_device.iter().find(|d| d.device == "H100").unwrap();
+        let asc = r.per_device.iter().find(|d| d.device == "910B2").unwrap();
+        assert!(h100.ttft_mean > 0.0);
+        assert_eq!(asc.ttft_mean, 0.0,
+                   "no prefill may land on the 910B2 class");
     }
 }

@@ -55,7 +55,7 @@ impl<S: Scheduler> Validated<S> {
                 assert!(!req.replicas.contains(&p),
                         "[{site}] request {} replica co-located with primary",
                         req.id);
-                primary_bytes[p] += ctx.model.kv_bytes(req.kv_tokens() as f64);
+                primary_bytes[p] += ctx.kv_bytes_tokens(req.kv_tokens() as f64);
             }
             let mut seen = req.replicas.clone();
             seen.sort_unstable();
@@ -63,10 +63,9 @@ impl<S: Scheduler> Validated<S> {
             assert_eq!(seen.len(), req.replicas.len(),
                        "[{site}] request {} has duplicate replicas", req.id);
             for &r in &req.replicas {
-                replica_bytes[r] += ctx.model.kv_bytes(req.kv_tokens() as f64);
+                replica_bytes[r] += ctx.kv_bytes_tokens(req.kv_tokens() as f64);
             }
         }
-        let cap = ctx.model.kv_capacity_bytes();
         for i in 0..n {
             // Inv 5: accounting agrees with per-request placement (the
             // engine grows copies by one line per token, so byte counts
@@ -78,7 +77,9 @@ impl<S: Scheduler> Validated<S> {
             assert!((inst.replica_bytes - replica_bytes[i]).abs() < 1.0,
                     "[{site}] instance {i} replica accounting {} != {}",
                     inst.replica_bytes, replica_bytes[i]);
-            // Inv 2: capacity.
+            // Inv 2: per-instance capacity (instances differ on a
+            // heterogeneous cluster).
+            let cap = ctx.models[i].kv_capacity_bytes();
             assert!(inst.kv_bytes() <= cap + 1.0,
                     "[{site}] instance {i} over capacity: {} > {cap}",
                     inst.kv_bytes());
@@ -118,23 +119,19 @@ impl<S: Scheduler> Scheduler for Validated<S> {
 mod tests {
     use super::*;
     use crate::coordinator::{AcceLlm, Splitwise, Vllm};
-    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+    use crate::sim::{run, ClusterSpec, SimConfig, H100, LLAMA2_70B};
     use crate::workload::{Trace, MIXED};
 
     fn cfg() -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-            n_instances: 4,
-            interconnect_bw: None,
-            record_timeline: false,
-        }
+        SimConfig::homogeneous(H100, 4)
     }
 
     #[test]
     fn accellm_upholds_invariants() {
         let trace = Trace::poisson(MIXED, 10.0, 30.0, 3);
-        let mut v = Validated::new(AcceLlm::new(4));
-        let r = run(&cfg(), &trace, &mut v);
+        let cfg = cfg();
+        let mut v = Validated::new(AcceLlm::new(&cfg.cluster));
+        let r = run(&cfg, &trace, &mut v);
         assert_eq!(r.completed, trace.len());
         assert!(v.checks > 1000, "validator barely ran: {}", v.checks);
     }
@@ -142,8 +139,9 @@ mod tests {
     #[test]
     fn splitwise_upholds_invariants() {
         let trace = Trace::poisson(MIXED, 8.0, 30.0, 4);
-        let mut v = Validated::new(Splitwise::new(4));
-        let r = run(&cfg(), &trace, &mut v);
+        let cfg = cfg();
+        let mut v = Validated::new(Splitwise::new(&cfg.cluster));
+        let r = run(&cfg, &trace, &mut v);
         assert_eq!(r.completed, trace.len());
     }
 
@@ -153,5 +151,18 @@ mod tests {
         let mut v = Validated::new(Vllm::new(4));
         let r = run(&cfg(), &trace, &mut v);
         assert_eq!(r.completed, trace.len());
+    }
+
+    #[test]
+    fn accellm_upholds_invariants_on_mixed_cluster() {
+        // Per-instance capacity checks against each instance's own
+        // model — the heterogeneous version of invariant 2.
+        let cluster = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 6.0, 30.0, 7);
+        let mut v = Validated::new(AcceLlm::new(&cfg.cluster));
+        let r = run(&cfg, &trace, &mut v);
+        assert_eq!(r.completed, trace.len());
+        assert!(v.checks > 100, "validator barely ran: {}", v.checks);
     }
 }

@@ -14,6 +14,10 @@
 //! * **no inter-instance load balancing**: requests are routed round-
 //!   robin and their KV can never move, so decode-length variance
 //!   accumulates into imbalance (Section 3.5.2).
+//!
+//! Deliberately hardware-blind: on heterogeneous clusters the round-
+//! robin ignores device capability, making this the capacity-blind
+//! baseline of the `hetero` evaluation.
 
 use crate::coordinator::{capped_batch, MAX_DECODE_BATCH};
 use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
@@ -89,12 +93,9 @@ mod tests {
     use crate::workload::{Trace, MIXED};
 
     fn cfg(n: usize) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-            n_instances: n,
-            interconnect_bw: None,
-            record_timeline: true,
-        }
+        let mut cfg = SimConfig::homogeneous(H100, n);
+        cfg.record_timeline = true;
+        cfg
     }
 
     #[test]

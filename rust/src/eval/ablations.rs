@@ -14,17 +14,13 @@
 
 use crate::coordinator::AcceLlm;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, InstanceSpec, PerfModel, Scheduler, SimConfig, H100,
-                 LLAMA2_70B};
+use crate::sim::{run, ClusterSpec, Scheduler, SimConfig, H100};
 use crate::workload::{Trace, MIXED};
 
 fn cfg(n: usize) -> SimConfig {
-    SimConfig {
-        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-        n_instances: n,
-        interconnect_bw: None,
-        record_timeline: true,
-    }
+    let mut cfg = SimConfig::homogeneous(H100, n);
+    cfg.record_timeline = true;
+    cfg
 }
 
 fn row(name: &str, rate: f64, sched: &mut dyn Scheduler, trace: &Trace)
@@ -39,14 +35,15 @@ fn row(name: &str, rate: f64, sched: &mut dyn Scheduler, trace: &Trace)
 
 /// Redundancy + rebalancing ablation grid.
 pub fn ablation_mechanisms() -> FigureOutput {
+    let cluster = ClusterSpec::homogeneous(H100, 4);
     let mut rows = Vec::new();
     for &rate in &[8.0, 14.0, 20.0] {
         let trace = Trace::poisson(MIXED, rate, 60.0, 7);
-        rows.push(row("full", rate, &mut AcceLlm::new(4), &trace));
+        rows.push(row("full", rate, &mut AcceLlm::new(&cluster), &trace));
         rows.push(row("no-redundancy", rate,
-                      &mut AcceLlm::without_redundancy(4), &trace));
+                      &mut AcceLlm::without_redundancy(&cluster), &trace));
         rows.push(row("no-rebalance", rate,
-                      &mut AcceLlm::without_rebalance(4), &trace));
+                      &mut AcceLlm::without_rebalance(&cluster), &trace));
     }
     FigureOutput {
         id: "ablation_mechanisms".into(),
@@ -61,12 +58,13 @@ pub fn ablation_mechanisms() -> FigureOutput {
 
 /// Flip-damping window sweep.
 pub fn ablation_flip_slack() -> FigureOutput {
+    let cluster = ClusterSpec::homogeneous(H100, 4);
     let trace = Trace::poisson(MIXED, 14.0, 60.0, 7);
     let mut rows = Vec::new();
     for &slack_ms in &[0.0, 5.0, 15.0, 50.0, 150.0] {
         let name = format!("slack{slack_ms:.0}ms");
         rows.push(row(&name, 14.0,
-                      &mut AcceLlm::with_flip_slack(4, slack_ms / 1e3),
+                      &mut AcceLlm::with_flip_slack(&cluster, slack_ms / 1e3),
                       &trace));
     }
     FigureOutput {

@@ -5,6 +5,14 @@ use crate::sim::{run, DeviceSpec, InstanceSpec, PerfModel, SimConfig,
                  ASCEND_910B2, H100, LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
 
+fn model(dev: DeviceSpec) -> PerfModel {
+    PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B)
+}
+
+fn sim_cfg(dev: DeviceSpec, n: usize) -> SimConfig {
+    SimConfig::homogeneous(dev, n)
+}
+
 /// A regenerated table/figure: CSV header + rows.
 #[derive(Clone, Debug)]
 pub struct FigureOutput {
@@ -32,19 +40,6 @@ impl FigureOutput {
             s.push('\n');
         }
         s
-    }
-}
-
-fn model(dev: DeviceSpec) -> PerfModel {
-    PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B)
-}
-
-fn sim_cfg(dev: DeviceSpec, n: usize) -> SimConfig {
-    SimConfig {
-        model: model(dev),
-        n_instances: n,
-        interconnect_bw: None,
-        record_timeline: false,
     }
 }
 
@@ -180,10 +175,11 @@ pub fn fig5(dev: DeviceSpec) -> FigureOutput {
 pub fn fig6(dev: DeviceSpec) -> FigureOutput {
     let trace = Trace::phased(MIXED, &[(20.0, 12.0), (20.0, 1.0), (20.0, 12.0)],
                               SEED);
+    let cfg = sim_cfg(dev, 4);
     let mut rows = Vec::new();
     for name in ["splitwise", "accellm"] {
-        let mut s = by_name(name, 4).unwrap();
-        let r = run(&sim_cfg(dev, 4), &trace, s.as_mut());
+        let mut s = by_name(name, &cfg.cluster).unwrap();
+        let r = run(&cfg, &trace, s.as_mut());
         rows.push(format!("{},{},{:.3},{:.3},{:.2}", dev.name, name,
                           r.utilization, r.cost_efficiency, r.jct_mean));
     }
@@ -204,13 +200,14 @@ pub fn fig6(dev: DeviceSpec) -> FigureOutput {
 /// Figure 9: peak per-instance KV memory to serve the mixed workload,
 /// 4 instances, at 4/8/12 req/s.
 pub fn fig9(dev: DeviceSpec) -> FigureOutput {
+    let cfg = sim_cfg(dev, 4);
     let mut rows = Vec::new();
     for &rate in &[4.0, 8.0, 12.0] {
         let trace = Trace::poisson(MIXED, rate, DUR, SEED);
         let mut per_sched = Vec::new();
         for name in PAPER_SCHEDULERS {
-            let mut s = by_name(name, 4).unwrap();
-            let r = run(&sim_cfg(dev, 4), &trace, s.as_mut());
+            let mut s = by_name(name, &cfg.cluster).unwrap();
+            let r = run(&cfg, &trace, s.as_mut());
             per_sched.push((name, r.peak_kv_bytes / 1e9));
         }
         let acc = per_sched[0].1;
@@ -237,7 +234,7 @@ pub fn fig10(dev: DeviceSpec) -> FigureOutput {
         for name in ["accellm", "splitwise"] {
             let mut cfg = sim_cfg(dev, 4);
             cfg.interconnect_bw = Some(gbs * 1e9);
-            let mut s = by_name(name, 4).unwrap();
+            let mut s = by_name(name, &cfg.cluster).unwrap();
             let r = run(&cfg, &trace, s.as_mut());
             rows.push(format!(
                 "{},{:.0},{},{:.1},{:.2},{:.2},{:.2}",
@@ -265,11 +262,12 @@ fn latency_grid(id: &str, dev: DeviceSpec, wl: WorkloadSpec,
                 sizes: &[usize]) -> FigureOutput {
     let mut rows = Vec::new();
     for &n in sizes {
+        let cfg = sim_cfg(dev, n);
         for &rate in &RATE_SWEEP {
             let trace = Trace::poisson(wl, rate, DUR, SEED);
             for name in PAPER_SCHEDULERS {
-                let mut s = by_name(name, n).unwrap();
-                let r = run(&sim_cfg(dev, n), &trace, s.as_mut());
+                let mut s = by_name(name, &cfg.cluster).unwrap();
+                let r = run(&cfg, &trace, s.as_mut());
                 rows.push(format!(
                     "{},{},{},{},{:.1},{:.1},{:.4},{:.4},{:.5},{:.5},{:.2},{:.2}",
                     dev.name, wl.name, n, name, rate, r.cost_efficiency,
@@ -323,7 +321,7 @@ pub fn fig16(dev: DeviceSpec) -> FigureOutput {
     for name in PAPER_SCHEDULERS {
         let mut cfg = sim_cfg(dev, 4);
         cfg.record_timeline = true;
-        let mut s = by_name(name, 4).unwrap();
+        let mut s = by_name(name, &cfg.cluster).unwrap();
         let r = run(&cfg, &trace, s.as_mut());
         let mut gaps: Vec<f64> =
             r.tbt_timeline.iter().map(|&(_, g)| g).collect();
@@ -367,14 +365,16 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "ablation_mechanisms" => crate::eval::ablations::ablation_mechanisms(),
         "ablation_flip_slack" => crate::eval::ablations::ablation_flip_slack(),
         "prefix_locality" => crate::eval::prefix::prefix_locality(),
+        "hetero" => crate::eval::hetero::hetero(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
+    "hetero",
 ];
 
 /// Generate everything (the `make bench` payload).

@@ -1,0 +1,183 @@
+//! Heterogeneous-cluster evaluation (`figures --fig hetero`): every
+//! scheduler on homogeneous H100 / 910B2 fleets and on the mixed
+//! `h100x4+910b2x4` fleet, with per-device-class breakdown rows.
+//!
+//! The mixed rows additionally include `accellm-blind` — AcceLLM with
+//! capacity-blind identity pairing (what the scheduler did before it
+//! could see the `ClusterSpec`).  Blind pairing builds H100-only and
+//! 910B2-only pairs; free-memory routing then funnels traffic to the
+//! deeper H100 pairs until they choke while the 910B2 pairs idle.
+//! Hardware-aware pairing (one prefill-leaning H100 + one decode-
+//! leaning 910B2 per pair) spreads load across the whole fleet and
+//! prefills at H100 speed — the headline mixed-cluster result.
+
+use crate::coordinator::by_name;
+use crate::eval::figures::FigureOutput;
+use crate::sim::{run, ClusterSpec, RunReport, SimConfig, LLAMA2_70B};
+use crate::workload::{Trace, MIXED};
+
+/// Fixed seed/duration, matching the figure harness conventions.
+const SEED: u64 = 7;
+const DUR: f64 = 40.0;
+
+/// Clusters compared by the hetero figure.
+pub const HETERO_CLUSTERS: [&str; 3] =
+    ["h100x8", "910b2x8", "mixed:h100x4+910b2x4"];
+
+/// Request rates: moderate load and saturation.
+const RATES: [f64; 2] = [8.0, 18.0];
+
+fn aggregate_row(cluster: &str, sched: &str, rate: f64, r: &RunReport)
+                 -> String {
+    format!(
+        "{},{},{:.1},all,{},{:.1},{:.4},{:.4},{:.5},{:.2},{:.3}",
+        cluster, sched, rate, r.n_instances, r.cost_efficiency,
+        r.ttft_mean, r.ttft_p99, r.tbt_mean, r.jct_mean, r.utilization)
+}
+
+fn class_rows(cluster: &str, sched: &str, rate: f64, r: &RunReport,
+              rows: &mut Vec<String>) {
+    for d in &r.per_device {
+        // Per-class TBT/JCT are not defined (a request may decode on a
+        // different class than it prefilled on); report 0 placeholders.
+        rows.push(format!(
+            "{},{},{:.1},{},{},{:.1},{:.4},0,0,0,{:.3}",
+            cluster, sched, rate, d.device, d.n_instances,
+            d.cost_efficiency, d.ttft_mean, d.utilization));
+    }
+}
+
+/// Run one (cluster, scheduler, rate) cell.
+fn run_cell(cfg: &SimConfig, sched: &str, rate: f64) -> RunReport {
+    let trace = Trace::poisson(MIXED, rate, DUR, SEED);
+    let mut s = by_name(sched, &cfg.cluster).expect("known scheduler");
+    run(cfg, &trace, s.as_mut())
+}
+
+/// Homogeneous vs mixed clusters, all schedulers (+ the capacity-blind
+/// AcceLLM comparator on the mixed cluster).
+pub fn hetero() -> FigureOutput {
+    let mut rows = Vec::new();
+    for spec in HETERO_CLUSTERS {
+        let cluster = ClusterSpec::parse(spec).expect("valid cluster spec");
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let name = cfg.cluster.name();
+        let mut scheds: Vec<&str> =
+            vec!["accellm", "splitwise", "vllm", "accellm-prefix"];
+        if !cfg.cluster.is_homogeneous() {
+            scheds.push("accellm-blind");
+        }
+        for &rate in &RATES {
+            for &sched in &scheds {
+                let r = run_cell(&cfg, sched, rate);
+                rows.push(aggregate_row(&name, sched, rate, &r));
+                if !cfg.cluster.is_homogeneous() {
+                    class_rows(&name, sched, rate, &r, &mut rows);
+                }
+            }
+        }
+    }
+    FigureOutput {
+        id: "hetero".into(),
+        title: "Heterogeneous clusters: homogeneous vs mixed fleets, all \
+                schedulers (+ capacity-blind AcceLLM on mixed)"
+            .into(),
+        header: "cluster,scheduler,rate,device_class,n_inst,\
+                 cost_eff_tok_inst_s,ttft_mean_s,ttft_p99_s,tbt_mean_s,\
+                 jct_mean_s,utilization"
+            .into(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(row: &str, i: usize) -> f64 {
+        row.split(',').nth(i).unwrap().parse().unwrap()
+    }
+
+    #[test]
+    fn mixed_cluster_all_schedulers_end_to_end() {
+        // Acceptance: a mixed h100x4+910b2x4 run works end-to-end for
+        // all four schedulers (plus the blind comparator).
+        let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
+        for sched in ["accellm", "splitwise", "vllm", "accellm-prefix",
+                      "accellm-blind"] {
+            let mut s = by_name(sched, &cfg.cluster).unwrap();
+            let r = run(&cfg, &trace, s.as_mut());
+            assert_eq!(r.completed, trace.len(), "{sched} dropped requests");
+            assert_eq!(r.per_device.len(), 2, "{sched} class breakdown");
+            let total: u64 =
+                r.per_device.iter().map(|d| d.decode_tokens).sum();
+            let want: u64 =
+                trace.requests.iter().map(|q| q.decode_len as u64).sum();
+            assert_eq!(total, want, "{sched} lost decode tokens");
+        }
+    }
+
+    #[test]
+    fn hardware_aware_accellm_beats_capacity_blind_on_mixed() {
+        // The headline: at saturation, blind pairing makes H100-only and
+        // 910B2-only pairs; free-memory routing then overloads the H100
+        // pairs while 910B2 pairs idle.  Aware pairing spreads the load
+        // and prefills on the fast member of every pair.
+        let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 18.0, 60.0, SEED);
+        let aware = run(&cfg, &trace,
+                        by_name("accellm", &cfg.cluster).unwrap().as_mut());
+        let blind = run(&cfg, &trace,
+                        by_name("accellm-blind", &cfg.cluster)
+                            .unwrap()
+                            .as_mut());
+        assert_eq!(aware.completed, trace.len());
+        assert_eq!(blind.completed, trace.len());
+        assert!(aware.jct_mean < blind.jct_mean,
+                "aware jct {} !< blind {}", aware.jct_mean, blind.jct_mean);
+        assert!(aware.cost_efficiency > blind.cost_efficiency,
+                "aware cost-eff {} !> blind {}", aware.cost_efficiency,
+                blind.cost_efficiency);
+        assert!(aware.utilization > blind.utilization,
+                "aware util {} !> blind {}", aware.utilization,
+                blind.utilization);
+    }
+
+    #[test]
+    fn hetero_figure_shape() {
+        let f = hetero();
+        // 2 homogeneous clusters x 2 rates x 4 schedulers (aggregate
+        // only) + mixed x 2 rates x 5 schedulers x (1 aggregate + 2
+        // class rows).
+        assert_eq!(f.rows.len(), 2 * 2 * 4 + 2 * 5 * 3, "{:#?}", f.rows);
+        // Every mixed aggregate row carries 8 instances; class rows 4+4.
+        for row in f.rows.iter().filter(|r| r.starts_with("h100x4+910b2x4")) {
+            let n_inst = col(row, 4) as usize;
+            if row.contains(",all,") {
+                assert_eq!(n_inst, 8, "{row}");
+            } else {
+                assert_eq!(n_inst, 4, "{row}");
+            }
+        }
+        // The figure itself must exhibit the aware-beats-blind ordering
+        // at the saturating rate (JCT column, mixed aggregate rows).
+        let jct_of = |sched: &str| -> f64 {
+            let row = f
+                .rows
+                .iter()
+                .find(|r| {
+                    r.starts_with("h100x4+910b2x4")
+                        && r.contains(&format!(",{sched},18.0,all,"))
+                })
+                .unwrap_or_else(|| panic!("no row for {sched}"));
+            col(row, 9)
+        };
+        assert!(jct_of("accellm") < jct_of("accellm-blind"),
+                "figure must show hardware-aware accellm beating blind \
+                 pairing: {} vs {}",
+                jct_of("accellm"), jct_of("accellm-blind"));
+    }
+}

@@ -8,8 +8,10 @@
 
 pub mod ablations;
 pub mod figures;
+pub mod hetero;
 pub mod prefix;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
 pub use figures::{all_figures, figure_by_id, FigureOutput};
+pub use hetero::hetero;
 pub use prefix::prefix_locality;

@@ -9,7 +9,7 @@
 
 use crate::coordinator::by_name;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100, LLAMA2_70B};
+use crate::sim::{run, SimConfig, H100};
 use crate::workload::{Trace, CHAT, SHARED_DOC};
 
 /// Fixed seed/duration, matching the figure harness conventions.
@@ -19,17 +19,12 @@ const DUR: f64 = 60.0;
 /// Compare plain AcceLLM against the prefix-locality composition on
 /// both session workloads (H100, 4 instances).
 pub fn prefix_locality() -> FigureOutput {
-    let cfg = SimConfig {
-        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-        n_instances: 4,
-        interconnect_bw: None,
-        record_timeline: false,
-    };
+    let cfg = SimConfig::homogeneous(H100, 4);
     let mut rows = Vec::new();
     for (wl, rate) in [(CHAT, 6.0), (SHARED_DOC, 4.0)] {
         let trace = Trace::generate(wl, rate, DUR, SEED);
         for name in ["accellm", "accellm-prefix"] {
-            let mut s = by_name(name, 4).unwrap();
+            let mut s = by_name(name, &cfg.cluster).unwrap();
             let r = run(&cfg, &trace, s.as_mut());
             rows.push(format!(
                 "{},{},{:.1},{:.4},{:.4},{:.2},{:.3},{}",

@@ -23,10 +23,18 @@
 //!
 //! | name | module | idea |
 //! |------|--------|------|
-//! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips |
-//! | `accellm-prefix` | [`prefix::scheduler`] | AcceLLM pairs + global prefix index + CHWBL routing |
-//! | `splitwise` | [`coordinator::splitwise`] | static prefill/decode disaggregation baseline |
-//! | `vllm` | [`coordinator::vllm`] | continuous-batching baseline |
+//! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips; hardware-aware pairing on mixed clusters |
+//! | `accellm-prefix` | [`prefix::scheduler`] | AcceLLM pairs + global prefix index + capacity-weighted CHWBL routing |
+//! | `splitwise` | [`coordinator::splitwise`] | static prefill/decode disaggregation baseline; compute-picked prefill pool |
+//! | `vllm` | [`coordinator::vllm`] | continuous-batching baseline (hardware-blind) |
+//! | `accellm-blind` | [`coordinator::accellm`] | capacity-blind identity pairing (hetero-eval comparator) |
+//!
+//! ## Clusters
+//!
+//! Hardware is per-instance ([`sim::ClusterSpec`]): `h100x8` is eight
+//! H100 instances, `mixed:h100x4+910b2x4` a mixed fleet, and
+//! [`sim::Topology`] prices every src→dst KV-transfer link (intra-pair
+//! NVLink/HCCS vs inter-node network, with per-link overrides).
 //!
 //! ## Workload families
 //!
@@ -53,5 +61,6 @@ pub mod workload;
 
 pub use coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Vllm};
 pub use prefix::{ChwblRouter, PrefixIndex};
-pub use sim::{run, PerfModel, RunReport, Scheduler, SimConfig};
+pub use sim::{run, ClusterSpec, PerfModel, RunReport, Scheduler, SimConfig,
+              Topology};
 pub use workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED, SHARED_DOC};

@@ -1,5 +1,5 @@
 //! `accellm` — leader binary: cluster simulation, figure regeneration,
-//! and real-model serving over the AOT PJRT artifacts.
+//! benchmarking, and real-model serving over the AOT PJRT artifacts.
 
 use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
@@ -10,8 +10,9 @@ use accellm::coordinator;
 use accellm::eval::{all_figures, figure_by_id};
 #[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
-use accellm::sim::{run, DeviceSpec, InstanceSpec, PerfModel, RunReport,
-                   SimConfig, LLAMA2_70B};
+use accellm::sim::{run, ClusterSpec, DeviceSpec, RunReport, SimConfig,
+                   ALL_DEVICES, LLAMA2_70B};
+use accellm::util::json::Json;
 #[cfg(feature = "pjrt")]
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec};
@@ -21,17 +22,26 @@ accellm — AcceLLM reproduction (redundancy-based LLM serving)
 
 USAGE:
   accellm simulate [--scheduler accellm|accellm-prefix|splitwise|vllm]
-                   [--device h100|910b2]
+                   [--cluster SPEC | --device h100|910b2|a100|mi300x
+                                     --instances N]
                    [--workload light|mixed|heavy|chat|shared-doc]
-                   [--instances N] [--rate R]
-                   [--duration S] [--seed K] [--bw GB/s] [--json]
+                   [--rate R] [--duration S] [--seed K]
+                   [--bw GB/s] [--network-gbs GB/s] [--json]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
+  accellm bench    [--cluster SPEC] [--rate R] [--duration S]
+                   [--out FILE]                   # wall-clock scheduler bench (JSON)
   accellm serve    [--policy accellm|splitwise|vllm] [--instances N]
                    [--requests N] [--rate R] [--max-new N] [--slots B]
                    [--artifacts DIR] [--seed K]   # real model over PJRT
-  accellm sweep    [--device ...] [--workload ...] [--instances N]
-                   [--duration S]                  # rate sweep, all schedulers
+  accellm sweep    [--cluster SPEC | --device ... --instances N]
+                   [--workload ...] [--duration S] # rate sweep, all schedulers
+  accellm --list-devices                           # known DeviceSpecs
+  accellm --list-schedulers                        # known schedulers
 
+Cluster specs describe per-instance hardware: `h100x8` is eight H100
+instances, `mixed:h100x4+910b2x4` a mixed fleet, `a100x2@tp8` two
+8-way-TP A100 instances.  `--network-gbs` prices cross-pair links at
+an inter-node network bandwidth (intra-pair links keep NVLink/HCCS).
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
 prefix-locality router.  Run `make artifacts` once before
@@ -45,6 +55,14 @@ fn main() {
             std::process::exit(2);
         }
     };
+    if args.has("list-devices") {
+        print_devices();
+        return;
+    }
+    if args.has("list-schedulers") {
+        print_schedulers();
+        return;
+    }
     if args.has("help") || args.subcommand.is_none() {
         println!("{USAGE}");
         return;
@@ -52,6 +70,7 @@ fn main() {
     let result = match args.subcommand.as_deref().unwrap() {
         "simulate" => cmd_simulate(&args),
         "figures" => cmd_figures(&args),
+        "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         other => {
@@ -65,17 +84,61 @@ fn main() {
     }
 }
 
-fn parse_common(args: &Args) -> anyhow::Result<(DeviceSpec, WorkloadSpec,
-                                                usize, f64, f64, u64)> {
-    let device = DeviceSpec::by_name(args.get_or("device", "h100"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --device"))?;
+fn print_devices() {
+    println!("{:<8} {:>12} {:>9} {:>10} {:>12} {:>5} {:>8}",
+             "device", "fp16 TFLOPS", "HBM GB", "HBM TB/s", "conn GB/s",
+             "MFU", "HBM eff");
+    for d in ALL_DEVICES {
+        println!("{:<8} {:>12.0} {:>9.0} {:>10.2} {:>12.0} {:>5.2} {:>8.2}",
+                 d.name.to_ascii_lowercase(), d.fp16_flops / 1e12,
+                 d.hbm_bytes / 1e9, d.hbm_bw / 1e12, d.local_conn_bw / 1e9,
+                 d.mfu, d.hbm_eff);
+    }
+    println!("\ncluster spec grammar: [mixed:]device[xN][@tpT](+segment)*  \
+              e.g. mixed:h100x4+910b2x4");
+}
+
+fn print_schedulers() {
+    for (name, desc) in coordinator::SCHEDULER_HELP {
+        println!("{name:<16} {desc}");
+    }
+}
+
+/// Resolve the cluster from `--cluster SPEC` or the legacy
+/// `--device` + `--instances` pair, then apply `--network-gbs`.
+fn parse_cluster(args: &Args) -> anyhow::Result<ClusterSpec> {
+    let mut cluster = match args.get("cluster") {
+        Some(spec) => {
+            ClusterSpec::parse(spec).map_err(anyhow::Error::msg)?
+        }
+        None => {
+            let device = DeviceSpec::by_name(args.get_or("device", "h100"))
+                .map_err(anyhow::Error::msg)?;
+            let instances =
+                args.get_usize("instances", 4).map_err(anyhow::Error::msg)?;
+            anyhow::ensure!(instances >= 1, "--instances must be >= 1");
+            ClusterSpec::homogeneous(device, instances)
+        }
+    };
+    if let Some(v) = args.get("network-gbs") {
+        let gbs: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--network-gbs expects GB/s"))?;
+        anyhow::ensure!(gbs > 0.0, "--network-gbs must be positive");
+        cluster.set_network_bw(gbs * 1e9);
+    }
+    Ok(cluster)
+}
+
+fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
+                                                f64, f64, u64)> {
+    let cluster = parse_cluster(args)?;
     let workload = WorkloadSpec::by_name(args.get_or("workload", "mixed"))
         .ok_or_else(|| anyhow::anyhow!("unknown --workload"))?;
-    let instances = args.get_usize("instances", 4).map_err(anyhow::Error::msg)?;
     let rate = args.get_f64("rate", 8.0).map_err(anyhow::Error::msg)?;
     let duration = args.get_f64("duration", 60.0).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
-    Ok((device, workload, instances, rate, duration, seed))
+    Ok((cluster, workload, rate, duration, seed))
 }
 
 fn print_report(r: &RunReport, json: bool) {
@@ -95,28 +158,36 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         for &rate in &exp.rates {
             let trace = Trace::generate(exp.workload, rate, exp.duration,
                                         exp.seed);
-            let mut sched = coordinator::by_name(&exp.scheduler, exp.instances)
-                .ok_or_else(|| anyhow::anyhow!("unknown scheduler in config"))?;
+            let mut sched = coordinator::by_name(&exp.scheduler, &exp.cluster)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown scheduler '{}' in config (try \
+                         --list-schedulers)",
+                        exp.scheduler
+                    )
+                })?;
             let report = run(&exp.sim_config(), &trace, sched.as_mut());
             println!("{}", report.csv_row());
         }
         return Ok(());
     }
-    let (device, workload, instances, rate, duration, seed) =
-        parse_common(args)?;
+    let (cluster, workload, rate, duration, seed) = parse_common(args)?;
     let sched_name = args.get_or("scheduler", "accellm");
-    let mut sched = coordinator::by_name(sched_name, instances)
-        .ok_or_else(|| anyhow::anyhow!("unknown --scheduler"))?;
-    let cfg = SimConfig {
-        model: PerfModel::new(InstanceSpec::new(device), LLAMA2_70B),
-        n_instances: instances,
-        interconnect_bw: match args.get("bw") {
-            Some(v) => Some(v.parse::<f64>().map_err(|_| {
-                anyhow::anyhow!("--bw expects GB/s")
-            })? * 1e9),
-            None => None,
-        },
-        record_timeline: false,
+    let mut sched = coordinator::by_name(sched_name, &cluster)
+        .ok_or_else(|| {
+            anyhow::anyhow!("unknown --scheduler '{sched_name}' (try \
+                             --list-schedulers)")
+        })?;
+    let mut cfg = SimConfig::new(cluster, LLAMA2_70B);
+    cfg.interconnect_bw = match args.get("bw") {
+        Some(v) => {
+            let gbs: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--bw expects GB/s"))?;
+            anyhow::ensure!(gbs > 0.0, "--bw must be positive");
+            Some(gbs * 1e9)
+        }
+        None => None,
     };
     let trace = Trace::generate(workload, rate, duration, seed);
     let report = run(&cfg, &trace, sched.as_mut());
@@ -125,18 +196,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let (device, workload, instances, _, duration, seed) = parse_common(args)?;
+    let (cluster, workload, _, duration, seed) = parse_common(args)?;
+    let cfg = SimConfig::new(cluster, LLAMA2_70B);
     println!("{}", RunReport::csv_header());
     for &rate in &accellm::eval::figures::RATE_SWEEP {
         let trace = Trace::generate(workload, rate, duration, seed);
         for name in coordinator::ALL_SCHEDULERS {
-            let mut sched = coordinator::by_name(name, instances).unwrap();
-            let cfg = SimConfig {
-                model: PerfModel::new(InstanceSpec::new(device), LLAMA2_70B),
-                n_instances: instances,
-                interconnect_bw: None,
-                record_timeline: false,
-            };
+            let mut sched = coordinator::by_name(name, &cfg.cluster).unwrap();
             let report = run(&cfg, &trace, sched.as_mut());
             println!("{}", report.csv_row());
         }
@@ -163,6 +229,68 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
             println!();
         }
     }
+    Ok(())
+}
+
+/// Fixed small scenario per scheduler: wall-clock + simulated-throughput
+/// numbers, written as JSON (default `BENCH_PR2.json`) to seed the
+/// repo's perf trajectory.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_or("out", "BENCH_PR2.json");
+    // Same cluster resolution as simulate/sweep (--cluster or legacy
+    // --device/--instances, plus --network-gbs).
+    let cluster = parse_cluster(args)?;
+    let rate = args.get_f64("rate", 8.0).map_err(anyhow::Error::msg)?;
+    let duration = args.get_f64("duration", 30.0).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let trace = Trace::poisson(accellm::workload::MIXED, rate, duration, seed);
+    anyhow::ensure!(!trace.is_empty(), "empty bench trace");
+    let sim_tokens: u64 =
+        trace.requests.iter().map(|r| r.decode_len as u64).sum();
+    let cfg = SimConfig::new(cluster.clone(), LLAMA2_70B);
+
+    println!("{:>16} | {:>10} | {:>14} | {:>10}",
+             "scheduler", "wall ms", "sim tok/s", "completed");
+    let mut results = Vec::new();
+    for name in coordinator::ALL_SCHEDULERS {
+        // 1 warm-up + 3 timed repetitions; keep the best wall time.
+        let mut best = f64::INFINITY;
+        let mut last: Option<RunReport> = None;
+        for _ in 0..4 {
+            let mut sched = coordinator::by_name(name, &cfg.cluster).unwrap();
+            let t0 = std::time::Instant::now();
+            let r = run(&cfg, &trace, sched.as_mut());
+            best = best.min(t0.elapsed().as_secs_f64());
+            last = Some(r);
+        }
+        let r = last.expect("at least one repetition");
+        anyhow::ensure!(r.completed == trace.len(),
+                        "{name} dropped requests in the bench scenario");
+        println!("{:>16} | {:>10.1} | {:>14.0} | {:>10}",
+                 name, best * 1e3, sim_tokens as f64 / best, r.completed);
+        results.push(Json::obj(vec![
+            ("scheduler", Json::str(name)),
+            ("wall_ms_best", Json::num(best * 1e3)),
+            ("sim_decode_tokens", Json::num(sim_tokens as f64)),
+            ("sim_tokens_per_wall_s", Json::num(sim_tokens as f64 / best)),
+            ("completed", Json::num(r.completed as f64)),
+            ("sim_makespan_s", Json::num(r.makespan)),
+            ("ttft_mean_s", Json::num(r.ttft_mean)),
+            ("jct_mean_s", Json::num(r.jct_mean)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fixed-scenario scheduler sweep")),
+        ("cluster", Json::str(&cluster.name())),
+        ("workload", Json::str("mixed")),
+        ("rate", Json::num(rate)),
+        ("duration_s", Json::num(duration)),
+        ("seed", Json::num(seed as f64)),
+        ("n_requests", Json::num(trace.len() as f64)),
+        ("results", Json::arr(results)),
+    ]);
+    std::fs::write(out, doc.encode() + "\n")?;
+    println!("wrote {out}");
     Ok(())
 }
 

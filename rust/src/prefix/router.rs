@@ -14,6 +14,13 @@
 //! touches only that holder's virtual nodes, so a scale change remaps
 //! ~1/n of the key space (the consistency property, verified in the
 //! tests below).
+//!
+//! **Capacity weights** (heterogeneous clusters): with
+//! [`ChwblRouter::with_weights`] each holder `h` gets its own bound
+//! `ceil(c * (m+1) * w_h / W)` — a universal-load-balancing-style
+//! capacity-proportional cap — so a pair of H100s may legitimately
+//! carry more in-flight work than a pair of 910B2s before affinity
+//! spills.  Uniform weights reduce to the classic bound exactly.
 
 use crate::prefix::hash::splitmix64;
 
@@ -27,6 +34,10 @@ pub struct ChwblRouter {
     ring: Vec<(u64, usize)>,
     vnodes: usize,
     load_factor: f64,
+    /// Per-holder capacity weights; None = uniform (the classic CHWBL
+    /// bound, kept as a distinct arithmetic path so homogeneous
+    /// clusters reproduce pre-weighting decisions bit-for-bit).
+    weights: Option<Vec<f64>>,
 }
 
 impl ChwblRouter {
@@ -36,17 +47,38 @@ impl ChwblRouter {
         assert!(n_holders > 0, "router needs at least one holder");
         assert!(vnodes > 0, "need at least one virtual node per holder");
         assert!(load_factor >= 1.0, "load factor must be >= 1");
-        let mut r = ChwblRouter { ring: Vec::new(), vnodes, load_factor };
+        let mut r = ChwblRouter {
+            ring: Vec::new(),
+            vnodes,
+            load_factor,
+            weights: None,
+        };
         for h in 0..n_holders {
             r.add_holder(h);
         }
         r
     }
 
-    /// Insert a holder's virtual nodes (scale-up / rebalance).
+    /// Ring whose holder `h` has capacity weight `weights[h]` (> 0).
+    /// All-equal weights collapse to the uniform router.
+    pub fn with_weights(weights: &[f64], vnodes: usize,
+                        load_factor: f64) -> ChwblRouter {
+        assert!(weights.iter().all(|w| w.is_finite() && *w > 0.0),
+                "capacity weights must be positive and finite");
+        let mut r = Self::new(weights.len(), vnodes, load_factor);
+        if weights.windows(2).any(|w| w[0] != w[1]) {
+            r.weights = Some(weights.to_vec());
+        }
+        r
+    }
+
+    /// Insert a holder's virtual nodes (scale-up / rebalance).  On a
+    /// weighted ring the holder must already have a capacity weight.
     pub fn add_holder(&mut self, holder: usize) {
         debug_assert!(!self.ring.iter().any(|&(_, h)| h == holder),
                       "holder {holder} already on the ring");
+        assert!(self.weights.as_ref().map_or(true, |w| holder < w.len()),
+                "weighted ring: holder {holder} has no capacity weight");
         for v in 0..self.vnodes {
             let pos = splitmix64(
                 splitmix64(holder as u64 ^ 0x5ca1_ab1e)
@@ -66,29 +98,64 @@ impl ChwblRouter {
         self.ring.len()
     }
 
-    /// CHWBL bound for the *next* placement: `ceil(c * (total+1) / n)`.
+    /// Uniform CHWBL bound for the *next* placement:
+    /// `ceil(c * (total+1) / n)`.
     pub fn load_bound(&self, loads: &[usize]) -> usize {
         let total: usize = loads.iter().sum();
         ((self.load_factor * (total + 1) as f64) / loads.len() as f64).ceil()
             as usize
     }
 
+    /// Per-holder bound for the next placement.  Uniform rings use the
+    /// classic `ceil(c * (total+1) / n)`; weighted rings scale it by
+    /// the holder's capacity share: `ceil(c * (total+1) * w_h / W)`.
+    pub fn load_bound_for(&self, holder: usize, loads: &[usize]) -> usize {
+        match &self.weights {
+            None => self.load_bound(loads),
+            Some(w) => {
+                let total: usize = loads.iter().sum();
+                let wsum: f64 = w.iter().sum();
+                (self.load_factor * (total + 1) as f64 * w[holder] / wsum)
+                    .ceil() as usize
+            }
+        }
+    }
+
     /// Route `key` to a holder: walk the ring clockwise from the key's
     /// position and take the first holder whose current load is under
-    /// the bound.  `loads[h]` is holder `h`'s in-flight load.
+    /// its (capacity-weighted) bound.  `loads[h]` is holder `h`'s
+    /// in-flight load.
     pub fn route(&self, key: u64, loads: &[usize]) -> usize {
         assert!(!self.ring.is_empty(), "router has no holders");
-        let bound = self.load_bound(loads);
+        // Bounds are loop-invariant during the walk: hoist them (the
+        // walk may visit every virtual node on a saturated ring).
+        let uniform_bound = self.load_bound(loads);
+        let weighted_bounds: Option<Vec<usize>> = self.weights.as_ref().map(|w| {
+            let total: usize = loads.iter().sum();
+            let wsum: f64 = w.iter().sum();
+            w.iter()
+                .map(|wh| {
+                    (self.load_factor * (total + 1) as f64 * wh / wsum).ceil()
+                        as usize
+                })
+                .collect()
+        });
         let pos = splitmix64(key);
         let start = self.ring.partition_point(|&(p, _)| p < pos);
         for i in 0..self.ring.len() {
             let (_, h) = self.ring[(start + i) % self.ring.len()];
+            let bound = match &weighted_bounds {
+                None => uniform_bound,
+                Some(b) => b[h],
+            };
             if loads.get(h).copied().unwrap_or(0) < bound {
                 return h;
             }
         }
-        // Unreachable for load_factor >= 1 (the minimum load is always
-        // strictly under the bound); kept as a deterministic fallback.
+        // Unreachable for load_factor >= 1: the per-holder bounds sum to
+        // > total load, so some holder is strictly under its bound and
+        // every holder appears on the ring.  Kept as a deterministic
+        // fallback.
         (0..loads.len()).min_by_key(|&h| (loads[h], h)).unwrap_or(0)
     }
 }
@@ -197,6 +264,82 @@ mod tests {
         for k in 0..500u64 {
             assert_eq!(before.route(k, &loads8), after.route(k, &loads8));
         }
+    }
+
+    #[test]
+    fn equal_weights_collapse_to_uniform_router() {
+        // Bit-identical decisions: a homogeneous cluster routed through
+        // the weighted constructor must reproduce the uniform router.
+        let u = ChwblRouter::new(6, DEFAULT_VNODES, 1.25);
+        let w = ChwblRouter::with_weights(&[3.35e12; 6], DEFAULT_VNODES, 1.25);
+        let mut rng = Pcg64::new(23);
+        let mut loads = vec![0usize; 6];
+        for _ in 0..5000 {
+            let k = rng.next_u64();
+            let a = u.route(k, &loads);
+            let b = w.route(k, &loads);
+            assert_eq!(a, b);
+            assert_eq!(u.load_bound(&loads), w.load_bound_for(b, &loads));
+            loads[a] += 1;
+        }
+    }
+
+    #[test]
+    fn weighted_holders_absorb_proportionally_more() {
+        // Holder 0 has 3x the capacity of the others: under a saturating
+        // skewed stream it must end up with roughly 3x the load share.
+        let n = 4;
+        let weights = [3.0, 1.0, 1.0, 1.0];
+        let r = ChwblRouter::with_weights(&weights, DEFAULT_VNODES, 1.0);
+        let mut rng = Pcg64::new(31);
+        let mut loads = vec![0usize; n];
+        for _ in 0..6000 {
+            let h = r.route(rng.next_u64(), &loads);
+            loads[h] += 1;
+        }
+        let share0 = loads[0] as f64 / 6000.0;
+        assert!(share0 > 0.40 && share0 < 0.60,
+                "capacity-3 holder got share {share0} ({loads:?})");
+    }
+
+    /// Satellite property: under sequential arrivals no holder ever
+    /// exceeds its capacity-weighted bound `ceil(c * m * w_h / W)`.
+    #[test]
+    fn prop_weighted_bound_invariant_under_sequential_arrivals() {
+        check(
+            40,
+            |rng| {
+                let n = rng.uniform_usize(2, 10);
+                let weights: Vec<f64> =
+                    (0..n).map(|_| rng.uniform_f64(0.5, 8.0)).collect();
+                let hot = rng.next_u64();
+                let seed = rng.next_u64();
+                (weights, hot, seed)
+            },
+            |(weights, hot, seed)| {
+                let c = 1.25;
+                let r = ChwblRouter::with_weights(weights, 32, c);
+                let wsum: f64 = weights.iter().sum();
+                let mut rng = Pcg64::new(*seed);
+                let mut loads = vec![0usize; weights.len()];
+                for m in 1..=600usize {
+                    let key =
+                        if rng.next_f64() < 0.5 { *hot } else { rng.next_u64() };
+                    let h = r.route(key, &loads);
+                    prop_assert(loads[h] < r.load_bound_for(h, &loads),
+                                "routed to a holder at/over its bound")?;
+                    loads[h] += 1;
+                    let bound =
+                        (c * m as f64 * weights[h] / wsum).ceil() as usize;
+                    prop_assert(
+                        loads[h] <= bound,
+                        &format!("after {m} placements holder {h} has {} > \
+                                  weighted bound {bound}", loads[h]),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::prefix::hash::splitmix64;
 use crate::prefix::index::{IndexStats, PrefixIndex};
 use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
 use crate::prefix::CHUNK_TOKENS;
-use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
+use crate::sim::{ClusterSpec, InstId, ReqId, Scheduler, SimCtx, Work};
 
 /// Default per-pair prefix-cache budget, in chunks.  2048 chunks x 32
 /// tokens x ~320 KiB/token (Llama-2-70B) ~= 21 GB of the pair's HBM
@@ -40,7 +40,12 @@ pub const DEFAULT_CACHE_CHUNKS: usize = 2048;
 /// imbalance for locality because a hit skips real prefill work).
 const LOAD_FACTOR: f64 = 1.5;
 
-/// AcceLLM pairs composed with the prefix index + CHWBL router.
+/// AcceLLM pairs composed with the prefix index + CHWBL router.  On a
+/// heterogeneous cluster the router's load bound is weighted by each
+/// pair's aggregate effective HBM bandwidth (the decode-capacity
+/// signal), so deeper pairs legitimately hold more in-flight work
+/// before locality spills — uniform weights (homogeneous clusters)
+/// reproduce the classic bound exactly.
 pub struct AcceLlmPrefix {
     inner: AcceLlm,
     index: PrefixIndex,
@@ -48,18 +53,27 @@ pub struct AcceLlmPrefix {
 }
 
 impl AcceLlmPrefix {
-    pub fn new(n_instances: usize) -> Self {
-        Self::with_cache_chunks(n_instances, DEFAULT_CACHE_CHUNKS)
+    pub fn new(cluster: &ClusterSpec) -> Self {
+        Self::with_cache_chunks(cluster, DEFAULT_CACHE_CHUNKS)
     }
 
     /// Custom per-pair prefix-cache budget (ablation / tests).
-    pub fn with_cache_chunks(n_instances: usize, cache_chunks: usize) -> Self {
-        let inner = AcceLlm::new(n_instances);
+    pub fn with_cache_chunks(cluster: &ClusterSpec, cache_chunks: usize) -> Self {
+        let inner = AcceLlm::new(cluster);
         let n_pairs = inner.n_pairs();
+        // Capacity weight of a pair = its members' effective decode
+        // bandwidth (decode is the phase the in-flight load bound caps).
+        let weights: Vec<f64> = (0..n_pairs)
+            .map(|p| {
+                let (a, b) = inner.pair_members(p);
+                cluster.instance(a).decode_bw() + cluster.instance(b).decode_bw()
+            })
+            .collect();
         AcceLlmPrefix {
             inner,
             index: PrefixIndex::new(n_pairs, cache_chunks),
-            router: ChwblRouter::new(n_pairs, DEFAULT_VNODES, LOAD_FACTOR),
+            router: ChwblRouter::with_weights(&weights, DEFAULT_VNODES,
+                                              LOAD_FACTOR),
         }
     }
 
@@ -82,11 +96,12 @@ impl Scheduler for AcceLlmPrefix {
         let n_pairs = self.inner.n_pairs();
         let loads: Vec<usize> =
             (0..n_pairs).map(|p| self.inner.pair_load(p)).collect();
-        let bound = self.router.load_bound(&loads);
 
         let pair = match self.index.best_match(&ctx.requests[req].prefix_chunks)
         {
-            Some((p, _)) if loads[p] < bound => p,
+            Some((p, _)) if loads[p] < self.router.load_bound_for(p, &loads) => {
+                p
+            }
             _ => {
                 // Cold start or locality overruled by load: CHWBL.
                 let key = ctx.requests[req]
@@ -110,7 +125,7 @@ impl Scheduler for AcceLlmPrefix {
         if let Work::Prefill { reqs } = &work {
             // The pair now physically holds these prompts' KV: publish
             // them to the index (and meter any LRU churn).
-            let pair = AcceLlm::pair_of(inst);
+            let pair = self.inner.pair_of(inst);
             for &r in reqs {
                 if !ctx.requests[r].prefix_chunks.is_empty() {
                     let evicted = self.index.insert(
@@ -132,24 +147,19 @@ impl Scheduler for AcceLlmPrefix {
 mod tests {
     use super::*;
     use crate::coordinator::by_name;
-    use crate::sim::{run, InstanceSpec, PerfModel, SimConfig, H100,
-                     LLAMA2_70B};
+    use crate::sim::{run, ClusterSpec, SimConfig, H100, LLAMA2_70B};
     use crate::workload::{Trace, CHAT, MIXED, SHARED_DOC};
 
     fn cfg(n: usize) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-            n_instances: n,
-            interconnect_bw: None,
-            record_timeline: false,
-        }
+        SimConfig::homogeneous(H100, n)
     }
 
     #[test]
     fn completes_uniform_workload_with_zero_hits() {
         // No chunk structure -> pure CHWBL balancing, all misses.
         let trace = Trace::poisson(MIXED, 5.0, 40.0, 3);
-        let r = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        let cfg = cfg(4);
+        let r = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
         assert_eq!(r.prefix_hits, 0);
         assert_eq!(r.prefix_misses, trace.len() as u64);
@@ -159,7 +169,8 @@ mod tests {
     #[test]
     fn chat_sessions_hit_the_prefix_cache() {
         let trace = Trace::generate(CHAT, 4.0, 60.0, 7);
-        let r = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
+        let cfg = cfg(4);
+        let r = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
         assert_eq!(r.completed, trace.len());
         assert!(r.prefix_hit_rate > 0.3, "hit rate {}", r.prefix_hit_rate);
         assert!(r.prefix_saved_tokens > 0);
@@ -170,9 +181,10 @@ mod tests {
         // The point of the subsystem: skipping cached prefill lowers
         // time-to-first-token on session workloads.
         let trace = Trace::generate(CHAT, 6.0, 60.0, 11);
-        let pfx = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
-        let acc = run(&cfg(4), &trace,
-                      by_name("accellm", 4).unwrap().as_mut());
+        let cfg = cfg(4);
+        let pfx = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
+        let acc = run(&cfg, &trace,
+                      by_name("accellm", &cfg.cluster).unwrap().as_mut());
         assert_eq!(pfx.completed, trace.len());
         assert_eq!(acc.completed, trace.len());
         assert!(pfx.ttft_mean < acc.ttft_mean,
@@ -182,9 +194,10 @@ mod tests {
     #[test]
     fn shared_doc_ttft_beats_plain_accellm() {
         let trace = Trace::generate(SHARED_DOC, 4.0, 60.0, 13);
-        let pfx = run(&cfg(4), &trace, &mut AcceLlmPrefix::new(4));
-        let acc = run(&cfg(4), &trace,
-                      by_name("accellm", 4).unwrap().as_mut());
+        let cfg = cfg(4);
+        let pfx = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
+        let acc = run(&cfg, &trace,
+                      by_name("accellm", &cfg.cluster).unwrap().as_mut());
         assert_eq!(pfx.completed, trace.len());
         assert!(pfx.prefix_hit_rate > 0.5, "hit rate {}", pfx.prefix_hit_rate);
         assert!(pfx.ttft_mean < acc.ttft_mean,
@@ -194,8 +207,9 @@ mod tests {
     #[test]
     fn tiny_cache_budget_forces_evictions() {
         let trace = Trace::generate(SHARED_DOC, 4.0, 40.0, 17);
-        let mut s = AcceLlmPrefix::with_cache_chunks(4, 64);
-        let r = run(&cfg(4), &trace, &mut s);
+        let cfg = cfg(4);
+        let mut s = AcceLlmPrefix::with_cache_chunks(&cfg.cluster, 64);
+        let r = run(&cfg, &trace, &mut s);
         assert_eq!(r.completed, trace.len());
         assert!(r.prefix_evictions > 0, "no evictions with a 64-chunk cache");
         // A starved cache still routes correctly, just hits less.
@@ -206,7 +220,8 @@ mod tests {
     fn works_at_16_instances_and_2_instances() {
         for n in [2usize, 16] {
             let trace = Trace::generate(CHAT, 3.0, 30.0, 19);
-            let r = run(&cfg(n), &trace, &mut AcceLlmPrefix::new(n));
+            let cfg = cfg(n);
+            let r = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
             assert_eq!(r.completed, trace.len(), "n={n}");
         }
     }
@@ -214,6 +229,18 @@ mod tests {
     #[test]
     #[should_panic(expected = "even number")]
     fn rejects_odd_instance_count() {
-        AcceLlmPrefix::new(5);
+        AcceLlmPrefix::new(&ClusterSpec::homogeneous(H100, 5));
+    }
+
+    #[test]
+    fn mixed_cluster_sessions_complete_with_hits() {
+        // Capacity-weighted CHWBL end-to-end: a mixed fleet still keeps
+        // session locality (nonzero hit rate) and completes everything.
+        let cluster = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::generate(CHAT, 4.0, 40.0, 23);
+        let r = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        assert!(r.prefix_hit_rate > 0.2, "hit rate {}", r.prefix_hit_rate);
     }
 }

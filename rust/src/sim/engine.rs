@@ -5,6 +5,11 @@
 //! policy under evaluation — AcceLLM, Splitwise or vLLM) makes every
 //! placement/batching/role decision through the [`SimCtx`] action API.
 //!
+//! Hardware is per-instance ([`ClusterSpec`]): the engine owns one
+//! [`PerfModel`] per instance, so work durations follow the instance
+//! that runs them, and every KV transfer is priced by the actual
+//! src→dst link of the cluster [`crate::sim::hardware::Topology`].
+//!
 //! Event flow:
 //! ```text
 //!   Arrival(req) ──► scheduler.on_arrival
@@ -18,8 +23,10 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::sim::hardware::{ClusterSpec, DeviceSpec};
 use crate::sim::instance::{Role, SimInstance};
-use crate::sim::metrics::{MetricsCollector, RunReport};
+use crate::sim::llm::{LlmSpec, LLAMA2_70B};
+use crate::sim::metrics::{DeviceClassReport, MetricsCollector, RunReport};
 use crate::sim::perfmodel::PerfModel;
 use crate::sim::request::{InstId, ReqId, SimRequest};
 use crate::util::OrdF64;
@@ -82,10 +89,15 @@ pub trait Scheduler {
 /// Engine state exposed to schedulers, plus the action API.
 pub struct SimCtx {
     pub now: f64,
-    pub model: PerfModel,
-    /// Instance-to-instance interconnect bandwidth, bytes/s (may be
-    /// overridden below the device default for Figure 10 sweeps).
-    pub interconnect_bw: f64,
+    /// Per-instance hardware + interconnect topology.
+    pub cluster: ClusterSpec,
+    /// One analytic cost model per instance (index = `InstId`).
+    pub models: Vec<PerfModel>,
+    /// The served model architecture (cluster-wide).
+    pub llm: LlmSpec,
+    /// Global flat interconnect override, bytes/s (Figure 10 sweeps);
+    /// None => price each transfer by the topology's src→dst link.
+    pub interconnect_bw: Option<f64>,
     pub requests: Vec<SimRequest>,
     pub instances: Vec<SimInstance>,
     /// Arrived requests not yet sent to prefill by the scheduler.
@@ -111,6 +123,18 @@ impl SimCtx {
 
     pub fn n_instances(&self) -> usize {
         self.instances.len()
+    }
+
+    /// Cost model of one instance.
+    pub fn model(&self, inst: InstId) -> &PerfModel {
+        &self.models[inst]
+    }
+
+    /// Effective bandwidth of the src→dst link (respecting the global
+    /// override, if any).
+    pub fn link_bw(&self, src: InstId, dst: InstId) -> f64 {
+        self.interconnect_bw
+            .unwrap_or_else(|| self.cluster.topology().link_bw(src, dst))
     }
 
     pub fn is_busy(&self, inst: InstId) -> bool {
@@ -145,13 +169,21 @@ impl SimCtx {
         }
     }
 
-    pub fn kv_bytes(&self, req: ReqId) -> f64 {
-        self.model.kv_bytes(self.requests[req].kv_tokens() as f64)
+    /// KV bytes for `tokens` tokens (model-architecture property, the
+    /// same on every instance).
+    pub fn kv_bytes_tokens(&self, tokens: f64) -> f64 {
+        tokens * self.llm.kv_bytes_per_token()
     }
 
-    /// Free KV bytes on an instance (capacity minus weights minus live KV).
+    pub fn kv_bytes(&self, req: ReqId) -> f64 {
+        self.kv_bytes_tokens(self.requests[req].kv_tokens() as f64)
+    }
+
+    /// Free KV bytes on an instance (its capacity minus weights minus
+    /// live KV) — per-instance now that capacities differ across a
+    /// heterogeneous cluster.
     pub fn free_bytes(&self, inst: InstId) -> f64 {
-        self.model.kv_capacity_bytes() - self.instances[inst].kv_bytes()
+        self.models[inst].kv_capacity_bytes() - self.instances[inst].kv_bytes()
     }
 
     // ---- KV placement ----------------------------------------------------
@@ -225,10 +257,10 @@ impl SimCtx {
 
     // ---- actions ---------------------------------------------------------
 
-    /// Begin a disaggregated prefill on `inst`. Duration comes from the
-    /// perf model, charged only for each prompt's uncached suffix (a
-    /// prefix-cache hit skips the cached portion).  Completion fires
-    /// `on_work_done`.
+    /// Begin a disaggregated prefill on `inst`. Duration comes from that
+    /// instance's perf model, charged only for each prompt's uncached
+    /// suffix (a prefix-cache hit skips the cached portion).  Completion
+    /// fires `on_work_done`.
     pub fn start_prefill(&mut self, inst: InstId, reqs: Vec<ReqId>) {
         assert!(!self.is_busy(inst), "instance {inst} is busy");
         assert!(!reqs.is_empty());
@@ -236,7 +268,7 @@ impl SimCtx {
             .iter()
             .map(|&r| self.requests[r].uncached_prompt_tokens())
             .collect();
-        let dur = self.model.prefill_time(&lens);
+        let dur = self.models[inst].prefill_time(&lens);
         for &r in &reqs {
             debug_assert!(self.requests[r].prefill_start.is_none());
             self.requests[r].prefill_start = Some(self.now);
@@ -263,14 +295,14 @@ impl SimCtx {
             debug_assert!(self.requests[r].prefill_start.is_none());
             self.requests[r].prefill_start = Some(self.now);
         }
-        let dur = self.model.mixed_step_time(batch.len(), kv, &plens);
+        let dur = self.models[inst].mixed_step_time(batch.len(), kv, &plens);
         let i = &mut self.instances[inst];
         i.running = Some(Work::DecodeStep { batch, prefills });
         i.busy_acc += dur;
         self.push_event(self.now + dur, Event::WorkDone(inst));
     }
 
-    /// Start a KV transfer of `tokens` over the interconnect.  The link
+    /// Start a KV transfer of `tokens` over the src→dst link.  The link
     /// model serializes transfers sharing a NIC; completion fires
     /// `on_transfer_done`.  `overlap` models per-layer pipelining
     /// (Section 4.2.4): an overlapped transfer does not occupy the NIC
@@ -278,13 +310,13 @@ impl SimCtx {
     /// only its bytes are metered.
     pub fn start_transfer(&mut self, src: InstId, dst: InstId, req: ReqId,
                           tokens: f64, kind: XferKind, overlap: bool) {
-        let bytes = self.model.kv_bytes(tokens);
+        let bytes = self.kv_bytes_tokens(tokens);
         match kind {
             XferKind::PrefillHandoff => self.metrics.xfer_prefill_bytes += bytes,
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
-        let dur = bytes / self.interconnect_bw;
+        let dur = bytes / self.link_bw(src, dst);
         let done = if overlap {
             self.now + dur
         } else {
@@ -299,19 +331,20 @@ impl SimCtx {
 
     /// Schedule a per-layer pipelined transfer (Section 4.2.4): the
     /// stream began `overlapped` seconds ago (it ran concurrently with
-    /// the prefill compute), needs `bytes/bw` of wire time, and the NIC
-    /// serializes concurrent streams — so a saturated link queues
-    /// hand-offs even though each is individually overlapped.
+    /// the prefill compute), needs `bytes/bw` of wire time on the
+    /// src→dst link, and the NIC serializes concurrent streams — so a
+    /// saturated link queues hand-offs even though each is individually
+    /// overlapped.
     pub fn start_transfer_pipelined(&mut self, src: InstId, dst: InstId,
                                     req: ReqId, tokens: f64, kind: XferKind,
                                     overlapped: f64) {
-        let bytes = self.model.kv_bytes(tokens);
+        let bytes = self.kv_bytes_tokens(tokens);
         match kind {
             XferKind::PrefillHandoff => self.metrics.xfer_prefill_bytes += bytes,
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
-        let wire = bytes / self.interconnect_bw;
+        let wire = bytes / self.link_bw(src, dst);
         // The stream could have started as early as `now - overlapped`,
         // but no earlier than the link became free.
         let begin = (self.now - overlapped.max(0.0))
@@ -327,7 +360,7 @@ impl SimCtx {
     /// per-token updates are tiny and continuous; they only consume
     /// bandwidth, Section 4.2.2 / Figure 10).
     pub fn meter_replica_traffic(&mut self, tokens: f64) {
-        self.metrics.xfer_replica_bytes += self.model.kv_bytes(tokens);
+        self.metrics.xfer_replica_bytes += self.kv_bytes_tokens(tokens);
     }
 
     pub fn set_role(&mut self, inst: InstId, role: Role) {
@@ -338,22 +371,51 @@ impl SimCtx {
 /// Configuration of one simulation run.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
-    pub model: PerfModel,
-    pub n_instances: usize,
-    /// Override interconnect bandwidth (bytes/s); None = device default.
+    /// Per-instance hardware + topology (replaces the old global
+    /// `PerfModel` + `n_instances`).
+    pub cluster: ClusterSpec,
+    /// Served model architecture.
+    pub llm: LlmSpec,
+    /// Global flat override of every link's bandwidth (bytes/s);
+    /// None = per-link topology pricing.
     pub interconnect_bw: Option<f64>,
     /// Record the full (time, gap) TBT timeline (Figure 16).
     pub record_timeline: bool,
 }
 
+impl SimConfig {
+    pub fn new(cluster: ClusterSpec, llm: LlmSpec) -> SimConfig {
+        SimConfig {
+            cluster,
+            llm,
+            interconnect_bw: None,
+            record_timeline: false,
+        }
+    }
+
+    /// `n` identical `device` instances serving Llama-2-70B — the
+    /// pre-ClusterSpec configuration shape.
+    pub fn homogeneous(device: DeviceSpec, n: usize) -> SimConfig {
+        SimConfig::new(ClusterSpec::homogeneous(device, n), LLAMA2_70B)
+    }
+}
+
 /// Run `trace` under `sched`; returns the metric report.
 pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunReport {
+    let n = cfg.cluster.len();
+    let models: Vec<PerfModel> = cfg
+        .cluster
+        .instances()
+        .iter()
+        .map(|&inst| PerfModel::new(inst, cfg.llm))
+        .collect();
+    let n_classes = cfg.cluster.classes().len();
     let mut ctx = SimCtx {
         now: 0.0,
-        model: cfg.model,
-        interconnect_bw: cfg
-            .interconnect_bw
-            .unwrap_or_else(|| cfg.model.inst.interconnect_bw()),
+        cluster: cfg.cluster.clone(),
+        models,
+        llm: cfg.llm,
+        interconnect_bw: cfg.interconnect_bw,
         requests: trace
             .requests
             .iter()
@@ -365,13 +427,13 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
                 req
             })
             .collect(),
-        instances: (0..cfg.n_instances).map(SimInstance::new).collect(),
+        instances: (0..n).map(SimInstance::new).collect(),
         pending: VecDeque::new(),
-        metrics: MetricsCollector::new(cfg.record_timeline),
+        metrics: MetricsCollector::new(cfg.record_timeline, n_classes),
         heap: BinaryHeap::new(),
         events: Vec::new(),
         seq: 0,
-        nic_busy: vec![0.0; cfg.n_instances],
+        nic_busy: vec![0.0; n],
     };
 
     for i in 0..ctx.requests.len() {
@@ -394,7 +456,7 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
                     .running
                     .take()
                     .expect("WorkDone on idle instance");
-                let completed = apply_work_effects(&mut ctx, &work);
+                let completed = apply_work_effects(&mut ctx, inst, &work);
                 sched.on_work_done(&mut ctx, inst, work, completed);
             }
             Event::TransferDone { src, dst, req } => {
@@ -406,10 +468,12 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
     finalize(ctx, trace, sched.name())
 }
 
-/// Apply the physical effects of a finished work item: stamp tokens,
-/// grow KV (primary + streamed replicas), detect EOS, free KV.
-fn apply_work_effects(ctx: &mut SimCtx, work: &Work) -> Vec<ReqId> {
+/// Apply the physical effects of a finished work item on `inst`: stamp
+/// tokens (attributed to the instance's device class), grow KV (primary
+/// + streamed replicas), detect EOS, free KV.
+fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId> {
     let now = ctx.now;
+    let class = ctx.cluster.class_of(inst);
     let mut completed = Vec::new();
     match work {
         Work::Prefill { reqs } => {
@@ -418,17 +482,17 @@ fn apply_work_effects(ctx: &mut SimCtx, work: &Work) -> Vec<ReqId> {
                 req.first_token = Some(now);
                 req.last_token_at = now;
                 let ttft = now - req.arrival;
-                ctx.metrics.ttft.add(ttft);
+                ctx.metrics.ttft_sample(ttft, class);
             }
         }
         Work::DecodeStep { batch, prefills } => {
-            let kv_byte = ctx.model.kv_bytes(1.0);
+            let kv_byte = ctx.kv_bytes_tokens(1.0);
             for &r in batch {
                 let req = &mut ctx.requests[r];
                 req.generated += 1;
                 let gap = now - req.last_token_at;
                 req.last_token_at = now;
-                ctx.metrics.token_gap(now, gap);
+                ctx.metrics.token_gap(now, gap, class);
                 // The new token's KV line lands on the primary and is
                 // streamed to every replica holder (Section 4.1.2).
                 if let Some(p) = req.primary {
@@ -436,8 +500,8 @@ fn apply_work_effects(ctx: &mut SimCtx, work: &Work) -> Vec<ReqId> {
                 }
                 let n_reps = req.replicas.len();
                 for ri in 0..n_reps {
-                    let inst = ctx.requests[r].replicas[ri];
-                    ctx.instances[inst].add_replica(kv_byte);
+                    let holder = ctx.requests[r].replicas[ri];
+                    ctx.instances[holder].add_replica(kv_byte);
                 }
                 if n_reps > 0 {
                     ctx.meter_replica_traffic(n_reps as f64);
@@ -456,7 +520,7 @@ fn apply_work_effects(ctx: &mut SimCtx, work: &Work) -> Vec<ReqId> {
                 req.first_token = Some(now);
                 req.last_token_at = now;
                 let ttft = now - req.arrival;
-                ctx.metrics.ttft.add(ttft);
+                ctx.metrics.ttft_sample(ttft, class);
             }
         }
     }
@@ -475,10 +539,38 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         .fold(0.0, f64::max);
     let mean_kv = ctx.instances.iter().map(|i| i.peak_kv_bytes).sum::<f64>()
         / n_inst as f64;
+
+    // Per-device-class breakdown (one entry per distinct device type).
+    let classes: Vec<String> =
+        ctx.cluster.classes().iter().map(|c| c.to_string()).collect();
+    let mut per_device = Vec::with_capacity(classes.len());
+    for (c, class_name) in classes.iter().enumerate() {
+        let ids: Vec<usize> = (0..n_inst)
+            .filter(|&i| ctx.cluster.class_of(i) == c)
+            .collect();
+        let n_c = ids.len().max(1);
+        let busy: f64 = ids.iter().map(|&i| ctx.instances[i].busy_acc).sum();
+        let class_peak = ids
+            .iter()
+            .map(|&i| ctx.instances[i].peak_kv_bytes)
+            .fold(0.0, f64::max);
+        let toks = ctx.metrics.decode_tokens_by_class[c];
+        per_device.push(DeviceClassReport {
+            device: class_name.clone(),
+            n_instances: ids.len(),
+            utilization: busy / (makespan * n_c as f64),
+            ttft_mean: ctx.metrics.ttft_by_class[c].mean(),
+            decode_tokens: toks,
+            cost_efficiency: toks as f64 / (makespan * n_c as f64),
+            peak_kv_bytes: class_peak,
+        });
+    }
+
+    let device = ctx.cluster.name();
     let m = &mut ctx.metrics;
     RunReport {
         scheduler: sched_name.to_string(),
-        device: ctx.model.inst.device.name.to_string(),
+        device,
         workload: trace.spec.name.to_string(),
         n_instances: n_inst,
         rate: trace.rate,
@@ -512,6 +604,7 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         },
         prefix_saved_tokens: m.prefix_saved_tokens,
         prefix_evictions: m.prefix_evictions,
+        per_device,
         tbt_timeline: std::mem::take(&mut m.tbt_timeline),
     }
 }
@@ -519,8 +612,7 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::hardware::{InstanceSpec, H100};
-    use crate::sim::llm::LLAMA2_70B;
+    use crate::sim::hardware::{ASCEND_910B2, H100};
     use crate::workload::{Trace, MIXED};
 
     /// Trivial policy: everything on instance 0, FIFO, prefill then
@@ -567,12 +659,7 @@ mod tests {
     }
 
     fn cfg(n: usize) -> SimConfig {
-        SimConfig {
-            model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-            n_instances: n,
-            interconnect_bw: None,
-            record_timeline: false,
-        }
+        SimConfig::homogeneous(H100, n)
     }
 
     #[test]
@@ -674,5 +761,47 @@ mod tests {
         assert!(report.jct_p50 >= report.ttft_p50);
         // Serial processing at 0.3 req/s: ~15 ms/token * ~500 tokens ≈ 7.5 s.
         assert!(report.jct_mean > 1.0, "jct {}", report.jct_mean);
+    }
+
+    /// Heterogeneous plumbing: on a mixed 2-instance cluster the serial
+    /// scheduler (instance 0 only) attributes every token to instance
+    /// 0's device class, and per-class stats cover both classes.
+    #[test]
+    fn mixed_cluster_per_class_attribution() {
+        let cluster = ClusterSpec::parse("910b2x1+h100x1").unwrap();
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::poisson(MIXED, 0.5, 10.0, 4);
+        let report = run(&cfg, &trace, &mut SerialSched);
+        assert_eq!(report.completed, trace.len());
+        assert_eq!(report.device, "910b2x1+h100x1");
+        assert_eq!(report.per_device.len(), 2);
+        let (slow, fast) = (&report.per_device[0], &report.per_device[1]);
+        assert_eq!(slow.device, "910B2");
+        assert_eq!(fast.device, "H100");
+        // All work ran on instance 0 (the 910B2).
+        assert!(slow.decode_tokens > 0);
+        assert_eq!(fast.decode_tokens, 0);
+        assert!(slow.utilization > 0.0);
+        assert_eq!(fast.utilization, 0.0);
+        assert!(slow.ttft_mean > 0.0);
+        assert_eq!(fast.ttft_mean, 0.0);
+        let total: u64 =
+            report.per_device.iter().map(|d| d.decode_tokens).sum();
+        let want: u64 =
+            trace.requests.iter().map(|q| q.decode_len as u64).sum();
+        assert_eq!(total, want);
+    }
+
+    /// Work duration follows the instance's own hardware: the same
+    /// serial run is slower end-to-end on a 910B2 than on an H100.
+    #[test]
+    fn per_instance_models_price_work() {
+        let trace = Trace::poisson(MIXED, 0.5, 10.0, 5);
+        let h = run(&cfg(1), &trace, &mut SerialSched);
+        let a = run(&SimConfig::homogeneous(ASCEND_910B2, 1), &trace,
+                    &mut SerialSched);
+        assert_eq!(h.completed, a.completed);
+        assert!(a.jct_mean > 1.3 * h.jct_mean,
+                "910B2 {} vs H100 {}", a.jct_mean, h.jct_mean);
     }
 }

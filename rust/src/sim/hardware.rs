@@ -1,7 +1,18 @@
-//! Accelerator device specifications (paper Table 1) and instance
-//! topology (Section 4.2.3: one instance = 4 accelerators, TP=4).
+//! Accelerator device specifications (paper Table 1, extended), instance
+//! topology (Section 4.2.3: one instance = `tp` accelerators, default 4),
+//! and the per-instance cluster model.
+//!
+//! Until PR 2 the simulator hard-wired ONE `InstanceSpec` for the whole
+//! cluster with a single flat interconnect bandwidth — which is why the
+//! paper evaluates H100 and Ascend 910B2 separately.  [`ClusterSpec`]
+//! makes hardware a per-instance property (device type + TP degree per
+//! instance) and [`Topology`] prices every src→dst link individually
+//! (intra-pair NVLink/HCCS vs inter-node network, with a sparse override
+//! matrix), so mixed fleets like `mixed:h100x4+910b2x4` run through the
+//! same engine and schedulers as homogeneous ones.
 
-/// One accelerator device (H100 SXM5 or Ascend 910B2), per paper Table 1.
+/// One accelerator device, per paper Table 1 (H100, 910B2) plus the
+/// mixed-fleet extensions (A100, MI300X) from public spec sheets.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceSpec {
     pub name: &'static str,
@@ -48,18 +59,65 @@ pub const ASCEND_910B2: DeviceSpec = DeviceSpec {
     hbm_eff: 0.80,
 };
 
+/// Nvidia A100 SXM4 80GB (312 TFLOPS fp16 TC, 80 GB, 2.039 TB/s,
+/// NVLink3 600 GB/s) — the previous-generation member of mixed fleets.
+pub const A100: DeviceSpec = DeviceSpec {
+    name: "A100",
+    fp16_flops: 312e12,
+    hbm_bytes: 80.0 * GB,
+    hbm_bw: 2.039 * TB,
+    local_conn_bw: 600.0 * GB,
+    mfu: 0.45,
+    hbm_eff: 0.80,
+};
+
+/// AMD MI300X (1307 TFLOPS fp16, 192 GB, 5.3 TB/s, Infinity Fabric
+/// ~448 GB/s per direction) — the HBM-heavy, decode-leaning extreme.
+pub const MI300X: DeviceSpec = DeviceSpec {
+    name: "MI300X",
+    fp16_flops: 1307e12,
+    hbm_bytes: 192.0 * GB,
+    hbm_bw: 5.3 * TB,
+    local_conn_bw: 448.0 * GB,
+    mfu: 0.35,
+    hbm_eff: 0.80,
+};
+
+/// Every known device, in `--list-devices` display order.
+pub const ALL_DEVICES: [DeviceSpec; 4] = [H100, ASCEND_910B2, A100, MI300X];
+
 impl DeviceSpec {
-    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    /// Look a device up by its CLI/config name.  Unknown names get an
+    /// error that lists every known device (instead of a silent `None`
+    /// collapsing into a generic config error upstream).
+    pub fn by_name(name: &str) -> Result<DeviceSpec, String> {
         match name.to_ascii_lowercase().as_str() {
-            "h100" => Some(H100),
-            "910b2" | "ascend" | "ascend910b2" => Some(ASCEND_910B2),
-            _ => None,
+            "h100" => Ok(H100),
+            "910b2" | "ascend" | "ascend910b2" => Ok(ASCEND_910B2),
+            "a100" => Ok(A100),
+            "mi300x" | "mi300" => Ok(MI300X),
+            _ => Err(format!(
+                "unknown device '{name}'; known devices: {}",
+                known_device_names()
+            )),
         }
     }
 }
 
+/// Comma-separated canonical device names (error messages, CLI help).
+pub fn known_device_names() -> String {
+    ALL_DEVICES
+        .iter()
+        .map(|d| d.name.to_ascii_lowercase())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Default tensor-parallel degree (paper Section 4.2.3: 4 devices).
+pub const DEFAULT_TP: usize = 4;
+
 /// An inference instance: `tp` devices running the model tensor-parallel.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct InstanceSpec {
     pub device: DeviceSpec,
     /// Tensor-parallel degree = number of devices (paper: 4).
@@ -68,7 +126,12 @@ pub struct InstanceSpec {
 
 impl InstanceSpec {
     pub fn new(device: DeviceSpec) -> Self {
-        InstanceSpec { device, tp: 4 }
+        InstanceSpec { device, tp: DEFAULT_TP }
+    }
+
+    pub fn with_tp(device: DeviceSpec, tp: usize) -> Self {
+        assert!(tp >= 1, "tensor-parallel degree must be >= 1");
+        InstanceSpec { device, tp }
     }
 
     /// Aggregate compute across the instance's devices, FLOP/s (peak).
@@ -86,10 +149,303 @@ impl InstanceSpec {
         self.device.hbm_bytes * self.tp as f64
     }
 
-    /// Instance-to-instance interconnect bandwidth, bytes/s.
+    /// Instance-to-instance interconnect bandwidth, bytes/s (the
+    /// device-local link; [`Topology`] prices specific src→dst links).
     pub fn interconnect_bw(&self) -> f64 {
         self.device.local_conn_bw
     }
+
+    /// Effective prefill compute (FLOP/s after MFU) — the hardware
+    /// signal schedulers use for prefill-leaning placement.
+    pub fn prefill_flops(&self) -> f64 {
+        self.flops() * self.device.mfu
+    }
+
+    /// Effective decode bandwidth (bytes/s after HBM efficiency) — the
+    /// hardware signal for decode-leaning placement and capacity
+    /// weighting.
+    pub fn decode_bw(&self) -> f64 {
+        self.hbm_bw() * self.device.hbm_eff
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Topology: per-link interconnect bandwidth
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-link interconnect bandwidth matrix (bytes/s).
+///
+/// The default ([`Topology::local_default`]) prices a link at the slower
+/// endpoint's device interconnect — on a homogeneous cluster this is
+/// exactly the old single flat bandwidth, so pre-ClusterSpec results are
+/// reproduced bit-for-bit.  [`Topology::with_network`] keeps the local
+/// rule inside physical pairs (instances 2p, 2p+1 — NVLink/HCCS) and
+/// prices everything else at a slower inter-node network bandwidth.
+/// Individual links can be overridden with [`Topology::set_link`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    /// bw[a][b] = bytes/s on the a↔b link; diagonal unused.
+    bw: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    /// Uniform bandwidth on every link.
+    pub fn flat(n: usize, bw: f64) -> Topology {
+        assert!(bw > 0.0, "link bandwidth must be positive");
+        Topology { bw: vec![vec![bw; n]; n] }
+    }
+
+    /// Every link runs at the slower endpoint's device interconnect
+    /// (legacy flat model generalized to mixed device types).
+    pub fn local_default(instances: &[InstanceSpec]) -> Topology {
+        let n = instances.len();
+        let mut bw = vec![vec![0.0; n]; n];
+        for a in 0..n {
+            for b in 0..n {
+                bw[a][b] = instances[a]
+                    .interconnect_bw()
+                    .min(instances[b].interconnect_bw());
+            }
+        }
+        Topology { bw }
+    }
+
+    /// Intra-pair links (instances 2p and 2p+1 share a chassis) keep the
+    /// local NVLink/HCCS rule; every other link crosses the inter-node
+    /// network at `network_bw`.
+    ///
+    /// Chassis pairing is PHYSICAL (2p, 2p+1) — it does not follow a
+    /// scheduler's logical pairing.  On a mixed cluster AcceLLM's
+    /// hardware-aware pairs deliberately join different device types,
+    /// which under this model live in different chassis, so their
+    /// pair-internal replica/hand-off streams cross the network.  That
+    /// is the physically honest price of cross-type pairing (AcceLLM
+    /// is robust to slow links — see the Figure 10 sweep); making the
+    /// scheduler trade pairing quality against link locality is a
+    /// ROADMAP open item.
+    pub fn with_network(instances: &[InstanceSpec], network_bw: f64) -> Topology {
+        assert!(network_bw > 0.0, "network bandwidth must be positive");
+        let mut t = Topology::local_default(instances);
+        let n = instances.len();
+        for a in 0..n {
+            for b in 0..n {
+                if a / 2 != b / 2 {
+                    t.bw[a][b] = network_bw;
+                }
+            }
+        }
+        t
+    }
+
+    /// Override one link (symmetric).
+    pub fn set_link(&mut self, a: usize, b: usize, bw: f64) {
+        assert!(a < self.n() && b < self.n(), "link ({a},{b}) out of range");
+        assert!(bw > 0.0, "link bandwidth must be positive");
+        self.bw[a][b] = bw;
+        self.bw[b][a] = bw;
+    }
+
+    /// Bandwidth of the a↔b link, bytes/s.
+    pub fn link_bw(&self, a: usize, b: usize) -> f64 {
+        self.bw[a][b]
+    }
+
+    pub fn n(&self) -> usize {
+        self.bw.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterSpec: per-instance hardware + topology
+// ---------------------------------------------------------------------------
+
+/// Per-instance hardware description of a whole cluster plus its
+/// interconnect topology — the tentpole replacement for the old
+/// global `InstanceSpec`.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    instances: Vec<InstanceSpec>,
+    topology: Topology,
+    /// Distinct device-class names, first-appearance order.
+    classes: Vec<&'static str>,
+    /// instance -> index into `classes`.
+    class_idx: Vec<usize>,
+}
+
+impl ClusterSpec {
+    /// Cluster over `instances` with the default (local-link) topology.
+    pub fn new(instances: Vec<InstanceSpec>) -> ClusterSpec {
+        let topology = Topology::local_default(&instances);
+        Self::with_topology(instances, topology)
+    }
+
+    pub fn with_topology(instances: Vec<InstanceSpec>, topology: Topology) -> ClusterSpec {
+        assert!(!instances.is_empty(), "cluster needs at least one instance");
+        assert_eq!(topology.n(), instances.len(),
+                   "topology size must match instance count");
+        let mut classes: Vec<&'static str> = Vec::new();
+        let mut class_idx = Vec::with_capacity(instances.len());
+        for inst in &instances {
+            let c = match classes.iter().position(|&n| n == inst.device.name) {
+                Some(c) => c,
+                None => {
+                    classes.push(inst.device.name);
+                    classes.len() - 1
+                }
+            };
+            class_idx.push(c);
+        }
+        ClusterSpec { instances, topology, classes, class_idx }
+    }
+
+    /// `n` identical instances of `device` at the default TP.
+    pub fn homogeneous(device: DeviceSpec, n: usize) -> ClusterSpec {
+        ClusterSpec::new(vec![InstanceSpec::new(device); n])
+    }
+
+    /// Parse a cluster spec string.
+    ///
+    /// Grammar: `["mixed:"] segment ("+" segment)*` where a segment is
+    /// `device["x"count]["@tp"N]`, e.g. `h100x8`,
+    /// `mixed:h100x4+910b2x4`, `a100x2@tp8+mi300x`.
+    pub fn parse(spec: &str) -> Result<ClusterSpec, String> {
+        let body = spec.trim();
+        let body = body.strip_prefix("mixed:").unwrap_or(body);
+        if body.is_empty() {
+            return Err("empty cluster spec".to_string());
+        }
+        let mut instances = Vec::new();
+        for seg in body.split('+') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(format!("empty segment in cluster spec '{spec}'"));
+            }
+            let (seg, tp) = match seg.split_once('@') {
+                Some((head, t)) => {
+                    let t = t.strip_prefix("tp").ok_or_else(|| {
+                        format!("bad suffix '@{t}' in '{seg}' (expected @tpN)")
+                    })?;
+                    let tp: usize = t.parse().map_err(|_| {
+                        format!("bad TP degree in '{seg}' (expected @tpN)")
+                    })?;
+                    if tp == 0 {
+                        return Err(format!("TP degree must be >= 1 in '{seg}'"));
+                    }
+                    (head, tp)
+                }
+                None => (seg, DEFAULT_TP),
+            };
+            let (dev_name, count) = split_count(seg)?;
+            let device = DeviceSpec::by_name(dev_name)?;
+            for _ in 0..count {
+                instances.push(InstanceSpec::with_tp(device, tp));
+            }
+        }
+        Ok(ClusterSpec::new(instances))
+    }
+
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    pub fn instance(&self, i: usize) -> InstanceSpec {
+        self.instances[i]
+    }
+
+    pub fn instances(&self) -> &[InstanceSpec] {
+        &self.instances
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// Distinct device-class names (first-appearance order).
+    pub fn classes(&self) -> &[&'static str] {
+        &self.classes
+    }
+
+    /// Device-class index of instance `i` (into [`Self::classes`]).
+    pub fn class_of(&self, i: usize) -> usize {
+        self.class_idx[i]
+    }
+
+    pub fn is_homogeneous(&self) -> bool {
+        self.classes.len() == 1
+            && self.instances.iter().all(|s| s.tp == self.instances[0].tp)
+    }
+
+    /// Canonical spec string: consecutive runs collapsed, lowercase,
+    /// e.g. `h100x4+910b2x4`.  `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < self.instances.len() {
+            let cur = self.instances[i];
+            let mut j = i + 1;
+            while j < self.instances.len()
+                && self.instances[j].device.name == cur.device.name
+                && self.instances[j].tp == cur.tp
+            {
+                j += 1;
+            }
+            let mut part =
+                format!("{}x{}", cur.device.name.to_ascii_lowercase(), j - i);
+            if cur.tp != DEFAULT_TP {
+                part.push_str(&format!("@tp{}", cur.tp));
+            }
+            parts.push(part);
+            i = j;
+        }
+        parts.join("+")
+    }
+
+    /// Replace the topology with an inter-node network model (intra-pair
+    /// links keep the local NVLink/HCCS rule).
+    pub fn set_network_bw(&mut self, network_bw: f64) {
+        self.topology = Topology::with_network(&self.instances, network_bw);
+    }
+
+    /// Override one link of the topology (symmetric).
+    pub fn set_link_bw(&mut self, a: usize, b: usize, bw: f64) -> Result<(), String> {
+        if a >= self.len() || b >= self.len() {
+            return Err(format!(
+                "link ({a},{b}) out of range for a {}-instance cluster",
+                self.len()
+            ));
+        }
+        if bw <= 0.0 {
+            return Err(format!("link ({a},{b}) bandwidth must be positive"));
+        }
+        self.topology.set_link(a, b, bw);
+        Ok(())
+    }
+}
+
+/// Split `deviceXcount` into (`device`, count): the suffix after the
+/// LAST 'x' counts only if it is all digits (so `mi300x` parses as a
+/// bare device and `mi300xx2` as two MI300X instances).
+fn split_count(seg: &str) -> Result<(&str, usize), String> {
+    if let Some(pos) = seg.rfind('x') {
+        let (head, tail) = (&seg[..pos], &seg[pos + 1..]);
+        if !head.is_empty()
+            && !tail.is_empty()
+            && tail.bytes().all(|b| b.is_ascii_digit())
+        {
+            let n: usize = tail
+                .parse()
+                .map_err(|_| format!("bad instance count in '{seg}'"))?;
+            if n == 0 {
+                return Err(format!("instance count must be >= 1 in '{seg}'"));
+            }
+            return Ok((head, n));
+        }
+    }
+    Ok((seg, 1))
 }
 
 #[cfg(test)]
@@ -108,7 +464,14 @@ mod tests {
     fn lookup_by_name() {
         assert_eq!(DeviceSpec::by_name("h100").unwrap().name, "H100");
         assert_eq!(DeviceSpec::by_name("910B2").unwrap().name, "910B2");
-        assert!(DeviceSpec::by_name("a100").is_none());
+        assert_eq!(DeviceSpec::by_name("a100").unwrap().name, "A100");
+        assert_eq!(DeviceSpec::by_name("MI300X").unwrap().name, "MI300X");
+        let err = DeviceSpec::by_name("tpu9").unwrap_err();
+        assert!(err.contains("unknown device 'tpu9'"), "{err}");
+        for d in ALL_DEVICES {
+            assert!(err.contains(&d.name.to_ascii_lowercase()),
+                    "error must list {}: {err}", d.name);
+        }
     }
 
     #[test]
@@ -117,5 +480,96 @@ mod tests {
         assert_eq!(inst.tp, 4);
         assert_eq!(inst.flops(), 4.0 * 989e12);
         assert_eq!(inst.hbm_bytes(), 320e9);
+        let tp8 = InstanceSpec::with_tp(A100, 8);
+        assert_eq!(tp8.flops(), 8.0 * 312e12);
+    }
+
+    #[test]
+    fn placement_signals_order_devices_sensibly() {
+        // H100 is prefill-leaning vs 910B2 on BOTH axes, but its
+        // prefill edge (~3.7x) dwarfs its decode edge (~1.9x) — the
+        // asymmetry hardware-aware pairing exploits.
+        let h = InstanceSpec::new(H100);
+        let a = InstanceSpec::new(ASCEND_910B2);
+        let prefill_ratio = h.prefill_flops() / a.prefill_flops();
+        let decode_ratio = h.decode_bw() / a.decode_bw();
+        assert!(prefill_ratio > 3.0 && prefill_ratio < 4.5);
+        assert!(decode_ratio > 1.5 && decode_ratio < 2.2);
+        assert!(prefill_ratio > 1.5 * decode_ratio);
+    }
+
+    #[test]
+    fn parse_homogeneous_and_mixed() {
+        let c = ClusterSpec::parse("h100x8").unwrap();
+        assert_eq!(c.len(), 8);
+        assert!(c.is_homogeneous());
+        assert_eq!(c.classes(), ["H100"]);
+        assert_eq!(c.name(), "h100x8");
+
+        let m = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        assert_eq!(m.len(), 8);
+        assert!(!m.is_homogeneous());
+        assert_eq!(m.classes(), ["H100", "910B2"]);
+        assert_eq!(m.class_of(0), 0);
+        assert_eq!(m.class_of(7), 1);
+        assert_eq!(m.name(), "h100x4+910b2x4");
+        // Round-trip.
+        let m2 = ClusterSpec::parse(&m.name()).unwrap();
+        assert_eq!(m2.instances(), m.instances());
+    }
+
+    #[test]
+    fn parse_counts_tp_and_odd_names() {
+        let c = ClusterSpec::parse("a100x2@tp8+mi300x").unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.instance(0).tp, 8);
+        assert_eq!(c.instance(2).device.name, "MI300X");
+        assert_eq!(c.instance(2).tp, DEFAULT_TP);
+        // `mi300xx2` = two MI300X (last-x-digits rule).
+        let d = ClusterSpec::parse("mi300xx2").unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.instance(1).device.name, "MI300X");
+        // Bare device = one instance.
+        assert_eq!(ClusterSpec::parse("h100").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "mixed:", "h100x0", "h100x4@tp0", "h100x4@t4",
+                    "nope4", "h100++910b2", "x4"] {
+            assert!(ClusterSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+        // Unknown devices propagate the helpful device list.
+        let err = ClusterSpec::parse("h100x2+tpu9x2").unwrap_err();
+        assert!(err.contains("known devices"), "{err}");
+    }
+
+    #[test]
+    fn default_topology_reproduces_flat_legacy_model() {
+        let c = ClusterSpec::homogeneous(H100, 4);
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(c.topology().link_bw(a, b), H100.local_conn_bw);
+            }
+        }
+        // Mixed: a cross-device link runs at the slower endpoint.
+        let m = ClusterSpec::parse("h100x2+910b2x2").unwrap();
+        assert_eq!(m.topology().link_bw(0, 1), H100.local_conn_bw);
+        assert_eq!(m.topology().link_bw(0, 2), ASCEND_910B2.local_conn_bw);
+        assert_eq!(m.topology().link_bw(2, 3), ASCEND_910B2.local_conn_bw);
+    }
+
+    #[test]
+    fn network_and_link_overrides() {
+        let mut c = ClusterSpec::homogeneous(H100, 4);
+        c.set_network_bw(100e9);
+        // Intra-pair links keep NVLink, cross-pair links get the network.
+        assert_eq!(c.topology().link_bw(0, 1), 900e9);
+        assert_eq!(c.topology().link_bw(2, 3), 900e9);
+        assert_eq!(c.topology().link_bw(1, 2), 100e9);
+        c.set_link_bw(1, 2, 50e9).unwrap();
+        assert_eq!(c.topology().link_bw(1, 2), 50e9);
+        assert_eq!(c.topology().link_bw(2, 1), 50e9);
+        assert!(c.set_link_bw(0, 9, 1e9).is_err());
     }
 }

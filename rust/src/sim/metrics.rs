@@ -5,6 +5,9 @@
 //! * **TBT**  — time between tokens (every inter-token gap is a sample),
 //! * **JCT**  — job completion time (arrival -> EOS),
 //! * **cost efficiency** — decode tokens per instance per second.
+//!
+//! On heterogeneous clusters every metric is additionally broken down
+//! per device class (H100 vs 910B2 vs ...) — see [`DeviceClassReport`].
 
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -33,22 +36,67 @@ pub struct MetricsCollector {
     pub prefix_misses: u64,
     pub prefix_saved_tokens: u64,
     pub prefix_evictions: u64,
+    /// Per-device-class TTFT (index = `ClusterSpec::class_of` of the
+    /// instance that ran the prefill).
+    pub ttft_by_class: Vec<Summary>,
+    /// Per-device-class decode tokens (index = class of the decoding
+    /// instance).
+    pub decode_tokens_by_class: Vec<u64>,
 }
 
 impl MetricsCollector {
-    pub fn new(record_timeline: bool) -> Self {
+    pub fn new(record_timeline: bool, n_classes: usize) -> Self {
         MetricsCollector {
             record_timeline,
+            ttft_by_class: vec![Summary::new(); n_classes],
+            decode_tokens_by_class: vec![0; n_classes],
             ..Default::default()
         }
     }
 
-    pub fn token_gap(&mut self, now: f64, gap: f64) {
+    pub fn token_gap(&mut self, now: f64, gap: f64, class: usize) {
         self.tbt.add(gap);
         self.decode_tokens += 1;
+        self.decode_tokens_by_class[class] += 1;
         if self.record_timeline {
             self.tbt_timeline.push((now, gap));
         }
+    }
+
+    pub fn ttft_sample(&mut self, ttft: f64, class: usize) {
+        self.ttft.add(ttft);
+        self.ttft_by_class[class].add(ttft);
+    }
+}
+
+/// Per-device-class slice of a run (heterogeneous-cluster breakdown).
+#[derive(Clone, Debug)]
+pub struct DeviceClassReport {
+    pub device: String,
+    pub n_instances: usize,
+    /// Mean busy fraction of this class's instances.
+    pub utilization: f64,
+    /// Mean TTFT of requests whose prefill ran on this class.
+    pub ttft_mean: f64,
+    /// Decode tokens generated on this class.
+    pub decode_tokens: u64,
+    /// Decode tokens per class instance per second.
+    pub cost_efficiency: f64,
+    /// Peak per-instance KV bytes within the class.
+    pub peak_kv_bytes: f64,
+}
+
+impl DeviceClassReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", Json::str(&self.device)),
+            ("n_instances", Json::num(self.n_instances as f64)),
+            ("utilization", Json::num(self.utilization)),
+            ("ttft_mean", Json::num(self.ttft_mean)),
+            ("decode_tokens", Json::num(self.decode_tokens as f64)),
+            ("cost_efficiency", Json::num(self.cost_efficiency)),
+            ("peak_kv_gb", Json::num(self.peak_kv_bytes / 1e9)),
+        ])
     }
 }
 
@@ -56,6 +104,7 @@ impl MetricsCollector {
 #[derive(Clone, Debug)]
 pub struct RunReport {
     pub scheduler: String,
+    /// Canonical cluster spec name (e.g. `h100x4`, `h100x4+910b2x4`).
     pub device: String,
     pub workload: String,
     pub n_instances: usize,
@@ -100,6 +149,10 @@ pub struct RunReport {
     /// Chunks evicted from the prefix index (capacity churn).
     pub prefix_evictions: u64,
 
+    /// Per-device-class breakdown (one entry per distinct device in the
+    /// cluster; a single entry on homogeneous clusters).
+    pub per_device: Vec<DeviceClassReport>,
+
     /// Raw timeline for Figure 16, if recorded.
     pub tbt_timeline: Vec<(f64, f64)>,
 }
@@ -135,6 +188,8 @@ impl RunReport {
             ("prefix_saved_tokens",
              Json::num(self.prefix_saved_tokens as f64)),
             ("prefix_evictions", Json::num(self.prefix_evictions as f64)),
+            ("per_device",
+             Json::arr(self.per_device.iter().map(|d| d.to_json()))),
         ])
     }
 
@@ -184,18 +239,30 @@ mod tests {
 
     #[test]
     fn collector_counts_tokens() {
-        let mut m = MetricsCollector::new(true);
-        m.token_gap(1.0, 0.02);
-        m.token_gap(1.02, 0.02);
+        let mut m = MetricsCollector::new(true, 2);
+        m.token_gap(1.0, 0.02, 0);
+        m.token_gap(1.02, 0.02, 1);
         assert_eq!(m.decode_tokens, 2);
         assert_eq!(m.tbt_timeline.len(), 2);
+        assert_eq!(m.decode_tokens_by_class, vec![1, 1]);
     }
 
     #[test]
     fn collector_timeline_disabled() {
-        let mut m = MetricsCollector::new(false);
-        m.token_gap(1.0, 0.02);
+        let mut m = MetricsCollector::new(false, 1);
+        m.token_gap(1.0, 0.02, 0);
         assert!(m.tbt_timeline.is_empty());
         assert_eq!(m.decode_tokens, 1);
+    }
+
+    #[test]
+    fn ttft_split_by_class() {
+        let mut m = MetricsCollector::new(false, 2);
+        m.ttft_sample(0.1, 0);
+        m.ttft_sample(0.3, 1);
+        m.ttft_sample(0.5, 1);
+        assert_eq!(m.ttft.len(), 3);
+        assert_eq!(m.ttft_by_class[0].len(), 1);
+        assert!((m.ttft_by_class[1].mean() - 0.4).abs() < 1e-12);
     }
 }

@@ -133,8 +133,10 @@ impl PerfModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::hardware::{ASCEND_910B2, H100, InstanceSpec};
+    use crate::sim::hardware::{ALL_DEVICES, ASCEND_910B2, A100, H100, MI300X,
+                               InstanceSpec};
     use crate::sim::llm::LLAMA2_70B;
+    use crate::util::quickcheck::{check, prop_assert};
 
     fn h100() -> PerfModel {
         PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B)
@@ -224,9 +226,84 @@ mod tests {
     }
 
     #[test]
-    fn kv_capacity_positive_on_both_devices() {
+    fn kv_capacity_positive_on_all_devices() {
         assert!(h100().kv_capacity_bytes() > 100e9);
         assert!(ascend().kv_capacity_bytes() > 80e9);
+        for dev in ALL_DEVICES {
+            let m = PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B);
+            assert!(m.kv_capacity_bytes() > 0.0, "{} has no KV room",
+                    dev.name);
+        }
+        // MI300X's 192 GB HBM gives it by far the deepest KV pool.
+        let mi = PerfModel::new(InstanceSpec::new(MI300X), LLAMA2_70B);
+        assert!(mi.kv_capacity_bytes() > 2.0 * h100().kv_capacity_bytes());
+    }
+
+    #[test]
+    fn a100_sits_between_ascend_and_h100_on_prefill() {
+        let a100 = PerfModel::new(InstanceSpec::new(A100), LLAMA2_70B);
+        let t = a100.prefill_time_one(750);
+        assert!(t > h100().prefill_time_one(750));
+        assert!(t < ascend().prefill_time_one(750));
+    }
+
+    /// Property (every device x TP degree): more prompt tokens never
+    /// prefill faster.
+    #[test]
+    fn prop_prefill_time_monotone_in_prompt_tokens() {
+        check(
+            150,
+            |rng| {
+                let dev = ALL_DEVICES[rng.uniform_usize(0, ALL_DEVICES.len() - 1)];
+                let tp = *rng.choose(&[2usize, 4, 8]).unwrap();
+                let base = rng.uniform_u64(1, 4000) as u32;
+                let extra = rng.uniform_u64(0, 2000) as u32;
+                (dev, tp, base, extra)
+            },
+            |&(dev, tp, base, extra)| {
+                let m = PerfModel::new(InstanceSpec::with_tp(dev, tp),
+                                       LLAMA2_70B);
+                let t1 = m.prefill_time_one(base);
+                let t2 = m.prefill_time_one(base + extra);
+                prop_assert(t2 >= t1,
+                            &format!("{}@tp{tp}: prefill({}) = {t2} < \
+                                      prefill({base}) = {t1}",
+                                     dev.name, base + extra))
+            },
+        );
+    }
+
+    /// Property (every device x TP degree): a larger batch or more live
+    /// KV never makes a decode step faster.
+    #[test]
+    fn prop_decode_step_monotone_in_batch_and_kv() {
+        check(
+            150,
+            |rng| {
+                let dev = ALL_DEVICES[rng.uniform_usize(0, ALL_DEVICES.len() - 1)];
+                let tp = *rng.choose(&[2usize, 4, 8]).unwrap();
+                let batch = rng.uniform_usize(1, 256);
+                let extra_batch = rng.uniform_usize(0, 64);
+                let kv = rng.uniform_f64(0.0, 2e6);
+                let extra_kv = rng.uniform_f64(0.0, 5e5);
+                (dev, tp, batch, extra_batch, kv, extra_kv)
+            },
+            |&(dev, tp, batch, extra_batch, kv, extra_kv)| {
+                let m = PerfModel::new(InstanceSpec::with_tp(dev, tp),
+                                       LLAMA2_70B);
+                let base = m.decode_step_time(batch, kv);
+                prop_assert(
+                    m.decode_step_time(batch + extra_batch, kv) >= base,
+                    &format!("{}@tp{tp}: batch {} decodes faster than {batch}",
+                             dev.name, batch + extra_batch),
+                )?;
+                prop_assert(
+                    m.decode_step_time(batch, kv + extra_kv) >= base,
+                    &format!("{}@tp{tp}: kv {} decodes faster than {kv}",
+                             dev.name, kv + extra_kv),
+                )
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Heterogeneous-cluster integration tests: mixed fleets end-to-end for
+//! every scheduler, invariant validation on per-instance capacities,
+//! and the homogeneous regression pin for the ClusterSpec refactor.
+
+use accellm::coordinator::{by_name, AcceLlm, AcceLlmPrefix, Splitwise,
+                           Validated, Vllm, ALL_SCHEDULERS};
+use accellm::sim::{run, ClusterSpec, RunReport, Scheduler, SimConfig, H100,
+                   LLAMA2_70B};
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::util::rng::Pcg64;
+use accellm::workload::{Trace, CHAT, MIXED};
+
+/// Field-by-field bit equality of two runs (the refactor must not
+/// perturb event ordering or float arithmetic).
+fn assert_reports_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.ttft_mean, b.ttft_mean, "{tag}: ttft_mean");
+    assert_eq!(a.ttft_p99, b.ttft_p99, "{tag}: ttft_p99");
+    assert_eq!(a.tbt_mean, b.tbt_mean, "{tag}: tbt_mean");
+    assert_eq!(a.tbt_max, b.tbt_max, "{tag}: tbt_max");
+    assert_eq!(a.jct_mean, b.jct_mean, "{tag}: jct_mean");
+    assert_eq!(a.cost_efficiency, b.cost_efficiency, "{tag}: cost_eff");
+    assert_eq!(a.utilization, b.utilization, "{tag}: utilization");
+    assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes, "{tag}: peak_kv");
+    assert_eq!(a.xfer_prefill_bytes, b.xfer_prefill_bytes, "{tag}: xfer");
+    assert_eq!(a.xfer_replica_bytes, b.xfer_replica_bytes, "{tag}: replica");
+    assert_eq!(a.prefix_hits, b.prefix_hits, "{tag}: prefix_hits");
+    assert_eq!(a.prefix_saved_tokens, b.prefix_saved_tokens,
+               "{tag}: saved tokens");
+}
+
+/// Regression pin for the ClusterSpec refactor: on a homogeneous
+/// cluster, every spec path (legacy-shaped `SimConfig::homogeneous`,
+/// parsed `ClusterSpec`, explicit flat-topology override at the device
+/// bandwidth, and capacity-blind identity pairing) must produce the
+/// SAME RunReport bit-for-bit — i.e. the per-instance machinery exactly
+/// reproduces the old single-global-spec simulator.  (The absolute
+/// values themselves are pinned by the calibration anchors in
+/// `sim::perfmodel` and the scheduler unit tests.)
+#[test]
+fn homogeneous_results_pinned_across_spec_paths() {
+    let trace = Trace::poisson(MIXED, 8.0, 60.0, 7);
+
+    let legacy = SimConfig::homogeneous(H100, 4);
+    let parsed = SimConfig::new(ClusterSpec::parse("h100x4").unwrap(),
+                                LLAMA2_70B);
+    let mut flat = SimConfig::homogeneous(H100, 4);
+    flat.interconnect_bw = Some(H100.local_conn_bw);
+
+    for sched in ALL_SCHEDULERS {
+        let r_legacy = run(&legacy, &trace,
+                           by_name(sched, &legacy.cluster).unwrap().as_mut());
+        let r_parsed = run(&parsed, &trace,
+                           by_name(sched, &parsed.cluster).unwrap().as_mut());
+        let r_flat = run(&flat, &trace,
+                         by_name(sched, &flat.cluster).unwrap().as_mut());
+        assert_reports_identical(&r_legacy, &r_parsed,
+                                 &format!("{sched}: legacy vs parsed"));
+        assert_reports_identical(&r_legacy, &r_flat,
+                                 &format!("{sched}: legacy vs flat-override"));
+        assert_eq!(r_legacy.completed, trace.len(), "{sched}");
+    }
+
+    // Hardware-aware pairing degenerates to identity pairing on a
+    // homogeneous cluster: `accellm` == `accellm-blind` bit-for-bit.
+    let aware = run(&legacy, &trace, &mut AcceLlm::new(&legacy.cluster));
+    let blind = run(&legacy, &trace,
+                    &mut AcceLlm::with_identity_pairing(&legacy.cluster));
+    assert_reports_identical(&aware, &blind, "aware vs blind (homogeneous)");
+}
+
+/// Acceptance: a mixed h100x4+910b2x4 run works end-to-end for all four
+/// schedulers, under the full invariant validator (per-instance
+/// capacities, replica/primary accounting).
+#[test]
+fn mixed_cluster_all_schedulers_validated() {
+    let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+    let cfg = SimConfig::new(cluster, LLAMA2_70B);
+    let trace = Trace::poisson(MIXED, 6.0, 30.0, 11);
+    let mut scheds: Vec<(&str, Box<dyn Scheduler>)> = vec![
+        ("accellm", Box::new(Validated::new(AcceLlm::new(&cfg.cluster)))),
+        ("splitwise",
+         Box::new(Validated::new(Splitwise::new(&cfg.cluster)))),
+        ("vllm", Box::new(Validated::new(Vllm::new(cfg.cluster.len())))),
+        ("accellm-prefix",
+         Box::new(Validated::new(AcceLlmPrefix::new(&cfg.cluster)))),
+        ("accellm-blind",
+         Box::new(Validated::new(
+             AcceLlm::with_identity_pairing(&cfg.cluster)))),
+    ];
+    for (name, s) in &mut scheds {
+        let r = run(&cfg, &trace, s.as_mut());
+        assert_eq!(r.completed, trace.len(), "{name}");
+        assert_eq!(r.per_device.len(), 2, "{name}");
+    }
+}
+
+/// Property: every scheduler completes every request on randomized
+/// mixed-fleet scenarios spanning all four device types.
+#[test]
+fn prop_mixed_fleets_complete_all_requests() {
+    const SPECS: [&str; 4] = [
+        "mixed:h100x4+910b2x4",
+        "h100x2+910b2x6",
+        "a100x4+h100x4",
+        "mi300xx2+910b2x2",
+    ];
+
+    #[derive(Debug)]
+    struct Scenario {
+        spec: &'static str,
+        rate: f64,
+        duration: f64,
+        seed: u64,
+    }
+
+    check(
+        10,
+        |rng: &mut Pcg64| Scenario {
+            spec: SPECS[rng.uniform_usize(0, SPECS.len() - 1)],
+            rate: rng.uniform_f64(1.0, 10.0),
+            duration: rng.uniform_f64(5.0, 25.0),
+            seed: rng.next_u64(),
+        },
+        |sc| {
+            let cluster = ClusterSpec::parse(sc.spec).unwrap();
+            let cfg = SimConfig::new(cluster, LLAMA2_70B);
+            let trace = Trace::poisson(MIXED, sc.rate, sc.duration, sc.seed);
+            if trace.is_empty() {
+                return Ok(());
+            }
+            for name in ALL_SCHEDULERS {
+                let mut s = by_name(name, &cfg.cluster).unwrap();
+                let r = run(&cfg, &trace, s.as_mut());
+                prop_assert(r.completed == trace.len(),
+                            &format!("{name} on {}: {}/{} completed",
+                                     sc.spec, r.completed, trace.len()))?;
+                let class_tokens: u64 =
+                    r.per_device.iter().map(|d| d.decode_tokens).sum();
+                let want: u64 = trace
+                    .requests
+                    .iter()
+                    .map(|q| q.decode_len as u64)
+                    .sum();
+                prop_assert(class_tokens == want,
+                            &format!("{name} on {}: class tokens {} != {}",
+                                     sc.spec, class_tokens, want))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Capacity-weighted CHWBL composes with the session workloads on a
+/// mixed cluster: determinism + nonzero locality.
+#[test]
+fn mixed_cluster_prefix_routing_deterministic_with_hits() {
+    let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+    let cfg = SimConfig::new(cluster, LLAMA2_70B);
+    let trace = Trace::generate(CHAT, 4.0, 40.0, 13);
+    let r1 = run(&cfg, &trace,
+                 by_name("accellm-prefix", &cfg.cluster).unwrap().as_mut());
+    let r2 = run(&cfg, &trace,
+                 by_name("accellm-prefix", &cfg.cluster).unwrap().as_mut());
+    assert_eq!(r1.completed, trace.len());
+    assert!(r1.prefix_hit_rate > 0.2, "hit rate {}", r1.prefix_hit_rate);
+    assert_reports_identical(&r1, &r2, "prefix determinism (mixed)");
+}
+
+/// Per-link transfer pricing: forcing every link to 1 GB/s must slow
+/// Splitwise's hand-offs on the mixed cluster exactly like the global
+/// override does (both paths meter identical bytes).
+#[test]
+fn topology_link_pricing_matches_flat_override() {
+    let trace = Trace::poisson(MIXED, 6.0, 30.0, 17);
+    // Path A: per-link topology, every link overridden to 1 GB/s.
+    let mut cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+    for a in 0..cluster.len() {
+        for b in 0..cluster.len() {
+            if a != b {
+                cluster.set_link_bw(a, b, 1e9).unwrap();
+            }
+        }
+    }
+    let cfg_links = SimConfig::new(cluster, LLAMA2_70B);
+    // Path B: the global flat override.
+    let mut cfg_flat =
+        SimConfig::new(ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap(),
+                       LLAMA2_70B);
+    cfg_flat.interconnect_bw = Some(1e9);
+
+    let ra = run(&cfg_links, &trace,
+                 by_name("splitwise", &cfg_links.cluster).unwrap().as_mut());
+    let rb = run(&cfg_flat, &trace,
+                 by_name("splitwise", &cfg_flat.cluster).unwrap().as_mut());
+    assert_reports_identical(&ra, &rb, "link matrix vs flat override");
+    // And the slow link must actually hurt vs the NVLink default.
+    let cfg_fast =
+        SimConfig::new(ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap(),
+                       LLAMA2_70B);
+    let rf = run(&cfg_fast, &trace,
+                 by_name("splitwise", &cfg_fast.cluster).unwrap().as_mut());
+    assert!(ra.jct_mean > rf.jct_mean,
+            "1 GB/s links {} must be slower than NVLink {}", ra.jct_mean,
+            rf.jct_mean);
+}

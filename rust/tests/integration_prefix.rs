@@ -3,19 +3,13 @@
 
 use accellm::coordinator::by_name;
 use accellm::prefix::{ChwblRouter, PrefixIndex, CHUNK_TOKENS};
-use accellm::sim::{run, InstanceSpec, PerfModel, SimConfig, H100,
-                   LLAMA2_70B};
+use accellm::sim::{run, SimConfig, H100};
 use accellm::util::quickcheck::{check, prop_assert};
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec, CHAT, SHARED_DOC};
 
 fn cfg(n: usize) -> SimConfig {
-    SimConfig {
-        model: PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B),
-        n_instances: n,
-        interconnect_bw: None,
-        record_timeline: false,
-    }
+    SimConfig::homogeneous(H100, n)
 }
 
 /// End-to-end acceptance path: the CLI-equivalent invocation
@@ -25,8 +19,9 @@ fn cfg(n: usize) -> SimConfig {
 fn chat_end_to_end_nonzero_hit_rate() {
     let trace = Trace::generate(CHAT, 6.0, 60.0, 7);
     assert!(!trace.is_empty());
-    let mut s = by_name("accellm-prefix", 4).unwrap();
-    let r = run(&cfg(4), &trace, s.as_mut());
+    let c = cfg(4);
+    let mut s = by_name("accellm-prefix", &c.cluster).unwrap();
+    let r = run(&c, &trace, s.as_mut());
     assert_eq!(r.completed, trace.len());
     assert!(r.prefix_hit_rate > 0.0, "hit rate {}", r.prefix_hit_rate);
     assert!(r.prefix_saved_tokens > 0);
@@ -50,10 +45,11 @@ fn chat_end_to_end_nonzero_hit_rate() {
 fn prefix_beats_accellm_ttft_on_session_workloads() {
     for (wl, rate, seed) in [(CHAT, 6.0, 21), (SHARED_DOC, 4.0, 22)] {
         let trace = Trace::generate(wl, rate, 60.0, seed);
-        let pfx = run(&cfg(4), &trace,
-                      by_name("accellm-prefix", 4).unwrap().as_mut());
-        let acc = run(&cfg(4), &trace,
-                      by_name("accellm", 4).unwrap().as_mut());
+        let c = cfg(4);
+        let pfx = run(&c, &trace,
+                      by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
+        let acc = run(&c, &trace,
+                      by_name("accellm", &c.cluster).unwrap().as_mut());
         assert_eq!(pfx.completed, trace.len(), "{}", wl.name);
         assert_eq!(acc.completed, trace.len(), "{}", wl.name);
         assert!(pfx.ttft_mean < acc.ttft_mean,
@@ -70,10 +66,11 @@ fn prefix_beats_accellm_ttft_on_session_workloads() {
 #[test]
 fn prefix_sim_is_deterministic() {
     let trace = Trace::generate(CHAT, 6.0, 40.0, 5);
-    let r1 = run(&cfg(4), &trace,
-                 by_name("accellm-prefix", 4).unwrap().as_mut());
-    let r2 = run(&cfg(4), &trace,
-                 by_name("accellm-prefix", 4).unwrap().as_mut());
+    let c = cfg(4);
+    let r1 = run(&c, &trace,
+                 by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
+    let r2 = run(&c, &trace,
+                 by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
     assert_eq!(r1.jct_mean, r2.jct_mean);
     assert_eq!(r1.ttft_p99, r2.ttft_p99);
     assert_eq!(r1.prefix_hits, r2.prefix_hits);
@@ -109,8 +106,9 @@ fn prop_prefix_scheduler_sound_on_random_sessions() {
             if trace.is_empty() {
                 return Ok(());
             }
-            let mut s = by_name("accellm-prefix", sc.n).unwrap();
-            let r = run(&cfg(sc.n), &trace, s.as_mut());
+            let c = cfg(sc.n);
+            let mut s = by_name("accellm-prefix", &c.cluster).unwrap();
+            let r = run(&c, &trace, s.as_mut());
             prop_assert(r.completed == trace.len(),
                         &format!("{}/{} completed", r.completed, trace.len()))?;
             let want: u64 =

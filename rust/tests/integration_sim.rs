@@ -9,12 +9,7 @@ use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
 
 fn cfg(dev: DeviceSpec, n: usize) -> SimConfig {
-    SimConfig {
-        model: PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B),
-        n_instances: n,
-        interconnect_bw: None,
-        record_timeline: false,
-    }
+    SimConfig::homogeneous(dev, n)
 }
 
 /// Property: every scheduler completes every request of any trace, and
@@ -48,9 +43,10 @@ fn prop_all_schedulers_complete_all_requests() {
             if trace.is_empty() {
                 return Ok(());
             }
+            let c = cfg(sc.dev, sc.n);
             for name in ALL_SCHEDULERS {
-                let mut s = by_name(name, sc.n).unwrap();
-                let r = run(&cfg(sc.dev, sc.n), &trace, s.as_mut());
+                let mut s = by_name(name, &c.cluster).unwrap();
+                let r = run(&c, &trace, s.as_mut());
                 prop_assert(r.completed == trace.len(),
                             &format!("{name}: {}/{} completed", r.completed,
                                      trace.len()))?;
@@ -83,9 +79,10 @@ fn prop_all_schedulers_complete_all_requests() {
 #[test]
 fn sim_is_deterministic() {
     let trace = Trace::poisson(MIXED, 9.0, 40.0, 5);
+    let c = cfg(H100, 4);
     for name in ALL_SCHEDULERS {
-        let r1 = run(&cfg(H100, 4), &trace, by_name(name, 4).unwrap().as_mut());
-        let r2 = run(&cfg(H100, 4), &trace, by_name(name, 4).unwrap().as_mut());
+        let r1 = run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut());
+        let r2 = run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut());
         assert_eq!(r1.jct_mean, r2.jct_mean, "{name}");
         assert_eq!(r1.ttft_p99, r2.ttft_p99, "{name}");
         assert_eq!(r1.cost_efficiency, r2.cost_efficiency, "{name}");
@@ -102,7 +99,7 @@ fn paper_headline_ordering() {
     cfg_t.record_timeline = true;
     let mut reports = Vec::new();
     for name in ALL_SCHEDULERS {
-        let mut s = by_name(name, 4).unwrap();
+        let mut s = by_name(name, &cfg_t.cluster).unwrap();
         reports.push(run(&cfg_t, &trace, s.as_mut()));
     }
     let (acc, spl, _vll) = (&reports[0], &reports[1], &reports[2]);
@@ -114,8 +111,10 @@ fn paper_headline_ordering() {
     // phenomenon: at deep overload every system's worst gap is dominated
     // by batch-cap queueing.  Compare at 8 req/s.
     let moderate = Trace::poisson(MIXED, 8.0, 60.0, 18);
-    let acc_m = run(&cfg_t, &moderate, by_name("accellm", 4).unwrap().as_mut());
-    let vll_m = run(&cfg_t, &moderate, by_name("vllm", 4).unwrap().as_mut());
+    let acc_m = run(&cfg_t, &moderate,
+                    by_name("accellm", &cfg_t.cluster).unwrap().as_mut());
+    let vll_m = run(&cfg_t, &moderate,
+                    by_name("vllm", &cfg_t.cluster).unwrap().as_mut());
     assert!(vll_m.tbt_max > 1.25 * acc_m.tbt_max,
             "vllm spikes must dominate: {} vs {}", vll_m.tbt_max,
             acc_m.tbt_max);
@@ -126,10 +125,9 @@ fn paper_headline_ordering() {
 #[test]
 fn ascend_prefill_overload_shape() {
     let hi = Trace::poisson(MIXED, 10.0, 60.0, 23);
-    let spl = run(&cfg(ASCEND_910B2, 4), &hi,
-                  by_name("splitwise", 4).unwrap().as_mut());
-    let acc = run(&cfg(ASCEND_910B2, 4), &hi,
-                  by_name("accellm", 4).unwrap().as_mut());
+    let c = cfg(ASCEND_910B2, 4);
+    let spl = run(&c, &hi, by_name("splitwise", &c.cluster).unwrap().as_mut());
+    let acc = run(&c, &hi, by_name("accellm", &c.cluster).unwrap().as_mut());
     assert!(spl.ttft_mean > 3.0 * acc.ttft_mean,
             "spl {} vs acc {}", spl.ttft_mean, acc.ttft_mean);
 }
@@ -143,7 +141,7 @@ fn interconnect_sweep_shape() {
     let run_bw = |name: &str, bw: f64| {
         let mut c = cfg(H100, 4);
         c.interconnect_bw = Some(bw);
-        run(&c, &trace, by_name(name, 4).unwrap().as_mut())
+        run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut())
     };
     // Splitwise funnels EVERY prompt's KV through one prefill NIC: a
     // 1 GB/s link saturates (8 req/s x ~510 tok x 320 KiB ≈ 1.3 GB/s)
@@ -175,8 +173,9 @@ fn interconnect_sweep_shape() {
 #[test]
 fn redundancy_memory_overhead_shape() {
     let trace = Trace::poisson(MIXED, 8.0, 60.0, 31);
-    let acc = run(&cfg(H100, 4), &trace, by_name("accellm", 4).unwrap().as_mut());
-    let vll = run(&cfg(H100, 4), &trace, by_name("vllm", 4).unwrap().as_mut());
+    let c = cfg(H100, 4);
+    let acc = run(&c, &trace, by_name("accellm", &c.cluster).unwrap().as_mut());
+    let vll = run(&c, &trace, by_name("vllm", &c.cluster).unwrap().as_mut());
     assert!(acc.peak_kv_bytes > vll.peak_kv_bytes,
             "replicas must cost memory: acc {} vllm {}",
             acc.peak_kv_bytes, vll.peak_kv_bytes);
@@ -191,8 +190,10 @@ fn redundancy_memory_overhead_shape() {
 fn scaling_with_instances() {
     let t4 = Trace::poisson(MIXED, 8.0, 60.0, 37);
     let t8 = Trace::poisson(MIXED, 16.0, 60.0, 37);
-    let r4 = run(&cfg(H100, 4), &t4, by_name("accellm", 4).unwrap().as_mut());
-    let r8 = run(&cfg(H100, 8), &t8, by_name("accellm", 8).unwrap().as_mut());
+    let c4 = cfg(H100, 4);
+    let c8 = cfg(H100, 8);
+    let r4 = run(&c4, &t4, by_name("accellm", &c4.cluster).unwrap().as_mut());
+    let r8 = run(&c8, &t8, by_name("accellm", &c8.cluster).unwrap().as_mut());
     assert_eq!(r4.completed, t4.len());
     assert_eq!(r8.completed, t8.len());
     assert!(r8.jct_mean < r4.jct_mean * 1.5,
@@ -204,9 +205,10 @@ fn scaling_with_instances() {
 #[test]
 fn replica_traffic_decomposition() {
     let trace = Trace::poisson(MIXED, 8.0, 60.0, 41);
-    let acc = run(&cfg(H100, 4), &trace, by_name("accellm", 4).unwrap().as_mut());
-    let spl = run(&cfg(H100, 4), &trace,
-                  by_name("splitwise", 4).unwrap().as_mut());
+    let c = cfg(H100, 4);
+    let acc = run(&c, &trace, by_name("accellm", &c.cluster).unwrap().as_mut());
+    let spl = run(&c, &trace,
+                  by_name("splitwise", &c.cluster).unwrap().as_mut());
     assert!(acc.xfer_replica_bytes > 0.0);
     assert_eq!(spl.xfer_replica_bytes, 0.0);
     // Replica updates are one KV line per token; prefill hand-off moves

@@ -72,6 +72,16 @@ macro_rules! bail {
     };
 }
 
+/// Return early with an [`Error`] when `cond` is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 /// Extension trait adding `.context(..)` / `.with_context(..)` to
 /// `Result` and `Option`.
 pub trait Context<T> {
@@ -137,6 +147,13 @@ mod tests {
             bail!("nope");
         }
         assert_eq!(bails().unwrap_err().to_string(), "nope");
+
+        fn ensures(x: u32) -> Result<u32> {
+            ensure!(x > 2, "too small: {x}");
+            Ok(x)
+        }
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(1).unwrap_err().to_string(), "too small: 1");
 
         let r: std::result::Result<(), std::io::Error> = Err(
             std::io::Error::new(std::io::ErrorKind::Other, "inner"));
