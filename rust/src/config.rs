@@ -22,6 +22,12 @@
 //! NVLink/HCCS), `"links"` overrides individual links as
 //! `[src, dst, GB/s]` triples, and `"interconnect_gbs"` remains the
 //! global flat override used by the Figure 10 sweeps.
+//!
+//! `"contention": true` enables the shared-uplink contention model
+//! (each chassis gets one finite uplink whose capacity concurrent
+//! cross-chassis streams fair-share); the uplink capacity defaults to
+//! `network_gbs` and can be set independently with `"uplink_gbs"`
+//! (which implies contention).
 
 use std::path::Path;
 
@@ -128,11 +134,28 @@ impl Experiment {
         if let Some(v) = j.get("seed").and_then(|x| x.as_u64()) {
             exp.seed = v;
         }
-        if let Some(v) = j.get("network_gbs").and_then(|x| x.as_f64()) {
+        let network_gbs = j.get("network_gbs").and_then(|x| x.as_f64());
+        if let Some(v) = network_gbs {
             if v <= 0.0 {
                 return Err(anyhow!("config: network_gbs must be positive"));
             }
             exp.cluster.set_network_bw(v * 1e9);
+        }
+        let contention =
+            j.get("contention").and_then(|x| x.as_bool()).unwrap_or(false);
+        let uplink_gbs = j.get("uplink_gbs").and_then(|x| x.as_f64());
+        if let Some(v) = uplink_gbs {
+            if v <= 0.0 {
+                return Err(anyhow!("config: uplink_gbs must be positive"));
+            }
+            exp.cluster.enable_contention(v * 1e9);
+        } else if contention {
+            let v = network_gbs.ok_or_else(|| {
+                anyhow!("config: \"contention\" needs \"network_gbs\" (the \
+                         default uplink capacity) or an explicit \
+                         \"uplink_gbs\"")
+            })?;
+            exp.cluster.enable_contention(v * 1e9);
         }
         if let Some(links) = j.get("links").and_then(|x| x.as_arr()) {
             for link in links {
@@ -262,6 +285,36 @@ mod tests {
         .is_err());
         assert!(Experiment::from_json_text(
             r#"{"cluster":"h100x4","links":[[0,1]]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_contention_knobs() {
+        // contention: true takes the uplink capacity from network_gbs.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","network_gbs":50,"contention":true}"#,
+        )
+        .unwrap();
+        assert!(e.cluster.topology().contended());
+        assert_eq!(e.cluster.topology().uplink_bw(0), 50e9);
+        // uplink_gbs overrides (and implies) contention.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","network_gbs":50,"uplink_gbs":20}"#,
+        )
+        .unwrap();
+        assert_eq!(e.cluster.topology().uplink_bw(1), 20e9);
+        // Default: contention off.
+        let e = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert!(!e.cluster.topology().contended());
+        // contention without any capacity source is an error; so are
+        // non-positive capacities.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","contention":true}"#
+        )
+        .is_err());
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","uplink_gbs":0}"#
         )
         .is_err());
     }

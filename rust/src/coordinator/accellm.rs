@@ -28,6 +28,23 @@
 //! 910B2s keep decoding.  [`AcceLlm::with_identity_pairing`] keeps the
 //! capacity-blind layout as an evaluation baseline (`accellm-blind`).
 //!
+//! **Topology + service-rate awareness** (PR 3): two refinements on
+//! heterogeneous clusters (homogeneous behavior stays bit-identical):
+//!
+//! * *Routing*: arrivals are placed by consistent hashing with
+//!   capacity-weighted bounded loads over the pairs (the same CHWBL
+//!   machinery `accellm-prefix` uses, weighted by pair decode
+//!   bandwidth), replacing the free-HBM rule that overloads deep-memory
+//!   pairs on mixed fleets.
+//! * *Pairing*: the cross-type (complementarity) layout makes every
+//!   pair-internal hand-off/replica stream cross chassis, which is
+//!   priced — and, under the shared-uplink contention model, shared.
+//!   [`AcceLlm::new`] now scores the complementarity layout against the
+//!   chassis-local identity layout with a pipeline throughput estimate
+//!   (prefill → link → decode) and falls back to locality when the
+//!   links are the bottleneck, instead of silently paying
+//!   chassis-crossing costs.
+//!
 //! Replica freshness is maintained by streaming each newly generated KV
 //! line to the partner (metered by the engine as ReplicaUpdate traffic);
 //! the prefill→partner replica copy is per-layer pipelined (4.2.4), so
@@ -36,9 +53,11 @@
 
 use std::collections::VecDeque;
 
-use crate::coordinator::set_kv_tokens;
-use crate::sim::{ClusterSpec, InstId, ReqId, Role, Scheduler, SimCtx, Work,
-                 XferKind};
+use crate::coordinator::{pair_service_weights, set_kv_tokens};
+use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
+use crate::prefix::splitmix64;
+use crate::sim::{ClusterSpec, InstId, PerfModel, ReqId, Role, Scheduler,
+                 SimCtx, Work, XferKind, LLAMA2_70B};
 
 /// Prompts folded into one prefill work item.
 const MAX_PREFILL_BATCH: usize = 8;
@@ -56,6 +75,24 @@ const FLIP_QUEUE_LEN: usize = 4;
 /// mix differs by far more).
 const SCORE_MARGIN: f64 = 1.001;
 
+/// CHWBL slack for hardware-aware arrival routing: a pair may run up to
+/// 25% above its capacity share before the ring walk spills (kubeai's
+/// shipped default; tighter than `accellm-prefix`'s 1.5 because plain
+/// arrivals have no locality worth trading imbalance for).
+const ROUTE_LOAD_FACTOR: f64 = 1.25;
+
+/// Margin the chassis-local pairing must win by before it displaces the
+/// complementarity pairing.  On fast links the two pipeline scores are
+/// decode-bound and tie to within float error (total decode bandwidth
+/// is pairing-invariant), so a small margin pins the PR 2
+/// complementarity layout there; a genuinely link-starved layout loses
+/// by far more than 2%.
+const PAIRING_SCORE_MARGIN: f64 = 1.02;
+
+/// Representative decode batch for the pairing-score throughput
+/// estimate (mid-range of the saturation curve, Figure 4).
+const SCORE_BATCH: usize = 32;
+
 pub struct AcceLlm {
     n_pairs: usize,
     /// pair p -> its two member instances; identity layout is
@@ -68,6 +105,10 @@ pub struct AcceLlm {
     /// inst -> effective prefill FLOP/s (hardware flip-preference
     /// signal, from the cluster spec).
     prefill_score: Vec<f64>,
+    /// Capacity-weighted CHWBL arrival router (heterogeneous clusters
+    /// only; None keeps the paper's free-memory rule bit-identical on
+    /// homogeneous clusters and in the blind baseline).
+    router: Option<ChwblRouter>,
     /// Keep redundant replicas (ablation: without them, role flips
     /// cannot migrate decodes and paused requests stall — paper Case A).
     replicate: bool,
@@ -89,21 +130,24 @@ pub struct AcceLlm {
 }
 
 impl AcceLlm {
-    /// Hardware-aware pairing from the cluster spec (identity layout on
-    /// homogeneous clusters).
+    /// Hardware- and topology-aware pairing from the cluster spec
+    /// (identity layout on homogeneous clusters).
     pub fn new(cluster: &ClusterSpec) -> Self {
-        Self::with_pairing(cluster, Self::capacity_aware_pairing(cluster))
+        Self::with_pairing(cluster, Self::topology_aware_pairing(cluster))
     }
 
     /// Capacity-blind baseline: pair by instance order (2p, 2p+1)
     /// regardless of device types — what the scheduler did before it
     /// could see the `ClusterSpec`.  Fully blind: the flip preference
-    /// is neutralized too (uniform scores fall back to the legacy
-    /// smaller-decode-set rule even inside a mixed identity pair).
+    /// is neutralized (uniform scores fall back to the legacy
+    /// smaller-decode-set rule even inside a mixed identity pair) and
+    /// arrivals keep the free-memory rule instead of the
+    /// capacity-weighted router.
     pub fn with_identity_pairing(cluster: &ClusterSpec) -> Self {
         let mut s =
             Self::with_pairing(cluster, Self::identity_pairing(cluster.len()));
         s.prefill_score = vec![1.0; cluster.len()];
+        s.router = None;
         s
     }
 
@@ -153,6 +197,96 @@ impl AcceLlm {
         (0..n / 2).map(|k| (ids[k], ids[n - 1 - k])).collect()
     }
 
+    /// Identity on homogeneous clusters (bit-for-bit PR 2 pin).  On
+    /// mixed fleets, trade prefill/decode complementarity against link
+    /// locality: score the complementarity (strongest-with-weakest)
+    /// layout and the chassis-local identity layout with the same
+    /// pipeline estimate ([`Self::pairing_score`]) and keep
+    /// complementarity unless locality clearly wins.  On fast links the
+    /// two scores are decode-bound and effectively tie, so the margin
+    /// pins the PR 2 mixed pairing exactly; when the pair-internal
+    /// links starve (low `--network-gbs`, shared-uplink contention),
+    /// locality wins by a wide margin and pairs stay inside their
+    /// chassis.
+    fn topology_aware_pairing(cluster: &ClusterSpec) -> Vec<(InstId, InstId)> {
+        let n = cluster.len();
+        if cluster.is_homogeneous() {
+            return Self::identity_pairing(n);
+        }
+        let comp = Self::capacity_aware_pairing(cluster);
+        let local = Self::identity_pairing(n);
+        if Self::pairing_score(cluster, &local)
+            > PAIRING_SCORE_MARGIN * Self::pairing_score(cluster, &comp)
+        {
+            local
+        } else {
+            comp
+        }
+    }
+
+    /// Estimated aggregate request throughput (req/s) of a candidate
+    /// pairing.  Each pair is a prefill → hand-off → decode pipeline
+    /// bounded by its slowest stage, for a canonical mixed-workload
+    /// request (Table 2 means):
+    ///
+    /// * *prefill*: the stronger member's prompt compute time (the flip
+    ///   preference sends prompts there);
+    /// * *link*: the pair-internal link carries the prompt hand-off
+    ///   plus every generated token's replica stream (Section 4.2.2);
+    ///   under the shared-uplink contention model an uplink's capacity
+    ///   is split across the candidate's cross-chassis pairs sharing
+    ///   it;
+    /// * *decode*: both members' steady-state decode token throughput
+    ///   over the canonical decode length.
+    pub fn pairing_score(cluster: &ClusterSpec,
+                         pairs: &[(InstId, InstId)]) -> f64 {
+        let llm = LLAMA2_70B;
+        let p_tok = crate::workload::MIXED.mean_prefill();
+        let d_tok = crate::workload::MIXED.mean_decode();
+        let link_bytes = (p_tok + d_tok) * llm.kv_bytes_per_token();
+        let topo = cluster.topology();
+        // Sharer counts per chassis uplink (contention model only).
+        let mut sharers = vec![0usize; topo.n_chassis()];
+        if topo.contended() {
+            for &(a, b) in pairs {
+                if let Some((ca, cb)) = topo.crossed_uplinks(a, b) {
+                    sharers[ca] += 1;
+                    sharers[cb] += 1;
+                }
+            }
+        }
+        let mut total = 0.0;
+        for &(a, b) in pairs {
+            let (ia, ib) = (cluster.instance(a), cluster.instance(b));
+            let pf = if ia.prefill_flops() >= ib.prefill_flops() {
+                ia
+            } else {
+                ib
+            };
+            let prefill_rate = 1.0
+                / PerfModel::new(pf, llm).prefill_time_one(p_tok as u32);
+            let mut bw = topo.link_bw(a, b);
+            if let Some((ca, cb)) = topo.crossed_uplinks(a, b) {
+                bw = bw
+                    .min(topo.uplink_bw(ca) / sharers[ca].max(1) as f64)
+                    .min(topo.uplink_bw(cb) / sharers[cb].max(1) as f64);
+            }
+            let link_rate = bw / link_bytes;
+            let kv = SCORE_BATCH as f64 * (p_tok + d_tok / 2.0);
+            let decode_tok_s: f64 = [ia, ib]
+                .iter()
+                .map(|&inst| {
+                    SCORE_BATCH as f64
+                        / PerfModel::new(inst, llm)
+                            .decode_step_time(SCORE_BATCH, kv)
+                })
+                .sum();
+            let decode_rate = decode_tok_s / d_tok;
+            total += prefill_rate.min(link_rate).min(decode_rate);
+        }
+        total
+    }
+
     fn with_pairing(cluster: &ClusterSpec, pairs: Vec<(InstId, InstId)>) -> Self {
         let n = cluster.len();
         assert!(n >= 2 && n % 2 == 0,
@@ -167,6 +301,18 @@ impl AcceLlm {
         }
         assert!(partner_of.iter().all(|&x| x != usize::MAX),
                 "pairing must cover every instance exactly once");
+        // Capacity-weighted arrival routing only engages when pairs can
+        // actually differ in service rate; homogeneous clusters keep
+        // the paper's free-memory rule bit-identical.
+        let router = if cluster.is_homogeneous() {
+            None
+        } else {
+            Some(ChwblRouter::with_weights(
+                &pair_service_weights(cluster, &pairs),
+                DEFAULT_VNODES,
+                ROUTE_LOAD_FACTOR,
+            ))
+        };
         AcceLlm {
             n_pairs: n / 2,
             pairs,
@@ -177,6 +323,7 @@ impl AcceLlm {
                 .iter()
                 .map(|s| s.prefill_flops())
                 .collect(),
+            router,
             replicate: true,
             rebalance: true,
             flip_slack: FLIP_SLACK_S,
@@ -204,6 +351,14 @@ impl AcceLlm {
         self.n_pairs
     }
 
+    /// The capacity-weighted arrival router, when hardware-aware
+    /// routing is active (heterogeneous clusters; None on homogeneous
+    /// clusters and in the blind baseline).  Exposed so invariant tests
+    /// can audit routing decisions against the CHWBL bound.
+    pub fn router(&self) -> Option<&ChwblRouter> {
+        self.router.as_ref()
+    }
+
     /// Scheduling load of a pair: queued prompts plus both members'
     /// active decode sets.  This is the load signal the prefix-locality
     /// router bounds (`prefix::ChwblRouter`).
@@ -223,21 +378,38 @@ impl AcceLlm {
         self.kick_pair(ctx, pair);
     }
 
-    /// Pair with the most free KV memory receives the next prompt
-    /// (Section 4.2.2: "among available pairs, the one with the most
-    /// free space handles the next prefill").  On a heterogeneous
-    /// cluster this is implicitly capacity-aware: deeper-HBM pairs
-    /// absorb proportionally more requests.
-    fn pick_pair(&self, ctx: &SimCtx) -> usize {
-        (0..self.n_pairs)
-            .max_by(|&a, &b| {
-                let (a0, a1) = self.pairs[a];
-                let (b0, b1) = self.pairs[b];
-                let fa = ctx.free_bytes(a0) + ctx.free_bytes(a1);
-                let fb = ctx.free_bytes(b0) + ctx.free_bytes(b1);
-                fa.partial_cmp(&fb).unwrap()
-            })
-            .expect("no pairs")
+    /// Route one arrival to a pair.
+    ///
+    /// *Hardware-aware path* (heterogeneous clusters): consistent
+    /// hashing with capacity-weighted bounded loads over the pairs —
+    /// the same CHWBL machinery `accellm-prefix` uses — keyed on the
+    /// request id and bounded by each pair's in-flight load (queued
+    /// prompts + both decode sets), so arrivals spread in proportion to
+    /// pair service rate.  Routing never lands on a pair at or above
+    /// its weighted bound `ceil(c·(m+1)·w_p/W)`.
+    ///
+    /// *Legacy path* (homogeneous clusters and the blind baseline): the
+    /// paper's Section 4.2.2 rule — the pair with the most free KV
+    /// memory — kept bit-identical.  Free-memory routing is the
+    /// `accellm-blind` failure mode on mixed fleets: deep-HBM pairs
+    /// soak up arrivals far past their service rate.
+    pub fn pick_pair(&self, ctx: &SimCtx, req: ReqId) -> usize {
+        match &self.router {
+            Some(router) => {
+                let loads: Vec<usize> =
+                    (0..self.n_pairs).map(|p| self.pair_load(p)).collect();
+                router.route(splitmix64(req as u64), &loads)
+            }
+            None => (0..self.n_pairs)
+                .max_by(|&a, &b| {
+                    let (a0, a1) = self.pairs[a];
+                    let (b0, b1) = self.pairs[b];
+                    let fa = ctx.free_bytes(a0) + ctx.free_bytes(a1);
+                    let fb = ctx.free_bytes(b0) + ctx.free_bytes(b1);
+                    fa.partial_cmp(&fb).unwrap()
+                })
+                .expect("no pairs"),
+        }
     }
 
     /// May `inst` take prefill work now?  Only when idle, and only if its
@@ -443,7 +615,7 @@ impl Scheduler for AcceLlm {
     }
 
     fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
-        let pair = self.pick_pair(ctx);
+        let pair = self.pick_pair(ctx, req);
         self.enqueue_on_pair(ctx, req, pair);
     }
 
@@ -684,6 +856,53 @@ mod tests {
         let blind = AcceLlm::with_identity_pairing(&cluster);
         assert_eq!(blind.pair_members(0), (0, 1));
         assert_eq!(blind.pair_members(1), (2, 3));
+    }
+
+    #[test]
+    fn low_bandwidth_pairing_prefers_chassis_locality() {
+        // Default (fast) topology: complementarity wins — the PR 2
+        // layout, also pinned by `mixed_pairing_joins_fast_with_slow`.
+        let mut cluster = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        assert_eq!(AcceLlm::new(&cluster).pair_members(0), (0, 3));
+        // Starved inter-node links under shared-uplink contention: the
+        // pipeline score flips the layout to chassis-local pairs so
+        // hand-off/replica streams stay on NVLink/HCCS.
+        cluster.set_network_bw(1e9);
+        cluster.enable_contention(1e9);
+        let s = AcceLlm::new(&cluster);
+        assert_eq!(s.pair_members(0), (0, 1));
+        assert_eq!(s.pair_members(1), (2, 3));
+        // The score itself must show the same ordering it decided by.
+        let local = vec![(0, 1), (2, 3)];
+        let comp = vec![(0, 3), (1, 2)];
+        assert!(AcceLlm::pairing_score(&cluster, &local)
+                    > AcceLlm::pairing_score(&cluster, &comp));
+    }
+
+    #[test]
+    fn moderate_bandwidth_keeps_complementarity_pairing() {
+        // At link speeds where decode (not the interconnect) is the
+        // bottleneck the complementarity layout must survive — the
+        // Figure 10 robustness claim.
+        let mut cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        cluster.set_network_bw(25e9);
+        cluster.enable_contention(25e9);
+        let s = AcceLlm::new(&cluster);
+        // PR 2 complementarity layout: H100s 0..3, 910B2s 4..7.
+        assert_eq!(s.pair_members(0), (0, 7));
+        assert_eq!(s.pair_members(3), (3, 4));
+    }
+
+    #[test]
+    fn heterogeneous_routing_is_capacity_weighted() {
+        // Mixed cluster: the capacity-weighted router is active for the
+        // aware scheduler, absent for the blind baseline and on
+        // homogeneous clusters.
+        let mixed = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        assert!(AcceLlm::new(&mixed).router().is_some());
+        assert!(AcceLlm::with_identity_pairing(&mixed).router().is_none());
+        let homog = ClusterSpec::homogeneous(H100, 4);
+        assert!(AcceLlm::new(&homog).router().is_none());
     }
 
     #[test]

@@ -59,7 +59,8 @@ pub const ALL_SCHEDULERS: [&str; 4] =
 pub const SCHEDULER_HELP: [(&str, &str); 5] = [
     ("accellm",
      "paper §4: instance pairs, redundant KV, dynamic role flips; \
-      hardware-aware pairing on mixed clusters"),
+      topology-aware pairing + capacity-weighted routing on mixed \
+      clusters"),
     ("accellm-prefix",
      "AcceLLM pairs + global prefix index + capacity-weighted CHWBL \
       routing"),
@@ -82,6 +83,22 @@ pub const PAPER_SCHEDULERS: [&str; 3] = ["accellm", "splitwise", "vllm"];
 /// Shared helper: total KV tokens of a request set (load-balance weight).
 pub(crate) fn set_kv_tokens(ctx: &SimCtx, set: &[ReqId]) -> u64 {
     set.iter().map(|&r| ctx.kv_tokens(r) as u64).sum()
+}
+
+/// Capacity weight of one pair for bounded-load routing: its members'
+/// aggregate effective decode bandwidth (decode is the phase in-flight
+/// load caps — requests spend most of their residency decoding).  Used
+/// identically by the capacity-weighted CHWBL in `accellm-prefix` and
+/// by hardware-aware AcceLLM arrival routing, so both bound a pair's
+/// load by the same service-rate signal.
+pub fn pair_service_weights(cluster: &ClusterSpec,
+                            pairs: &[(usize, usize)]) -> Vec<f64> {
+    pairs
+        .iter()
+        .map(|&(a, b)| {
+            cluster.instance(a).decode_bw() + cluster.instance(b).decode_bw()
+        })
+        .collect()
 }
 
 /// Per-instance decode batch cap, matching vLLM 0.4.2's default

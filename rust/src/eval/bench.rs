@@ -1,0 +1,230 @@
+//! Perf-trajectory comparison: `accellm bench --baseline FILE` pits the
+//! freshly generated bench JSON (BENCH_PR3.json) against a previous
+//! PR's committed/regenerated bench and fails on per-scheduler
+//! wall-clock regressions beyond a threshold — the CI guard that turns
+//! the bench subcommand into a tracked perf trajectory (ROADMAP item).
+//!
+//! Comparison is by `wall_ms_best` per scheduler name.  Schedulers
+//! present only on one side are reported but never fail the check (new
+//! schedulers appear, old ones get retired); a regression is
+//! `new > old * (1 + max_regress)`.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// Per-scheduler comparison outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDelta {
+    pub scheduler: String,
+    pub base_wall_ms: f64,
+    pub new_wall_ms: f64,
+    /// (new - base) / base.
+    pub rel_change: f64,
+    pub regressed: bool,
+}
+
+impl BenchDelta {
+    pub fn line(&self) -> String {
+        format!(
+            "{:>16} | base {:>8.1} ms | new {:>8.1} ms | {:+6.1}%{}",
+            self.scheduler,
+            self.base_wall_ms,
+            self.new_wall_ms,
+            self.rel_change * 100.0,
+            if self.regressed { "  <-- REGRESSION" } else { "" }
+        )
+    }
+}
+
+/// Extract `scheduler -> wall_ms_best` pairs from a bench document.
+fn wall_times(doc: &Json, tag: &str) -> Result<Vec<(String, f64)>> {
+    let results = doc
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("{tag}: no \"results\" array"))?;
+    let mut out = Vec::new();
+    for entry in results {
+        let name = entry
+            .get("scheduler")
+            .and_then(|s| s.as_str())
+            .ok_or_else(|| anyhow!("{tag}: result without \"scheduler\""))?;
+        let wall = entry
+            .get("wall_ms_best")
+            .and_then(|w| w.as_f64())
+            .ok_or_else(|| {
+                anyhow!("{tag}: result '{name}' without \"wall_ms_best\"")
+            })?;
+        if wall <= 0.0 {
+            return Err(anyhow!("{tag}: '{name}' has non-positive wall time"));
+        }
+        out.push((name.to_string(), wall));
+    }
+    Ok(out)
+}
+
+/// Scenario header fields that must agree before wall times are
+/// comparable at all (a rate-16 run is not a regression of a rate-8
+/// baseline).  Fields absent from either document are skipped, so
+/// older bench files stay accepted.
+const SCENARIO_KEYS: [&str; 5] =
+    ["cluster", "workload", "rate", "duration_s", "n_requests"];
+
+fn check_same_scenario(baseline: &Json, current: &Json) -> Result<()> {
+    for key in SCENARIO_KEYS {
+        let (Some(b), Some(c)) = (baseline.get(key), current.get(key)) else {
+            continue;
+        };
+        if b != c {
+            return Err(anyhow!(
+                "bench documents describe different scenarios: \
+                 {key} = {} (baseline) vs {} (current) — regenerate the \
+                 baseline with the same bench flags",
+                b.encode(),
+                c.encode()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Compare two bench documents; `Err` iff the scenarios differ or any
+/// scheduler present in both regressed by more than `max_regress`
+/// (e.g. 0.20 = +20% wall clock).  The `Ok` value carries one
+/// [`BenchDelta`] per common scheduler for reporting.
+pub fn compare_bench(baseline: &Json, current: &Json,
+                     max_regress: f64) -> Result<Vec<BenchDelta>> {
+    assert!(max_regress >= 0.0, "max_regress must be non-negative");
+    check_same_scenario(baseline, current)?;
+    let base = wall_times(baseline, "baseline")?;
+    let new = wall_times(current, "current")?;
+    let mut deltas = Vec::new();
+    let mut failures = Vec::new();
+    for (name, new_wall) in &new {
+        let Some((_, base_wall)) =
+            base.iter().find(|(b, _)| b == name)
+        else {
+            continue; // new scheduler: no baseline to regress from
+        };
+        let rel = (new_wall - base_wall) / base_wall;
+        let regressed = *new_wall > base_wall * (1.0 + max_regress);
+        if regressed {
+            failures.push(format!(
+                "{name}: {base_wall:.1} ms -> {new_wall:.1} ms \
+                 ({:+.1}% > +{:.0}% budget)",
+                rel * 100.0,
+                max_regress * 100.0
+            ));
+        }
+        deltas.push(BenchDelta {
+            scheduler: name.clone(),
+            base_wall_ms: *base_wall,
+            new_wall_ms: *new_wall,
+            rel_change: rel,
+            regressed,
+        });
+    }
+    if failures.is_empty() {
+        Ok(deltas)
+    } else {
+        Err(anyhow!("wall-clock regression vs baseline:\n  {}",
+                    failures.join("\n  ")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(pairs: &[(&str, f64)]) -> Json {
+        Json::obj(vec![(
+            "results",
+            Json::arr(pairs.iter().map(|(n, w)| {
+                Json::obj(vec![
+                    ("scheduler", Json::str(n)),
+                    ("wall_ms_best", Json::num(*w)),
+                ])
+            })),
+        )])
+    }
+
+    #[test]
+    fn within_budget_passes_with_deltas() {
+        let base = doc(&[("accellm", 100.0), ("vllm", 50.0)]);
+        let new = doc(&[("accellm", 110.0), ("vllm", 45.0)]);
+        let deltas = compare_bench(&base, &new, 0.20).unwrap();
+        assert_eq!(deltas.len(), 2);
+        let acc = deltas.iter().find(|d| d.scheduler == "accellm").unwrap();
+        assert!(!acc.regressed);
+        assert!((acc.rel_change - 0.10).abs() < 1e-12);
+        let vll = deltas.iter().find(|d| d.scheduler == "vllm").unwrap();
+        assert!(vll.rel_change < 0.0);
+    }
+
+    #[test]
+    fn beyond_budget_fails_and_names_the_scheduler() {
+        let base = doc(&[("accellm", 100.0), ("vllm", 50.0)]);
+        let new = doc(&[("accellm", 121.0), ("vllm", 50.0)]);
+        let err = compare_bench(&base, &new, 0.20).unwrap_err().to_string();
+        assert!(err.contains("accellm"), "{err}");
+        assert!(err.contains("regression"), "{err}");
+        // Exactly at the budget edge is NOT a regression.
+        let edge = doc(&[("accellm", 120.0), ("vllm", 50.0)]);
+        assert!(compare_bench(&base, &edge, 0.20).is_ok());
+    }
+
+    #[test]
+    fn disjoint_schedulers_are_skipped_not_failed() {
+        let base = doc(&[("accellm", 100.0)]);
+        let new = doc(&[("accellm", 90.0), ("brand-new", 9000.0)]);
+        let deltas = compare_bench(&base, &new, 0.20).unwrap();
+        assert_eq!(deltas.len(), 1);
+        assert_eq!(deltas[0].scheduler, "accellm");
+    }
+
+    #[test]
+    fn mismatched_scenarios_are_rejected() {
+        let with_rate = |rate: f64, wall: f64| {
+            Json::obj(vec![
+                ("cluster", Json::str("h100x4")),
+                ("rate", Json::num(rate)),
+                (
+                    "results",
+                    Json::arr([Json::obj(vec![
+                        ("scheduler", Json::str("accellm")),
+                        ("wall_ms_best", Json::num(wall)),
+                    ])]),
+                ),
+            ])
+        };
+        // Same scenario: compared normally.
+        assert!(
+            compare_bench(&with_rate(8.0, 100.0), &with_rate(8.0, 90.0), 0.2)
+                .is_ok()
+        );
+        // Different rate: refuse to compare even though walls regressed.
+        let err =
+            compare_bench(&with_rate(8.0, 100.0), &with_rate(16.0, 200.0), 0.2)
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("different scenarios"), "{err}");
+        assert!(err.contains("rate"), "{err}");
+        // Documents without scenario headers (older files) still compare.
+        let bare = doc(&[("accellm", 100.0)]);
+        assert!(compare_bench(&bare, &doc(&[("accellm", 100.0)]), 0.2).is_ok());
+    }
+
+    #[test]
+    fn malformed_documents_error_helpfully() {
+        let good = doc(&[("accellm", 100.0)]);
+        let no_results = Json::obj(vec![("bench", Json::str("x"))]);
+        assert!(compare_bench(&no_results, &good, 0.2).is_err());
+        let bad_entry = Json::obj(vec![(
+            "results",
+            Json::arr([Json::obj(vec![("scheduler", Json::str("a"))])]),
+        )]);
+        let err =
+            compare_bench(&good, &bad_entry, 0.2).unwrap_err().to_string();
+        assert!(err.contains("wall_ms_best"), "{err}");
+    }
+}

@@ -366,15 +366,16 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "ablation_flip_slack" => crate::eval::ablations::ablation_flip_slack(),
         "prefix_locality" => crate::eval::prefix::prefix_locality(),
         "hetero" => crate::eval::hetero::hetero(),
+        "contention" => crate::eval::contention::contention(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
-    "hetero",
+    "hetero", "contention",
 ];
 
 /// Generate everything (the `make bench` payload).

@@ -7,11 +7,15 @@
 //! the reproduction target — see EXPERIMENTS.md for the side-by-side.
 
 pub mod ablations;
+pub mod bench;
+pub mod contention;
 pub mod figures;
 pub mod hetero;
 pub mod prefix;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
+pub use bench::compare_bench;
+pub use contention::contention;
 pub use figures::{all_figures, figure_by_id, FigureOutput};
 pub use hetero::hetero;
 pub use prefix::prefix_locality;

@@ -23,7 +23,7 @@
 //!
 //! | name | module | idea |
 //! |------|--------|------|
-//! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips; hardware-aware pairing on mixed clusters |
+//! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips; topology-aware pairing + capacity-weighted routing on mixed clusters |
 //! | `accellm-prefix` | [`prefix::scheduler`] | AcceLLM pairs + global prefix index + capacity-weighted CHWBL routing |
 //! | `splitwise` | [`coordinator::splitwise`] | static prefill/decode disaggregation baseline; compute-picked prefill pool |
 //! | `vllm` | [`coordinator::vllm`] | continuous-batching baseline (hardware-blind) |
@@ -34,7 +34,10 @@
 //! Hardware is per-instance ([`sim::ClusterSpec`]): `h100x8` is eight
 //! H100 instances, `mixed:h100x4+910b2x4` a mixed fleet, and
 //! [`sim::Topology`] prices every src→dst KV-transfer link (intra-pair
-//! NVLink/HCCS vs inter-node network, with per-link overrides).
+//! NVLink/HCCS vs inter-node network, with per-link overrides).  With
+//! the shared-uplink contention model enabled, concurrent
+//! chassis-crossing streams fair-share each chassis' finite uplink and
+//! per-uplink stats land in [`sim::RunReport`] (`per_link`).
 //!
 //! ## Workload families
 //!

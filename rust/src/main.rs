@@ -26,10 +26,12 @@ USAGE:
                                      --instances N]
                    [--workload light|mixed|heavy|chat|shared-doc]
                    [--rate R] [--duration S] [--seed K]
-                   [--bw GB/s] [--network-gbs GB/s] [--json]
+                   [--bw GB/s] [--network-gbs GB/s]
+                   [--contention] [--uplink-gbs GB/s] [--json]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm bench    [--cluster SPEC] [--rate R] [--duration S]
-                   [--out FILE]                   # wall-clock scheduler bench (JSON)
+                   [--out FILE] [--baseline FILE] [--max-regress F]
+                                                  # wall-clock scheduler bench (JSON)
   accellm serve    [--policy accellm|splitwise|vllm] [--instances N]
                    [--requests N] [--rate R] [--max-new N] [--slots B]
                    [--artifacts DIR] [--seed K]   # real model over PJRT
@@ -41,7 +43,12 @@ USAGE:
 Cluster specs describe per-instance hardware: `h100x8` is eight H100
 instances, `mixed:h100x4+910b2x4` a mixed fleet, `a100x2@tp8` two
 8-way-TP A100 instances.  `--network-gbs` prices cross-pair links at
-an inter-node network bandwidth (intra-pair links keep NVLink/HCCS).
+an inter-node network bandwidth (intra-pair links keep NVLink/HCCS);
+`--contention` additionally makes concurrent cross-chassis streams
+fair-share each chassis' finite uplink (capacity `--uplink-gbs`,
+default = the network bandwidth).  `accellm figures --fig contention`
+sweeps the contended network.  `accellm bench --baseline FILE` fails
+on >`--max-regress` (default 0.2) per-scheduler wall-clock regression.
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
 prefix-locality router.  Run `make artifacts` once before
@@ -105,7 +112,8 @@ fn print_schedulers() {
 }
 
 /// Resolve the cluster from `--cluster SPEC` or the legacy
-/// `--device` + `--instances` pair, then apply `--network-gbs`.
+/// `--device` + `--instances` pair, then apply `--network-gbs` and the
+/// shared-uplink contention knobs (`--contention`, `--uplink-gbs`).
 fn parse_cluster(args: &Args) -> anyhow::Result<ClusterSpec> {
     let mut cluster = match args.get("cluster") {
         Some(spec) => {
@@ -120,12 +128,33 @@ fn parse_cluster(args: &Args) -> anyhow::Result<ClusterSpec> {
             ClusterSpec::homogeneous(device, instances)
         }
     };
+    let mut network_gbs = None;
     if let Some(v) = args.get("network-gbs") {
         let gbs: f64 = v
             .parse()
             .map_err(|_| anyhow::anyhow!("--network-gbs expects GB/s"))?;
         anyhow::ensure!(gbs > 0.0, "--network-gbs must be positive");
         cluster.set_network_bw(gbs * 1e9);
+        network_gbs = Some(gbs);
+    }
+    let uplink_gbs = match args.get("uplink-gbs") {
+        Some(v) => {
+            let gbs: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--uplink-gbs expects GB/s"))?;
+            anyhow::ensure!(gbs > 0.0, "--uplink-gbs must be positive");
+            Some(gbs)
+        }
+        None => None,
+    };
+    if let Some(gbs) = uplink_gbs {
+        cluster.enable_contention(gbs * 1e9);
+    } else if args.has("contention") {
+        let gbs = network_gbs.ok_or_else(|| {
+            anyhow::anyhow!("--contention needs --network-gbs (the default \
+                             uplink capacity) or an explicit --uplink-gbs")
+        })?;
+        cluster.enable_contention(gbs * 1e9);
     }
     Ok(cluster)
 }
@@ -233,10 +262,12 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Fixed small scenario per scheduler: wall-clock + simulated-throughput
-/// numbers, written as JSON (default `BENCH_PR2.json`) to seed the
-/// repo's perf trajectory.
+/// numbers, written as JSON (default `BENCH_PR3.json`) — the repo's
+/// perf trajectory.  With `--baseline FILE` the run is compared against
+/// a previous bench document and fails on any per-scheduler wall-clock
+/// regression beyond `--max-regress` (default 0.20 = +20%).
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    let out = args.get_or("out", "BENCH_PR2.json");
+    let out = args.get_or("out", "BENCH_PR3.json");
     // Same cluster resolution as simulate/sweep (--cluster or legacy
     // --device/--instances, plus --network-gbs).
     let cluster = parse_cluster(args)?;
@@ -291,6 +322,27 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     ]);
     std::fs::write(out, doc.encode() + "\n")?;
     println!("wrote {out}");
+
+    // Perf trajectory: compare against a previous PR's bench document.
+    if let Some(baseline_path) = args.get("baseline") {
+        let max_regress = args
+            .get_f64("max-regress", 0.20)
+            .map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(max_regress >= 0.0,
+                        "--max-regress must be non-negative");
+        let text = std::fs::read_to_string(baseline_path).map_err(|e| {
+            anyhow::anyhow!("reading baseline {baseline_path}: {e}")
+        })?;
+        let baseline = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("baseline {baseline_path}: {e}"))?;
+        let deltas =
+            accellm::eval::compare_bench(&baseline, &doc, max_regress)?;
+        println!("perf trajectory vs {baseline_path} \
+                  (budget +{:.0}%):", max_regress * 100.0);
+        for d in &deltas {
+            println!("{}", d.line());
+        }
+    }
     Ok(())
 }
 

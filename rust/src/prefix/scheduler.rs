@@ -62,13 +62,12 @@ impl AcceLlmPrefix {
         let inner = AcceLlm::new(cluster);
         let n_pairs = inner.n_pairs();
         // Capacity weight of a pair = its members' effective decode
-        // bandwidth (decode is the phase the in-flight load bound caps).
-        let weights: Vec<f64> = (0..n_pairs)
-            .map(|p| {
-                let (a, b) = inner.pair_members(p);
-                cluster.instance(a).decode_bw() + cluster.instance(b).decode_bw()
-            })
-            .collect();
+        // bandwidth (decode is the phase the in-flight load bound caps)
+        // — the same signal hardware-aware AcceLLM routes arrivals by.
+        let pairs: Vec<(usize, usize)> =
+            (0..n_pairs).map(|p| inner.pair_members(p)).collect();
+        let weights =
+            crate::coordinator::pair_service_weights(cluster, &pairs);
         AcceLlmPrefix {
             inner,
             index: PrefixIndex::new(n_pairs, cache_chunks),

@@ -109,6 +109,12 @@ pub struct SimCtx {
     seq: u64,
     /// Per-instance NIC busy-until (serialized link model).
     nic_busy: Vec<f64>,
+    /// In-flight stream count per chassis uplink (shared-uplink
+    /// contention model; empty when disabled).
+    uplink_streams: Vec<usize>,
+    /// Timestamp each uplink last went from idle to busy (occupancy
+    /// accounting).
+    uplink_busy_since: Vec<f64>,
 }
 
 impl SimCtx {
@@ -135,6 +141,76 @@ impl SimCtx {
     pub fn link_bw(&self, src: InstId, dst: InstId) -> f64 {
         self.interconnect_bw
             .unwrap_or_else(|| self.cluster.topology().link_bw(src, dst))
+    }
+
+    /// Bandwidth a NEW src→dst stream would get right now: the
+    /// point-to-point link price, capped by the fair share of every
+    /// chassis uplink the stream crosses (admission-time fair share —
+    /// `capacity / (in-flight streams + 1)`).  Identical to
+    /// [`Self::link_bw`] when contention is disabled or the endpoints
+    /// share a chassis, and identical with zero concurrent streams as
+    /// long as the uplink capacity is not below the link's own price —
+    /// the contention model is a strict refinement of the PR 2
+    /// point-to-point model.
+    pub fn stream_bw(&self, src: InstId, dst: InstId) -> f64 {
+        let base = self.link_bw(src, dst);
+        match self.cluster.topology().crossed_uplinks(src, dst) {
+            None => base,
+            Some((ca, cb)) => {
+                let topo = self.cluster.topology();
+                let mut bw = base;
+                for c in [ca, cb] {
+                    let share = (self.uplink_streams[c] + 1) as f64;
+                    bw = bw.min(topo.uplink_bw(c) / share);
+                }
+                bw
+            }
+        }
+    }
+
+    /// Concurrent in-flight streams on one chassis uplink (0 when the
+    /// contention model is disabled).
+    pub fn uplink_streams(&self, chassis: usize) -> usize {
+        self.uplink_streams.get(chassis).copied().unwrap_or(0)
+    }
+
+    /// Record a new stream on every uplink the src→dst transfer
+    /// crosses; meters bytes/peak/occupancy.  No-op when contention is
+    /// off or the transfer stays inside one chassis.
+    fn register_stream(&mut self, src: InstId, dst: InstId, bytes: f64) {
+        let Some((ca, cb)) = self.cluster.topology().crossed_uplinks(src, dst)
+        else {
+            return;
+        };
+        for c in [ca, cb] {
+            if self.uplink_streams[c] == 0 {
+                self.uplink_busy_since[c] = self.now;
+            }
+            self.uplink_streams[c] += 1;
+            self.metrics.uplink_bytes[c] += bytes;
+            if self.uplink_streams[c] > self.metrics.uplink_peak_streams[c] {
+                self.metrics.uplink_peak_streams[c] = self.uplink_streams[c];
+            }
+        }
+    }
+
+    /// Release a stream registered by [`Self::register_stream`] (the
+    /// engine calls this when the TransferDone event fires, before the
+    /// scheduler reacts — so the scheduler sees the freed capacity).
+    fn release_stream(&mut self, src: InstId, dst: InstId) {
+        let Some((ca, cb)) = self.cluster.topology().crossed_uplinks(src, dst)
+        else {
+            return;
+        };
+        for c in [ca, cb] {
+            debug_assert!(self.uplink_streams[c] > 0,
+                          "uplink {c} released more streams than registered");
+            self.uplink_streams[c] -= 1;
+            if self.uplink_streams[c] == 0 {
+                self.metrics.uplink_busy_s[c] +=
+                    self.now - self.uplink_busy_since[c];
+            }
+        }
     }
 
     pub fn is_busy(&self, inst: InstId) -> bool {
@@ -316,7 +392,8 @@ impl SimCtx {
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
-        let dur = bytes / self.link_bw(src, dst);
+        let dur = bytes / self.stream_bw(src, dst);
+        self.register_stream(src, dst, bytes);
         let done = if overlap {
             self.now + dur
         } else {
@@ -344,7 +421,8 @@ impl SimCtx {
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
-        let wire = bytes / self.link_bw(src, dst);
+        let wire = bytes / self.stream_bw(src, dst);
+        self.register_stream(src, dst, bytes);
         // The stream could have started as early as `now - overlapped`,
         // but no earlier than the link became free.
         let begin = (self.now - overlapped.max(0.0))
@@ -434,7 +512,17 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
         events: Vec::new(),
         seq: 0,
         nic_busy: vec![0.0; n],
+        uplink_streams: Vec::new(),
+        uplink_busy_since: Vec::new(),
     };
+    if cfg.cluster.topology().contended() {
+        let n_up = cfg.cluster.topology().n_chassis();
+        ctx.uplink_streams = vec![0; n_up];
+        ctx.uplink_busy_since = vec![0.0; n_up];
+        ctx.metrics.uplink_bytes = vec![0.0; n_up];
+        ctx.metrics.uplink_peak_streams = vec![0; n_up];
+        ctx.metrics.uplink_busy_s = vec![0.0; n_up];
+    }
 
     for i in 0..ctx.requests.len() {
         let t = ctx.requests[i].arrival;
@@ -460,6 +548,7 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
                 sched.on_work_done(&mut ctx, inst, work, completed);
             }
             Event::TransferDone { src, dst, req } => {
+                ctx.release_stream(src, dst);
                 sched.on_transfer_done(&mut ctx, src, dst, req);
             }
         }
@@ -566,6 +655,24 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         });
     }
 
+    // Per-uplink contention breakdown (empty unless contention is on).
+    // Every TransferDone fires before the heap drains, so stream counts
+    // are back to zero here and the busy intervals are fully flushed.
+    let mut per_link = Vec::new();
+    if ctx.cluster.topology().contended() {
+        debug_assert!(ctx.uplink_streams.iter().all(|&s| s == 0),
+                      "streams still in flight at end of run");
+        for c in 0..ctx.cluster.topology().n_chassis() {
+            per_link.push(crate::sim::metrics::LinkReport {
+                chassis: c,
+                capacity: ctx.cluster.topology().uplink_bw(c),
+                bytes: ctx.metrics.uplink_bytes[c],
+                peak_streams: ctx.metrics.uplink_peak_streams[c],
+                busy_frac: ctx.metrics.uplink_busy_s[c] / makespan,
+            });
+        }
+    }
+
     let device = ctx.cluster.name();
     let m = &mut ctx.metrics;
     RunReport {
@@ -605,6 +712,7 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         prefix_saved_tokens: m.prefix_saved_tokens,
         prefix_evictions: m.prefix_evictions,
         per_device,
+        per_link,
         tbt_timeline: std::mem::take(&mut m.tbt_timeline),
     }
 }
@@ -751,6 +859,112 @@ mod tests {
         assert_eq!(warm.prefix_saved_tokens, want_saved);
         // Decode work is untouched by prefix hits.
         assert_eq!(warm.completed, cold.completed);
+    }
+
+    /// Probe: starts `k` overlapped src→dst transfers at t=0 and records
+    /// each completion time (contention-model unit harness).
+    struct XferProbe {
+        k: usize,
+        tokens: f64,
+        src: InstId,
+        dst: InstId,
+        done: Vec<(ReqId, f64)>,
+    }
+
+    impl Scheduler for XferProbe {
+        fn name(&self) -> &'static str {
+            "xfer-probe"
+        }
+
+        fn init(&mut self, ctx: &mut SimCtx) {
+            for r in 0..self.k {
+                ctx.start_transfer(self.src, self.dst, r, self.tokens,
+                                   XferKind::Migration, true);
+            }
+        }
+
+        fn on_arrival(&mut self, _ctx: &mut SimCtx, _req: ReqId) {}
+
+        fn on_work_done(&mut self, _ctx: &mut SimCtx, _inst: InstId,
+                        _work: Work, _completed: Vec<ReqId>) {
+        }
+
+        fn on_transfer_done(&mut self, ctx: &mut SimCtx, _src: InstId,
+                            _dst: InstId, req: ReqId) {
+            self.done.push((req, ctx.now));
+        }
+    }
+
+    fn empty_trace() -> Trace {
+        Trace { spec: MIXED, rate: 1.0, seed: 0, requests: Vec::new() }
+    }
+
+    #[test]
+    fn contended_streams_fair_share_the_uplink() {
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let mut probe =
+            XferProbe { k: 3, tokens: 1000.0, src: 0, dst: 2, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let bytes = cfg.llm.kv_bytes_per_token() * 1000.0;
+        let base = bytes / 10e9;
+        assert_eq!(probe.done.len(), 3);
+        // Admission-time fair share: stream j joins j existing streams,
+        // so it runs at capacity/(j+1) and finishes at (j+1) x base.
+        for (j, &(req, t)) in probe.done.iter().enumerate() {
+            assert_eq!(req, j);
+            let want = (j + 1) as f64 * base;
+            assert!((t - want).abs() < 1e-9, "stream {j}: {t} vs {want}");
+        }
+        // Both endpoint uplinks metered every stream.
+        assert_eq!(r.per_link.len(), 2);
+        for l in &r.per_link {
+            assert_eq!(l.peak_streams, 3);
+            assert!((l.bytes - 3.0 * bytes).abs() < 1.0, "{}", l.bytes);
+            // Busy from t=0 to the last completion == the whole run.
+            assert!((l.busy_frac - 1.0).abs() < 1e-9, "{}", l.busy_frac);
+        }
+    }
+
+    #[test]
+    fn uncontended_streams_are_infinitely_parallel() {
+        // Same scenario without the contention model: every stream runs
+        // at the full link price and per_link stays empty.
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let mut probe =
+            XferProbe { k: 3, tokens: 1000.0, src: 0, dst: 2, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let base = cfg.llm.kv_bytes_per_token() * 1000.0 / 10e9;
+        for &(_, t) in &probe.done {
+            assert_eq!(t, base);
+        }
+        assert!(r.per_link.is_empty());
+    }
+
+    #[test]
+    fn intra_chassis_streams_never_contend() {
+        // Contention on, but both endpoints share a chassis: NVLink is
+        // point-to-point, so all streams finish at the base price.
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let mut probe =
+            XferProbe { k: 4, tokens: 500.0, src: 0, dst: 1, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let base = cfg.llm.kv_bytes_per_token() * 500.0 / H100.local_conn_bw;
+        for &(_, t) in &probe.done {
+            assert_eq!(t, base);
+        }
+        // Uplink stats exist (contention on) but saw no traffic.
+        assert_eq!(r.per_link.len(), 2);
+        assert!(r.per_link.iter().all(|l| l.bytes == 0.0
+            && l.peak_streams == 0
+            && l.busy_frac == 0.0));
     }
 
     #[test]

@@ -182,17 +182,33 @@ impl InstanceSpec {
 /// rule inside physical pairs (instances 2p, 2p+1 — NVLink/HCCS) and
 /// prices everything else at a slower inter-node network bandwidth.
 /// Individual links can be overridden with [`Topology::set_link`].
+///
+/// **Contention** ([`Topology::enable_contention`]): by default every
+/// link is infinitely parallel — two concurrent transfers on disjoint
+/// (src, dst) pairs never slow each other down, which makes
+/// `--network-gbs` sweeps scale linearly past any physical switch.
+/// With contention enabled, each chassis (instances 2c, 2c+1) owns ONE
+/// uplink of finite capacity to the inter-node switch; every
+/// chassis-crossing transfer occupies the uplink on both sides, and
+/// concurrent streams sharing an uplink fair-share its capacity (the
+/// engine tracks in-flight stream counts per uplink).  Intra-chassis
+/// links stay point-to-point (NVLink/HCCS is a switched fabric).  With
+/// zero concurrent streams the contended price equals the
+/// point-to-point price exactly, so the model is a strict refinement.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Topology {
     /// bw[a][b] = bytes/s on the a↔b link; diagonal unused.
     bw: Vec<Vec<f64>>,
+    /// Per-chassis shared uplink capacity (bytes/s); None = the legacy
+    /// infinitely-parallel link model.
+    uplinks: Option<Vec<f64>>,
 }
 
 impl Topology {
     /// Uniform bandwidth on every link.
     pub fn flat(n: usize, bw: f64) -> Topology {
         assert!(bw > 0.0, "link bandwidth must be positive");
-        Topology { bw: vec![vec![bw; n]; n] }
+        Topology { bw: vec![vec![bw; n]; n], uplinks: None }
     }
 
     /// Every link runs at the slower endpoint's device interconnect
@@ -207,7 +223,7 @@ impl Topology {
                     .min(instances[b].interconnect_bw());
             }
         }
-        Topology { bw }
+        Topology { bw, uplinks: None }
     }
 
     /// Intra-pair links (instances 2p and 2p+1 share a chassis) keep the
@@ -252,6 +268,50 @@ impl Topology {
 
     pub fn n(&self) -> usize {
         self.bw.len()
+    }
+
+    // ---- shared-uplink contention ----------------------------------------
+
+    /// Chassis (physical pair) an instance belongs to.
+    pub fn chassis_of(inst: usize) -> usize {
+        inst / 2
+    }
+
+    /// Number of chassis (physical pairs; a trailing odd instance gets
+    /// its own chassis).
+    pub fn n_chassis(&self) -> usize {
+        (self.n() + 1) / 2
+    }
+
+    /// Give every chassis one shared uplink of `uplink_bw` bytes/s.
+    /// Chassis-crossing transfers then fair-share uplink capacity with
+    /// every other concurrent stream on the same uplink.
+    pub fn enable_contention(&mut self, uplink_bw: f64) {
+        assert!(uplink_bw > 0.0, "uplink bandwidth must be positive");
+        self.uplinks = Some(vec![uplink_bw; self.n_chassis()]);
+    }
+
+    /// Is the shared-uplink contention model active?
+    pub fn contended(&self) -> bool {
+        self.uplinks.is_some()
+    }
+
+    /// Capacity of one chassis uplink, bytes/s.  Panics when contention
+    /// is disabled.
+    pub fn uplink_bw(&self, chassis: usize) -> f64 {
+        self.uplinks.as_ref().expect("contention model disabled")[chassis]
+    }
+
+    /// The chassis uplinks an a→b transfer crosses: none when the
+    /// endpoints share a chassis (or contention is off), both endpoint
+    /// chassis otherwise.
+    pub fn crossed_uplinks(&self, a: usize, b: usize) -> Option<(usize, usize)> {
+        let (ca, cb) = (Self::chassis_of(a), Self::chassis_of(b));
+        if self.uplinks.is_none() || ca == cb {
+            None
+        } else {
+            Some((ca, cb))
+        }
     }
 }
 
@@ -405,9 +465,19 @@ impl ClusterSpec {
     }
 
     /// Replace the topology with an inter-node network model (intra-pair
-    /// links keep the local NVLink/HCCS rule).
+    /// links keep the local NVLink/HCCS rule).  A previously enabled
+    /// contention model survives the swap, so knob order does not
+    /// matter.
     pub fn set_network_bw(&mut self, network_bw: f64) {
+        let uplinks = self.topology.uplinks.clone();
         self.topology = Topology::with_network(&self.instances, network_bw);
+        self.topology.uplinks = uplinks;
+    }
+
+    /// Enable shared-uplink contention: one finite-capacity uplink per
+    /// chassis (see [`Topology::enable_contention`]).
+    pub fn enable_contention(&mut self, uplink_bw: f64) {
+        self.topology.enable_contention(uplink_bw);
     }
 
     /// Override one link of the topology (symmetric).
@@ -557,6 +627,48 @@ mod tests {
         assert_eq!(m.topology().link_bw(0, 1), H100.local_conn_bw);
         assert_eq!(m.topology().link_bw(0, 2), ASCEND_910B2.local_conn_bw);
         assert_eq!(m.topology().link_bw(2, 3), ASCEND_910B2.local_conn_bw);
+    }
+
+    #[test]
+    fn contention_model_defaults_off_and_tracks_chassis() {
+        let mut c = ClusterSpec::homogeneous(H100, 4);
+        assert!(!c.topology().contended());
+        assert_eq!(c.topology().n_chassis(), 2);
+        assert_eq!(Topology::chassis_of(0), 0);
+        assert_eq!(Topology::chassis_of(3), 1);
+        // Disabled: no transfer crosses a shared uplink.
+        assert_eq!(c.topology().crossed_uplinks(0, 3), None);
+
+        c.set_network_bw(100e9);
+        c.enable_contention(100e9);
+        let t = c.topology();
+        assert!(t.contended());
+        assert_eq!(t.uplink_bw(0), 100e9);
+        assert_eq!(t.uplink_bw(1), 100e9);
+        // Intra-chassis transfers never touch an uplink.
+        assert_eq!(t.crossed_uplinks(0, 1), None);
+        assert_eq!(t.crossed_uplinks(2, 3), None);
+        // Cross-chassis transfers cross both endpoint uplinks.
+        assert_eq!(t.crossed_uplinks(1, 2), Some((0, 1)));
+        assert_eq!(t.crossed_uplinks(3, 0), Some((1, 0)));
+    }
+
+    #[test]
+    fn contention_survives_network_swap_in_either_order() {
+        let mut a = ClusterSpec::homogeneous(H100, 4);
+        a.enable_contention(50e9);
+        a.set_network_bw(100e9);
+        assert!(a.topology().contended());
+        assert_eq!(a.topology().uplink_bw(0), 50e9);
+        let mut b = ClusterSpec::homogeneous(H100, 4);
+        b.set_network_bw(100e9);
+        b.enable_contention(50e9);
+        assert_eq!(a.topology(), b.topology());
+        // Odd cluster sizes round the chassis count up.
+        let mut odd = ClusterSpec::homogeneous(H100, 5);
+        odd.enable_contention(25e9);
+        assert_eq!(odd.topology().n_chassis(), 3);
+        assert_eq!(odd.topology().uplink_bw(2), 25e9);
     }
 
     #[test]

@@ -42,6 +42,14 @@ pub struct MetricsCollector {
     /// Per-device-class decode tokens (index = class of the decoding
     /// instance).
     pub decode_tokens_by_class: Vec<u64>,
+    /// Shared-uplink contention stats (index = chassis; empty when the
+    /// contention model is disabled).  Bytes crossing each uplink,
+    /// peak concurrent streams, and total seconds with >= 1 in-flight
+    /// stream — the engine maintains them in `register_stream` /
+    /// `release_stream`.
+    pub uplink_bytes: Vec<f64>,
+    pub uplink_peak_streams: Vec<usize>,
+    pub uplink_busy_s: Vec<f64>,
 }
 
 impl MetricsCollector {
@@ -66,6 +74,35 @@ impl MetricsCollector {
     pub fn ttft_sample(&mut self, ttft: f64, class: usize) {
         self.ttft.add(ttft);
         self.ttft_by_class[class].add(ttft);
+    }
+}
+
+/// Per-uplink slice of a run (shared-uplink contention breakdown; one
+/// entry per chassis, only populated when contention is enabled).
+#[derive(Clone, Debug)]
+pub struct LinkReport {
+    /// Chassis index (instances 2c, 2c+1 share uplink `c`).
+    pub chassis: usize,
+    /// Uplink capacity, bytes/s.
+    pub capacity: f64,
+    /// Total bytes that crossed this uplink.
+    pub bytes: f64,
+    /// Peak number of concurrent streams sharing the uplink.
+    pub peak_streams: usize,
+    /// Fraction of the makespan with at least one in-flight stream
+    /// (uplink occupancy — queueing shows up as occupancy near 1).
+    pub busy_frac: f64,
+}
+
+impl LinkReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("chassis", Json::num(self.chassis as f64)),
+            ("capacity_gbs", Json::num(self.capacity / 1e9)),
+            ("gb", Json::num(self.bytes / 1e9)),
+            ("peak_streams", Json::num(self.peak_streams as f64)),
+            ("busy_frac", Json::num(self.busy_frac)),
+        ])
     }
 }
 
@@ -153,6 +190,10 @@ pub struct RunReport {
     /// cluster; a single entry on homogeneous clusters).
     pub per_device: Vec<DeviceClassReport>,
 
+    /// Per-uplink contention breakdown (empty when the shared-uplink
+    /// contention model is disabled).
+    pub per_link: Vec<LinkReport>,
+
     /// Raw timeline for Figure 16, if recorded.
     pub tbt_timeline: Vec<(f64, f64)>,
 }
@@ -190,6 +231,8 @@ impl RunReport {
             ("prefix_evictions", Json::num(self.prefix_evictions as f64)),
             ("per_device",
              Json::arr(self.per_device.iter().map(|d| d.to_json()))),
+            ("per_link",
+             Json::arr(self.per_link.iter().map(|l| l.to_json()))),
         ])
     }
 

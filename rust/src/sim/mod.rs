@@ -18,6 +18,6 @@ pub use hardware::{known_device_names, ClusterSpec, DeviceSpec, InstanceSpec,
                    Topology, ALL_DEVICES, ASCEND_910B2, A100, H100, MI300X};
 pub use instance::{Role, SimInstance};
 pub use llm::{LlmSpec, LLAMA2_70B};
-pub use metrics::{DeviceClassReport, MetricsCollector, RunReport};
+pub use metrics::{DeviceClassReport, LinkReport, MetricsCollector, RunReport};
 pub use perfmodel::PerfModel;
 pub use request::{InstId, ReqId, SimRequest};

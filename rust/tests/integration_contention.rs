@@ -1,0 +1,263 @@
+//! Shared-uplink contention model: property tests + end-to-end checks.
+//!
+//! The two pinned properties (ISSUE 3 satellites):
+//!
+//! 1. Transfer completion time is monotonically non-decreasing in the
+//!    number of concurrent streams sharing an uplink.
+//! 2. With contention disabled — or with a single stream under
+//!    contention — every transfer time matches the PR 2 point-to-point
+//!    price `bytes / link_bw` EXACTLY (bit-identical), i.e. the
+//!    contention model is a strict refinement, not a recalibration.
+
+use accellm::sim::{run, ClusterSpec, InstId, ReqId, RunReport, Scheduler,
+                   SimConfig, SimCtx, Work, XferKind, LLAMA2_70B};
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::workload::{Trace, MIXED};
+
+/// Probe scheduler: starts `k` overlapped src→dst transfers at t=0 and
+/// records each completion time in arrival order.
+struct Fanout {
+    k: usize,
+    tokens: f64,
+    src: InstId,
+    dst: InstId,
+    done: Vec<f64>,
+}
+
+impl Scheduler for Fanout {
+    fn name(&self) -> &'static str {
+        "fanout-probe"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        for r in 0..self.k {
+            ctx.start_transfer(self.src, self.dst, r, self.tokens,
+                               XferKind::Migration, true);
+        }
+    }
+
+    fn on_arrival(&mut self, _ctx: &mut SimCtx, _req: ReqId) {}
+
+    fn on_work_done(&mut self, _ctx: &mut SimCtx, _inst: InstId, _work: Work,
+                    _completed: Vec<ReqId>) {
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, _src: InstId,
+                        _dst: InstId, _req: ReqId) {
+        self.done.push(ctx.now);
+    }
+}
+
+fn empty_trace() -> Trace {
+    Trace { spec: MIXED, rate: 1.0, seed: 0, requests: Vec::new() }
+}
+
+/// Run `k` concurrent src→dst streams of `tokens` each; returns the
+/// report and completion times (ascending).
+fn fanout(cluster: &ClusterSpec, k: usize, tokens: f64, src: InstId,
+          dst: InstId) -> (RunReport, Vec<f64>) {
+    let cfg = SimConfig::new(cluster.clone(), LLAMA2_70B);
+    let mut probe = Fanout { k, tokens, src, dst, done: Vec::new() };
+    let report = run(&cfg, &empty_trace(), &mut probe);
+    let mut done = probe.done;
+    done.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (report, done)
+}
+
+/// Property 1: on a shared uplink, completion time never decreases as
+/// concurrent streams are added — neither the last stream's finish nor
+/// any individual stream's price improves with more contention.
+#[test]
+fn prop_completion_time_monotone_in_concurrent_streams() {
+    check(
+        60,
+        |rng| {
+            let gbs = rng.uniform_f64(1.0, 50.0);
+            let tokens = rng.uniform_f64(100.0, 4000.0);
+            let k = rng.uniform_usize(1, 5);
+            (gbs, tokens, k)
+        },
+        |&(gbs, tokens, k)| {
+            let mut cluster = ClusterSpec::homogeneous(accellm::sim::H100, 4);
+            cluster.set_network_bw(gbs * 1e9);
+            cluster.enable_contention(gbs * 1e9);
+            let base =
+                tokens * LLAMA2_70B.kv_bytes_per_token() / (gbs * 1e9);
+            // Cross-chassis: instance 0 -> instance 2.
+            let (_, with_k) = fanout(&cluster, k, tokens, 0, 2);
+            let (_, with_k1) = fanout(&cluster, k + 1, tokens, 0, 2);
+            prop_assert(with_k.len() == k && with_k1.len() == k + 1,
+                        "missing completions")?;
+            let last_k = *with_k.last().unwrap();
+            let last_k1 = *with_k1.last().unwrap();
+            prop_assert(
+                last_k1 >= last_k,
+                &format!("last completion sped up with an extra stream: \
+                          {last_k1} < {last_k} (k={k})"),
+            )?;
+            // No stream ever beats the uncontended point-to-point price.
+            for (i, &t) in with_k1.iter().enumerate() {
+                prop_assert(
+                    t >= base - 1e-12,
+                    &format!("stream {i} of {} finished at {t}, faster \
+                              than the single-stream price {base}",
+                             k + 1),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property 2a: with contention DISABLED every transfer — regardless of
+/// how many run concurrently — completes at exactly `bytes / link_bw`,
+/// the PR 2 point-to-point price (links are infinitely parallel).
+#[test]
+fn prop_disabled_contention_matches_point_to_point_price_exactly() {
+    const SPECS: [&str; 3] =
+        ["h100x4", "mixed:h100x2+910b2x2", "a100x2+mi300xx2"];
+    check(
+        60,
+        |rng| {
+            let spec = SPECS[rng.uniform_usize(0, SPECS.len() - 1)];
+            let net: Option<f64> = if rng.next_f64() < 0.5 {
+                Some(rng.uniform_f64(1.0, 100.0))
+            } else {
+                None
+            };
+            let tokens = rng.uniform_f64(1.0, 5000.0);
+            let src = rng.uniform_usize(0, 3);
+            let mut dst = rng.uniform_usize(0, 3);
+            if dst == src {
+                dst = (dst + 1) % 4;
+            }
+            let k = rng.uniform_usize(1, 4);
+            (spec, net, tokens, src, dst, k)
+        },
+        |&(spec, net, tokens, src, dst, k)| {
+            let mut cluster = ClusterSpec::parse(spec).unwrap();
+            if let Some(gbs) = net {
+                cluster.set_network_bw(gbs * 1e9);
+            }
+            let want = tokens * LLAMA2_70B.kv_bytes_per_token()
+                / cluster.topology().link_bw(src, dst);
+            let (report, done) = fanout(&cluster, k, tokens, src, dst);
+            prop_assert(report.per_link.is_empty(),
+                        "per-link stats reported without contention")?;
+            for &t in &done {
+                prop_assert(
+                    t == want,
+                    &format!("{spec} {src}->{dst}: transfer took {t}, \
+                              point-to-point price is {want}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property 2b: with contention ENABLED but a single in-flight stream,
+/// the price is still bit-identical to point-to-point (the uplink
+/// capacity equals the network bandwidth, so one stream saturates
+/// nothing).
+#[test]
+fn prop_single_stream_under_contention_matches_exactly() {
+    check(
+        60,
+        |rng| {
+            let gbs = rng.uniform_f64(1.0, 200.0);
+            let tokens = rng.uniform_f64(1.0, 5000.0);
+            let src = rng.uniform_usize(0, 3);
+            let mut dst = rng.uniform_usize(0, 3);
+            if dst == src {
+                dst = (dst + 1) % 4;
+            }
+            (gbs, tokens, src, dst)
+        },
+        |&(gbs, tokens, src, dst)| {
+            let mut cluster = ClusterSpec::homogeneous(accellm::sim::H100, 4);
+            cluster.set_network_bw(gbs * 1e9);
+            let want = tokens * LLAMA2_70B.kv_bytes_per_token()
+                / cluster.topology().link_bw(src, dst);
+            cluster.enable_contention(gbs * 1e9);
+            let (_, done) = fanout(&cluster, 1, tokens, src, dst);
+            prop_assert(
+                done[0] == want,
+                &format!("single contended stream {src}->{dst}: {} != \
+                          point-to-point {want}", done[0]),
+            )
+        },
+    );
+}
+
+/// End-to-end: a real scheduler on a contended cluster completes
+/// everything, reports sane per-uplink stats, and at generous uplink
+/// capacity the contended run converges to the uncontended one.
+#[test]
+fn scheduler_runs_under_contention_are_sane() {
+    let trace = Trace::poisson(MIXED, 6.0, 30.0, 17);
+    let make = |contended: bool, gbs: f64| {
+        let mut cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+        cluster.set_network_bw(gbs * 1e9);
+        if contended {
+            cluster.enable_contention(gbs * 1e9);
+        }
+        SimConfig::new(cluster, LLAMA2_70B)
+    };
+    for sched in ["splitwise", "accellm", "accellm-prefix", "vllm"] {
+        let cfg = make(true, 10.0);
+        let mut s =
+            accellm::coordinator::by_name(sched, &cfg.cluster).unwrap();
+        let r = run(&cfg, &trace, s.as_mut());
+        assert_eq!(r.completed, trace.len(), "{sched}");
+        assert_eq!(r.per_link.len(), 4, "{sched}");
+        for l in &r.per_link {
+            assert!(l.busy_frac >= 0.0 && l.busy_frac <= 1.0 + 1e-9,
+                    "{sched}: busy_frac {}", l.busy_frac);
+            assert!(l.bytes >= 0.0);
+        }
+        // Disaggregated prefill hand-offs must actually cross uplinks.
+        if sched == "splitwise" {
+            assert!(r.per_link.iter().any(|l| l.bytes > 0.0),
+                    "splitwise moved nothing across uplinks");
+            assert!(r.per_link.iter().any(|l| l.peak_streams >= 1));
+        }
+    }
+    // Generous capacity: contention barely changes the outcome.
+    let cfg_c = make(true, 900.0);
+    let cfg_p = make(false, 900.0);
+    let rc = run(&cfg_c, &trace,
+                 accellm::coordinator::by_name("splitwise", &cfg_c.cluster)
+                     .unwrap()
+                     .as_mut());
+    let rp = run(&cfg_p, &trace,
+                 accellm::coordinator::by_name("splitwise", &cfg_p.cluster)
+                     .unwrap()
+                     .as_mut());
+    assert_eq!(rc.completed, rp.completed);
+    assert!((rc.jct_mean - rp.jct_mean).abs() / rp.jct_mean < 0.05,
+            "900 GB/s uplinks changed JCT: {} vs {}", rc.jct_mean,
+            rp.jct_mean);
+}
+
+/// Contention must bite when it should: the same saturating fan-out
+/// finishes strictly later on a contended uplink than on infinitely
+/// parallel links.
+#[test]
+fn contended_fanout_is_strictly_slower_than_parallel() {
+    let mut contended = ClusterSpec::homogeneous(accellm::sim::H100, 4);
+    contended.set_network_bw(5e9);
+    let parallel = contended.clone();
+    contended.enable_contention(5e9);
+    let (_, slow) = fanout(&contended, 4, 2000.0, 0, 2);
+    let (_, fast) = fanout(&parallel, 4, 2000.0, 0, 2);
+    assert!(slow.last().unwrap() > fast.last().unwrap(),
+            "4-way contended fan-out {} !> parallel {}",
+            slow.last().unwrap(), fast.last().unwrap());
+    // Fair share: the k-th admitted stream pays k x the base price.
+    let base = 2000.0 * LLAMA2_70B.kv_bytes_per_token() / 5e9;
+    for (j, &t) in slow.iter().enumerate() {
+        let want = (j + 1) as f64 * base;
+        assert!((t - want).abs() < 1e-9, "stream {j}: {t} vs {want}");
+    }
+}

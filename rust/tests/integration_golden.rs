@@ -1,0 +1,149 @@
+//! Golden-run regression harness: pins a line-per-metric JSON slice of
+//! the `RunReport` (JCT/TTFT/TPOT, prefix hit rate, per-device
+//! breakdown) for one seeded chat-workload run of EVERY scheduler on
+//! `h100x4` and `mixed:h100x2+910b2x2`, so refactors that perturb event
+//! ordering or float arithmetic show up as reviewable golden diffs
+//! instead of silent drift.
+//!
+//! Bless protocol (insta-style):
+//! * missing golden file  -> the test writes it and reports what to
+//!   commit (first run / intentional re-bless);
+//! * existing golden file -> byte-for-byte comparison; on drift the
+//!   assert prints both documents.  To accept an intentional change,
+//!   delete the stale file under `tests/golden/`, rerun `cargo test`,
+//!   review the diff and commit the regenerated file.
+
+use std::fs;
+use std::path::PathBuf;
+
+use accellm::coordinator::by_name;
+use accellm::sim::{run, ClusterSpec, RunReport, SimConfig, LLAMA2_70B};
+use accellm::util::json::Json;
+use accellm::workload::{Trace, CHAT};
+
+/// Every constructible scheduler, including the blind comparator.
+const SCHEDS: [&str; 5] =
+    ["accellm", "splitwise", "vllm", "accellm-prefix", "accellm-blind"];
+const CLUSTERS: [&str; 2] = ["h100x4", "mixed:h100x2+910b2x2"];
+
+/// Chat sessions at a moderate rate: exercises prefix hits (pinning a
+/// nonzero hit rate for `accellm-prefix`) while every other scheduler
+/// treats it as an ordinary trace.
+const RATE: f64 = 5.0;
+const DUR: f64 = 30.0;
+const SEED: u64 = 7;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The pinned slice of a report, one metric per line (valid JSON, full
+/// float precision — Rust's shortest-round-trip formatting keeps it
+/// deterministic across platforms).
+fn pin(r: &RunReport) -> String {
+    let mut lines: Vec<(String, Json)> = vec![
+        ("scheduler".into(), Json::str(&r.scheduler)),
+        ("cluster".into(), Json::str(&r.device)),
+        ("workload".into(), Json::str(&r.workload)),
+        ("rate".into(), Json::num(r.rate)),
+        ("n_requests".into(), Json::num(r.n_requests as f64)),
+        ("completed".into(), Json::num(r.completed as f64)),
+        ("makespan".into(), Json::num(r.makespan)),
+        ("ttft_mean".into(), Json::num(r.ttft_mean)),
+        ("ttft_p99".into(), Json::num(r.ttft_p99)),
+        ("tpot_mean".into(), Json::num(r.tbt_mean)),
+        ("tbt_p99".into(), Json::num(r.tbt_p99)),
+        ("jct_mean".into(), Json::num(r.jct_mean)),
+        ("jct_p99".into(), Json::num(r.jct_p99)),
+        ("cost_efficiency".into(), Json::num(r.cost_efficiency)),
+        ("utilization".into(), Json::num(r.utilization)),
+        ("peak_kv_gb".into(), Json::num(r.peak_kv_bytes / 1e9)),
+        ("xfer_total_gb".into(), Json::num(r.xfer_total_bytes / 1e9)),
+        ("prefix_hit_rate".into(), Json::num(r.prefix_hit_rate)),
+        ("prefix_saved_tokens".into(),
+         Json::num(r.prefix_saved_tokens as f64)),
+    ];
+    for d in &r.per_device {
+        lines.push((format!("per_device.{}", d.device), d.to_json()));
+    }
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in lines.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{}\": {}{}\n",
+            k,
+            v.encode(),
+            if i + 1 < lines.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[test]
+fn golden_runreports_are_pinned() {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).expect("create tests/golden");
+    let mut blessed = Vec::new();
+    for spec in CLUSTERS {
+        let cluster = ClusterSpec::parse(spec).expect("valid cluster spec");
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let trace = Trace::generate(CHAT, RATE, DUR, SEED);
+        assert!(!trace.is_empty());
+        for sched in SCHEDS {
+            let r1 = run(&cfg, &trace,
+                         by_name(sched, &cfg.cluster).unwrap().as_mut());
+            let r2 = run(&cfg, &trace,
+                         by_name(sched, &cfg.cluster).unwrap().as_mut());
+            let doc = pin(&r1);
+            // A golden pin is only meaningful if the run replays
+            // identically inside one build.
+            assert_eq!(doc, pin(&r2),
+                       "{sched} on {spec}: nondeterministic replay");
+            assert_eq!(r1.completed, trace.len(),
+                       "{sched} on {spec}: dropped requests");
+            let file = dir.join(format!(
+                "{}__{}.json",
+                sched,
+                spec.replace(':', "_").replace('+', "_")
+            ));
+            if file.exists() {
+                let want = fs::read_to_string(&file)
+                    .expect("read golden file");
+                assert_eq!(
+                    want, doc,
+                    "golden drift for {sched} on {spec} (file {}).\n\
+                     If this change is intentional: delete the file, \
+                     rerun `cargo test`, review the regenerated diff \
+                     and commit it.",
+                    file.display()
+                );
+            } else {
+                fs::write(&file, &doc).expect("write golden file");
+                blessed.push(file.display().to_string());
+            }
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!("blessed {} new golden file(s) — review and commit:",
+                  blessed.len());
+        for f in &blessed {
+            eprintln!("  {f}");
+        }
+    }
+}
+
+/// The pinned slice itself must stay parseable JSON (golden files are
+/// diffed by humans but consumed by tools).
+#[test]
+fn pinned_document_is_valid_json() {
+    let cluster = ClusterSpec::parse("h100x4").unwrap();
+    let cfg = SimConfig::new(cluster, LLAMA2_70B);
+    let trace = Trace::generate(CHAT, RATE, 10.0, SEED);
+    let r = run(&cfg, &trace,
+                by_name("accellm", &cfg.cluster).unwrap().as_mut());
+    let doc = pin(&r);
+    let parsed = Json::parse(&doc).expect("pin() must emit valid JSON");
+    assert_eq!(parsed.get("scheduler").and_then(|s| s.as_str()),
+               Some("accellm"));
+    assert!(parsed.get("jct_mean").and_then(|x| x.as_f64()).unwrap() > 0.0);
+}

@@ -4,8 +4,8 @@
 
 use accellm::coordinator::{by_name, AcceLlm, AcceLlmPrefix, Splitwise,
                            Validated, Vllm, ALL_SCHEDULERS};
-use accellm::sim::{run, ClusterSpec, RunReport, Scheduler, SimConfig, H100,
-                   LLAMA2_70B};
+use accellm::sim::{run, ClusterSpec, InstId, ReqId, RunReport, Scheduler,
+                   SimConfig, SimCtx, Work, H100, LLAMA2_70B};
 use accellm::util::quickcheck::{check, prop_assert};
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, CHAT, MIXED};
@@ -166,6 +166,95 @@ fn mixed_cluster_prefix_routing_deterministic_with_hits() {
     assert_eq!(r1.completed, trace.len());
     assert!(r1.prefix_hit_rate > 0.2, "hit rate {}", r1.prefix_hit_rate);
     assert_reports_identical(&r1, &r2, "prefix determinism (mixed)");
+}
+
+/// Wrapper that audits every routing decision of hardware-aware
+/// AcceLLM: the chosen pair must be strictly under its
+/// capacity-weighted CHWBL bound at decision time.
+struct RoutingAudit {
+    inner: AcceLlm,
+    checked: usize,
+}
+
+impl Scheduler for RoutingAudit {
+    fn name(&self) -> &'static str {
+        "routing-audit"
+    }
+
+    fn init(&mut self, ctx: &mut SimCtx) {
+        self.inner.init(ctx);
+    }
+
+    fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
+        let pair = self.inner.pick_pair(ctx, req);
+        let router = self
+            .inner
+            .router()
+            .expect("hardware-aware router must be active on a mixed fleet");
+        let loads: Vec<usize> = (0..self.inner.n_pairs())
+            .map(|p| self.inner.pair_load(p))
+            .collect();
+        let bound = router.load_bound_for(pair, &loads);
+        assert!(loads[pair] < bound,
+                "req {req} routed to pair {pair} at load {} >= weighted \
+                 CHWBL bound {bound} (loads {loads:?})",
+                loads[pair]);
+        self.checked += 1;
+        self.inner.enqueue_on_pair(ctx, req, pair);
+    }
+
+    fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
+                    completed: Vec<ReqId>) {
+        self.inner.on_work_done(ctx, inst, work, completed);
+    }
+
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
+                        dst: InstId, req: ReqId) {
+        self.inner.on_transfer_done(ctx, src, dst, req);
+    }
+}
+
+/// Satellite invariant: capacity-weighted `pick_pair` never routes to a
+/// pair at/above the weighted CHWBL bound — audited on every arrival of
+/// a saturating run, with the shared-uplink contention model enabled.
+#[test]
+fn aware_routing_never_exceeds_weighted_chwbl_bound_under_contention() {
+    let mut cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
+    cluster.set_network_bw(5e9);
+    cluster.enable_contention(5e9);
+    let cfg = SimConfig::new(cluster, LLAMA2_70B);
+    let trace = Trace::poisson(MIXED, 12.0, 40.0, 19);
+    let mut audit =
+        RoutingAudit { inner: AcceLlm::new(&cfg.cluster), checked: 0 };
+    let r = run(&cfg, &trace, &mut audit);
+    assert_eq!(r.completed, trace.len());
+    assert_eq!(audit.checked, trace.len(), "every arrival must be audited");
+    assert_eq!(r.per_link.len(), 4);
+}
+
+/// Satellite pin: topology-aware pairing on a homogeneous cluster
+/// reproduces the PR 2 identity layout bit-for-bit — with or without a
+/// network model and the contention model — and never engages the
+/// capacity-weighted router (so homogeneous routing stays the paper's
+/// free-memory rule exactly; run-level bit-equality is pinned by
+/// `homogeneous_results_pinned_across_spec_paths`).
+#[test]
+fn topology_aware_pairing_is_identity_on_homogeneous_clusters() {
+    for n in [2usize, 4, 8, 16] {
+        let cluster = ClusterSpec::homogeneous(H100, n);
+        let s = AcceLlm::new(&cluster);
+        for p in 0..n / 2 {
+            assert_eq!(s.pair_members(p), (2 * p, 2 * p + 1), "n={n}");
+        }
+        assert!(s.router().is_none(), "n={n}");
+    }
+    let mut starved = ClusterSpec::homogeneous(H100, 4);
+    starved.set_network_bw(1e9);
+    starved.enable_contention(1e9);
+    let s = AcceLlm::new(&starved);
+    assert_eq!(s.pair_members(0), (0, 1));
+    assert_eq!(s.pair_members(1), (2, 3));
+    assert!(s.router().is_none());
 }
 
 /// Per-link transfer pricing: forcing every link to 1 GB/s must slow
