@@ -5,7 +5,7 @@
 
 use std::time::Instant;
 
-use accellm::coordinator::by_name;
+use accellm::registry::SchedulerRegistry;
 use accellm::sim::{run, SimConfig, H100};
 use accellm::workload::{Trace, MIXED};
 
@@ -22,7 +22,8 @@ fn main() {
         let mut best = f64::INFINITY;
         let mut tokens = 0u64;
         for _ in 0..4 {
-            let mut s = by_name(name, &cfg.cluster).unwrap();
+            let mut s =
+                SchedulerRegistry::build_spec(name, &cfg.cluster).unwrap();
             let t0 = Instant::now();
             let r = run(&cfg, &trace, s.as_mut());
             let dt = t0.elapsed().as_secs_f64();

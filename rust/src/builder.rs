@@ -1,0 +1,229 @@
+//! `SimBuilder`: the one run path for every experiment.
+//!
+//! Before this module, ~16 call sites (`main.rs`, the five `eval`
+//! modules, the bench, the integration tests) each re-implemented the
+//! same dance: build a `SimConfig`, construct a scheduler by name,
+//! generate a trace, call `sim::run`.  The builder owns that sequence:
+//!
+//! ```ignore
+//! let report = SimBuilder::parse_cluster("mixed:h100x4+910b2x4")?
+//!     .network_gbs(25.0)
+//!     .contention(25.0)
+//!     .workload(MIXED, 12.0, 60.0, 7)
+//!     .scheduler(SchedSpec::parse("accellm-prefix:load_factor=1.25")?)
+//!     .run();
+//! ```
+//!
+//! Scheduler construction goes through [`SchedulerRegistry::build`],
+//! so any parameterized [`SchedSpec`] works anywhere a run is built.
+//! Policies that exist only as code (the ablation variants
+//! `AcceLlm::without_redundancy` etc., `Validated` wrappers, custom
+//! audit schedulers) use [`SimBuilder::run_with`] with the same
+//! cluster/trace plumbing.
+
+use crate::registry::{SchedSpec, SchedulerRegistry};
+use crate::sim::{run, ClusterSpec, DeviceSpec, LlmSpec, RunReport, Scheduler,
+                 SimConfig, LLAMA2_70B};
+use crate::workload::{Trace, WorkloadSpec};
+
+/// Builder-style simulation run: cluster + topology knobs + trace +
+/// scheduler spec, then [`SimBuilder::run`].
+#[derive(Clone, Debug)]
+pub struct SimBuilder {
+    cluster: ClusterSpec,
+    llm: LlmSpec,
+    interconnect_bw: Option<f64>,
+    record_timeline: bool,
+    trace: Option<Trace>,
+    spec: Option<SchedSpec>,
+}
+
+impl SimBuilder {
+    pub fn new(cluster: ClusterSpec, llm: LlmSpec) -> SimBuilder {
+        SimBuilder {
+            cluster,
+            llm,
+            interconnect_bw: None,
+            record_timeline: false,
+            trace: None,
+            spec: None,
+        }
+    }
+
+    /// Cluster serving the default Llama-2-70B model.
+    pub fn on(cluster: ClusterSpec) -> SimBuilder {
+        SimBuilder::new(cluster, LLAMA2_70B)
+    }
+
+    /// `n` identical `device` instances serving Llama-2-70B.
+    pub fn homogeneous(device: DeviceSpec, n: usize) -> SimBuilder {
+        SimBuilder::on(ClusterSpec::homogeneous(device, n))
+    }
+
+    /// Parse a cluster spec string (`h100x8`, `mixed:h100x4+910b2x4`).
+    pub fn parse_cluster(spec: &str) -> Result<SimBuilder, String> {
+        Ok(SimBuilder::on(ClusterSpec::parse(spec)?))
+    }
+
+    /// Scheduler under evaluation (parameterized spec).
+    pub fn scheduler(mut self, spec: SchedSpec) -> SimBuilder {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Request trace to replay.
+    pub fn trace(mut self, trace: Trace) -> SimBuilder {
+        self.trace = Some(trace);
+        self
+    }
+
+    /// Generate the trace from a workload spec (Poisson/session
+    /// arrivals per the workload kind, deterministic in the seed).
+    pub fn workload(self, wl: WorkloadSpec, rate: f64, duration: f64,
+                    seed: u64) -> SimBuilder {
+        self.trace(Trace::generate(wl, rate, duration, seed))
+    }
+
+    /// Inter-node network bandwidth in GB/s (intra-pair links keep
+    /// NVLink/HCCS).
+    pub fn network_gbs(mut self, gbs: f64) -> SimBuilder {
+        self.cluster.set_network_bw(gbs * 1e9);
+        self
+    }
+
+    /// Enable the shared-uplink contention model with per-chassis
+    /// uplink capacity in GB/s.
+    pub fn contention(mut self, uplink_gbs: f64) -> SimBuilder {
+        self.cluster.enable_contention(uplink_gbs * 1e9);
+        self
+    }
+
+    /// Global flat interconnect override in **bytes/s** — it sets
+    /// [`SimConfig::interconnect_bw`] verbatim (the Figure 10 sweeps);
+    /// `None` keeps per-link topology pricing.  Unlike the GB/s-named
+    /// siblings (`network_gbs`, `contention`), no unit conversion is
+    /// applied here.
+    pub fn interconnect_bw(mut self, bw: Option<f64>) -> SimBuilder {
+        self.interconnect_bw = bw;
+        self
+    }
+
+    /// Record the full (time, gap) TBT timeline (Figure 16).
+    pub fn record_timeline(mut self, on: bool) -> SimBuilder {
+        self.record_timeline = on;
+        self
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    /// The `SimConfig` this builder will run with.
+    pub fn sim_config(&self) -> SimConfig {
+        let mut cfg = SimConfig::new(self.cluster.clone(), self.llm);
+        cfg.interconnect_bw = self.interconnect_bw;
+        cfg.record_timeline = self.record_timeline;
+        cfg
+    }
+
+    /// Construct the scheduler (registry) and run the trace.  Panics
+    /// on a missing `.trace(..)`/`.scheduler(..)` — that is a caller
+    /// bug, not user input (spec strings are validated at parse time).
+    pub fn run(self) -> RunReport {
+        let spec = self
+            .spec
+            .clone()
+            .expect("SimBuilder::run needs .scheduler(..)");
+        let cfg = self.sim_config();
+        let mut sched = SchedulerRegistry::build(&spec, &cfg.cluster);
+        let trace = self
+            .trace
+            .expect("SimBuilder::run needs .trace(..) or .workload(..)");
+        run(&cfg, &trace, sched.as_mut())
+    }
+
+    /// Run with an externally constructed scheduler (ablation
+    /// variants, `Validated` wrappers, audit harnesses).
+    pub fn run_with(self, sched: &mut dyn Scheduler) -> RunReport {
+        let cfg = self.sim_config();
+        let trace = self
+            .trace
+            .expect("SimBuilder::run_with needs .trace(..) or .workload(..)");
+        run(&cfg, &trace, sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AcceLlm;
+    use crate::sim::H100;
+    use crate::workload::MIXED;
+
+    #[test]
+    fn builder_run_matches_manual_run_bit_for_bit() {
+        let trace = Trace::poisson(MIXED, 6.0, 30.0, 7);
+        let cfg = SimConfig::homogeneous(H100, 4);
+        let mut manual_sched = AcceLlm::new(&cfg.cluster);
+        let manual = run(&cfg, &trace, &mut manual_sched);
+        let built = SimBuilder::homogeneous(H100, 4)
+            .trace(trace.clone())
+            .scheduler(SchedSpec::parse("accellm").unwrap())
+            .run();
+        assert_eq!(manual.completed, built.completed);
+        assert_eq!(manual.makespan, built.makespan);
+        assert_eq!(manual.jct_mean, built.jct_mean);
+        assert_eq!(manual.ttft_p99, built.ttft_p99);
+        assert_eq!(manual.cost_efficiency, built.cost_efficiency);
+        assert_eq!(manual.peak_kv_bytes, built.peak_kv_bytes);
+    }
+
+    #[test]
+    fn run_with_drives_custom_scheduler_instances() {
+        let trace = Trace::poisson(MIXED, 5.0, 20.0, 11);
+        let cluster = ClusterSpec::homogeneous(H100, 4);
+        let mut ablated = AcceLlm::without_redundancy(&cluster);
+        let r = SimBuilder::on(cluster)
+            .trace(trace.clone())
+            .run_with(&mut ablated);
+        assert_eq!(r.completed, trace.len());
+    }
+
+    #[test]
+    fn topology_knobs_reach_the_config() {
+        let b = SimBuilder::parse_cluster("mixed:h100x2+910b2x2")
+            .unwrap()
+            .network_gbs(10.0)
+            .contention(5.0)
+            .interconnect_bw(Some(3e9))
+            .record_timeline(true);
+        assert!(b.cluster().topology().contended());
+        assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
+        let cfg = b.sim_config();
+        assert_eq!(cfg.interconnect_bw, Some(3e9));
+        assert!(cfg.record_timeline);
+    }
+
+    #[test]
+    fn workload_shorthand_equals_explicit_trace() {
+        let explicit = Trace::generate(MIXED, 4.0, 15.0, 3);
+        let a = SimBuilder::homogeneous(H100, 2)
+            .workload(MIXED, 4.0, 15.0, 3)
+            .scheduler(SchedSpec::parse("vllm").unwrap())
+            .run();
+        let b = SimBuilder::homogeneous(H100, 2)
+            .trace(explicit)
+            .scheduler(SchedSpec::parse("vllm").unwrap())
+            .run();
+        assert_eq!(a.jct_mean, b.jct_mean);
+        assert_eq!(a.completed, b.completed);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs .trace")]
+    fn run_without_trace_panics_with_guidance() {
+        SimBuilder::homogeneous(H100, 2)
+            .scheduler(SchedSpec::parse("vllm").unwrap())
+            .run();
+    }
+}

@@ -1,8 +1,14 @@
 //! Minimal CLI argument parser (no `clap` in the offline crate set).
 //!
 //! Grammar: `accellm <subcommand> [--flag value]... [--switch]...`
+//!
+//! Every `get`/`has` lookup records the flag name, so after a
+//! subcommand finishes [`Args::unconsumed`] names the flags nothing
+//! consulted — a mistyped `--uplink-gb` is reported instead of
+//! silently running the uncontended model.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{BTreeSet, HashMap};
 
 /// Parsed command line.
 #[derive(Debug, Default)]
@@ -10,6 +16,14 @@ pub struct Args {
     pub subcommand: Option<String>,
     flags: HashMap<String, String>,
     switches: Vec<String>,
+    /// Flag names consulted via `get` (interior mutability so the
+    /// read-only accessor signatures stay unchanged).  Tracked
+    /// separately from switches so a name supplied in the wrong form
+    /// (`--contention true`, or `--rate` with no value) is still
+    /// reported instead of silently taking a default.
+    consumed_flags: RefCell<BTreeSet<String>>,
+    /// Switch names consulted via `has`.
+    consumed_switches: RefCell<BTreeSet<String>>,
 }
 
 impl Args {
@@ -39,11 +53,40 @@ impl Args {
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed_flags.borrow_mut().insert(key.to_string());
         self.flags.get(key).map(|s| s.as_str())
     }
 
     pub fn has(&self, switch: &str) -> bool {
+        self.consumed_switches.borrow_mut().insert(switch.to_string());
         self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Flags/switches present on the command line that no code
+    /// consulted *in the matching form*, as `--name` strings in sorted
+    /// order.  A flag is only consumed by `get`, a switch only by
+    /// `has`, so `--contention true` (value given to a switch) and
+    /// `--rate` (value flag used as a switch) are reported too.
+    /// Checked after subcommand dispatch so typos fail the run instead
+    /// of being silently ignored.
+    pub fn unconsumed(&self) -> Vec<String> {
+        let flags_seen = self.consumed_flags.borrow();
+        let switches_seen = self.consumed_switches.borrow();
+        let mut out: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !flags_seen.contains(*k))
+            .map(|k| format!("--{k}"))
+            .collect();
+        out.extend(
+            self.switches
+                .iter()
+                .filter(|s| !switches_seen.contains(*s))
+                .map(|s| format!("--{s}")),
+        );
+        out.sort();
+        out.dedup();
+        out
     }
 
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -133,5 +176,62 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, None);
         assert!(a.has("help"));
+    }
+
+    #[test]
+    fn unconsumed_flags_are_reported() {
+        let a = parse("simulate --rate 8 --uplink-gb 5 --verbose");
+        let _ = a.get("rate");
+        assert_eq!(a.unconsumed(), vec!["--uplink-gb", "--verbose"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.unconsumed(), vec!["--uplink-gb"]);
+        let _ = a.get("uplink-gb");
+        assert!(a.unconsumed().is_empty());
+    }
+
+    #[test]
+    fn lookups_of_absent_flags_mark_nothing_present() {
+        // Consulting a flag that was not passed must not hide the ones
+        // that were.
+        let a = parse("simulate --uplink-gb 5");
+        let _ = a.get("uplink-gbs");
+        assert!(!a.has("contention"));
+        assert_eq!(a.unconsumed(), vec!["--uplink-gb"]);
+    }
+
+    #[test]
+    fn typed_getters_consume_their_flag() {
+        let a = parse("simulate --rate 8 --instances 4");
+        let _ = a.get_f64("rate", 1.0);
+        let _ = a.get_usize("instances", 1);
+        assert!(a.unconsumed().is_empty());
+    }
+
+    #[test]
+    fn all_flags_consumed_means_clean() {
+        let a = parse("figures --fig=fig11 --out results");
+        let _ = (a.get("fig"), a.get("out"));
+        assert!(a.unconsumed().is_empty());
+    }
+
+    #[test]
+    fn value_passed_to_a_switch_is_reported() {
+        // `--contention true` parses as a FLAG; has("contention")
+        // finds no switch (running the uncontended model) — the
+        // wrong-form flag must still be reported.
+        let a = parse("simulate --contention true");
+        assert!(!a.has("contention"));
+        assert_eq!(a.unconsumed(), vec!["--contention"]);
+    }
+
+    #[test]
+    fn value_flag_used_as_a_switch_is_reported() {
+        // `--rate --duration 30`: "rate" parses as a SWITCH (next
+        // token starts with --); get falls back to the default rate —
+        // the wrong-form switch must still be reported.
+        let a = parse("simulate --rate --duration 30");
+        assert_eq!(a.get_f64("rate", 8.0).unwrap(), 8.0);
+        assert_eq!(a.get_f64("duration", 60.0).unwrap(), 30.0);
+        assert_eq!(a.unconsumed(), vec!["--rate"]);
     }
 }

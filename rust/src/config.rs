@@ -33,15 +33,18 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::registry::SchedSpec;
 use crate::sim::{ClusterSpec, DeviceSpec, SimConfig, LLAMA2_70B};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
-/// A parsed experiment description.
+/// A parsed experiment description.  `"scheduler"` accepts the full
+/// spec grammar (`"accellm-prefix:vnodes=128,load_factor=1.25"`) and
+/// is validated against the registry at config-parse time.
 #[derive(Clone, Debug)]
 pub struct Experiment {
     pub kind: String,
-    pub scheduler: String,
+    pub scheduler: SchedSpec,
     pub cluster: ClusterSpec,
     pub workload: WorkloadSpec,
     pub rates: Vec<f64>,
@@ -55,7 +58,7 @@ impl Default for Experiment {
     fn default() -> Self {
         Experiment {
             kind: "simulate".into(),
-            scheduler: "accellm".into(),
+            scheduler: SchedSpec::parse("accellm").expect("registry name"),
             cluster: ClusterSpec::homogeneous(crate::sim::H100, 4),
             workload: crate::workload::MIXED,
             rates: vec![8.0],
@@ -80,7 +83,8 @@ impl Experiment {
             exp.kind = v.to_string();
         }
         if let Some(v) = j.get("scheduler").and_then(|x| x.as_str()) {
-            exp.scheduler = v.to_string();
+            exp.scheduler =
+                SchedSpec::parse(v).map_err(|e| anyhow!("config: {e}"))?;
         }
         let cluster_key = j.get("cluster").and_then(|x| x.as_str());
         let device_key = j.get("device").and_then(|x| x.as_str());
@@ -211,7 +215,7 @@ mod tests {
                 "duration":30,"seed":9,"interconnect_gbs":100}"#,
         )
         .unwrap();
-        assert_eq!(e.scheduler, "splitwise");
+        assert_eq!(e.scheduler.name(), "splitwise");
         assert_eq!(e.cluster.name(), "910b2x8");
         assert!(e.cluster.is_homogeneous());
         assert_eq!(e.workload.name, "heavy");
@@ -223,7 +227,7 @@ mod tests {
     #[test]
     fn defaults_fill_gaps() {
         let e = Experiment::from_json_text(r#"{"rate": 12}"#).unwrap();
-        assert_eq!(e.scheduler, "accellm");
+        assert_eq!(e.scheduler.name(), "accellm");
         assert_eq!(e.cluster.name(), "h100x4");
         assert_eq!(e.rates, vec![12.0]);
     }
@@ -248,9 +252,10 @@ mod tests {
         assert_eq!(e.cluster.len(), 8);
         assert!(!e.cluster.is_homogeneous());
         assert_eq!(e.cluster.name(), "h100x4+910b2x4");
-        // The scheduler resolves against the parsed cluster.
-        assert!(crate::coordinator::by_name(&e.scheduler, &e.cluster)
-            .is_some());
+        // The scheduler spec builds against the parsed cluster.
+        let s = crate::registry::SchedulerRegistry::build(&e.scheduler,
+                                                          &e.cluster);
+        assert_eq!(s.name(), "accellm");
         // A consistent instance count is accepted; a conflict is not.
         assert!(Experiment::from_json_text(
             r#"{"cluster":"h100x4","instances":4}"#
@@ -326,12 +331,13 @@ mod tests {
                 "instances":4,"rate":6,"duration":30}"#,
         )
         .unwrap();
-        assert_eq!(e.scheduler, "accellm-prefix");
+        assert_eq!(e.scheduler.name(), "accellm-prefix");
         assert_eq!(e.workload.name, "chat");
         assert_eq!(e.workload.kind, crate::workload::WorkloadKind::Chat);
-        // The scheduler name written in the config must resolve.
-        assert!(crate::coordinator::by_name(&e.scheduler, &e.cluster)
-            .is_some());
+        // The scheduler spec written in the config must build.
+        let s = crate::registry::SchedulerRegistry::build(&e.scheduler,
+                                                          &e.cluster);
+        assert_eq!(s.name(), "accellm-prefix");
         // And the parsed spec must generate the session trace.
         let t = crate::workload::Trace::generate(e.workload, e.rates[0],
                                                  e.duration, e.seed);
@@ -341,6 +347,35 @@ mod tests {
             .unwrap();
         assert_eq!(d.workload.name, "shared-doc");
         assert_eq!(d.workload.kind, crate::workload::WorkloadKind::SharedDoc);
+    }
+
+    #[test]
+    fn parameterized_scheduler_specs_in_config() {
+        // The spec grammar is accepted where a bare name was.
+        let e = Experiment::from_json_text(
+            r#"{"scheduler":"accellm-prefix:vnodes=128,load_factor=1.25",
+                "instances":4}"#,
+        )
+        .unwrap();
+        assert_eq!(e.scheduler.name(), "accellm-prefix");
+        assert_eq!(e.scheduler.params.usize("vnodes"), 128);
+        assert_eq!(e.scheduler.params.f64("load_factor"), 1.25);
+        // Malformed specs are rejected at config-parse time with the
+        // registry's actionable message.
+        let err = Experiment::from_json_text(
+            r#"{"scheduler":"vllm:max_batch=x"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("integer"), "{err}");
+        let err = Experiment::from_json_text(
+            r#"{"scheduler":"accellm:bogus=1"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("bogus"), "{err}");
+        assert!(Experiment::from_json_text(r#"{"scheduler":"nope"}"#)
+            .is_err());
     }
 
     #[test]

@@ -53,7 +53,8 @@
 
 use std::collections::VecDeque;
 
-use crate::coordinator::{pair_service_weights, set_kv_tokens};
+use crate::coordinator::{pair_service_weights, set_kv_tokens,
+                         DEFAULT_MAX_DECODE_BATCH};
 use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
 use crate::prefix::splitmix64;
 use crate::sim::{ClusterSpec, InstId, PerfModel, ReqId, Role, Scheduler,
@@ -67,7 +68,7 @@ const MAX_PREFILL_BATCH: usize = 8;
 /// without this, a saturated pair thrashes between roles at every step
 /// boundary, decoding in tiny inefficient batches in between.  15 ms is
 /// well under any TTFT target and ~2 decode steps long.
-const FLIP_SLACK_S: f64 = 0.015;
+pub const DEFAULT_FLIP_SLACK_S: f64 = 0.015;
 const FLIP_QUEUE_LEN: usize = 4;
 
 /// Relative margin above which two pair members count as hardware-
@@ -114,8 +115,11 @@ pub struct AcceLlm {
     replicate: bool,
     /// Rebalance pair decode sets after role changes (ablation).
     rebalance: bool,
-    /// Flip-damping window in seconds (ablation sweep).
+    /// Flip-damping window in seconds (ablation sweep; registry
+    /// parameter `flip_slack_ms`).
     flip_slack: f64,
+    /// Per-instance decode batch cap (registry parameter `max_batch`).
+    max_decode_batch: usize,
     /// Per-instance decode sets (requests whose KV *primary* is here).
     sets: Vec<Vec<ReqId>>,
     /// Per-pair prompt queues.
@@ -168,8 +172,20 @@ impl AcceLlm {
     /// Ablation variant: custom flip-damping window.
     pub fn with_flip_slack(cluster: &ClusterSpec, slack_s: f64) -> Self {
         let mut s = Self::new(cluster);
-        s.flip_slack = slack_s;
+        s.set_flip_slack(slack_s);
         s
+    }
+
+    /// Flip-damping window in seconds (registry param `flip_slack_ms`).
+    pub fn set_flip_slack(&mut self, slack_s: f64) {
+        assert!(slack_s >= 0.0, "flip slack must be non-negative");
+        self.flip_slack = slack_s;
+    }
+
+    /// Per-instance decode batch cap (registry param `max_batch`).
+    pub fn set_max_decode_batch(&mut self, cap: usize) {
+        assert!(cap >= 1, "decode batch cap must be >= 1");
+        self.max_decode_batch = cap;
     }
 
     fn identity_pairing(n: usize) -> Vec<(InstId, InstId)> {
@@ -326,7 +342,8 @@ impl AcceLlm {
             router,
             replicate: true,
             rebalance: true,
-            flip_slack: FLIP_SLACK_S,
+            flip_slack: DEFAULT_FLIP_SLACK_S,
+            max_decode_batch: DEFAULT_MAX_DECODE_BATCH,
             sets: vec![Vec::new(); n],
             queues: vec![VecDeque::new(); n / 2],
             replicas_on: vec![Vec::new(); n],
@@ -466,7 +483,8 @@ impl AcceLlm {
         if ctx.is_busy(inst) || self.prefilling[inst] || self.sets[inst].is_empty() {
             return;
         }
-        let batch = crate::coordinator::capped_batch(&self.sets[inst]);
+        let batch = crate::coordinator::capped_batch(&self.sets[inst],
+                                                     self.max_decode_batch);
         ctx.start_decode_step(inst, batch, vec![]);
     }
 

@@ -15,6 +15,13 @@
 //! * [`vllm::Vllm`] — continuous-batching baseline (Kwon et al. 2023):
 //!   prefill-prioritized, prefill and decode batched together on every
 //!   instance (the Figure 5 latency-spike regime).
+//!
+//! Construction is declarative: every policy is registered in
+//! [`crate::registry::SchedulerRegistry`] with its aliases, help line,
+//! sweep/paper-figure membership and tunable parameters, and built from
+//! a parameterized [`crate::registry::SchedSpec`]
+//! (`name:key=val,key=val`).  `--list-schedulers`, the sweep set and
+//! the paper-figure set are derived views of that one table.
 
 pub mod accellm;
 pub mod splitwise;
@@ -27,58 +34,7 @@ pub use validator::Validated;
 pub use splitwise::Splitwise;
 pub use vllm::Vllm;
 
-use crate::sim::{ClusterSpec, ReqId, Scheduler, SimCtx};
-
-/// Construct a scheduler by name (CLI / config entry point).  Schedulers
-/// receive the full [`ClusterSpec`] so they can make hardware-aware
-/// placement decisions on heterogeneous clusters.
-pub fn by_name(name: &str, cluster: &ClusterSpec) -> Option<Box<dyn Scheduler>> {
-    match name.to_ascii_lowercase().as_str() {
-        "accellm" | "acc" => Some(Box::new(AcceLlm::new(cluster))),
-        "accellm-prefix" | "accellm_prefix" | "acc-prefix" | "prefix" => {
-            Some(Box::new(AcceLlmPrefix::new(cluster)))
-        }
-        // Capacity-blind AcceLLM (identity pairing) — the hetero
-        // evaluation's comparison point, not part of ALL_SCHEDULERS.
-        "accellm-blind" | "accellm_blind" | "blind" => {
-            Some(Box::new(AcceLlm::with_identity_pairing(cluster)))
-        }
-        "splitwise" | "spl" => Some(Box::new(Splitwise::new(cluster))),
-        "vllm" => Some(Box::new(Vllm::new(cluster.len()))),
-        _ => None,
-    }
-}
-
-/// All scheduler names, for sweeps.  `accellm-prefix` is last so
-/// position-indexed consumers of the original trio stay valid.
-pub const ALL_SCHEDULERS: [&str; 4] =
-    ["accellm", "splitwise", "vllm", "accellm-prefix"];
-
-/// (name, one-line description) for every constructible scheduler —
-/// `--list-schedulers` output.
-pub const SCHEDULER_HELP: [(&str, &str); 5] = [
-    ("accellm",
-     "paper §4: instance pairs, redundant KV, dynamic role flips; \
-      topology-aware pairing + capacity-weighted routing on mixed \
-      clusters"),
-    ("accellm-prefix",
-     "AcceLLM pairs + global prefix index + capacity-weighted CHWBL \
-      routing"),
-    ("splitwise",
-     "static prefill/decode disaggregation; prefill pool picked by \
-      compute"),
-    ("vllm",
-     "continuous batching, round-robin, hardware-blind (naive baseline)"),
-    ("accellm-blind",
-     "AcceLLM with capacity-blind identity pairing (hetero-eval \
-      comparator)"),
-];
-
-/// The three systems the paper evaluates — regenerated paper figures
-/// iterate exactly these so their artifacts keep the paper's row
-/// structure (the prefix scheduler gets its own `prefix_locality`
-/// output in `eval::prefix`).
-pub const PAPER_SCHEDULERS: [&str; 3] = ["accellm", "splitwise", "vllm"];
+use crate::sim::{ClusterSpec, ReqId, SimCtx};
 
 /// Shared helper: total KV tokens of a request set (load-balance weight).
 pub(crate) fn set_kv_tokens(ctx: &SimCtx, set: &[ReqId]) -> u64 {
@@ -101,14 +57,15 @@ pub fn pair_service_weights(cluster: &ClusterSpec,
         .collect()
 }
 
-/// Per-instance decode batch cap, matching vLLM 0.4.2's default
+/// Default per-instance decode batch cap, matching vLLM 0.4.2's default
 /// `max_num_seqs` (the paper builds every instance on vLLM 0.4.2,
 /// Section 4.2.3).  Requests beyond the cap wait for a slot — this is
 /// what turns soft throughput saturation into the post-peak decline of
-/// Figures 11a/12a.
-pub const MAX_DECODE_BATCH: usize = 256;
+/// Figures 11a/12a.  Per-run values come from the `max_batch` scheduler
+/// parameter (`vllm:max_batch=128`); this constant is its default.
+pub const DEFAULT_MAX_DECODE_BATCH: usize = 256;
 
-/// FIFO slice of at most `MAX_DECODE_BATCH` requests for the next step.
-pub(crate) fn capped_batch(set: &[ReqId]) -> Vec<ReqId> {
-    set[..set.len().min(MAX_DECODE_BATCH)].to_vec()
+/// FIFO slice of at most `cap` requests for the next decode step.
+pub(crate) fn capped_batch(set: &[ReqId], cap: usize) -> Vec<ReqId> {
+    set[..set.len().min(cap)].to_vec()
 }

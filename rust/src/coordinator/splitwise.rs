@@ -43,6 +43,8 @@ pub struct Splitwise {
     sets: Vec<Vec<ReqId>>,
     /// Requests whose KV is in flight to a decode instance.
     in_transfer: Vec<(ReqId, InstId)>,
+    /// Per-instance decode batch cap (registry parameter `max_batch`).
+    max_decode_batch: usize,
 }
 
 impl Splitwise {
@@ -73,7 +75,14 @@ impl Splitwise {
             queue: VecDeque::new(),
             sets: vec![Vec::new(); n],
             in_transfer: Vec::new(),
+            max_decode_batch: crate::coordinator::DEFAULT_MAX_DECODE_BATCH,
         }
+    }
+
+    /// Per-instance decode batch cap (registry param `max_batch`).
+    pub fn set_max_decode_batch(&mut self, cap: usize) {
+        assert!(cap >= 1, "decode batch cap must be >= 1");
+        self.max_decode_batch = cap;
     }
 
     pub fn n_prefill_instances(&self) -> usize {
@@ -141,7 +150,8 @@ impl Splitwise {
         if ctx.is_busy(inst) || self.sets[inst].is_empty() {
             return;
         }
-        let batch = crate::coordinator::capped_batch(&self.sets[inst]);
+        let batch = crate::coordinator::capped_batch(&self.sets[inst],
+                                                     self.max_decode_batch);
         ctx.start_decode_step(inst, batch, vec![]);
     }
 }

@@ -19,7 +19,7 @@
 //! robin ignores device capability, making this the capacity-blind
 //! baseline of the `hetero` evaluation.
 
-use crate::coordinator::{capped_batch, MAX_DECODE_BATCH};
+use crate::coordinator::{capped_batch, DEFAULT_MAX_DECODE_BATCH};
 use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
 
 pub struct Vllm {
@@ -28,6 +28,9 @@ pub struct Vllm {
     /// Per-instance queue of prompts waiting for admission.
     waiting: Vec<Vec<ReqId>>,
     next_rr: usize,
+    /// `max_num_seqs`: admission slots and decode batch cap (registry
+    /// parameter `max_batch`).
+    max_decode_batch: usize,
 }
 
 impl Vllm {
@@ -36,7 +39,14 @@ impl Vllm {
             sets: vec![Vec::new(); n_instances],
             waiting: vec![Vec::new(); n_instances],
             next_rr: 0,
+            max_decode_batch: DEFAULT_MAX_DECODE_BATCH,
         }
+    }
+
+    /// Per-instance decode batch cap (registry param `max_batch`).
+    pub fn set_max_decode_batch(&mut self, cap: usize) {
+        assert!(cap >= 1, "decode batch cap must be >= 1");
+        self.max_decode_batch = cap;
     }
 
     /// Start the next iteration: a prompt-only step if prompts wait and
@@ -45,7 +55,8 @@ impl Vllm {
         if ctx.is_busy(inst) {
             return;
         }
-        let free_slots = MAX_DECODE_BATCH.saturating_sub(self.sets[inst].len());
+        let free_slots =
+            self.max_decode_batch.saturating_sub(self.sets[inst].len());
         if !self.waiting[inst].is_empty() && free_slots > 0 {
             // Prompt-exclusive iteration (vLLM 0.4.2: no chunked prefill).
             let n = self.waiting[inst].len().min(free_slots);
@@ -58,7 +69,7 @@ impl Vllm {
             return;
         }
         if !self.sets[inst].is_empty() {
-            let batch = capped_batch(&self.sets[inst]);
+            let batch = capped_batch(&self.sets[inst], self.max_decode_batch);
             ctx.start_decode_step(inst, batch, vec![]);
         }
     }

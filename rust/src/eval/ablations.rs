@@ -12,20 +12,20 @@
 //!   wait for the window) against cost-efficiency (fewer thrashing
 //!   flips).
 
+use crate::builder::SimBuilder;
 use crate::coordinator::AcceLlm;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, ClusterSpec, Scheduler, SimConfig, H100};
+use crate::sim::{ClusterSpec, Scheduler, H100};
 use crate::workload::{Trace, MIXED};
-
-fn cfg(n: usize) -> SimConfig {
-    let mut cfg = SimConfig::homogeneous(H100, n);
-    cfg.record_timeline = true;
-    cfg
-}
 
 fn row(name: &str, rate: f64, sched: &mut dyn Scheduler, trace: &Trace)
        -> String {
-    let r = run(&cfg(4), trace, sched);
+    // Ablation variants exist only as code (no registry spec): the
+    // builder still owns cluster/trace plumbing via `run_with`.
+    let r = SimBuilder::homogeneous(H100, 4)
+        .record_timeline(true)
+        .trace(trace.clone())
+        .run_with(sched);
     assert_eq!(r.completed, trace.len(), "{name} dropped requests");
     format!(
         "{},{:.1},{:.1},{:.4},{:.5},{:.5},{:.2},{:.3}",

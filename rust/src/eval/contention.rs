@@ -18,9 +18,10 @@
 //! Per-uplink occupancy/peak-stream columns come from the engine's
 //! in-flight stream tracking ([`crate::sim::LinkReport`]).
 
-use crate::coordinator::by_name;
+use crate::builder::SimBuilder;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, ClusterSpec, RunReport, SimConfig, LLAMA2_70B};
+use crate::registry::SchedSpec;
+use crate::sim::RunReport;
 use crate::workload::{Trace, MIXED};
 
 /// Fixed seed/duration, matching the figure harness conventions.
@@ -43,14 +44,13 @@ const SCHEDS: [&str; 3] = ["accellm", "accellm-blind", "splitwise"];
 
 /// One (network bandwidth, scheduler) cell on the contended cluster.
 pub fn run_contended(gbs: f64, sched: &str) -> RunReport {
-    let mut cluster =
-        ClusterSpec::parse(CONTENTION_CLUSTER).expect("valid cluster spec");
-    cluster.set_network_bw(gbs * 1e9);
-    cluster.enable_contention(gbs * 1e9);
-    let cfg = SimConfig::new(cluster, LLAMA2_70B);
-    let trace = Trace::poisson(MIXED, RATE, DUR, SEED);
-    let mut s = by_name(sched, &cfg.cluster).expect("known scheduler");
-    run(&cfg, &trace, s.as_mut())
+    SimBuilder::parse_cluster(CONTENTION_CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(gbs)
+        .contention(gbs)
+        .trace(Trace::poisson(MIXED, RATE, DUR, SEED))
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
+        .run()
 }
 
 /// Contended `--network-gbs` sweep, aware vs blind (+ splitwise).

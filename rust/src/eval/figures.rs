@@ -1,16 +1,19 @@
-//! One generator per paper table/figure.
+//! One generator per paper table/figure.  Every simulated cell runs
+//! through [`SimBuilder`] with a registry [`SchedSpec`].
 
-use crate::coordinator::{by_name, PAPER_SCHEDULERS};
-use crate::sim::{run, DeviceSpec, InstanceSpec, PerfModel, SimConfig,
-                 ASCEND_910B2, H100, LLAMA2_70B};
-use crate::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
+use crate::builder::SimBuilder;
+use crate::registry::{SchedSpec, SchedulerRegistry};
+use crate::sim::{DeviceSpec, InstanceSpec, PerfModel, ASCEND_910B2, H100,
+                 LLAMA2_70B};
+use crate::workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED};
 
 fn model(dev: DeviceSpec) -> PerfModel {
     PerfModel::new(InstanceSpec::new(dev), LLAMA2_70B)
 }
 
-fn sim_cfg(dev: DeviceSpec, n: usize) -> SimConfig {
-    SimConfig::homogeneous(dev, n)
+/// Default-parameter spec for a registry scheduler name.
+fn spec(name: &str) -> SchedSpec {
+    SchedSpec::parse(name).expect("registry name")
 }
 
 /// A regenerated table/figure: CSV header + rows.
@@ -175,11 +178,12 @@ pub fn fig5(dev: DeviceSpec) -> FigureOutput {
 pub fn fig6(dev: DeviceSpec) -> FigureOutput {
     let trace = Trace::phased(MIXED, &[(20.0, 12.0), (20.0, 1.0), (20.0, 12.0)],
                               SEED);
-    let cfg = sim_cfg(dev, 4);
     let mut rows = Vec::new();
     for name in ["splitwise", "accellm"] {
-        let mut s = by_name(name, &cfg.cluster).unwrap();
-        let r = run(&cfg, &trace, s.as_mut());
+        let r = SimBuilder::homogeneous(dev, 4)
+            .trace(trace.clone())
+            .scheduler(spec(name))
+            .run();
         rows.push(format!("{},{},{:.3},{:.3},{:.2}", dev.name, name,
                           r.utilization, r.cost_efficiency, r.jct_mean));
     }
@@ -200,14 +204,15 @@ pub fn fig6(dev: DeviceSpec) -> FigureOutput {
 /// Figure 9: peak per-instance KV memory to serve the mixed workload,
 /// 4 instances, at 4/8/12 req/s.
 pub fn fig9(dev: DeviceSpec) -> FigureOutput {
-    let cfg = sim_cfg(dev, 4);
     let mut rows = Vec::new();
     for &rate in &[4.0, 8.0, 12.0] {
         let trace = Trace::poisson(MIXED, rate, DUR, SEED);
         let mut per_sched = Vec::new();
-        for name in PAPER_SCHEDULERS {
-            let mut s = by_name(name, &cfg.cluster).unwrap();
-            let r = run(&cfg, &trace, s.as_mut());
+        for name in SchedulerRegistry::paper() {
+            let r = SimBuilder::homogeneous(dev, 4)
+                .trace(trace.clone())
+                .scheduler(spec(name))
+                .run();
             per_sched.push((name, r.peak_kv_bytes / 1e9));
         }
         let acc = per_sched[0].1;
@@ -232,10 +237,11 @@ pub fn fig10(dev: DeviceSpec) -> FigureOutput {
     let mut rows = Vec::new();
     for &gbs in &[1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 200.0, 400.0, 900.0] {
         for name in ["accellm", "splitwise"] {
-            let mut cfg = sim_cfg(dev, 4);
-            cfg.interconnect_bw = Some(gbs * 1e9);
-            let mut s = by_name(name, &cfg.cluster).unwrap();
-            let r = run(&cfg, &trace, s.as_mut());
+            let r = SimBuilder::homogeneous(dev, 4)
+                .interconnect_bw(Some(gbs * 1e9))
+                .trace(trace.clone())
+                .scheduler(spec(name))
+                .run();
             rows.push(format!(
                 "{},{:.0},{},{:.1},{:.2},{:.2},{:.2}",
                 dev.name, gbs, name, r.cost_efficiency, r.jct_mean,
@@ -262,12 +268,13 @@ fn latency_grid(id: &str, dev: DeviceSpec, wl: WorkloadSpec,
                 sizes: &[usize]) -> FigureOutput {
     let mut rows = Vec::new();
     for &n in sizes {
-        let cfg = sim_cfg(dev, n);
         for &rate in &RATE_SWEEP {
             let trace = Trace::poisson(wl, rate, DUR, SEED);
-            for name in PAPER_SCHEDULERS {
-                let mut s = by_name(name, &cfg.cluster).unwrap();
-                let r = run(&cfg, &trace, s.as_mut());
+            for name in SchedulerRegistry::paper() {
+                let r = SimBuilder::homogeneous(dev, n)
+                    .trace(trace.clone())
+                    .scheduler(spec(name))
+                    .run();
                 rows.push(format!(
                     "{},{},{},{},{:.1},{:.1},{:.4},{:.4},{:.5},{:.5},{:.2},{:.2}",
                     dev.name, wl.name, n, name, rate, r.cost_efficiency,
@@ -318,11 +325,12 @@ pub fn fig15() -> FigureOutput {
 pub fn fig16(dev: DeviceSpec) -> FigureOutput {
     let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
     let mut rows = Vec::new();
-    for name in PAPER_SCHEDULERS {
-        let mut cfg = sim_cfg(dev, 4);
-        cfg.record_timeline = true;
-        let mut s = by_name(name, &cfg.cluster).unwrap();
-        let r = run(&cfg, &trace, s.as_mut());
+    for name in SchedulerRegistry::paper() {
+        let r = SimBuilder::homogeneous(dev, 4)
+            .record_timeline(true)
+            .trace(trace.clone())
+            .scheduler(spec(name))
+            .run();
         let mut gaps: Vec<f64> =
             r.tbt_timeline.iter().map(|&(_, g)| g).collect();
         gaps.sort_by(|a, b| b.partial_cmp(a).unwrap());
@@ -334,6 +342,51 @@ pub fn fig16(dev: DeviceSpec) -> FigureOutput {
         id: "fig16".into(),
         title: "Worst-case TBT latencies (mixed, 4 instances)".into(),
         header: "device,scheduler,tbt_max_s,tbt_p99_9_s,tbt_p99_s,tbt_mean_s"
+            .into(),
+        rows,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parameter sweeps (registry/spec scenarios)
+// ---------------------------------------------------------------------------
+
+/// CHWBL load factors swept by [`param_sweep`].
+pub const PARAM_SWEEP_LOAD_FACTORS: [f64; 6] =
+    [1.0, 1.1, 1.25, 1.5, 2.0, 3.0];
+
+/// Sweep the prefix router's CHWBL load factor on the mixed fleet —
+/// a scheduler parameter that was a compile-time constant before the
+/// registry/spec redesign, now one spec string per point
+/// (`accellm-prefix:load_factor=L`).  The load factor trades locality
+/// for balance: a tight bound (c=1) spills sessions off their cached
+/// pair as soon as it runs ahead of the fair share, a loose bound
+/// keeps affinity (higher hit rate) at the cost of imbalance.
+pub fn param_sweep() -> FigureOutput {
+    const CLUSTER: &str = "mixed:h100x4+910b2x4";
+    const RATE: f64 = 10.0;
+    let mut rows = Vec::new();
+    for &lf in &PARAM_SWEEP_LOAD_FACTORS {
+        let s = SchedSpec::parse(&format!("accellm-prefix:load_factor={lf}"))
+            .expect("valid spec");
+        let r = SimBuilder::parse_cluster(CLUSTER)
+            .expect("valid cluster spec")
+            .workload(CHAT, RATE, 40.0, SEED)
+            .scheduler(s)
+            .run();
+        rows.push(format!(
+            "{},accellm-prefix,{},{:.1},{:.4},{:.2},{:.3},{},{:.3}",
+            CLUSTER.trim_start_matches("mixed:"), lf, RATE, r.ttft_mean,
+            r.jct_mean, r.prefix_hit_rate, r.prefix_saved_tokens,
+            r.utilization));
+    }
+    FigureOutput {
+        id: "param_sweep".into(),
+        title: "CHWBL load-factor sweep (accellm-prefix:load_factor=L, \
+                chat sessions, mixed h100x4+910b2x4)"
+            .into(),
+        header: "cluster,scheduler,load_factor,rate,ttft_mean_s,jct_mean_s,\
+                 prefix_hit_rate,saved_prefill_tokens,utilization"
             .into(),
         rows,
     }
@@ -367,15 +420,16 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "prefix_locality" => crate::eval::prefix::prefix_locality(),
         "hetero" => crate::eval::hetero::hetero(),
         "contention" => crate::eval::contention::contention(),
+        "param_sweep" => param_sweep(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
-    "hetero", "contention",
+    "hetero", "contention", "param_sweep",
 ];
 
 /// Generate everything (the `make bench` payload).
@@ -437,6 +491,25 @@ mod tests {
             assert!(figure_by_id(id).is_some(), "{id}");
         }
         assert!(figure_by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn param_sweep_exercises_the_load_factor() {
+        let f = param_sweep();
+        assert_eq!(f.rows.len(), PARAM_SWEEP_LOAD_FACTORS.len());
+        let col = |row: &str, i: usize| -> f64 {
+            row.split(',').nth(i).unwrap().parse().unwrap()
+        };
+        for row in &f.rows {
+            assert!(col(row, 6) > 0.0, "zero hit rate: {row}");
+        }
+        // A looser bound never keeps less locality than the tight
+        // c = 1 bound (affinity is only ever overruled by load).
+        let first = &f.rows[0];
+        let last = &f.rows[f.rows.len() - 1];
+        assert!(col(last, 6) >= col(first, 6),
+                "hit rate at c=3 {} < at c=1 {}", col(last, 6),
+                col(first, 6));
     }
 
     #[test]

@@ -11,9 +11,10 @@
 //! leaning 910B2 per pair) spreads load across the whole fleet and
 //! prefills at H100 speed — the headline mixed-cluster result.
 
-use crate::coordinator::by_name;
+use crate::builder::SimBuilder;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, ClusterSpec, RunReport, SimConfig, LLAMA2_70B};
+use crate::registry::{SchedSpec, SchedulerRegistry};
+use crate::sim::{ClusterSpec, RunReport};
 use crate::workload::{Trace, MIXED};
 
 /// Fixed seed/duration, matching the figure harness conventions.
@@ -48,10 +49,11 @@ fn class_rows(cluster: &str, sched: &str, rate: f64, r: &RunReport,
 }
 
 /// Run one (cluster, scheduler, rate) cell.
-fn run_cell(cfg: &SimConfig, sched: &str, rate: f64) -> RunReport {
-    let trace = Trace::poisson(MIXED, rate, DUR, SEED);
-    let mut s = by_name(sched, &cfg.cluster).expect("known scheduler");
-    run(cfg, &trace, s.as_mut())
+fn run_cell(cluster: &ClusterSpec, sched: &str, rate: f64) -> RunReport {
+    SimBuilder::on(cluster.clone())
+        .trace(Trace::poisson(MIXED, rate, DUR, SEED))
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
+        .run()
 }
 
 /// Homogeneous vs mixed clusters, all schedulers (+ the capacity-blind
@@ -60,18 +62,16 @@ pub fn hetero() -> FigureOutput {
     let mut rows = Vec::new();
     for spec in HETERO_CLUSTERS {
         let cluster = ClusterSpec::parse(spec).expect("valid cluster spec");
-        let cfg = SimConfig::new(cluster, LLAMA2_70B);
-        let name = cfg.cluster.name();
-        let mut scheds: Vec<&str> =
-            vec!["accellm", "splitwise", "vllm", "accellm-prefix"];
-        if !cfg.cluster.is_homogeneous() {
+        let name = cluster.name();
+        let mut scheds: Vec<&str> = SchedulerRegistry::sweep().collect();
+        if !cluster.is_homogeneous() {
             scheds.push("accellm-blind");
         }
         for &rate in &RATES {
             for &sched in &scheds {
-                let r = run_cell(&cfg, sched, rate);
+                let r = run_cell(&cluster, sched, rate);
                 rows.push(aggregate_row(&name, sched, rate, &r));
-                if !cfg.cluster.is_homogeneous() {
+                if !cluster.is_homogeneous() {
                     class_rows(&name, sched, rate, &r, &mut rows);
                 }
             }
@@ -103,12 +103,15 @@ mod tests {
         // Acceptance: a mixed h100x4+910b2x4 run works end-to-end for
         // all four schedulers (plus the blind comparator).
         let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
-        let cfg = SimConfig::new(cluster, LLAMA2_70B);
         let trace = Trace::poisson(MIXED, 8.0, DUR, SEED);
-        for sched in ["accellm", "splitwise", "vllm", "accellm-prefix",
-                      "accellm-blind"] {
-            let mut s = by_name(sched, &cfg.cluster).unwrap();
-            let r = run(&cfg, &trace, s.as_mut());
+        let scheds: Vec<&str> = SchedulerRegistry::sweep()
+            .chain(["accellm-blind"])
+            .collect();
+        for sched in scheds {
+            let r = SimBuilder::on(cluster.clone())
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(sched).unwrap())
+                .run();
             assert_eq!(r.completed, trace.len(), "{sched} dropped requests");
             assert_eq!(r.per_device.len(), 2, "{sched} class breakdown");
             let total: u64 =
@@ -126,14 +129,15 @@ mod tests {
         // pairs while 910B2 pairs idle.  Aware pairing spreads the load
         // and prefills on the fast member of every pair.
         let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
-        let cfg = SimConfig::new(cluster, LLAMA2_70B);
         let trace = Trace::poisson(MIXED, 18.0, 60.0, SEED);
-        let aware = run(&cfg, &trace,
-                        by_name("accellm", &cfg.cluster).unwrap().as_mut());
-        let blind = run(&cfg, &trace,
-                        by_name("accellm-blind", &cfg.cluster)
-                            .unwrap()
-                            .as_mut());
+        let cell = |sched: &str| {
+            SimBuilder::on(cluster.clone())
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(sched).unwrap())
+                .run()
+        };
+        let aware = cell("accellm");
+        let blind = cell("accellm-blind");
         assert_eq!(aware.completed, trace.len());
         assert_eq!(blind.completed, trace.len());
         assert!(aware.jct_mean < blind.jct_mean,

@@ -7,9 +7,10 @@
 //! prefill work, which shows up as a nonzero hit rate, saved prefill
 //! tokens, and lower TTFT at identical request streams.
 
-use crate::coordinator::by_name;
+use crate::builder::SimBuilder;
 use crate::eval::figures::FigureOutput;
-use crate::sim::{run, SimConfig, H100};
+use crate::registry::SchedSpec;
+use crate::sim::H100;
 use crate::workload::{Trace, CHAT, SHARED_DOC};
 
 /// Fixed seed/duration, matching the figure harness conventions.
@@ -19,13 +20,14 @@ const DUR: f64 = 60.0;
 /// Compare plain AcceLLM against the prefix-locality composition on
 /// both session workloads (H100, 4 instances).
 pub fn prefix_locality() -> FigureOutput {
-    let cfg = SimConfig::homogeneous(H100, 4);
     let mut rows = Vec::new();
     for (wl, rate) in [(CHAT, 6.0), (SHARED_DOC, 4.0)] {
         let trace = Trace::generate(wl, rate, DUR, SEED);
         for name in ["accellm", "accellm-prefix"] {
-            let mut s = by_name(name, &cfg.cluster).unwrap();
-            let r = run(&cfg, &trace, s.as_mut());
+            let r = SimBuilder::homogeneous(H100, 4)
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(name).expect("registry name"))
+                .run();
             rows.push(format!(
                 "{},{},{:.1},{:.4},{:.4},{:.2},{:.3},{}",
                 wl.name, name, rate, r.ttft_mean, r.ttft_p99, r.jct_mean,

@@ -21,6 +21,14 @@
 //!
 //! ## Scheduler zoo
 //!
+//! Policies are registered declaratively in [`registry`]: one
+//! [`registry::SchedulerDescriptor`] per policy carries names/aliases,
+//! the help line, sweep/paper-figure membership and tunable parameters,
+//! and every scheduler is constructed from a parameterized
+//! [`registry::SchedSpec`] (`name:key=val,key=val`).  Runs are built
+//! through [`builder::SimBuilder`] — one path for the CLI, config
+//! files, figures, bench and tests.
+//!
 //! | name | module | idea |
 //! |------|--------|------|
 //! | `accellm` | [`coordinator::accellm`] | paper §4: instance pairs, redundant KV, role flips; topology-aware pairing + capacity-weighted routing on mixed clusters |
@@ -49,12 +57,14 @@
 //! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+pub mod builder;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod kvcache;
 pub mod prefix;
+pub mod registry;
 pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod server;
@@ -62,8 +72,10 @@ pub mod sim;
 pub mod util;
 pub mod workload;
 
+pub use builder::SimBuilder;
 pub use coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Vllm};
 pub use prefix::{ChwblRouter, PrefixIndex};
+pub use registry::{SchedSpec, SchedulerRegistry};
 pub use sim::{run, ClusterSpec, PerfModel, RunReport, Scheduler, SimConfig,
               Topology};
 pub use workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED, SHARED_DOC};

@@ -5,13 +5,14 @@ use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
 use std::time::Duration;
 
+use accellm::builder::SimBuilder;
 use accellm::cli::Args;
-use accellm::coordinator;
 use accellm::eval::{all_figures, figure_by_id};
+use accellm::registry::{SchedSpec, SchedulerRegistry};
 #[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
-use accellm::sim::{run, ClusterSpec, DeviceSpec, RunReport, SimConfig,
-                   ALL_DEVICES, LLAMA2_70B};
+use accellm::sim::{ClusterSpec, DeviceSpec, RunReport, ALL_DEVICES,
+                   LLAMA2_70B};
 use accellm::util::json::Json;
 #[cfg(feature = "pjrt")]
 use accellm::util::rng::Pcg64;
@@ -21,7 +22,7 @@ const USAGE: &str = "\
 accellm — AcceLLM reproduction (redundancy-based LLM serving)
 
 USAGE:
-  accellm simulate [--scheduler accellm|accellm-prefix|splitwise|vllm]
+  accellm simulate [--scheduler SPEC]
                    [--cluster SPEC | --device h100|910b2|a100|mi300x
                                      --instances N]
                    [--workload light|mixed|heavy|chat|shared-doc]
@@ -38,20 +39,26 @@ USAGE:
   accellm sweep    [--cluster SPEC | --device ... --instances N]
                    [--workload ...] [--duration S] # rate sweep, all schedulers
   accellm --list-devices                           # known DeviceSpecs
-  accellm --list-schedulers                        # known schedulers
+  accellm --list-schedulers                        # schedulers + parameters
 
-Cluster specs describe per-instance hardware: `h100x8` is eight H100
-instances, `mixed:h100x4+910b2x4` a mixed fleet, `a100x2@tp8` two
-8-way-TP A100 instances.  `--network-gbs` prices cross-pair links at
-an inter-node network bandwidth (intra-pair links keep NVLink/HCCS);
+Scheduler specs are `name[:key=val,...]` — `accellm`,
+`vllm:max_batch=128`, `accellm-prefix:vnodes=128,load_factor=1.25`;
+unknown names/keys/values are rejected with the valid alternatives
+(`--list-schedulers` prints every scheduler's parameters and
+defaults).  Cluster specs describe per-instance hardware: `h100x8` is
+eight H100 instances, `mixed:h100x4+910b2x4` a mixed fleet, `a100x2@tp8`
+two 8-way-TP A100 instances.  `--network-gbs` prices cross-pair links
+at an inter-node network bandwidth (intra-pair links keep NVLink/HCCS);
 `--contention` additionally makes concurrent cross-chassis streams
 fair-share each chassis' finite uplink (capacity `--uplink-gbs`,
 default = the network bandwidth).  `accellm figures --fig contention`
-sweeps the contended network.  `accellm bench --baseline FILE` fails
+sweeps the contended network; `--fig param_sweep` sweeps the CHWBL
+load factor on the mixed fleet.  `accellm bench --baseline FILE` fails
 on >`--max-regress` (default 0.2) per-scheduler wall-clock regression.
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
-prefix-locality router.  Run `make artifacts` once before
+prefix-locality router.  Unknown flags left unconsumed by a subcommand
+are reported as errors.  Run `make artifacts` once before
 `accellm serve` (needs a build with `--features pjrt`).";
 
 fn main() {
@@ -64,10 +71,12 @@ fn main() {
     };
     if args.has("list-devices") {
         print_devices();
+        fail_on_unconsumed(&args);
         return;
     }
     if args.has("list-schedulers") {
         print_schedulers();
+        fail_on_unconsumed(&args);
         return;
     }
     if args.has("help") || args.subcommand.is_none() {
@@ -89,6 +98,24 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+    // A mistyped flag (--uplink-gb for --uplink-gbs) must not silently
+    // run a different experiment: anything the subcommand never
+    // consulted is an error.
+    fail_on_unconsumed(&args);
+}
+
+/// Exit 2 naming any flag/switch no code consulted (in its proper
+/// form): typos and wrong-form usage (`--contention true`, bare
+/// `--rate`) fail the run instead of being silently ignored.
+fn fail_on_unconsumed(args: &Args) {
+    let unknown = args.unconsumed();
+    if !unknown.is_empty() {
+        eprintln!("error: unknown or misused flag(s) {} — value flags \
+                   take `--key value`, switches take no value (see \
+                   `accellm --help`)",
+                  unknown.join(", "));
+        std::process::exit(2);
+    }
 }
 
 fn print_devices() {
@@ -106,9 +133,9 @@ fn print_devices() {
 }
 
 fn print_schedulers() {
-    for (name, desc) in coordinator::SCHEDULER_HELP {
-        println!("{name:<16} {desc}");
-    }
+    print!("{}", SchedulerRegistry::help_text());
+    println!("\nspec grammar: name[:key=val,...]  e.g. \
+              accellm-prefix:vnodes=128,load_factor=1.25");
 }
 
 /// Resolve the cluster from `--cluster SPEC` or the legacy
@@ -147,9 +174,13 @@ fn parse_cluster(args: &Args) -> anyhow::Result<ClusterSpec> {
         }
         None => None,
     };
+    // Consult --contention unconditionally: `--uplink-gbs G --contention`
+    // is valid (uplink implies contention) and must not trip the
+    // unknown-flag check.
+    let contention = args.has("contention");
     if let Some(gbs) = uplink_gbs {
         cluster.enable_contention(gbs * 1e9);
-    } else if args.has("contention") {
+    } else if contention {
         let gbs = network_gbs.ok_or_else(|| {
             anyhow::anyhow!("--contention needs --network-gbs (the default \
                              uplink capacity) or an explicit --uplink-gbs")
@@ -185,30 +216,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let exp = accellm::config::Experiment::from_file(Path::new(path))?;
         println!("{}", RunReport::csv_header());
         for &rate in &exp.rates {
-            let trace = Trace::generate(exp.workload, rate, exp.duration,
-                                        exp.seed);
-            let mut sched = coordinator::by_name(&exp.scheduler, &exp.cluster)
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "unknown scheduler '{}' in config (try \
-                         --list-schedulers)",
-                        exp.scheduler
-                    )
-                })?;
-            let report = run(&exp.sim_config(), &trace, sched.as_mut());
+            let report = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
+                .interconnect_bw(exp.interconnect_bw)
+                .workload(exp.workload, rate, exp.duration, exp.seed)
+                .scheduler(exp.scheduler.clone())
+                .run();
             println!("{}", report.csv_row());
         }
         return Ok(());
     }
     let (cluster, workload, rate, duration, seed) = parse_common(args)?;
-    let sched_name = args.get_or("scheduler", "accellm");
-    let mut sched = coordinator::by_name(sched_name, &cluster)
-        .ok_or_else(|| {
-            anyhow::anyhow!("unknown --scheduler '{sched_name}' (try \
-                             --list-schedulers)")
-        })?;
-    let mut cfg = SimConfig::new(cluster, LLAMA2_70B);
-    cfg.interconnect_bw = match args.get("bw") {
+    let spec = SchedSpec::parse(args.get_or("scheduler", "accellm"))
+        .map_err(anyhow::Error::msg)?;
+    let interconnect_bw = match args.get("bw") {
         Some(v) => {
             let gbs: f64 = v
                 .parse()
@@ -218,21 +238,25 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
-    let trace = Trace::generate(workload, rate, duration, seed);
-    let report = run(&cfg, &trace, sched.as_mut());
+    let report = SimBuilder::new(cluster, LLAMA2_70B)
+        .interconnect_bw(interconnect_bw)
+        .workload(workload, rate, duration, seed)
+        .scheduler(spec)
+        .run();
     print_report(&report, args.has("json"));
     Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let (cluster, workload, _, duration, seed) = parse_common(args)?;
-    let cfg = SimConfig::new(cluster, LLAMA2_70B);
     println!("{}", RunReport::csv_header());
     for &rate in &accellm::eval::figures::RATE_SWEEP {
         let trace = Trace::generate(workload, rate, duration, seed);
-        for name in coordinator::ALL_SCHEDULERS {
-            let mut sched = coordinator::by_name(name, &cfg.cluster).unwrap();
-            let report = run(&cfg, &trace, sched.as_mut());
+        for name in SchedulerRegistry::sweep() {
+            let report = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(name).expect("registry name"))
+                .run();
             println!("{}", report.csv_row());
         }
     }
@@ -278,19 +302,21 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(!trace.is_empty(), "empty bench trace");
     let sim_tokens: u64 =
         trace.requests.iter().map(|r| r.decode_len as u64).sum();
-    let cfg = SimConfig::new(cluster.clone(), LLAMA2_70B);
 
     println!("{:>16} | {:>10} | {:>14} | {:>10}",
              "scheduler", "wall ms", "sim tok/s", "completed");
     let mut results = Vec::new();
-    for name in coordinator::ALL_SCHEDULERS {
+    for name in SchedulerRegistry::sweep() {
+        let spec = SchedSpec::parse(name).expect("registry name");
         // 1 warm-up + 3 timed repetitions; keep the best wall time.
         let mut best = f64::INFINITY;
         let mut last: Option<RunReport> = None;
         for _ in 0..4 {
-            let mut sched = coordinator::by_name(name, &cfg.cluster).unwrap();
+            let builder = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+                .trace(trace.clone())
+                .scheduler(spec.clone());
             let t0 = std::time::Instant::now();
-            let r = run(&cfg, &trace, sched.as_mut());
+            let r = builder.run();
             best = best.min(t0.elapsed().as_secs_f64());
             last = Some(r);
         }

@@ -35,10 +35,12 @@ use crate::sim::{ClusterSpec, InstId, ReqId, Scheduler, SimCtx, Work};
 /// on both evaluated devices.
 pub const DEFAULT_CACHE_CHUNKS: usize = 2048;
 
-/// CHWBL load slack: a pair may run up to 50% above the fair share
-/// before affinity spills (kubeai ships 1.25; we trade a little more
-/// imbalance for locality because a hit skips real prefill work).
-const LOAD_FACTOR: f64 = 1.5;
+/// Default CHWBL load slack: a pair may run up to 50% above the fair
+/// share before affinity spills (kubeai ships 1.25; we trade a little
+/// more imbalance for locality because a hit skips real prefill work).
+/// Per-run values come from the `load_factor` scheduler parameter
+/// (`accellm-prefix:load_factor=1.25`).
+pub const DEFAULT_LOAD_FACTOR: f64 = 1.5;
 
 /// AcceLLM pairs composed with the prefix index + CHWBL router.  On a
 /// heterogeneous cluster the router's load bound is weighted by each
@@ -59,6 +61,15 @@ impl AcceLlmPrefix {
 
     /// Custom per-pair prefix-cache budget (ablation / tests).
     pub fn with_cache_chunks(cluster: &ClusterSpec, cache_chunks: usize) -> Self {
+        Self::configured(cluster, cache_chunks, DEFAULT_VNODES,
+                         DEFAULT_LOAD_FACTOR)
+    }
+
+    /// Fully parameterized constructor (the registry build path): all
+    /// router/index knobs explicit.  The defaults reproduce [`Self::new`]
+    /// bit-for-bit.
+    pub fn configured(cluster: &ClusterSpec, cache_chunks: usize,
+                      vnodes: usize, load_factor: f64) -> Self {
         let inner = AcceLlm::new(cluster);
         let n_pairs = inner.n_pairs();
         // Capacity weight of a pair = its members' effective decode
@@ -71,14 +82,25 @@ impl AcceLlmPrefix {
         AcceLlmPrefix {
             inner,
             index: PrefixIndex::new(n_pairs, cache_chunks),
-            router: ChwblRouter::with_weights(&weights, DEFAULT_VNODES,
-                                              LOAD_FACTOR),
+            router: ChwblRouter::with_weights(&weights, vnodes, load_factor),
         }
     }
 
     /// Index counters (lookups/hits/insertions/evictions).
     pub fn index_stats(&self) -> IndexStats {
         self.index.stats()
+    }
+
+    /// Flip-damping window of the inner AcceLLM pair scheduler
+    /// (registry param `flip_slack_ms`).
+    pub fn set_flip_slack(&mut self, slack_s: f64) {
+        self.inner.set_flip_slack(slack_s);
+    }
+
+    /// Decode batch cap of the inner AcceLLM pair scheduler (registry
+    /// param `max_batch`).
+    pub fn set_max_decode_batch(&mut self, cap: usize) {
+        self.inner.set_max_decode_batch(cap);
     }
 }
 
@@ -145,7 +167,7 @@ impl Scheduler for AcceLlmPrefix {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::by_name;
+    use crate::registry::SchedulerRegistry;
     use crate::sim::{run, ClusterSpec, SimConfig, H100, LLAMA2_70B};
     use crate::workload::{Trace, CHAT, MIXED, SHARED_DOC};
 
@@ -183,7 +205,9 @@ mod tests {
         let cfg = cfg(4);
         let pfx = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
         let acc = run(&cfg, &trace,
-                      by_name("accellm", &cfg.cluster).unwrap().as_mut());
+                      SchedulerRegistry::build_spec("accellm", &cfg.cluster)
+                          .unwrap()
+                          .as_mut());
         assert_eq!(pfx.completed, trace.len());
         assert_eq!(acc.completed, trace.len());
         assert!(pfx.ttft_mean < acc.ttft_mean,
@@ -196,7 +220,9 @@ mod tests {
         let cfg = cfg(4);
         let pfx = run(&cfg, &trace, &mut AcceLlmPrefix::new(&cfg.cluster));
         let acc = run(&cfg, &trace,
-                      by_name("accellm", &cfg.cluster).unwrap().as_mut());
+                      SchedulerRegistry::build_spec("accellm", &cfg.cluster)
+                          .unwrap()
+                          .as_mut());
         assert_eq!(pfx.completed, trace.len());
         assert!(pfx.prefix_hit_rate > 0.5, "hit rate {}", pfx.prefix_hit_rate);
         assert!(pfx.ttft_mean < acc.ttft_mean,

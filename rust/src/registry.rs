@@ -1,0 +1,627 @@
+//! Declarative scheduler registry + parameterized scheduler specs.
+//!
+//! Before this module the policy surface was frozen at compile time:
+//! `coordinator::by_name` was a hand-written match kept in sync with
+//! three parallel const arrays (`ALL_SCHEDULERS`, `SCHEDULER_HELP`,
+//! `PAPER_SCHEDULERS`), and every tuning knob (CHWBL virtual nodes and
+//! load factor, the decode batch cap, the prefix LRU budget) was a
+//! hard-coded constant.  The registry replaces all of that with ONE
+//! table of [`SchedulerDescriptor`]s; `--list-schedulers`, the sweep
+//! set, and the paper-figure set are derived views of the same table,
+//! so drift between them is structurally impossible.
+//!
+//! **Spec grammar.**  Everywhere a scheduler name was accepted (CLI
+//! `--scheduler`, config JSON `"scheduler"`, figures, bench, tests), a
+//! parameterized [`SchedSpec`] is accepted now:
+//!
+//! ```text
+//!   name[:key=value[,key=value]...]
+//!
+//!   accellm
+//!   vllm:max_batch=128
+//!   accellm-prefix:vnodes=128,load_factor=1.25
+//! ```
+//!
+//! Parameters are typed against the descriptor's `params` table:
+//! unknown schedulers, unknown keys, unparseable values, and
+//! out-of-range values are all rejected at parse time with an error
+//! that names the valid alternatives.  Omitted keys take the
+//! descriptor's defaults, which equal the former compile-time
+//! constants — a default-parameter spec is pinned bit-for-bit
+//! identical to the bare name by `tests/integration_registry.rs` and
+//! the golden harness.
+
+use std::fmt;
+
+use crate::coordinator::accellm::DEFAULT_FLIP_SLACK_S;
+use crate::coordinator::{AcceLlm, Splitwise, Vllm, DEFAULT_MAX_DECODE_BATCH};
+use crate::prefix::router::DEFAULT_VNODES;
+use crate::prefix::scheduler::{DEFAULT_CACHE_CHUNKS, DEFAULT_LOAD_FACTOR};
+use crate::prefix::AcceLlmPrefix;
+use crate::sim::{ClusterSpec, Scheduler};
+
+/// A typed parameter value.  The default's variant doubles as the
+/// parameter's type: `UInt` defaults parse integers, `Float` defaults
+/// parse numbers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamValue {
+    UInt(u64),
+    Float(f64),
+}
+
+impl ParamValue {
+    fn as_f64(self) -> f64 {
+        match self {
+            ParamValue::UInt(u) => u as f64,
+            ParamValue::Float(f) => f,
+        }
+    }
+
+    /// Canonical text form (round-trips through [`SchedSpec::parse`]).
+    pub fn encode(self) -> String {
+        match self {
+            ParamValue::UInt(u) => format!("{u}"),
+            ParamValue::Float(f) => format!("{f}"),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.encode())
+    }
+}
+
+/// One tunable knob of a scheduler: key, typed default (the former
+/// compile-time constant), inclusive lower bound, one-line meaning.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    pub key: &'static str,
+    pub default: ParamValue,
+    /// Inclusive lower bound (applies to both value kinds).
+    pub min: f64,
+    pub help: &'static str,
+}
+
+/// Resolved parameter set for one spec: every descriptor key is
+/// present, overrides applied over defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedParams {
+    values: Vec<(&'static str, ParamValue)>,
+}
+
+impl SchedParams {
+    fn defaults(specs: &'static [ParamSpec]) -> SchedParams {
+        SchedParams {
+            values: specs.iter().map(|p| (p.key, p.default)).collect(),
+        }
+    }
+
+    fn set(&mut self, key: &'static str, value: ParamValue) {
+        let slot = self
+            .values
+            .iter_mut()
+            .find(|(k, _)| *k == key)
+            .expect("key validated against the descriptor");
+        slot.1 = value;
+    }
+
+    pub fn get(&self, key: &str) -> Option<ParamValue> {
+        self.values.iter().find(|(k, _)| *k == key).map(|&(_, v)| v)
+    }
+
+    /// Integer parameter by key.  Panics on a missing key or kind
+    /// mismatch — that is a registry-table bug, not user input (user
+    /// input is validated in [`SchedSpec::parse`]).
+    pub fn usize(&self, key: &str) -> usize {
+        match self.get(key) {
+            Some(ParamValue::UInt(u)) => u as usize,
+            other => panic!("no integer parameter '{key}' (found {other:?})"),
+        }
+    }
+
+    /// Float parameter by key (panics like [`Self::usize`]).
+    pub fn f64(&self, key: &str) -> f64 {
+        match self.get(key) {
+            Some(ParamValue::Float(f)) => f,
+            other => panic!("no float parameter '{key}' (found {other:?})"),
+        }
+    }
+}
+
+/// A parsed scheduler spec: canonical name + resolved parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedSpec {
+    name: &'static str,
+    pub params: SchedParams,
+    /// Non-default overrides in input order (Display round-trip).
+    overrides: Vec<(&'static str, ParamValue)>,
+}
+
+impl SchedSpec {
+    /// Parse `name[:key=val,...]`, resolving aliases and validating
+    /// every key/value against the scheduler's parameter table.
+    pub fn parse(text: &str) -> Result<SchedSpec, String> {
+        let text = text.trim();
+        let (name_part, params_part) = match text.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (text, None),
+        };
+        let d = SchedulerRegistry::descriptor(name_part).ok_or_else(|| {
+            format!(
+                "unknown scheduler '{name_part}' (known: {}; see \
+                 --list-schedulers)",
+                SchedulerRegistry::known_names()
+            )
+        })?;
+        let mut params = SchedParams::defaults(d.params);
+        let mut overrides: Vec<(&'static str, ParamValue)> = Vec::new();
+        if let Some(list) = params_part {
+            if list.trim().is_empty() {
+                return Err(format!(
+                    "spec '{text}': empty parameter list after ':' \
+                     (expected key=value[,key=value...])"
+                ));
+            }
+            for item in list.split(',') {
+                let item = item.trim();
+                let Some((k, v)) = item.split_once('=') else {
+                    return Err(format!(
+                        "spec '{text}': bad parameter '{item}' (expected \
+                         key=value)"
+                    ));
+                };
+                let (k, v) = (k.trim(), v.trim());
+                let Some(pspec) = d.params.iter().find(|p| p.key == k) else {
+                    let valid: Vec<&str> =
+                        d.params.iter().map(|p| p.key).collect();
+                    return Err(if valid.is_empty() {
+                        format!("scheduler '{}' takes no parameters \
+                                 (got '{k}')", d.name)
+                    } else {
+                        format!(
+                            "scheduler '{}' has no parameter '{k}' \
+                             (valid: {})",
+                            d.name,
+                            valid.join(", ")
+                        )
+                    });
+                };
+                let value = match pspec.default {
+                    ParamValue::UInt(_) => {
+                        ParamValue::UInt(v.parse::<u64>().map_err(|_| {
+                            format!(
+                                "parameter '{k}' of '{}' expects an \
+                                 integer, got '{v}'",
+                                d.name
+                            )
+                        })?)
+                    }
+                    ParamValue::Float(_) => {
+                        ParamValue::Float(v.parse::<f64>().map_err(|_| {
+                            format!(
+                                "parameter '{k}' of '{}' expects a \
+                                 number, got '{v}'",
+                                d.name
+                            )
+                        })?)
+                    }
+                };
+                if !value.as_f64().is_finite() || value.as_f64() < pspec.min {
+                    return Err(format!(
+                        "parameter '{k}' of '{}' must be >= {}, got '{v}'",
+                        d.name, pspec.min
+                    ));
+                }
+                params.set(pspec.key, value);
+                overrides.retain(|(ok, _)| *ok != pspec.key); // last wins
+                overrides.push((pspec.key, value));
+            }
+        }
+        Ok(SchedSpec { name: d.name, params, overrides })
+    }
+
+    /// Canonical scheduler name (aliases resolved).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn descriptor(&self) -> &'static SchedulerDescriptor {
+        SchedulerRegistry::descriptor(self.name)
+            .expect("SchedSpec holds a registry name")
+    }
+}
+
+impl fmt::Display for SchedSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name)?;
+        for (i, (k, v)) in self.overrides.iter().enumerate() {
+            write!(f, "{}{k}={v}", if i == 0 { ':' } else { ',' })?;
+        }
+        Ok(())
+    }
+}
+
+/// One registered scheduling policy: names, documentation, derived-view
+/// membership, tunable parameters, and the construction function.
+pub struct SchedulerDescriptor {
+    /// Canonical name (what `--list-schedulers` and reports show).
+    pub name: &'static str,
+    /// Accepted alternative spellings (lowercase).
+    pub aliases: &'static [&'static str],
+    /// One-line description for `--list-schedulers`.
+    pub help: &'static str,
+    /// Member of the sweep set (`sweep`/`bench` iterate these — the
+    /// old `ALL_SCHEDULERS`).
+    pub in_sweep: bool,
+    /// Member of the paper-figure set (regenerated paper figures
+    /// iterate these — the old `PAPER_SCHEDULERS`).
+    pub in_paper_figs: bool,
+    /// Tunable parameters with defaults = the former constants.
+    pub params: &'static [ParamSpec],
+    /// Construct the policy for `cluster` with resolved `params`.
+    pub build: fn(&ClusterSpec, &SchedParams) -> Box<dyn Scheduler>,
+}
+
+const MAX_BATCH_PARAM: ParamSpec = ParamSpec {
+    key: "max_batch",
+    default: ParamValue::UInt(DEFAULT_MAX_DECODE_BATCH as u64),
+    min: 1.0,
+    help: "per-instance decode batch cap (vLLM 0.4.2 max_num_seqs)",
+};
+
+const FLIP_SLACK_PARAM: ParamSpec = ParamSpec {
+    key: "flip_slack_ms",
+    // Derived from the scheduler's own constant so the registry
+    // default cannot drift from direct-construction behavior.
+    default: ParamValue::Float(DEFAULT_FLIP_SLACK_S * 1e3),
+    min: 0.0,
+    help: "role-flip damping window in milliseconds",
+};
+
+const ACCELLM_PARAMS: [ParamSpec; 2] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM];
+
+const PREFIX_PARAMS: [ParamSpec; 5] = [
+    MAX_BATCH_PARAM,
+    FLIP_SLACK_PARAM,
+    ParamSpec {
+        key: "vnodes",
+        default: ParamValue::UInt(DEFAULT_VNODES as u64),
+        min: 1.0,
+        help: "CHWBL virtual nodes per pair (arc-length smoothing)",
+    },
+    ParamSpec {
+        key: "load_factor",
+        default: ParamValue::Float(DEFAULT_LOAD_FACTOR),
+        min: 1.0,
+        help: "CHWBL slack c in the bound ceil(c*(m+1)*w/W)",
+    },
+    ParamSpec {
+        key: "cache_chunks",
+        default: ParamValue::UInt(DEFAULT_CACHE_CHUNKS as u64),
+        min: 1.0,
+        help: "per-pair prefix-cache budget in 32-token chunks",
+    },
+];
+
+const BASELINE_PARAMS: [ParamSpec; 1] = [MAX_BATCH_PARAM];
+
+fn apply_accellm_params(s: &mut AcceLlm, p: &SchedParams) {
+    s.set_flip_slack(p.f64("flip_slack_ms") / 1e3);
+    s.set_max_decode_batch(p.usize("max_batch"));
+}
+
+fn build_accellm(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
+    let mut s = AcceLlm::new(c);
+    apply_accellm_params(&mut s, p);
+    Box::new(s)
+}
+
+fn build_accellm_blind(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
+    let mut s = AcceLlm::with_identity_pairing(c);
+    apply_accellm_params(&mut s, p);
+    Box::new(s)
+}
+
+fn build_accellm_prefix(c: &ClusterSpec, p: &SchedParams)
+                        -> Box<dyn Scheduler> {
+    let mut s = AcceLlmPrefix::configured(
+        c,
+        p.usize("cache_chunks"),
+        p.usize("vnodes"),
+        p.f64("load_factor"),
+    );
+    s.set_flip_slack(p.f64("flip_slack_ms") / 1e3);
+    s.set_max_decode_batch(p.usize("max_batch"));
+    Box::new(s)
+}
+
+fn build_splitwise(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
+    let mut s = Splitwise::new(c);
+    s.set_max_decode_batch(p.usize("max_batch"));
+    Box::new(s)
+}
+
+fn build_vllm(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
+    let mut s = Vllm::new(c.len());
+    s.set_max_decode_batch(p.usize("max_batch"));
+    Box::new(s)
+}
+
+/// The one table.  Sweep members come first in the original
+/// `ALL_SCHEDULERS` order (`accellm-prefix` stays last so
+/// position-indexed consumers of the original trio remain valid).
+pub static REGISTRY: [SchedulerDescriptor; 5] = [
+    SchedulerDescriptor {
+        name: "accellm",
+        aliases: &["acc"],
+        help: "paper §4: instance pairs, redundant KV, dynamic role \
+               flips; topology-aware pairing + capacity-weighted \
+               routing on mixed clusters",
+        in_sweep: true,
+        in_paper_figs: true,
+        params: &ACCELLM_PARAMS,
+        build: build_accellm,
+    },
+    SchedulerDescriptor {
+        name: "splitwise",
+        aliases: &["spl"],
+        help: "static prefill/decode disaggregation; prefill pool \
+               picked by compute",
+        in_sweep: true,
+        in_paper_figs: true,
+        params: &BASELINE_PARAMS,
+        build: build_splitwise,
+    },
+    SchedulerDescriptor {
+        name: "vllm",
+        aliases: &[],
+        help: "continuous batching, round-robin, hardware-blind \
+               (naive baseline)",
+        in_sweep: true,
+        in_paper_figs: true,
+        params: &BASELINE_PARAMS,
+        build: build_vllm,
+    },
+    SchedulerDescriptor {
+        name: "accellm-prefix",
+        aliases: &["accellm_prefix", "acc-prefix", "prefix"],
+        help: "AcceLLM pairs + global prefix index + capacity-weighted \
+               CHWBL routing",
+        in_sweep: true,
+        in_paper_figs: false,
+        params: &PREFIX_PARAMS,
+        build: build_accellm_prefix,
+    },
+    SchedulerDescriptor {
+        name: "accellm-blind",
+        aliases: &["accellm_blind", "blind"],
+        help: "AcceLLM with capacity-blind identity pairing \
+               (hetero-eval comparator)",
+        in_sweep: false,
+        in_paper_figs: false,
+        params: &ACCELLM_PARAMS,
+        build: build_accellm_blind,
+    },
+];
+
+/// Derived views and construction over [`REGISTRY`].
+pub struct SchedulerRegistry;
+
+impl SchedulerRegistry {
+    pub fn descriptors() -> &'static [SchedulerDescriptor] {
+        &REGISTRY
+    }
+
+    /// Resolve a (case-insensitive) name or alias.
+    pub fn descriptor(name: &str) -> Option<&'static SchedulerDescriptor> {
+        let lower = name.to_ascii_lowercase();
+        REGISTRY
+            .iter()
+            .find(|d| d.name == lower || d.aliases.contains(&lower.as_str()))
+    }
+
+    /// Construct a scheduler from a parsed spec.
+    pub fn build(spec: &SchedSpec, cluster: &ClusterSpec)
+                 -> Box<dyn Scheduler> {
+        (spec.descriptor().build)(cluster, &spec.params)
+    }
+
+    /// Parse + construct in one step (the `by_name` replacement: any
+    /// place that used to take a scheduler name now takes a spec).
+    pub fn build_spec(text: &str, cluster: &ClusterSpec)
+                      -> Result<Box<dyn Scheduler>, String> {
+        Ok(Self::build(&SchedSpec::parse(text)?, cluster))
+    }
+
+    /// Names iterated by sweeps and the bench (derived view; the old
+    /// `ALL_SCHEDULERS`).
+    pub fn sweep() -> impl Iterator<Item = &'static str> {
+        REGISTRY.iter().filter(|d| d.in_sweep).map(|d| d.name)
+    }
+
+    /// Names the regenerated paper figures iterate (derived view; the
+    /// old `PAPER_SCHEDULERS`).
+    pub fn paper() -> impl Iterator<Item = &'static str> {
+        REGISTRY.iter().filter(|d| d.in_paper_figs).map(|d| d.name)
+    }
+
+    /// Comma-separated canonical names (error messages).
+    pub fn known_names() -> String {
+        REGISTRY
+            .iter()
+            .map(|d| d.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    /// `--list-schedulers` body: one block per descriptor with help,
+    /// aliases and parameter defaults.
+    pub fn help_text() -> String {
+        let mut out = String::new();
+        for d in &REGISTRY {
+            out.push_str(&format!("{:<16} {}\n", d.name, d.help));
+            if !d.aliases.is_empty() {
+                out.push_str(&format!("{:16}   aliases: {}\n", "",
+                                      d.aliases.join(", ")));
+            }
+            let params: Vec<String> = d
+                .params
+                .iter()
+                .map(|p| format!("{}={}", p.key, p.default))
+                .collect();
+            if !params.is_empty() {
+                out.push_str(&format!("{:16}   params:  {}\n", "",
+                                      params.join(", ")));
+            }
+        }
+        out
+    }
+
+    /// Markdown parameter table for the README — generated from the
+    /// descriptors so the docs cannot rot (pinned by
+    /// `tests/integration_registry.rs`).
+    pub fn params_markdown() -> String {
+        let mut s = String::from(
+            "| scheduler | parameter | default | meaning |\n\
+             |---|---|---|---|\n",
+        );
+        for d in &REGISTRY {
+            for p in d.params {
+                s.push_str(&format!("| `{}` | `{}` | {} | {} |\n",
+                                    d.name, p.key, p.default, p.help));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_name_equals_explicit_defaults() {
+        let bare = SchedSpec::parse("accellm-prefix").unwrap();
+        let full = SchedSpec::parse(
+            "accellm-prefix:max_batch=256,flip_slack_ms=15,vnodes=64,\
+             load_factor=1.5,cache_chunks=2048",
+        )
+        .unwrap();
+        assert_eq!(bare.params, full.params);
+        assert_eq!(bare.name(), full.name());
+    }
+
+    #[test]
+    fn overrides_apply_and_round_trip_display() {
+        let s = SchedSpec::parse("accellm-prefix:vnodes=128,load_factor=1.25")
+            .unwrap();
+        assert_eq!(s.params.usize("vnodes"), 128);
+        assert_eq!(s.params.f64("load_factor"), 1.25);
+        // Untouched keys keep their defaults.
+        assert_eq!(s.params.usize("cache_chunks"), DEFAULT_CACHE_CHUNKS);
+        assert_eq!(s.to_string(),
+                   "accellm-prefix:vnodes=128,load_factor=1.25");
+        let again = SchedSpec::parse(&s.to_string()).unwrap();
+        assert_eq!(s, again);
+        // Bare specs print as the bare name.
+        assert_eq!(SchedSpec::parse("vllm").unwrap().to_string(), "vllm");
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let s = SchedSpec::parse("vllm:max_batch=8,max_batch=32").unwrap();
+        assert_eq!(s.params.usize("max_batch"), 32);
+        assert_eq!(s.to_string(), "vllm:max_batch=32");
+    }
+
+    #[test]
+    fn aliases_and_case_resolve() {
+        for (alias, want) in [
+            ("acc", "accellm"),
+            ("ACCELLM", "accellm"),
+            ("accellm_prefix", "accellm-prefix"),
+            ("prefix", "accellm-prefix"),
+            ("spl", "splitwise"),
+            ("blind", "accellm-blind"),
+        ] {
+            assert_eq!(SchedSpec::parse(alias).unwrap().name(), want,
+                       "{alias}");
+        }
+        // Params compose with aliases.
+        let s = SchedSpec::parse("acc:max_batch=16").unwrap();
+        assert_eq!(s.name(), "accellm");
+        assert_eq!(s.params.usize("max_batch"), 16);
+    }
+
+    #[test]
+    fn malformed_specs_error_actionably() {
+        let e = SchedSpec::parse("accellm:bogus=1").unwrap_err();
+        assert!(e.contains("bogus") && e.contains("max_batch"), "{e}");
+        let e = SchedSpec::parse("vllm:max_batch=x").unwrap_err();
+        assert!(e.contains("integer") && e.contains("max_batch"), "{e}");
+        let e = SchedSpec::parse("nope").unwrap_err();
+        assert!(e.contains("unknown scheduler") && e.contains("accellm"),
+                "{e}");
+        let e = SchedSpec::parse("accellm-prefix:load_factor=0.5")
+            .unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = SchedSpec::parse("vllm:max_batch=0").unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        assert!(SchedSpec::parse("accellm:").is_err());
+        let e = SchedSpec::parse("accellm:max_batch").unwrap_err();
+        assert!(e.contains("key=value"), "{e}");
+        let e = SchedSpec::parse("accellm:flip_slack_ms=-1").unwrap_err();
+        assert!(e.contains(">= 0"), "{e}");
+        // Float syntax is rejected for integer parameters.
+        assert!(SchedSpec::parse("vllm:max_batch=1.5").is_err());
+    }
+
+    #[test]
+    fn derived_views_come_from_the_one_table() {
+        let sweep: Vec<&str> = SchedulerRegistry::sweep().collect();
+        assert_eq!(sweep,
+                   ["accellm", "splitwise", "vllm", "accellm-prefix"]);
+        let paper: Vec<&str> = SchedulerRegistry::paper().collect();
+        assert_eq!(paper, ["accellm", "splitwise", "vllm"]);
+        // Every derived name resolves back to its descriptor.
+        for name in SchedulerRegistry::sweep() {
+            assert!(SchedulerRegistry::descriptor(name).is_some(), "{name}");
+        }
+        // Canonical names are unique and never collide with aliases.
+        for d in SchedulerRegistry::descriptors() {
+            let same: usize = REGISTRY
+                .iter()
+                .filter(|o| o.name == d.name || o.aliases.contains(&d.name))
+                .count();
+            assert_eq!(same, 1, "{} is ambiguous", d.name);
+        }
+    }
+
+    #[test]
+    fn help_and_markdown_cover_every_descriptor_and_param() {
+        let help = SchedulerRegistry::help_text();
+        let md = SchedulerRegistry::params_markdown();
+        for d in SchedulerRegistry::descriptors() {
+            assert!(help.contains(d.name), "{} missing from help", d.name);
+            for p in d.params {
+                assert!(md.contains(&format!("`{}`", p.key)),
+                        "{}.{} missing from markdown", d.name, p.key);
+                assert!(md.contains(&p.default.encode()),
+                        "{}.{} default missing", d.name, p.key);
+            }
+        }
+    }
+
+    #[test]
+    fn default_flip_slack_round_trips_to_the_scheduler_constant() {
+        // The table stores the default in milliseconds and the build
+        // path feeds flip_slack_ms/1e3 to the scheduler: the ms<->s
+        // round trip must reproduce DEFAULT_FLIP_SLACK_S exactly
+        // (bit-for-bit default behavior vs direct construction).
+        assert_eq!(DEFAULT_FLIP_SLACK_S * 1e3 / 1e3, DEFAULT_FLIP_SLACK_S);
+        let d = SchedulerRegistry::descriptor("accellm").unwrap();
+        let p = d.params.iter().find(|p| p.key == "flip_slack_ms").unwrap();
+        assert_eq!(p.default, ParamValue::Float(DEFAULT_FLIP_SLACK_S * 1e3));
+    }
+}

@@ -206,8 +206,8 @@ fn scheduler_runs_under_contention_are_sane() {
     };
     for sched in ["splitwise", "accellm", "accellm-prefix", "vllm"] {
         let cfg = make(true, 10.0);
-        let mut s =
-            accellm::coordinator::by_name(sched, &cfg.cluster).unwrap();
+        let mut s = accellm::registry::SchedulerRegistry::build_spec(
+            sched, &cfg.cluster).unwrap();
         let r = run(&cfg, &trace, s.as_mut());
         assert_eq!(r.completed, trace.len(), "{sched}");
         assert_eq!(r.per_link.len(), 4, "{sched}");
@@ -226,14 +226,11 @@ fn scheduler_runs_under_contention_are_sane() {
     // Generous capacity: contention barely changes the outcome.
     let cfg_c = make(true, 900.0);
     let cfg_p = make(false, 900.0);
+    let build = accellm::registry::SchedulerRegistry::build_spec;
     let rc = run(&cfg_c, &trace,
-                 accellm::coordinator::by_name("splitwise", &cfg_c.cluster)
-                     .unwrap()
-                     .as_mut());
+                 build("splitwise", &cfg_c.cluster).unwrap().as_mut());
     let rp = run(&cfg_p, &trace,
-                 accellm::coordinator::by_name("splitwise", &cfg_p.cluster)
-                     .unwrap()
-                     .as_mut());
+                 build("splitwise", &cfg_p.cluster).unwrap().as_mut());
     assert_eq!(rc.completed, rp.completed);
     assert!((rc.jct_mean - rp.jct_mean).abs() / rp.jct_mean < 0.05,
             "900 GB/s uplinks changed JCT: {} vs {}", rc.jct_mean,

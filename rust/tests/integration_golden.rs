@@ -16,15 +16,19 @@
 use std::fs;
 use std::path::PathBuf;
 
-use accellm::coordinator::by_name;
-use accellm::sim::{run, ClusterSpec, RunReport, SimConfig, LLAMA2_70B};
+use accellm::builder::SimBuilder;
+use accellm::registry::{SchedSpec, SchedulerRegistry};
+use accellm::sim::RunReport;
 use accellm::util::json::Json;
 use accellm::workload::{Trace, CHAT};
 
-/// Every constructible scheduler, including the blind comparator.
-const SCHEDS: [&str; 5] =
-    ["accellm", "splitwise", "vllm", "accellm-prefix", "accellm-blind"];
 const CLUSTERS: [&str; 2] = ["h100x4", "mixed:h100x2+910b2x2"];
+
+/// Every registered scheduler (the full table, blind comparator
+/// included) — a new descriptor automatically gets a golden pin.
+fn scheds() -> Vec<&'static str> {
+    SchedulerRegistry::descriptors().iter().map(|d| d.name).collect()
+}
 
 /// Chat sessions at a moderate rate: exercises prefix hits (pinning a
 /// nonzero hit rate for `accellm-prefix`) while every other scheduler
@@ -85,15 +89,21 @@ fn golden_runreports_are_pinned() {
     fs::create_dir_all(&dir).expect("create tests/golden");
     let mut blessed = Vec::new();
     for spec in CLUSTERS {
-        let cluster = ClusterSpec::parse(spec).expect("valid cluster spec");
-        let cfg = SimConfig::new(cluster, LLAMA2_70B);
         let trace = Trace::generate(CHAT, RATE, DUR, SEED);
         assert!(!trace.is_empty());
-        for sched in SCHEDS {
-            let r1 = run(&cfg, &trace,
-                         by_name(sched, &cfg.cluster).unwrap().as_mut());
-            let r2 = run(&cfg, &trace,
-                         by_name(sched, &cfg.cluster).unwrap().as_mut());
+        for sched in scheds() {
+            // The one run path: SimBuilder + registry spec (default
+            // parameters must be bit-identical to the pre-registry
+            // construction, which these goldens pin).
+            let cell = || {
+                SimBuilder::parse_cluster(spec)
+                    .expect("valid cluster spec")
+                    .trace(trace.clone())
+                    .scheduler(SchedSpec::parse(sched).unwrap())
+                    .run()
+            };
+            let r1 = cell();
+            let r2 = cell();
             let doc = pin(&r1);
             // A golden pin is only meaningful if the run replays
             // identically inside one build.
@@ -136,11 +146,11 @@ fn golden_runreports_are_pinned() {
 /// diffed by humans but consumed by tools).
 #[test]
 fn pinned_document_is_valid_json() {
-    let cluster = ClusterSpec::parse("h100x4").unwrap();
-    let cfg = SimConfig::new(cluster, LLAMA2_70B);
-    let trace = Trace::generate(CHAT, RATE, 10.0, SEED);
-    let r = run(&cfg, &trace,
-                by_name("accellm", &cfg.cluster).unwrap().as_mut());
+    let r = SimBuilder::parse_cluster("h100x4")
+        .unwrap()
+        .workload(CHAT, RATE, 10.0, SEED)
+        .scheduler(SchedSpec::parse("accellm").unwrap())
+        .run();
     let doc = pin(&r);
     let parsed = Json::parse(&doc).expect("pin() must emit valid JSON");
     assert_eq!(parsed.get("scheduler").and_then(|s| s.as_str()),

@@ -2,10 +2,19 @@
 //! every scheduler, invariant validation on per-instance capacities,
 //! and the homogeneous regression pin for the ClusterSpec refactor.
 
-use accellm::coordinator::{by_name, AcceLlm, AcceLlmPrefix, Splitwise,
-                           Validated, Vllm, ALL_SCHEDULERS};
+use accellm::coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Validated,
+                           Vllm};
+use accellm::registry::SchedulerRegistry;
 use accellm::sim::{run, ClusterSpec, InstId, ReqId, RunReport, Scheduler,
                    SimConfig, SimCtx, Work, H100, LLAMA2_70B};
+
+/// Registry construction + direct engine call (these tests compare
+/// runs across hand-mutated configs, so they keep the raw `run`).
+fn run_named(c: &SimConfig, trace: &accellm::workload::Trace, name: &str)
+             -> RunReport {
+    let mut s = SchedulerRegistry::build_spec(name, &c.cluster).unwrap();
+    run(c, trace, s.as_mut())
+}
 use accellm::util::quickcheck::{check, prop_assert};
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, CHAT, MIXED};
@@ -48,13 +57,10 @@ fn homogeneous_results_pinned_across_spec_paths() {
     let mut flat = SimConfig::homogeneous(H100, 4);
     flat.interconnect_bw = Some(H100.local_conn_bw);
 
-    for sched in ALL_SCHEDULERS {
-        let r_legacy = run(&legacy, &trace,
-                           by_name(sched, &legacy.cluster).unwrap().as_mut());
-        let r_parsed = run(&parsed, &trace,
-                           by_name(sched, &parsed.cluster).unwrap().as_mut());
-        let r_flat = run(&flat, &trace,
-                         by_name(sched, &flat.cluster).unwrap().as_mut());
+    for sched in SchedulerRegistry::sweep() {
+        let r_legacy = run_named(&legacy, &trace, sched);
+        let r_parsed = run_named(&parsed, &trace, sched);
+        let r_flat = run_named(&flat, &trace, sched);
         assert_reports_identical(&r_legacy, &r_parsed,
                                  &format!("{sched}: legacy vs parsed"));
         assert_reports_identical(&r_legacy, &r_flat,
@@ -130,9 +136,8 @@ fn prop_mixed_fleets_complete_all_requests() {
             if trace.is_empty() {
                 return Ok(());
             }
-            for name in ALL_SCHEDULERS {
-                let mut s = by_name(name, &cfg.cluster).unwrap();
-                let r = run(&cfg, &trace, s.as_mut());
+            for name in SchedulerRegistry::sweep() {
+                let r = run_named(&cfg, &trace, name);
                 prop_assert(r.completed == trace.len(),
                             &format!("{name} on {}: {}/{} completed",
                                      sc.spec, r.completed, trace.len()))?;
@@ -159,10 +164,8 @@ fn mixed_cluster_prefix_routing_deterministic_with_hits() {
     let cluster = ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap();
     let cfg = SimConfig::new(cluster, LLAMA2_70B);
     let trace = Trace::generate(CHAT, 4.0, 40.0, 13);
-    let r1 = run(&cfg, &trace,
-                 by_name("accellm-prefix", &cfg.cluster).unwrap().as_mut());
-    let r2 = run(&cfg, &trace,
-                 by_name("accellm-prefix", &cfg.cluster).unwrap().as_mut());
+    let r1 = run_named(&cfg, &trace, "accellm-prefix");
+    let r2 = run_named(&cfg, &trace, "accellm-prefix");
     assert_eq!(r1.completed, trace.len());
     assert!(r1.prefix_hit_rate > 0.2, "hit rate {}", r1.prefix_hit_rate);
     assert_reports_identical(&r1, &r2, "prefix determinism (mixed)");
@@ -279,17 +282,14 @@ fn topology_link_pricing_matches_flat_override() {
                        LLAMA2_70B);
     cfg_flat.interconnect_bw = Some(1e9);
 
-    let ra = run(&cfg_links, &trace,
-                 by_name("splitwise", &cfg_links.cluster).unwrap().as_mut());
-    let rb = run(&cfg_flat, &trace,
-                 by_name("splitwise", &cfg_flat.cluster).unwrap().as_mut());
+    let ra = run_named(&cfg_links, &trace, "splitwise");
+    let rb = run_named(&cfg_flat, &trace, "splitwise");
     assert_reports_identical(&ra, &rb, "link matrix vs flat override");
     // And the slow link must actually hurt vs the NVLink default.
     let cfg_fast =
         SimConfig::new(ClusterSpec::parse("mixed:h100x4+910b2x4").unwrap(),
                        LLAMA2_70B);
-    let rf = run(&cfg_fast, &trace,
-                 by_name("splitwise", &cfg_fast.cluster).unwrap().as_mut());
+    let rf = run_named(&cfg_fast, &trace, "splitwise");
     assert!(ra.jct_mean > rf.jct_mean,
             "1 GB/s links {} must be slower than NVLink {}", ra.jct_mean,
             rf.jct_mean);

@@ -1,9 +1,10 @@
 //! Cross-module integration + property tests for the prefix-locality
 //! subsystem: session workloads -> accellm-prefix -> engine -> metrics.
 
-use accellm::coordinator::by_name;
+use accellm::builder::SimBuilder;
+use accellm::registry::SchedSpec;
 use accellm::prefix::{ChwblRouter, PrefixIndex, CHUNK_TOKENS};
-use accellm::sim::{run, SimConfig, H100};
+use accellm::sim::{SimConfig, H100};
 use accellm::util::quickcheck::{check, prop_assert};
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec, CHAT, SHARED_DOC};
@@ -20,8 +21,10 @@ fn chat_end_to_end_nonzero_hit_rate() {
     let trace = Trace::generate(CHAT, 6.0, 60.0, 7);
     assert!(!trace.is_empty());
     let c = cfg(4);
-    let mut s = by_name("accellm-prefix", &c.cluster).unwrap();
-    let r = run(&c, &trace, s.as_mut());
+    let r = SimBuilder::on(c.cluster.clone())
+        .trace(trace.clone())
+        .scheduler(SchedSpec::parse("accellm-prefix").unwrap())
+        .run();
     assert_eq!(r.completed, trace.len());
     assert!(r.prefix_hit_rate > 0.0, "hit rate {}", r.prefix_hit_rate);
     assert!(r.prefix_saved_tokens > 0);
@@ -46,10 +49,14 @@ fn prefix_beats_accellm_ttft_on_session_workloads() {
     for (wl, rate, seed) in [(CHAT, 6.0, 21), (SHARED_DOC, 4.0, 22)] {
         let trace = Trace::generate(wl, rate, 60.0, seed);
         let c = cfg(4);
-        let pfx = run(&c, &trace,
-                      by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
-        let acc = run(&c, &trace,
-                      by_name("accellm", &c.cluster).unwrap().as_mut());
+        let cell = |name: &str| {
+            SimBuilder::on(c.cluster.clone())
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(name).unwrap())
+                .run()
+        };
+        let pfx = cell("accellm-prefix");
+        let acc = cell("accellm");
         assert_eq!(pfx.completed, trace.len(), "{}", wl.name);
         assert_eq!(acc.completed, trace.len(), "{}", wl.name);
         assert!(pfx.ttft_mean < acc.ttft_mean,
@@ -67,10 +74,14 @@ fn prefix_beats_accellm_ttft_on_session_workloads() {
 fn prefix_sim_is_deterministic() {
     let trace = Trace::generate(CHAT, 6.0, 40.0, 5);
     let c = cfg(4);
-    let r1 = run(&c, &trace,
-                 by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
-    let r2 = run(&c, &trace,
-                 by_name("accellm-prefix", &c.cluster).unwrap().as_mut());
+    let cell = || {
+        SimBuilder::on(c.cluster.clone())
+            .trace(trace.clone())
+            .scheduler(SchedSpec::parse("accellm-prefix").unwrap())
+            .run()
+    };
+    let r1 = cell();
+    let r2 = cell();
     assert_eq!(r1.jct_mean, r2.jct_mean);
     assert_eq!(r1.ttft_p99, r2.ttft_p99);
     assert_eq!(r1.prefix_hits, r2.prefix_hits);
@@ -107,8 +118,10 @@ fn prop_prefix_scheduler_sound_on_random_sessions() {
                 return Ok(());
             }
             let c = cfg(sc.n);
-            let mut s = by_name("accellm-prefix", &c.cluster).unwrap();
-            let r = run(&c, &trace, s.as_mut());
+            let r = SimBuilder::on(c.cluster.clone())
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse("accellm-prefix").unwrap())
+                .run();
             prop_assert(r.completed == trace.len(),
                         &format!("{}/{} completed", r.completed, trace.len()))?;
             let want: u64 =

@@ -1,0 +1,163 @@
+//! Registry + spec-grammar acceptance tests (the PR 4 API redesign):
+//! every descriptor constructs on the reference clusters, aliases
+//! resolve to the same descriptor, default-parameter specs reproduce
+//! bare names bit-for-bit, malformed specs produce actionable errors,
+//! and the README parameter table is generated (cannot rot).
+
+use accellm::builder::SimBuilder;
+use accellm::registry::{SchedSpec, SchedulerRegistry};
+use accellm::sim::{ClusterSpec, RunReport};
+use accellm::workload::{Trace, CHAT, MIXED, SHARED_DOC};
+
+const REFERENCE_CLUSTERS: [&str; 2] = ["h100x4", "mixed:h100x2+910b2x2"];
+
+fn assert_reports_identical(a: &RunReport, b: &RunReport, tag: &str) {
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
+    assert_eq!(a.makespan, b.makespan, "{tag}: makespan");
+    assert_eq!(a.ttft_mean, b.ttft_mean, "{tag}: ttft_mean");
+    assert_eq!(a.ttft_p99, b.ttft_p99, "{tag}: ttft_p99");
+    assert_eq!(a.tbt_mean, b.tbt_mean, "{tag}: tbt_mean");
+    assert_eq!(a.jct_mean, b.jct_mean, "{tag}: jct_mean");
+    assert_eq!(a.cost_efficiency, b.cost_efficiency, "{tag}: cost_eff");
+    assert_eq!(a.utilization, b.utilization, "{tag}: utilization");
+    assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes, "{tag}: peak_kv");
+    assert_eq!(a.xfer_total_bytes, b.xfer_total_bytes, "{tag}: xfer");
+    assert_eq!(a.prefix_hits, b.prefix_hits, "{tag}: prefix_hits");
+    assert_eq!(a.prefix_saved_tokens, b.prefix_saved_tokens,
+               "{tag}: saved tokens");
+}
+
+/// Every descriptor constructs and completes a short run on both
+/// reference clusters (homogeneous + mixed).
+#[test]
+fn every_descriptor_constructs_and_runs_on_reference_clusters() {
+    for spec in REFERENCE_CLUSTERS {
+        let cluster = ClusterSpec::parse(spec).unwrap();
+        let trace = Trace::poisson(MIXED, 4.0, 15.0, 7);
+        for d in SchedulerRegistry::descriptors() {
+            let r = SimBuilder::on(cluster.clone())
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(d.name).unwrap())
+                .run();
+            assert_eq!(r.completed, trace.len(), "{} on {spec}", d.name);
+        }
+    }
+}
+
+/// Every alias resolves to the same descriptor as the canonical name,
+/// case-insensitively.
+#[test]
+fn all_aliases_resolve_to_the_same_descriptor() {
+    for d in SchedulerRegistry::descriptors() {
+        let canon = SchedulerRegistry::descriptor(d.name).unwrap();
+        assert!(std::ptr::eq(canon, d), "{} resolves elsewhere", d.name);
+        for alias in d.aliases {
+            let via = SchedulerRegistry::descriptor(alias)
+                .unwrap_or_else(|| panic!("alias {alias} unresolved"));
+            assert!(std::ptr::eq(via, d), "alias {alias} -> wrong descriptor");
+            let via_upper = SchedulerRegistry::descriptor(
+                &alias.to_ascii_uppercase()).unwrap();
+            assert!(std::ptr::eq(via_upper, d));
+        }
+    }
+    assert!(SchedulerRegistry::descriptor("no-such-policy").is_none());
+}
+
+/// The acceptance pin: a spec that writes out every default explicitly
+/// must reproduce the bare name bit-for-bit (this is also what makes
+/// the committed goldens — generated from bare names through the same
+/// path — prove the refactor behavior-free).
+#[test]
+fn default_param_specs_match_bare_names_bit_for_bit() {
+    let explicit = [
+        ("accellm", "accellm:max_batch=256,flip_slack_ms=15"),
+        ("accellm-blind", "accellm-blind:max_batch=256,flip_slack_ms=15"),
+        ("splitwise", "splitwise:max_batch=256"),
+        ("vllm", "vllm:max_batch=256"),
+        ("accellm-prefix",
+         "accellm-prefix:max_batch=256,flip_slack_ms=15,vnodes=64,\
+          load_factor=1.5,cache_chunks=2048"),
+    ];
+    // Every registered scheduler must appear in the explicit list —
+    // adding a descriptor without extending the pin is an error.
+    assert_eq!(explicit.len(), SchedulerRegistry::descriptors().len());
+    for spec in REFERENCE_CLUSTERS {
+        let trace = Trace::generate(CHAT, 5.0, 20.0, 7);
+        for (bare, full) in explicit {
+            let cell = |text: &str| {
+                SimBuilder::parse_cluster(spec)
+                    .unwrap()
+                    .trace(trace.clone())
+                    .scheduler(SchedSpec::parse(text).unwrap())
+                    .run()
+            };
+            assert_reports_identical(&cell(bare), &cell(full),
+                                     &format!("{bare} on {spec}"));
+        }
+    }
+}
+
+/// Malformed specs fail with errors that name the problem and the
+/// valid alternatives (the acceptance examples from the issue).
+#[test]
+fn malformed_specs_produce_actionable_errors() {
+    let e = SchedSpec::parse("accellm:bogus=1").unwrap_err();
+    assert!(e.contains("bogus"), "{e}");
+    assert!(e.contains("max_batch") && e.contains("flip_slack_ms"),
+            "error must list the valid keys: {e}");
+    let e = SchedSpec::parse("vllm:max_batch=x").unwrap_err();
+    assert!(e.contains("integer") && e.contains("'x'"), "{e}");
+    let e = SchedSpec::parse("warp-speed").unwrap_err();
+    assert!(e.contains("unknown scheduler"), "{e}");
+    assert!(e.contains("accellm") && e.contains("vllm"),
+            "error must list known schedulers: {e}");
+    // Builder-level parse errors surface the same message.
+    let cluster = ClusterSpec::parse("h100x4").unwrap();
+    let e = SchedulerRegistry::build_spec("accellm:bogus=1", &cluster)
+        .err()
+        .unwrap();
+    assert!(e.contains("bogus"), "{e}");
+}
+
+/// Non-default parameters actually change behavior: a starved decode
+/// batch cap queues work, a starved prefix cache evicts.
+#[test]
+fn parameterized_specs_change_behavior() {
+    let cluster = ClusterSpec::parse("h100x4").unwrap();
+    let trace = Trace::poisson(MIXED, 8.0, 30.0, 11);
+    let cell = |text: &str, t: &Trace| {
+        SimBuilder::on(cluster.clone())
+            .trace(t.clone())
+            .scheduler(SchedSpec::parse(text).unwrap())
+            .run()
+    };
+    // vLLM with 4 admission slots per instance must queue far behind
+    // the 256-slot default at 8 req/s.
+    let tiny = cell("vllm:max_batch=4", &trace);
+    let dflt = cell("vllm", &trace);
+    assert_eq!(tiny.completed, trace.len());
+    assert!(tiny.jct_mean > dflt.jct_mean,
+            "4-slot vllm {} !> default {}", tiny.jct_mean, dflt.jct_mean);
+    // A 64-chunk prefix cache must evict on the shared-doc workload
+    // (the spec-grammar route to what with_cache_chunks pinned).
+    let doc = Trace::generate(SHARED_DOC, 4.0, 40.0, 17);
+    let starved = cell("accellm-prefix:cache_chunks=64", &doc);
+    assert_eq!(starved.completed, doc.len());
+    assert!(starved.prefix_evictions > 0, "no evictions at 64 chunks");
+    let roomy = cell("accellm-prefix", &doc);
+    assert_eq!(roomy.prefix_evictions, 0, "default budget must not evict");
+}
+
+/// The README parameter table is the generated one — docs cannot rot.
+#[test]
+fn readme_param_table_matches_the_registry() {
+    let readme = std::fs::read_to_string(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/README.md"))
+        .expect("rust/README.md");
+    let table = SchedulerRegistry::params_markdown();
+    assert!(
+        readme.contains(&table),
+        "README scheduler-parameter table is stale; replace it with the \
+         output of SchedulerRegistry::params_markdown():\n{table}"
+    );
+}

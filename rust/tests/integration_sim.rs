@@ -1,15 +1,22 @@
 //! Cross-module integration + property tests over the simulator stack:
 //! workload -> scheduler -> engine -> metrics, for all three policies.
 
-use accellm::coordinator::{by_name, ALL_SCHEDULERS};
-use accellm::sim::{run, DeviceSpec, InstanceSpec, PerfModel, SimConfig,
-                   ASCEND_910B2, H100, LLAMA2_70B};
+use accellm::registry::SchedulerRegistry;
+use accellm::sim::{run, DeviceSpec, InstanceSpec, PerfModel, RunReport,
+                   SimConfig, ASCEND_910B2, H100, LLAMA2_70B};
 use accellm::util::quickcheck::{check, prop_assert};
 use accellm::util::rng::Pcg64;
 use accellm::workload::{Trace, WorkloadSpec, HEAVY, LIGHT, MIXED};
 
 fn cfg(dev: DeviceSpec, n: usize) -> SimConfig {
     SimConfig::homogeneous(dev, n)
+}
+
+/// Registry construction + direct engine call (these tests pin engine
+/// behavior under configs they mutate, so they keep the raw `run`).
+fn run_named(c: &SimConfig, trace: &Trace, name: &str) -> RunReport {
+    let mut s = SchedulerRegistry::build_spec(name, &c.cluster).unwrap();
+    run(c, trace, s.as_mut())
 }
 
 /// Property: every scheduler completes every request of any trace, and
@@ -44,9 +51,8 @@ fn prop_all_schedulers_complete_all_requests() {
                 return Ok(());
             }
             let c = cfg(sc.dev, sc.n);
-            for name in ALL_SCHEDULERS {
-                let mut s = by_name(name, &c.cluster).unwrap();
-                let r = run(&c, &trace, s.as_mut());
+            for name in SchedulerRegistry::sweep() {
+                let r = run_named(&c, &trace, name);
                 prop_assert(r.completed == trace.len(),
                             &format!("{name}: {}/{} completed", r.completed,
                                      trace.len()))?;
@@ -80,9 +86,9 @@ fn prop_all_schedulers_complete_all_requests() {
 fn sim_is_deterministic() {
     let trace = Trace::poisson(MIXED, 9.0, 40.0, 5);
     let c = cfg(H100, 4);
-    for name in ALL_SCHEDULERS {
-        let r1 = run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut());
-        let r2 = run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut());
+    for name in SchedulerRegistry::sweep() {
+        let r1 = run_named(&c, &trace, name);
+        let r2 = run_named(&c, &trace, name);
         assert_eq!(r1.jct_mean, r2.jct_mean, "{name}");
         assert_eq!(r1.ttft_p99, r2.ttft_p99, "{name}");
         assert_eq!(r1.cost_efficiency, r2.cost_efficiency, "{name}");
@@ -98,9 +104,8 @@ fn paper_headline_ordering() {
     let mut cfg_t = cfg(H100, 4);
     cfg_t.record_timeline = true;
     let mut reports = Vec::new();
-    for name in ALL_SCHEDULERS {
-        let mut s = by_name(name, &cfg_t.cluster).unwrap();
-        reports.push(run(&cfg_t, &trace, s.as_mut()));
+    for name in SchedulerRegistry::sweep() {
+        reports.push(run_named(&cfg_t, &trace, name));
     }
     let (acc, spl, _vll) = (&reports[0], &reports[1], &reports[2]);
     assert!(acc.cost_efficiency > spl.cost_efficiency);
@@ -111,10 +116,8 @@ fn paper_headline_ordering() {
     // phenomenon: at deep overload every system's worst gap is dominated
     // by batch-cap queueing.  Compare at 8 req/s.
     let moderate = Trace::poisson(MIXED, 8.0, 60.0, 18);
-    let acc_m = run(&cfg_t, &moderate,
-                    by_name("accellm", &cfg_t.cluster).unwrap().as_mut());
-    let vll_m = run(&cfg_t, &moderate,
-                    by_name("vllm", &cfg_t.cluster).unwrap().as_mut());
+    let acc_m = run_named(&cfg_t, &moderate, "accellm");
+    let vll_m = run_named(&cfg_t, &moderate, "vllm");
     assert!(vll_m.tbt_max > 1.25 * acc_m.tbt_max,
             "vllm spikes must dominate: {} vs {}", vll_m.tbt_max,
             acc_m.tbt_max);
@@ -126,8 +129,8 @@ fn paper_headline_ordering() {
 fn ascend_prefill_overload_shape() {
     let hi = Trace::poisson(MIXED, 10.0, 60.0, 23);
     let c = cfg(ASCEND_910B2, 4);
-    let spl = run(&c, &hi, by_name("splitwise", &c.cluster).unwrap().as_mut());
-    let acc = run(&c, &hi, by_name("accellm", &c.cluster).unwrap().as_mut());
+    let spl = run_named(&c, &hi, "splitwise");
+    let acc = run_named(&c, &hi, "accellm");
     assert!(spl.ttft_mean > 3.0 * acc.ttft_mean,
             "spl {} vs acc {}", spl.ttft_mean, acc.ttft_mean);
 }
@@ -141,7 +144,7 @@ fn interconnect_sweep_shape() {
     let run_bw = |name: &str, bw: f64| {
         let mut c = cfg(H100, 4);
         c.interconnect_bw = Some(bw);
-        run(&c, &trace, by_name(name, &c.cluster).unwrap().as_mut())
+        run_named(&c, &trace, name)
     };
     // Splitwise funnels EVERY prompt's KV through one prefill NIC: a
     // 1 GB/s link saturates (8 req/s x ~510 tok x 320 KiB ≈ 1.3 GB/s)
@@ -174,8 +177,8 @@ fn interconnect_sweep_shape() {
 fn redundancy_memory_overhead_shape() {
     let trace = Trace::poisson(MIXED, 8.0, 60.0, 31);
     let c = cfg(H100, 4);
-    let acc = run(&c, &trace, by_name("accellm", &c.cluster).unwrap().as_mut());
-    let vll = run(&c, &trace, by_name("vllm", &c.cluster).unwrap().as_mut());
+    let acc = run_named(&c, &trace, "accellm");
+    let vll = run_named(&c, &trace, "vllm");
     assert!(acc.peak_kv_bytes > vll.peak_kv_bytes,
             "replicas must cost memory: acc {} vllm {}",
             acc.peak_kv_bytes, vll.peak_kv_bytes);
@@ -192,8 +195,8 @@ fn scaling_with_instances() {
     let t8 = Trace::poisson(MIXED, 16.0, 60.0, 37);
     let c4 = cfg(H100, 4);
     let c8 = cfg(H100, 8);
-    let r4 = run(&c4, &t4, by_name("accellm", &c4.cluster).unwrap().as_mut());
-    let r8 = run(&c8, &t8, by_name("accellm", &c8.cluster).unwrap().as_mut());
+    let r4 = run_named(&c4, &t4, "accellm");
+    let r8 = run_named(&c8, &t8, "accellm");
     assert_eq!(r4.completed, t4.len());
     assert_eq!(r8.completed, t8.len());
     assert!(r8.jct_mean < r4.jct_mean * 1.5,
@@ -206,9 +209,8 @@ fn scaling_with_instances() {
 fn replica_traffic_decomposition() {
     let trace = Trace::poisson(MIXED, 8.0, 60.0, 41);
     let c = cfg(H100, 4);
-    let acc = run(&c, &trace, by_name("accellm", &c.cluster).unwrap().as_mut());
-    let spl = run(&c, &trace,
-                  by_name("splitwise", &c.cluster).unwrap().as_mut());
+    let acc = run_named(&c, &trace, "accellm");
+    let spl = run_named(&c, &trace, "splitwise");
     assert!(acc.xfer_replica_bytes > 0.0);
     assert_eq!(spl.xfer_replica_bytes, 0.0);
     // Replica updates are one KV line per token; prefill hand-off moves
