@@ -22,8 +22,8 @@
 //! cluster/trace plumbing.
 
 use crate::registry::{SchedSpec, SchedulerRegistry};
-use crate::sim::{run, ClusterSpec, DeviceSpec, LlmSpec, RunReport, Scheduler,
-                 SimConfig, LLAMA2_70B};
+use crate::sim::{run, ClusterSpec, ContentionModel, DeviceSpec, LlmSpec,
+                 RunReport, Scheduler, SimConfig, LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec};
 
 /// Builder-style simulation run: cluster + topology knobs + trace +
@@ -34,6 +34,7 @@ pub struct SimBuilder {
     llm: LlmSpec,
     interconnect_bw: Option<f64>,
     record_timeline: bool,
+    contention_model: ContentionModel,
     trace: Option<Trace>,
     spec: Option<SchedSpec>,
 }
@@ -45,6 +46,7 @@ impl SimBuilder {
             llm,
             interconnect_bw: None,
             record_timeline: false,
+            contention_model: ContentionModel::Admission,
             trace: None,
             spec: None,
         }
@@ -98,6 +100,21 @@ impl SimBuilder {
         self
     }
 
+    /// Add a spine tier: one shared capacity (GB/s) above every
+    /// chassis uplink that ALL inter-chassis streams cross.
+    pub fn spine(mut self, spine_gbs: f64) -> SimBuilder {
+        self.cluster.enable_spine(spine_gbs * 1e9);
+        self
+    }
+
+    /// Bandwidth-sharing model for concurrent streams: `Admission`
+    /// (default, the PR 3 fixed-at-admission fair share) or `MaxMin`
+    /// (progress-based water-filling with event rescheduling).
+    pub fn contention_model(mut self, model: ContentionModel) -> SimBuilder {
+        self.contention_model = model;
+        self
+    }
+
     /// Global flat interconnect override in **bytes/s** — it sets
     /// [`SimConfig::interconnect_bw`] verbatim (the Figure 10 sweeps);
     /// `None` keeps per-link topology pricing.  Unlike the GB/s-named
@@ -123,6 +140,7 @@ impl SimBuilder {
         let mut cfg = SimConfig::new(self.cluster.clone(), self.llm);
         cfg.interconnect_bw = self.interconnect_bw;
         cfg.record_timeline = self.record_timeline;
+        cfg.contention_model = self.contention_model;
         cfg
     }
 
@@ -191,17 +209,25 @@ mod tests {
 
     #[test]
     fn topology_knobs_reach_the_config() {
+        use crate::sim::ContentionModel;
         let b = SimBuilder::parse_cluster("mixed:h100x2+910b2x2")
             .unwrap()
             .network_gbs(10.0)
             .contention(5.0)
+            .spine(8.0)
+            .contention_model(ContentionModel::MaxMin)
             .interconnect_bw(Some(3e9))
             .record_timeline(true);
         assert!(b.cluster().topology().contended());
         assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
+        assert_eq!(b.cluster().topology().spine_bw(), Some(8e9));
         let cfg = b.sim_config();
         assert_eq!(cfg.interconnect_bw, Some(3e9));
         assert!(cfg.record_timeline);
+        assert_eq!(cfg.contention_model, ContentionModel::MaxMin);
+        // The default stays the admission model (golden stability).
+        let d = SimBuilder::parse_cluster("h100x4").unwrap().sim_config();
+        assert_eq!(d.contention_model, ContentionModel::Admission);
     }
 
     #[test]

@@ -43,7 +43,7 @@ impl Args {
             // `--key=value` or `--key value` or bare switch.
             if let Some((k, v)) = name.split_once('=') {
                 out.flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+            } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                 out.flags.insert(name.to_string(), it.next().unwrap());
             } else {
                 out.switches.push(name.to_string());

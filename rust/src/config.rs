@@ -27,14 +27,19 @@
 //! (each chassis gets one finite uplink whose capacity concurrent
 //! cross-chassis streams fair-share); the uplink capacity defaults to
 //! `network_gbs` and can be set independently with `"uplink_gbs"`
-//! (which implies contention).
+//! (which implies contention).  `"spine_gbs"` adds the spine tier (one
+//! shared capacity above every chassis uplink), and
+//! `"contention_model"` picks how concurrent streams share capacity:
+//! `"admission"` (default, fixed fair share at admission) or
+//! `"maxmin"` (progress-based water-filling with event rescheduling).
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::registry::SchedSpec;
-use crate::sim::{ClusterSpec, DeviceSpec, SimConfig, LLAMA2_70B};
+use crate::sim::{ClusterSpec, ContentionModel, DeviceSpec, SimConfig,
+                 LLAMA2_70B};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
@@ -52,6 +57,8 @@ pub struct Experiment {
     pub seed: u64,
     /// Global flat interconnect override in bytes/s.
     pub interconnect_bw: Option<f64>,
+    /// Bandwidth-sharing model for concurrent streams.
+    pub contention_model: ContentionModel,
 }
 
 impl Default for Experiment {
@@ -65,6 +72,7 @@ impl Default for Experiment {
             duration: 60.0,
             seed: 7,
             interconnect_bw: None,
+            contention_model: ContentionModel::Admission,
         }
     }
 }
@@ -161,6 +169,16 @@ impl Experiment {
             })?;
             exp.cluster.enable_contention(v * 1e9);
         }
+        if let Some(v) = j.get("spine_gbs").and_then(|x| x.as_f64()) {
+            if v <= 0.0 {
+                return Err(anyhow!("config: spine_gbs must be positive"));
+            }
+            exp.cluster.enable_spine(v * 1e9);
+        }
+        if let Some(v) = j.get("contention_model").and_then(|x| x.as_str()) {
+            exp.contention_model = ContentionModel::parse(v)
+                .map_err(|e| anyhow!("config: {e}"))?;
+        }
         if let Some(links) = j.get("links").and_then(|x| x.as_arr()) {
             for link in links {
                 let triple = link
@@ -199,6 +217,7 @@ impl Experiment {
     pub fn sim_config(&self) -> SimConfig {
         let mut cfg = SimConfig::new(self.cluster.clone(), LLAMA2_70B);
         cfg.interconnect_bw = self.interconnect_bw;
+        cfg.contention_model = self.contention_model;
         cfg
     }
 }
@@ -320,6 +339,35 @@ mod tests {
         .is_err());
         assert!(Experiment::from_json_text(
             r#"{"cluster":"h100x4","uplink_gbs":0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parses_spine_and_contention_model() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","network_gbs":50,"contention":true,
+                "spine_gbs":20,"contention_model":"maxmin"}"#,
+        )
+        .unwrap();
+        assert_eq!(e.cluster.topology().spine_bw(), Some(20e9));
+        assert_eq!(e.contention_model, ContentionModel::MaxMin);
+        assert_eq!(e.sim_config().contention_model, ContentionModel::MaxMin);
+        // Defaults: no spine, admission sharing.
+        let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert_eq!(d.cluster.topology().spine_bw(), None);
+        assert_eq!(d.contention_model, ContentionModel::Admission);
+        assert_eq!(d.sim_config().contention_model,
+                   ContentionModel::Admission);
+        // Bad values are rejected with the known spellings.
+        let err = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","contention_model":"psychic"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("admission") && err.contains("maxmin"), "{err}");
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","spine_gbs":0}"#
         )
         .is_err());
     }

@@ -60,8 +60,9 @@ use crate::prefix::splitmix64;
 use crate::sim::{ClusterSpec, InstId, PerfModel, ReqId, Role, Scheduler,
                  SimCtx, Work, XferKind, LLAMA2_70B};
 
-/// Prompts folded into one prefill work item.
-const MAX_PREFILL_BATCH: usize = 8;
+/// Prompts folded into one prefill work item (registry parameter
+/// `max_prefill_batch`; this constant is its default).
+pub const DEFAULT_MAX_PREFILL_BATCH: usize = 8;
 
 /// A pair member only flips to prefill when prompts have queued long
 /// enough (or enough of them wait) to amortize the role conversion —
@@ -79,8 +80,9 @@ const SCORE_MARGIN: f64 = 1.001;
 /// CHWBL slack for hardware-aware arrival routing: a pair may run up to
 /// 25% above its capacity share before the ring walk spills (kubeai's
 /// shipped default; tighter than `accellm-prefix`'s 1.5 because plain
-/// arrivals have no locality worth trading imbalance for).
-const ROUTE_LOAD_FACTOR: f64 = 1.25;
+/// arrivals have no locality worth trading imbalance for).  Registry
+/// parameter `route_load_factor`; this constant is its default.
+pub const DEFAULT_ROUTE_LOAD_FACTOR: f64 = 1.25;
 
 /// Margin the chassis-local pairing must win by before it displaces the
 /// complementarity pairing.  On fast links the two pipeline scores are
@@ -110,6 +112,10 @@ pub struct AcceLlm {
     /// only; None keeps the paper's free-memory rule bit-identical on
     /// homogeneous clusters and in the blind baseline).
     router: Option<ChwblRouter>,
+    /// The pair service weights the router was built from (kept so
+    /// `set_route_load_factor` can rebuild the ring; None whenever
+    /// `router` is None).
+    router_weights: Option<Vec<f64>>,
     /// Keep redundant replicas (ablation: without them, role flips
     /// cannot migrate decodes and paused requests stall — paper Case A).
     replicate: bool,
@@ -120,6 +126,9 @@ pub struct AcceLlm {
     flip_slack: f64,
     /// Per-instance decode batch cap (registry parameter `max_batch`).
     max_decode_batch: usize,
+    /// Prompts folded into one prefill work item (registry parameter
+    /// `max_prefill_batch`).
+    max_prefill_batch: usize,
     /// Per-instance decode sets (requests whose KV *primary* is here).
     sets: Vec<Vec<ReqId>>,
     /// Per-pair prompt queues.
@@ -152,6 +161,7 @@ impl AcceLlm {
             Self::with_pairing(cluster, Self::identity_pairing(cluster.len()));
         s.prefill_score = vec![1.0; cluster.len()];
         s.router = None;
+        s.router_weights = None;
         s
     }
 
@@ -186,6 +196,24 @@ impl AcceLlm {
     pub fn set_max_decode_batch(&mut self, cap: usize) {
         assert!(cap >= 1, "decode batch cap must be >= 1");
         self.max_decode_batch = cap;
+    }
+
+    /// Per-pair prefill batch cap (registry param `max_prefill_batch`).
+    pub fn set_max_prefill_batch(&mut self, cap: usize) {
+        assert!(cap >= 1, "prefill batch cap must be >= 1");
+        self.max_prefill_batch = cap;
+    }
+
+    /// CHWBL slack of the hardware-aware arrival router (registry
+    /// param `route_load_factor`).  A no-op on homogeneous clusters
+    /// and in the blind baseline, where the paper's free-memory rule
+    /// routes arrivals and no router exists.
+    pub fn set_route_load_factor(&mut self, load_factor: f64) {
+        assert!(load_factor >= 1.0, "route load factor must be >= 1");
+        if let Some(w) = &self.router_weights {
+            self.router =
+                Some(ChwblRouter::with_weights(w, DEFAULT_VNODES, load_factor));
+        }
     }
 
     fn identity_pairing(n: usize) -> Vec<(InstId, InstId)> {
@@ -320,15 +348,15 @@ impl AcceLlm {
         // Capacity-weighted arrival routing only engages when pairs can
         // actually differ in service rate; homogeneous clusters keep
         // the paper's free-memory rule bit-identical.
-        let router = if cluster.is_homogeneous() {
+        let router_weights = if cluster.is_homogeneous() {
             None
         } else {
-            Some(ChwblRouter::with_weights(
-                &pair_service_weights(cluster, &pairs),
-                DEFAULT_VNODES,
-                ROUTE_LOAD_FACTOR,
-            ))
+            Some(pair_service_weights(cluster, &pairs))
         };
+        let router = router_weights.as_ref().map(|w| {
+            ChwblRouter::with_weights(w, DEFAULT_VNODES,
+                                      DEFAULT_ROUTE_LOAD_FACTOR)
+        });
         AcceLlm {
             n_pairs: n / 2,
             pairs,
@@ -340,10 +368,12 @@ impl AcceLlm {
                 .map(|s| s.prefill_flops())
                 .collect(),
             router,
+            router_weights,
             replicate: true,
             rebalance: true,
             flip_slack: DEFAULT_FLIP_SLACK_S,
             max_decode_batch: DEFAULT_MAX_DECODE_BATCH,
+            max_prefill_batch: DEFAULT_MAX_PREFILL_BATCH,
             sets: vec![Vec::new(); n],
             queues: vec![VecDeque::new(); n / 2],
             replicas_on: vec![Vec::new(); n],
@@ -467,7 +497,7 @@ impl AcceLlm {
         }
         self.sets[inst] = kept;
 
-        let n = self.queues[pair].len().min(MAX_PREFILL_BATCH);
+        let n = self.queues[pair].len().min(self.max_prefill_batch);
         let reqs: Vec<ReqId> = self.queues[pair].drain(..n).collect();
         for &r in &reqs {
             ctx.place_primary(r, inst);
@@ -909,6 +939,57 @@ mod tests {
         // PR 2 complementarity layout: H100s 0..3, 910B2s 4..7.
         assert_eq!(s.pair_members(0), (0, 7));
         assert_eq!(s.pair_members(3), (3, 4));
+    }
+
+    #[test]
+    fn route_load_factor_setter_rebuilds_only_where_a_router_exists() {
+        let mixed = ClusterSpec::parse("mixed:h100x2+910b2x2").unwrap();
+        let mut aware = AcceLlm::new(&mixed);
+        // Re-applying the default rebuilds an identical ring: the
+        // bound it computes for any load vector is unchanged.
+        let loads = vec![3usize, 1];
+        let before: Vec<usize> = (0..2)
+            .map(|p| aware.router().unwrap().load_bound_for(p, &loads))
+            .collect();
+        aware.set_route_load_factor(DEFAULT_ROUTE_LOAD_FACTOR);
+        let after: Vec<usize> = (0..2)
+            .map(|p| aware.router().unwrap().load_bound_for(p, &loads))
+            .collect();
+        assert_eq!(before, after);
+        // A looser slack raises (never lowers) every pair's bound.
+        aware.set_route_load_factor(3.0);
+        for p in 0..2 {
+            assert!(aware.router().unwrap().load_bound_for(p, &loads)
+                        >= before[p]);
+        }
+        // No router to rebuild on the blind baseline or homogeneous
+        // clusters: the setter stays a no-op.
+        let mut blind = AcceLlm::with_identity_pairing(&mixed);
+        blind.set_route_load_factor(3.0);
+        assert!(blind.router().is_none());
+        let mut homog = AcceLlm::new(&ClusterSpec::homogeneous(H100, 4));
+        homog.set_route_load_factor(3.0);
+        assert!(homog.router().is_none());
+    }
+
+    #[test]
+    fn max_prefill_batch_caps_the_prompt_batch() {
+        // A 1-prompt prefill cap forces one Work::Prefill per request
+        // even when many prompts are queued, so prefill work items
+        // multiply; the run must still complete everything.
+        let trace = Trace::poisson(MIXED, 10.0, 20.0, 47);
+        let cfg = cfg_dev(4, H100);
+        let mut tight = AcceLlm::new(&cfg.cluster);
+        tight.set_max_prefill_batch(1);
+        let r = run(&cfg, &trace, &mut tight);
+        assert_eq!(r.completed, trace.len());
+        // Default (8) reproduces the untouched scheduler bit-for-bit.
+        let mut dflt = AcceLlm::new(&cfg.cluster);
+        dflt.set_max_prefill_batch(DEFAULT_MAX_PREFILL_BATCH);
+        let a = run(&cfg, &trace, &mut dflt);
+        let b = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.jct_mean, b.jct_mean);
     }
 
     #[test]

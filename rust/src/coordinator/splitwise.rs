@@ -29,8 +29,15 @@ use crate::sim::{ClusterSpec, InstId, ReqId, Role, Scheduler, SimCtx, Work,
 
 /// How many prompts a prefill machine folds into one batch (queue drain
 /// cap; prefill time is linear in tokens so batching mostly reduces
-/// per-step overhead).
-const MAX_PREFILL_BATCH: usize = 4;
+/// per-step overhead).  Registry parameter `max_prefill_batch`; this
+/// constant is its default.
+pub const DEFAULT_MAX_PREFILL_BATCH: usize = 4;
+
+/// Fraction of the cluster dedicated to prefill (paper Section 5.2:
+/// 1, 2, 4 prefill instances for 4, 8, 16 — a quarter, floored, with
+/// at least one).  Registry parameter `prefill_frac`; this constant is
+/// its default and reproduces the legacy `n / 4` pool bit-for-bit.
+pub const DEFAULT_PREFILL_FRAC: f64 = 0.25;
 
 pub struct Splitwise {
     /// Dedicated prefill machines (ascending ids; picked by compute).
@@ -45,14 +52,28 @@ pub struct Splitwise {
     in_transfer: Vec<(ReqId, InstId)>,
     /// Per-instance decode batch cap (registry parameter `max_batch`).
     max_decode_batch: usize,
+    /// Per-machine prefill batch cap (registry parameter
+    /// `max_prefill_batch`).
+    max_prefill_batch: usize,
 }
 
 impl Splitwise {
     pub fn new(cluster: &ClusterSpec) -> Self {
+        Self::with_prefill_frac(cluster, DEFAULT_PREFILL_FRAC)
+    }
+
+    /// Custom prefill-pool fraction (registry parameter
+    /// `prefill_frac`): `floor(n * frac)` machines, clamped so there is
+    /// always at least one prefill machine AND at least one decode
+    /// machine (`frac = 1` degenerates to an `n - 1` pool) — the spec
+    /// grammar bounds `frac` to [0, 1], so no user input panics here.
+    pub fn with_prefill_frac(cluster: &ClusterSpec, frac: f64) -> Self {
+        assert!((0.0..=1.0).contains(&frac),
+                "prefill fraction must be in [0, 1]");
         let n = cluster.len();
-        // Paper Section 5.2: 1, 2, 4 prefill instances for 4, 8, 16.
-        let n_prefill = (n / 4).max(1);
-        assert!(n > n_prefill, "need at least one decode instance");
+        assert!(n >= 2, "need at least one decode instance besides the \
+                         prefill pool");
+        let n_prefill = ((n as f64 * frac) as usize).clamp(1, n - 1);
         // Prefill pool = strongest effective compute first (stable by
         // id, so a homogeneous cluster keeps the legacy 0..n/4 layout).
         let mut ids: Vec<InstId> = (0..n).collect();
@@ -76,6 +97,7 @@ impl Splitwise {
             sets: vec![Vec::new(); n],
             in_transfer: Vec::new(),
             max_decode_batch: crate::coordinator::DEFAULT_MAX_DECODE_BATCH,
+            max_prefill_batch: DEFAULT_MAX_PREFILL_BATCH,
         }
     }
 
@@ -83,6 +105,13 @@ impl Splitwise {
     pub fn set_max_decode_batch(&mut self, cap: usize) {
         assert!(cap >= 1, "decode batch cap must be >= 1");
         self.max_decode_batch = cap;
+    }
+
+    /// Per-machine prefill batch cap (registry param
+    /// `max_prefill_batch`).
+    pub fn set_max_prefill_batch(&mut self, cap: usize) {
+        assert!(cap >= 1, "prefill batch cap must be >= 1");
+        self.max_prefill_batch = cap;
     }
 
     pub fn n_prefill_instances(&self) -> usize {
@@ -105,7 +134,7 @@ impl Splitwise {
             if ctx.is_busy(inst) || self.queue.is_empty() {
                 continue;
             }
-            let n = self.queue.len().min(MAX_PREFILL_BATCH);
+            let n = self.queue.len().min(self.max_prefill_batch);
             let reqs: Vec<ReqId> = self.queue.drain(..n).collect();
             for &r in &reqs {
                 // KV materializes on the prefill machine during prefill.
@@ -252,6 +281,56 @@ mod tests {
         assert_eq!(homog(16).n_prefill_instances(), 4);
         // Homogeneous pool keeps the legacy first-N layout.
         assert_eq!(homog(8).prefill_instances(), &[0, 1]);
+    }
+
+    #[test]
+    fn prefill_frac_sizes_the_pool() {
+        let c8 = ClusterSpec::homogeneous(H100, 8);
+        // The default fraction reproduces the legacy n/4 split exactly.
+        for n in [2usize, 4, 5, 7, 8, 16] {
+            let c = ClusterSpec::homogeneous(H100, n);
+            assert_eq!(
+                Splitwise::with_prefill_frac(&c, DEFAULT_PREFILL_FRAC)
+                    .n_prefill_instances(),
+                (n / 4).max(1),
+                "n={n}"
+            );
+        }
+        // Half the fleet prefills at 0.5; a tiny fraction still keeps
+        // one prefill machine; frac = 1 clamps to an n-1 pool (one
+        // decode machine always survives).
+        assert_eq!(Splitwise::with_prefill_frac(&c8, 0.5)
+                       .n_prefill_instances(), 4);
+        assert_eq!(Splitwise::with_prefill_frac(&c8, 0.01)
+                       .n_prefill_instances(), 1);
+        assert_eq!(Splitwise::with_prefill_frac(&c8, 1.0)
+                       .n_prefill_instances(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode instance")]
+    fn prefill_frac_must_leave_a_decode_instance() {
+        // A 1-instance cluster cannot split: the minimum-one prefill
+        // machine would leave no decode machine.
+        let c = ClusterSpec::homogeneous(H100, 1);
+        Splitwise::with_prefill_frac(&c, 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill fraction")]
+    fn prefill_frac_rejects_out_of_range() {
+        let c = ClusterSpec::homogeneous(H100, 8);
+        Splitwise::with_prefill_frac(&c, 1.5);
+    }
+
+    #[test]
+    fn prefill_batch_cap_still_completes() {
+        let trace = Trace::poisson(MIXED, 6.0, 30.0, 7);
+        let cfg = cfg_dev(4, H100);
+        let mut s = Splitwise::new(&cfg.cluster);
+        s.set_max_prefill_batch(1);
+        let r = run(&cfg, &trace, &mut s);
+        assert_eq!(r.completed, trace.len());
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Perf-trajectory comparison: `accellm bench --baseline FILE` pits the
-//! freshly generated bench JSON (BENCH_PR3.json) against a previous
+//! freshly generated bench JSON (BENCH.json) against a previous
 //! PR's committed/regenerated bench and fails on per-scheduler
 //! wall-clock regressions beyond a threshold — the CI guard that turns
 //! the bench subcommand into a tracked perf trajectory (ROADMAP item).

@@ -1,6 +1,10 @@
-//! Shared-uplink contention evaluation (`figures --fig contention`):
-//! sweep the inter-node network bandwidth with the contention model
-//! enabled and compare topology-aware `accellm` against the
+//! Shared-uplink contention evaluation (`figures --fig contention` and
+//! `--fig spine_sweep`).
+//!
+//! **`contention`** sweeps the inter-node network bandwidth with the
+//! contention model enabled — under BOTH bandwidth-sharing models
+//! (admission-time fair share vs progress-based max-min with event
+//! rescheduling) — and compares topology-aware `accellm` against the
 //! topology-blind `accellm-blind` comparator (plus `splitwise` for a
 //! disaggregated reference) on the mixed `h100x4+910b2x4` fleet.
 //!
@@ -13,15 +17,29 @@
 //!   chassis-local pairs — its hand-off/replica streams leave the
 //!   contended uplinks entirely — while the blind comparator keeps
 //!   overloading the deep-HBM pairs via free-memory routing.  The JCT
-//!   gap at the low end is the topology-awareness payoff.
+//!   gap at the low end is the topology-awareness payoff, and it must
+//!   hold under both sharing models;
+//! * the `model` column exposes the admission model's pessimism for
+//!   NIC-queued schedulers: under max-min a queued hand-off stops
+//!   holding uplink share while it waits, so saturation-regime numbers
+//!   sharpen (the `rescheds` column counts how often in-flight streams
+//!   were re-rated — always 0 under admission).
 //!
-//! Per-uplink occupancy/peak-stream columns come from the engine's
-//! in-flight stream tracking ([`crate::sim::LinkReport`]).
+//! **`spine_sweep`** saturates the new spine tier under the max-min
+//! model: per-chassis uplinks are kept generous (25 GB/s) while one
+//! cluster-wide spine capacity above them is swept down — a regime the
+//! admission-time model could not express, because the whole point is
+//! re-rating the cluster-wide flow set as streams churn on the shared
+//! tier.
+//!
+//! Per-uplink/spine occupancy, peak-stream and reschedule columns come
+//! from the engine's in-flight stream tracking
+//! ([`crate::sim::LinkReport`]).
 
 use crate::builder::SimBuilder;
 use crate::eval::figures::FigureOutput;
 use crate::registry::SchedSpec;
-use crate::sim::RunReport;
+use crate::sim::{ContentionModel, RunReport};
 use crate::workload::{Trace, MIXED};
 
 /// Fixed seed/duration, matching the figure harness conventions.
@@ -39,57 +57,140 @@ pub const CONTENTION_CLUSTER: &str = "mixed:h100x4+910b2x4";
 /// bandwidth, i.e. exactly what `--network-gbs G --contention` builds.
 pub const CONTENTION_GBS: [f64; 5] = [1.0, 2.0, 5.0, 25.0, 100.0];
 
+/// Spine capacities swept by `spine_sweep` (GB/s), under 25 GB/s
+/// per-chassis uplinks: at 40 GB/s the spine is invisible, at 2 GB/s
+/// it is the cluster bottleneck.
+pub const SPINE_GBS: [f64; 4] = [2.0, 5.0, 10.0, 40.0];
+
+/// Uplink/network capacity held fixed during the spine sweep (GB/s).
+pub const SPINE_UPLINK_GBS: f64 = 25.0;
+
 /// Schedulers compared.
 const SCHEDS: [&str; 3] = ["accellm", "accellm-blind", "splitwise"];
 
-/// One (network bandwidth, scheduler) cell on the contended cluster.
-pub fn run_contended(gbs: f64, sched: &str) -> RunReport {
+/// Both bandwidth-sharing models, admission (the default) first.
+const MODELS: [ContentionModel; 2] =
+    [ContentionModel::Admission, ContentionModel::MaxMin];
+
+/// One (network bandwidth, scheduler, sharing model) cell on the
+/// contended cluster.
+pub fn run_contended(gbs: f64, sched: &str,
+                     model: ContentionModel) -> RunReport {
     SimBuilder::parse_cluster(CONTENTION_CLUSTER)
         .expect("valid cluster spec")
         .network_gbs(gbs)
         .contention(gbs)
+        .contention_model(model)
         .trace(Trace::poisson(MIXED, RATE, DUR, SEED))
         .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
         .run()
 }
 
-/// Contended `--network-gbs` sweep, aware vs blind (+ splitwise).
+/// One (spine capacity, scheduler) cell: generous uplinks, max-min
+/// sharing, the spine as the only scarce tier.
+pub fn run_spine(spine_gbs: f64, sched: &str) -> RunReport {
+    SimBuilder::parse_cluster(CONTENTION_CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(SPINE_UPLINK_GBS)
+        .contention(SPINE_UPLINK_GBS)
+        .spine(spine_gbs)
+        .contention_model(ContentionModel::MaxMin)
+        .trace(Trace::poisson(MIXED, RATE, DUR, SEED))
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
+        .run()
+}
+
+/// Contended `--network-gbs` sweep, aware vs blind (+ splitwise),
+/// under both sharing models.
 pub fn contention() -> FigureOutput {
     let mut rows = Vec::new();
-    for &gbs in &CONTENTION_GBS {
+    for model in MODELS {
+        for &gbs in &CONTENTION_GBS {
+            for sched in SCHEDS {
+                let r = run_contended(gbs, sched, model);
+                // Hottest uplink: occupancy, peak streams, reschedules.
+                let busy = r
+                    .per_link
+                    .iter()
+                    .map(|l| l.busy_frac)
+                    .fold(0.0, f64::max);
+                let peak = r
+                    .per_link
+                    .iter()
+                    .map(|l| l.peak_streams)
+                    .max()
+                    .unwrap_or(0);
+                let rescheds: u64 =
+                    r.per_link.iter().map(|l| l.resched).sum();
+                rows.push(format!(
+                    "{},{},{:.0},{},{:.1},{:.4},{:.2},{:.3},{:.2},{:.3},{},{}",
+                    CONTENTION_CLUSTER.trim_start_matches("mixed:"),
+                    model.name(),
+                    gbs,
+                    sched,
+                    r.cost_efficiency,
+                    r.ttft_mean,
+                    r.jct_mean,
+                    r.utilization,
+                    r.xfer_total_bytes / 1e9,
+                    busy,
+                    peak,
+                    rescheds
+                ));
+            }
+        }
+    }
+    FigureOutput {
+        id: "contention".into(),
+        title: "Contended network sweep under both sharing models: \
+                topology-aware accellm vs blind pairing/routing \
+                (+ splitwise), mixed h100x4+910b2x4"
+            .into(),
+        header: "cluster,model,network_gbs,scheduler,\
+                 cost_eff_tok_inst_s,ttft_mean_s,jct_mean_s,utilization,\
+                 xfer_gb,uplink_busy_max,uplink_peak_streams,rescheds"
+            .into(),
+        rows,
+    }
+}
+
+/// Spine-saturation sweep (max-min model): JCT/TTFT vs spine capacity
+/// with per-spine occupancy and reschedule counts.
+pub fn spine_sweep() -> FigureOutput {
+    let mut rows = Vec::new();
+    for &spine in &SPINE_GBS {
         for sched in SCHEDS {
-            let r = run_contended(gbs, sched);
-            // Hottest uplink: occupancy and peak concurrent streams.
-            let busy = r
+            let r = run_spine(spine, sched);
+            let s = r
                 .per_link
                 .iter()
-                .map(|l| l.busy_frac)
-                .fold(0.0, f64::max);
-            let peak =
-                r.per_link.iter().map(|l| l.peak_streams).max().unwrap_or(0);
+                .find(|l| l.tier == "spine")
+                .expect("spine row present");
             rows.push(format!(
-                "{},{:.0},{},{:.1},{:.4},{:.2},{:.3},{:.2},{:.3},{}",
+                "{},maxmin,{:.0},{:.0},{},{:.1},{:.4},{:.2},{:.3},{:.3},{},{}",
                 CONTENTION_CLUSTER.trim_start_matches("mixed:"),
-                gbs,
+                SPINE_UPLINK_GBS,
+                spine,
                 sched,
                 r.cost_efficiency,
                 r.ttft_mean,
                 r.jct_mean,
                 r.utilization,
-                r.xfer_total_bytes / 1e9,
-                busy,
-                peak
+                s.busy_frac,
+                s.peak_streams,
+                s.resched
             ));
         }
     }
     FigureOutput {
-        id: "contention".into(),
-        title: "Contended network sweep: topology-aware accellm vs blind \
-                pairing/routing (+ splitwise), mixed h100x4+910b2x4"
+        id: "spine_sweep".into(),
+        title: "Spine-tier saturation sweep (max-min sharing, 25 GB/s \
+                uplinks): one cluster-wide capacity above the chassis \
+                uplinks, mixed h100x4+910b2x4"
             .into(),
-        header: "cluster,network_gbs,scheduler,cost_eff_tok_inst_s,\
-                 ttft_mean_s,jct_mean_s,utilization,xfer_gb,\
-                 uplink_busy_max,uplink_peak_streams"
+        header: "cluster,model,uplink_gbs,spine_gbs,scheduler,\
+                 cost_eff_tok_inst_s,ttft_mean_s,jct_mean_s,utilization,\
+                 spine_busy_frac,spine_peak_streams,spine_rescheds"
             .into(),
         rows,
     }
@@ -100,38 +201,108 @@ mod tests {
     use super::*;
 
     #[test]
-    fn contention_figure_shape_and_low_bw_ordering() {
+    fn contention_figure_shape_ordering_and_reschedules() {
+        // One figure build serves every assertion below — contention()
+        // runs 30 full simulations, so the test suite must not build
+        // it twice.
         let f = contention();
-        assert_eq!(f.rows.len(), CONTENTION_GBS.len() * SCHEDS.len());
-        let jct_of = |gbs: f64, sched: &str| -> f64 {
-            let needle = format!(",{:.0},{},", gbs, sched);
+        assert_eq!(f.rows.len(),
+                   MODELS.len() * CONTENTION_GBS.len() * SCHEDS.len());
+        let jct_of = |model: &str, gbs: f64, sched: &str| -> f64 {
+            let needle = format!(",{},{:.0},{},", model, gbs, sched);
             let row = f
                 .rows
                 .iter()
                 .find(|r| r.contains(&needle))
-                .unwrap_or_else(|| panic!("no row for {sched}@{gbs}"));
-            row.split(',').nth(5).unwrap().parse().unwrap()
+                .unwrap_or_else(|| panic!("no row for {model}/{sched}@{gbs}"));
+            row.split(',').nth(6).unwrap().parse().unwrap()
         };
         // The acceptance ordering: on a starved, contended network the
         // topology-aware scheduler beats the topology-blind comparator
         // on JCT (locality pairing + capacity-weighted routing vs
-        // chassis-blind pairing + free-memory routing).
-        for gbs in [1.0, 2.0] {
-            assert!(jct_of(gbs, "accellm") < jct_of(gbs, "accellm-blind"),
-                    "at {gbs} GB/s: aware {} !< blind {}",
-                    jct_of(gbs, "accellm"), jct_of(gbs, "accellm-blind"));
+        // chassis-blind pairing + free-memory routing) — under BOTH
+        // sharing models.
+        for model in ["admission", "maxmin"] {
+            for gbs in [1.0, 2.0] {
+                assert!(
+                    jct_of(model, gbs, "accellm")
+                        < jct_of(model, gbs, "accellm-blind"),
+                    "{model} at {gbs} GB/s: aware {} !< blind {}",
+                    jct_of(model, gbs, "accellm"),
+                    jct_of(model, gbs, "accellm-blind")
+                );
+            }
+            // And at generous bandwidth the PR 2 hetero ordering
+            // persists.
+            assert!(jct_of(model, 100.0, "accellm")
+                        < jct_of(model, 100.0, "accellm-blind"));
         }
-        // And at generous bandwidth the PR 2 hetero ordering persists.
-        assert!(jct_of(100.0, "accellm") < jct_of(100.0, "accellm-blind"));
+        // Reschedule accounting: the admission model never re-rates a
+        // stream; the max-min sweep must visibly do so.
+        let rescheds_of = |model: &str| -> u64 {
+            f.rows
+                .iter()
+                .filter(|r| r.contains(&format!(",{model},")))
+                .map(|r| r.split(',').nth(11).unwrap().parse::<u64>().unwrap())
+                .sum()
+        };
+        assert_eq!(rescheds_of("admission"), 0,
+                   "the admission model must never re-rate a stream");
+        assert!(rescheds_of("maxmin") > 0,
+                "the max-min sweep re-rated nothing — contention never \
+                 overlapped?");
     }
 
     #[test]
     fn contended_runs_complete_and_report_uplinks() {
-        for sched in SCHEDS {
-            let r = run_contended(5.0, sched);
-            assert_eq!(r.completed, r.n_requests, "{sched}");
-            // 8 instances -> 4 chassis uplinks, all reported.
-            assert_eq!(r.per_link.len(), 4, "{sched}");
+        for model in MODELS {
+            for sched in SCHEDS {
+                let r = run_contended(5.0, sched, model);
+                assert_eq!(r.completed, r.n_requests,
+                           "{sched}/{}", model.name());
+                // 8 instances -> 4 chassis uplinks, all reported.
+                assert_eq!(r.per_link.len(), 4,
+                           "{sched}/{}", model.name());
+            }
         }
+    }
+
+    #[test]
+    fn spine_sweep_shape_and_monotonicity() {
+        let f = spine_sweep();
+        assert_eq!(f.rows.len(), SPINE_GBS.len() * SCHEDS.len());
+        let col = |row: &str, i: usize| -> f64 {
+            row.split(',').nth(i).unwrap().parse().unwrap()
+        };
+        for row in &f.rows {
+            let busy = col(row, 9);
+            assert!((0.0..=1.0 + 1e-9).contains(&busy), "busy {row}");
+        }
+        // More spine capacity never hurts: the disaggregated baseline
+        // (whose hand-offs all cross the spine) completes the same
+        // trace at least as fast at 40 GB/s as at 2 GB/s.
+        let jct_of = |spine: f64, sched: &str| -> f64 {
+            let needle = format!(",{:.0},{},", spine, sched);
+            col(
+                f.rows
+                    .iter()
+                    .find(|r| r.contains(&needle))
+                    .unwrap_or_else(|| panic!("no row {sched}@{spine}")),
+                7,
+            )
+        };
+        assert!(jct_of(2.0, "splitwise") >= jct_of(40.0, "splitwise") * 0.999,
+                "tight spine {} < loose spine {}",
+                jct_of(2.0, "splitwise"), jct_of(40.0, "splitwise"));
+        // The tight spine actually saturates for at least one
+        // scheduler (busy fraction near the top of the range).
+        let tight_busy = SCHEDS
+            .iter()
+            .map(|s| {
+                let needle = format!(",2,{s},");
+                col(f.rows.iter().find(|r| r.contains(&needle)).unwrap(), 9)
+            })
+            .fold(0.0, f64::max);
+        assert!(tight_busy > 0.2, "2 GB/s spine never busy: {tight_busy}");
     }
 }

@@ -420,16 +420,17 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "prefix_locality" => crate::eval::prefix::prefix_locality(),
         "hetero" => crate::eval::hetero::hetero(),
         "contention" => crate::eval::contention::contention(),
+        "spine_sweep" => crate::eval::contention::spine_sweep(),
         "param_sweep" => param_sweep(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 18] = [
+pub const ALL_IDS: [&str; 19] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
-    "hetero", "contention", "param_sweep",
+    "hetero", "contention", "spine_sweep", "param_sweep",
 ];
 
 /// Generate everything (the `make bench` payload).

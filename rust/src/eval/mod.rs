@@ -15,7 +15,7 @@ pub mod prefix;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
 pub use bench::compare_bench;
-pub use contention::contention;
+pub use contention::{contention, spine_sweep};
 pub use figures::{all_figures, figure_by_id, param_sweep, FigureOutput};
 pub use hetero::hetero;
 pub use prefix::prefix_locality;

@@ -44,8 +44,11 @@
 //! [`sim::Topology`] prices every src→dst KV-transfer link (intra-pair
 //! NVLink/HCCS vs inter-node network, with per-link overrides).  With
 //! the shared-uplink contention model enabled, concurrent
-//! chassis-crossing streams fair-share each chassis' finite uplink and
-//! per-uplink stats land in [`sim::RunReport`] (`per_link`).
+//! chassis-crossing streams share each chassis' finite uplink — and an
+//! optional spine tier above all uplinks — under either admission-time
+//! fair share (default) or progress-based max-min water-filling with
+//! event rescheduling ([`sim::ContentionModel`]); per-link stats land
+//! in [`sim::RunReport`] (`per_link`).
 //!
 //! ## Workload families
 //!

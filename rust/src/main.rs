@@ -11,8 +11,8 @@ use accellm::eval::{all_figures, figure_by_id};
 use accellm::registry::{SchedSpec, SchedulerRegistry};
 #[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
-use accellm::sim::{ClusterSpec, DeviceSpec, RunReport, ALL_DEVICES,
-                   LLAMA2_70B};
+use accellm::sim::{ClusterSpec, ContentionModel, DeviceSpec, RunReport,
+                   ALL_DEVICES, LLAMA2_70B};
 use accellm::util::json::Json;
 #[cfg(feature = "pjrt")]
 use accellm::util::rng::Pcg64;
@@ -28,7 +28,8 @@ USAGE:
                    [--workload light|mixed|heavy|chat|shared-doc]
                    [--rate R] [--duration S] [--seed K]
                    [--bw GB/s] [--network-gbs GB/s]
-                   [--contention] [--uplink-gbs GB/s] [--json]
+                   [--contention] [--uplink-gbs GB/s] [--spine-gbs GB/s]
+                   [--contention-model admission|maxmin] [--json]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm bench    [--cluster SPEC] [--rate R] [--duration S]
                    [--out FILE] [--baseline FILE] [--max-regress F]
@@ -51,10 +52,17 @@ two 8-way-TP A100 instances.  `--network-gbs` prices cross-pair links
 at an inter-node network bandwidth (intra-pair links keep NVLink/HCCS);
 `--contention` additionally makes concurrent cross-chassis streams
 fair-share each chassis' finite uplink (capacity `--uplink-gbs`,
-default = the network bandwidth).  `accellm figures --fig contention`
-sweeps the contended network; `--fig param_sweep` sweeps the CHWBL
-load factor on the mixed fleet.  `accellm bench --baseline FILE` fails
-on >`--max-regress` (default 0.2) per-scheduler wall-clock regression.
+default = the network bandwidth), and `--spine-gbs` adds one shared
+spine capacity above every uplink.  `--contention-model` picks the
+sharing semantics: `admission` (default — rates fixed at admission) or
+`maxmin` (progress-based water-filling; in-flight streams are re-rated
+and their completions rescheduled as neighbors join/leave, and a
+NIC-queued transfer holds no uplink share while waiting).
+`accellm figures --fig contention` sweeps the contended network under
+both models; `--fig spine_sweep` saturates the spine tier under
+max-min; `--fig param_sweep` sweeps the CHWBL load factor on the mixed
+fleet.  `accellm bench --baseline FILE` fails on >`--max-regress`
+(default 0.2) per-scheduler wall-clock regression.
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
 prefix-locality router.  Unknown flags left unconsumed by a subcommand
@@ -187,7 +195,23 @@ fn parse_cluster(args: &Args) -> anyhow::Result<ClusterSpec> {
         })?;
         cluster.enable_contention(gbs * 1e9);
     }
+    if let Some(v) = args.get("spine-gbs") {
+        let gbs: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--spine-gbs expects GB/s"))?;
+        anyhow::ensure!(gbs > 0.0, "--spine-gbs must be positive");
+        cluster.enable_spine(gbs * 1e9);
+    }
     Ok(cluster)
+}
+
+/// `--contention-model admission|maxmin` (default: admission, the
+/// model every committed golden is pinned against).
+fn parse_contention_model(args: &Args) -> anyhow::Result<ContentionModel> {
+    match args.get("contention-model") {
+        Some(v) => ContentionModel::parse(v).map_err(anyhow::Error::msg),
+        None => Ok(ContentionModel::Admission),
+    }
 }
 
 fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
@@ -218,6 +242,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         for &rate in &exp.rates {
             let report = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
                 .interconnect_bw(exp.interconnect_bw)
+                .contention_model(exp.contention_model)
                 .workload(exp.workload, rate, exp.duration, exp.seed)
                 .scheduler(exp.scheduler.clone())
                 .run();
@@ -226,6 +251,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let (cluster, workload, rate, duration, seed) = parse_common(args)?;
+    let model = parse_contention_model(args)?;
     let spec = SchedSpec::parse(args.get_or("scheduler", "accellm"))
         .map_err(anyhow::Error::msg)?;
     let interconnect_bw = match args.get("bw") {
@@ -240,6 +266,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     };
     let report = SimBuilder::new(cluster, LLAMA2_70B)
         .interconnect_bw(interconnect_bw)
+        .contention_model(model)
         .workload(workload, rate, duration, seed)
         .scheduler(spec)
         .run();
@@ -249,11 +276,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let (cluster, workload, _, duration, seed) = parse_common(args)?;
+    let model = parse_contention_model(args)?;
     println!("{}", RunReport::csv_header());
     for &rate in &accellm::eval::figures::RATE_SWEEP {
         let trace = Trace::generate(workload, rate, duration, seed);
         for name in SchedulerRegistry::sweep() {
             let report = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+                .contention_model(model)
                 .trace(trace.clone())
                 .scheduler(SchedSpec::parse(name).expect("registry name"))
                 .run();
@@ -286,15 +315,17 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Fixed small scenario per scheduler: wall-clock + simulated-throughput
-/// numbers, written as JSON (default `BENCH_PR3.json`) — the repo's
+/// numbers, written as JSON (default `BENCH.json`) — the repo's
 /// perf trajectory.  With `--baseline FILE` the run is compared against
 /// a previous bench document and fails on any per-scheduler wall-clock
 /// regression beyond `--max-regress` (default 0.20 = +20%).
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    let out = args.get_or("out", "BENCH_PR3.json");
+    let out = args.get_or("out", "BENCH.json");
     // Same cluster resolution as simulate/sweep (--cluster or legacy
-    // --device/--instances, plus --network-gbs).
+    // --device/--instances, plus --network-gbs and the contention
+    // knobs).
     let cluster = parse_cluster(args)?;
+    let model = parse_contention_model(args)?;
     let rate = args.get_f64("rate", 8.0).map_err(anyhow::Error::msg)?;
     let duration = args.get_f64("duration", 30.0).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
@@ -313,6 +344,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let mut last: Option<RunReport> = None;
         for _ in 0..4 {
             let builder = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+                .contention_model(model)
                 .trace(trace.clone())
                 .scheduler(spec.clone());
             let t0 = std::time::Instant::now();

@@ -102,6 +102,12 @@ impl AcceLlmPrefix {
     pub fn set_max_decode_batch(&mut self, cap: usize) {
         self.inner.set_max_decode_batch(cap);
     }
+
+    /// Prefill batch cap of the inner AcceLLM pair scheduler (registry
+    /// param `max_prefill_batch`).
+    pub fn set_max_prefill_batch(&mut self, cap: usize) {
+        self.inner.set_max_prefill_batch(cap);
+    }
 }
 
 impl Scheduler for AcceLlmPrefix {

@@ -33,7 +33,8 @@
 
 use std::fmt;
 
-use crate::coordinator::accellm::DEFAULT_FLIP_SLACK_S;
+use crate::coordinator::accellm::{DEFAULT_FLIP_SLACK_S,
+                                  DEFAULT_ROUTE_LOAD_FACTOR};
 use crate::coordinator::{AcceLlm, Splitwise, Vllm, DEFAULT_MAX_DECODE_BATCH};
 use crate::prefix::router::DEFAULT_VNODES;
 use crate::prefix::scheduler::{DEFAULT_CACHE_CHUNKS, DEFAULT_LOAD_FACTOR};
@@ -73,13 +74,17 @@ impl fmt::Display for ParamValue {
 }
 
 /// One tunable knob of a scheduler: key, typed default (the former
-/// compile-time constant), inclusive lower bound, one-line meaning.
+/// compile-time constant), inclusive bounds, one-line meaning.
 #[derive(Clone, Copy, Debug)]
 pub struct ParamSpec {
     pub key: &'static str,
     pub default: ParamValue,
     /// Inclusive lower bound (applies to both value kinds).
     pub min: f64,
+    /// Inclusive upper bound (`f64::INFINITY` = unbounded).  Values
+    /// outside `[min, max]` are rejected at parse time, so no
+    /// scheduler constructor ever panics on user input.
+    pub max: f64,
     pub help: &'static str,
 }
 
@@ -213,6 +218,12 @@ impl SchedSpec {
                         d.name, pspec.min
                     ));
                 }
+                if value.as_f64() > pspec.max {
+                    return Err(format!(
+                        "parameter '{k}' of '{}' must be <= {}, got '{v}'",
+                        d.name, pspec.max
+                    ));
+                }
                 params.set(pspec.key, value);
                 overrides.retain(|(ok, _)| *ok != pspec.key); // last wins
                 overrides.push((pspec.key, value));
@@ -267,6 +278,7 @@ const MAX_BATCH_PARAM: ParamSpec = ParamSpec {
     key: "max_batch",
     default: ParamValue::UInt(DEFAULT_MAX_DECODE_BATCH as u64),
     min: 1.0,
+    max: f64::INFINITY,
     help: "per-instance decode batch cap (vLLM 0.4.2 max_num_seqs)",
 };
 
@@ -276,31 +288,85 @@ const FLIP_SLACK_PARAM: ParamSpec = ParamSpec {
     // default cannot drift from direct-construction behavior.
     default: ParamValue::Float(DEFAULT_FLIP_SLACK_S * 1e3),
     min: 0.0,
+    max: f64::INFINITY,
     help: "role-flip damping window in milliseconds",
 };
 
-const ACCELLM_PARAMS: [ParamSpec; 2] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM];
+/// AcceLLM's prefill batch cap (shared by the prefix composition and
+/// the blind comparator, which inherit the pair machinery).
+const ACCELLM_PREFILL_BATCH_PARAM: ParamSpec = ParamSpec {
+    key: "max_prefill_batch",
+    default: ParamValue::UInt(
+        crate::coordinator::accellm::DEFAULT_MAX_PREFILL_BATCH as u64,
+    ),
+    min: 1.0,
+    max: f64::INFINITY,
+    help: "prompts folded into one pair prefill work item",
+};
 
-const PREFIX_PARAMS: [ParamSpec; 5] = [
+const ROUTE_LOAD_FACTOR_PARAM: ParamSpec = ParamSpec {
+    key: "route_load_factor",
+    default: ParamValue::Float(DEFAULT_ROUTE_LOAD_FACTOR),
+    min: 1.0,
+    max: f64::INFINITY,
+    help: "CHWBL slack of hardware-aware arrival routing (mixed fleets)",
+};
+
+const ACCELLM_PARAMS: [ParamSpec; 4] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM,
+                                        ACCELLM_PREFILL_BATCH_PARAM,
+                                        ROUTE_LOAD_FACTOR_PARAM];
+
+/// The blind baseline routes by free memory (no router), so it takes
+/// every accellm knob EXCEPT `route_load_factor`.
+const BLIND_PARAMS: [ParamSpec; 3] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM,
+                                      ACCELLM_PREFILL_BATCH_PARAM];
+
+const PREFIX_PARAMS: [ParamSpec; 6] = [
     MAX_BATCH_PARAM,
     FLIP_SLACK_PARAM,
+    ACCELLM_PREFILL_BATCH_PARAM,
     ParamSpec {
         key: "vnodes",
         default: ParamValue::UInt(DEFAULT_VNODES as u64),
         min: 1.0,
+        max: f64::INFINITY,
         help: "CHWBL virtual nodes per pair (arc-length smoothing)",
     },
     ParamSpec {
         key: "load_factor",
         default: ParamValue::Float(DEFAULT_LOAD_FACTOR),
         min: 1.0,
+        max: f64::INFINITY,
         help: "CHWBL slack c in the bound ceil(c*(m+1)*w/W)",
     },
     ParamSpec {
         key: "cache_chunks",
         default: ParamValue::UInt(DEFAULT_CACHE_CHUNKS as u64),
         min: 1.0,
+        max: f64::INFINITY,
         help: "per-pair prefix-cache budget in 32-token chunks",
+    },
+];
+
+const SPLITWISE_PARAMS: [ParamSpec; 3] = [
+    MAX_BATCH_PARAM,
+    ParamSpec {
+        key: "max_prefill_batch",
+        default: ParamValue::UInt(
+            crate::coordinator::splitwise::DEFAULT_MAX_PREFILL_BATCH as u64,
+        ),
+        min: 1.0,
+        max: f64::INFINITY,
+        help: "prompts a prefill machine folds into one batch",
+    },
+    ParamSpec {
+        key: "prefill_frac",
+        default: ParamValue::Float(
+            crate::coordinator::splitwise::DEFAULT_PREFILL_FRAC,
+        ),
+        min: 0.0,
+        max: 1.0,
+        help: "fraction of instances dedicated to prefill, in [0, 1]",
     },
 ];
 
@@ -309,11 +375,13 @@ const BASELINE_PARAMS: [ParamSpec; 1] = [MAX_BATCH_PARAM];
 fn apply_accellm_params(s: &mut AcceLlm, p: &SchedParams) {
     s.set_flip_slack(p.f64("flip_slack_ms") / 1e3);
     s.set_max_decode_batch(p.usize("max_batch"));
+    s.set_max_prefill_batch(p.usize("max_prefill_batch"));
 }
 
 fn build_accellm(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
     let mut s = AcceLlm::new(c);
     apply_accellm_params(&mut s, p);
+    s.set_route_load_factor(p.f64("route_load_factor"));
     Box::new(s)
 }
 
@@ -333,12 +401,14 @@ fn build_accellm_prefix(c: &ClusterSpec, p: &SchedParams)
     );
     s.set_flip_slack(p.f64("flip_slack_ms") / 1e3);
     s.set_max_decode_batch(p.usize("max_batch"));
+    s.set_max_prefill_batch(p.usize("max_prefill_batch"));
     Box::new(s)
 }
 
 fn build_splitwise(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
-    let mut s = Splitwise::new(c);
+    let mut s = Splitwise::with_prefill_frac(c, p.f64("prefill_frac"));
     s.set_max_decode_batch(p.usize("max_batch"));
+    s.set_max_prefill_batch(p.usize("max_prefill_batch"));
     Box::new(s)
 }
 
@@ -370,7 +440,7 @@ pub static REGISTRY: [SchedulerDescriptor; 5] = [
                picked by compute",
         in_sweep: true,
         in_paper_figs: true,
-        params: &BASELINE_PARAMS,
+        params: &SPLITWISE_PARAMS,
         build: build_splitwise,
     },
     SchedulerDescriptor {
@@ -400,7 +470,7 @@ pub static REGISTRY: [SchedulerDescriptor; 5] = [
                (hetero-eval comparator)",
         in_sweep: false,
         in_paper_figs: false,
-        params: &ACCELLM_PARAMS,
+        params: &BLIND_PARAMS,
         build: build_accellm_blind,
     },
 ];
@@ -504,12 +574,25 @@ mod tests {
     fn bare_name_equals_explicit_defaults() {
         let bare = SchedSpec::parse("accellm-prefix").unwrap();
         let full = SchedSpec::parse(
-            "accellm-prefix:max_batch=256,flip_slack_ms=15,vnodes=64,\
-             load_factor=1.5,cache_chunks=2048",
+            "accellm-prefix:max_batch=256,flip_slack_ms=15,\
+             max_prefill_batch=8,vnodes=64,load_factor=1.5,\
+             cache_chunks=2048",
         )
         .unwrap();
         assert_eq!(bare.params, full.params);
         assert_eq!(bare.name(), full.name());
+        // The former compile-time constants, now parameters.
+        let acc = SchedSpec::parse("accellm").unwrap();
+        assert_eq!(acc.params.usize("max_prefill_batch"), 8);
+        assert_eq!(acc.params.f64("route_load_factor"), 1.25);
+        let spl = SchedSpec::parse("splitwise").unwrap();
+        assert_eq!(spl.params.usize("max_prefill_batch"), 4);
+        assert_eq!(spl.params.f64("prefill_frac"), 0.25);
+        // The blind comparator has no arrival router, so no
+        // route_load_factor knob.
+        let e = SchedSpec::parse("accellm-blind:route_load_factor=2")
+            .unwrap_err();
+        assert!(e.contains("route_load_factor"), "{e}");
     }
 
     #[test]
@@ -573,6 +656,11 @@ mod tests {
         assert!(e.contains("key=value"), "{e}");
         let e = SchedSpec::parse("accellm:flip_slack_ms=-1").unwrap_err();
         assert!(e.contains(">= 0"), "{e}");
+        // Upper bounds are enforced at parse time too: an over-full
+        // prefill pool is a spec error, never a constructor panic.
+        let e = SchedSpec::parse("splitwise:prefill_frac=1.5").unwrap_err();
+        assert!(e.contains("<= 1"), "{e}");
+        assert!(SchedSpec::parse("splitwise:prefill_frac=1").is_ok());
         // Float syntax is rejected for integer parameters.
         assert!(SchedSpec::parse("vllm:max_batch=1.5").is_err());
     }

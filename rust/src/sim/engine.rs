@@ -23,7 +23,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::sim::hardware::{ClusterSpec, DeviceSpec};
+use crate::sim::hardware::{maxmin_rates, ClusterSpec, DeviceSpec, FlowSpec};
 use crate::sim::instance::{Role, SimInstance};
 use crate::sim::llm::{LlmSpec, LLAMA2_70B};
 use crate::sim::metrics::{DeviceClassReport, MetricsCollector, RunReport};
@@ -66,7 +66,90 @@ enum Event {
         src: InstId,
         dst: InstId,
         req: ReqId,
+        /// Max-min model only: index into `SimCtx::flows` of the
+        /// in-flight transfer this event completes (None for
+        /// fixed-rate admission-model transfers).
+        flow: Option<usize>,
     },
+}
+
+/// How concurrent streams share finite uplink/spine capacity.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ContentionModel {
+    /// PR 3 semantics (the default): a stream's rate is fixed at
+    /// admission time to `capacity / (k + 1)` against the `k` streams
+    /// already in flight, never re-rated afterwards, and a NIC-queued
+    /// transfer occupies its uplink share from admission — including
+    /// time spent waiting behind a busy NIC.  Every committed golden
+    /// and PR 2/PR 3 anchor is pinned against this model.
+    #[default]
+    Admission,
+    /// Progress-based max-min sharing with event rescheduling: each
+    /// in-flight transfer tracks bytes remaining; whenever a stream
+    /// starts or finishes on a shared uplink (or the spine tier), the
+    /// engine water-fills max-min rates across every stream touching
+    /// that capacity, cancels the affected completion events and
+    /// reschedules them from the remaining bytes at the new rates.  A
+    /// transfer queued behind a busy NIC holds no uplink share while
+    /// it waits.  Single-stream and uncontended prices are
+    /// bit-identical to the admission model.
+    MaxMin,
+}
+
+impl ContentionModel {
+    /// Parse the CLI/config spelling (`--contention-model`).
+    pub fn parse(name: &str) -> Result<ContentionModel, String> {
+        match name.to_ascii_lowercase().as_str() {
+            "admission" => Ok(ContentionModel::Admission),
+            "maxmin" | "max-min" | "max_min" => Ok(ContentionModel::MaxMin),
+            _ => Err(format!(
+                "unknown contention model '{name}' (known: admission, maxmin)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ContentionModel::Admission => "admission",
+            ContentionModel::MaxMin => "maxmin",
+        }
+    }
+}
+
+/// One in-flight transfer under the max-min contention model.
+#[derive(Clone, Debug)]
+struct Flow {
+    src: InstId,
+    dst: InstId,
+    req: ReqId,
+    /// Point-to-point price of the flow's own link (its rate cap).
+    cap: f64,
+    /// Chassis uplinks crossed (None: intra-chassis or uplinks off).
+    uplinks: Option<(usize, usize)>,
+    /// Crosses the spine tier.
+    spine: bool,
+    /// Bytes still to move (advanced lazily at each re-rate).
+    remaining: f64,
+    /// Current water-filled rate, bytes/s.
+    rate: f64,
+    /// Simulation time `remaining` was last advanced to.
+    since: f64,
+    /// Index of the pending TransferDone event in `events`
+    /// (`usize::MAX` until the first schedule).
+    event: usize,
+    /// Holds both endpoint NICs exclusively (non-overlapped transfer).
+    holds_nics: bool,
+}
+
+/// A transfer waiting for both endpoint NICs (max-min model): it joins
+/// the flow pool — and starts consuming uplink/spine share — only when
+/// it is activated.
+#[derive(Clone, Debug)]
+struct QueuedXfer {
+    src: InstId,
+    dst: InstId,
+    req: ReqId,
+    bytes: f64,
 }
 
 /// The policy under evaluation.
@@ -104,10 +187,14 @@ pub struct SimCtx {
     pub pending: VecDeque<ReqId>,
     pub metrics: MetricsCollector,
 
+    /// How concurrent streams share uplink/spine capacity.
+    pub contention_model: ContentionModel,
+
     heap: BinaryHeap<Reverse<(OrdF64, u64, usize)>>,
     events: Vec<Option<Event>>,
     seq: u64,
-    /// Per-instance NIC busy-until (serialized link model).
+    /// Per-instance NIC busy-until (admission model's serialized
+    /// link pricing).
     nic_busy: Vec<f64>,
     /// In-flight stream count per chassis uplink (shared-uplink
     /// contention model; empty when disabled).
@@ -115,14 +202,31 @@ pub struct SimCtx {
     /// Timestamp each uplink last went from idle to busy (occupancy
     /// accounting).
     uplink_busy_since: Vec<f64>,
+    /// In-flight stream count on the spine tier (0 when no spine).
+    spine_streams: usize,
+    /// Timestamp the spine last went from idle to busy.
+    spine_busy_since: f64,
+    /// Max-min model: in-flight transfer table (slot = flow id; None
+    /// once the transfer finished).
+    flows: Vec<Option<Flow>>,
+    /// Flow ids currently in the water-filling pool (flows crossing an
+    /// uplink or the spine) — keeps every re-rate O(active flows)
+    /// instead of O(all transfers ever launched).
+    contended_flows: Vec<usize>,
+    /// Max-min model: NICs currently held by a non-overlapped
+    /// transfer.
+    nic_held: Vec<bool>,
+    /// Max-min model: transfers waiting for both endpoint NICs, FIFO.
+    nic_waiting: VecDeque<QueuedXfer>,
 }
 
 impl SimCtx {
-    fn push_event(&mut self, t: f64, ev: Event) {
+    fn push_event(&mut self, t: f64, ev: Event) -> usize {
         let idx = self.events.len();
         self.events.push(Some(ev));
         self.heap.push(Reverse((OrdF64(t), self.seq, idx)));
         self.seq += 1;
+        idx
     }
 
     // ---- inspection ------------------------------------------------------
@@ -143,29 +247,31 @@ impl SimCtx {
             .unwrap_or_else(|| self.cluster.topology().link_bw(src, dst))
     }
 
-    /// Bandwidth a NEW src→dst stream would get right now: the
-    /// point-to-point link price, capped by the fair share of every
-    /// chassis uplink the stream crosses (admission-time fair share —
-    /// `capacity / (in-flight streams + 1)`).  Identical to
-    /// [`Self::link_bw`] when contention is disabled or the endpoints
-    /// share a chassis, and identical with zero concurrent streams as
-    /// long as the uplink capacity is not below the link's own price —
-    /// the contention model is a strict refinement of the PR 2
-    /// point-to-point model.
+    /// Bandwidth a NEW src→dst stream would get right now under the
+    /// ADMISSION model: the point-to-point link price, capped by the
+    /// fair share of every chassis uplink the stream crosses — and of
+    /// the spine tier, if modeled — (`capacity / (in-flight streams +
+    /// 1)`).  Identical to [`Self::link_bw`] when contention is
+    /// disabled or the endpoints share a chassis, and identical with
+    /// zero concurrent streams as long as the shared capacities are
+    /// not below the link's own price — the contention model is a
+    /// strict refinement of the PR 2 point-to-point model.
     pub fn stream_bw(&self, src: InstId, dst: InstId) -> f64 {
         let base = self.link_bw(src, dst);
-        match self.cluster.topology().crossed_uplinks(src, dst) {
-            None => base,
-            Some((ca, cb)) => {
-                let topo = self.cluster.topology();
-                let mut bw = base;
-                for c in [ca, cb] {
-                    let share = (self.uplink_streams[c] + 1) as f64;
-                    bw = bw.min(topo.uplink_bw(c) / share);
-                }
-                bw
+        let topo = self.cluster.topology();
+        let mut bw = base;
+        if let Some((ca, cb)) = topo.crossed_uplinks(src, dst) {
+            for c in [ca, cb] {
+                let share = (self.uplink_streams[c] + 1) as f64;
+                bw = bw.min(topo.uplink_bw(c) / share);
             }
         }
+        if topo.crosses_spine(src, dst) {
+            if let Some(spine) = topo.spine_bw() {
+                bw = bw.min(spine / (self.spine_streams + 1) as f64);
+            }
+        }
+        bw
     }
 
     /// Concurrent in-flight streams on one chassis uplink (0 when the
@@ -174,22 +280,35 @@ impl SimCtx {
         self.uplink_streams.get(chassis).copied().unwrap_or(0)
     }
 
-    /// Record a new stream on every uplink the src→dst transfer
-    /// crosses; meters bytes/peak/occupancy.  No-op when contention is
-    /// off or the transfer stays inside one chassis.
+    /// Record a new stream on every shared capacity the src→dst
+    /// transfer crosses (chassis uplinks + spine); meters
+    /// bytes/peak/occupancy.  No-op when contention is off or the
+    /// transfer stays inside one chassis.
     fn register_stream(&mut self, src: InstId, dst: InstId, bytes: f64) {
-        let Some((ca, cb)) = self.cluster.topology().crossed_uplinks(src, dst)
-        else {
-            return;
-        };
-        for c in [ca, cb] {
-            if self.uplink_streams[c] == 0 {
-                self.uplink_busy_since[c] = self.now;
+        if let Some((ca, cb)) =
+            self.cluster.topology().crossed_uplinks(src, dst)
+        {
+            for c in [ca, cb] {
+                if self.uplink_streams[c] == 0 {
+                    self.uplink_busy_since[c] = self.now;
+                }
+                self.uplink_streams[c] += 1;
+                self.metrics.uplink_bytes[c] += bytes;
+                if self.uplink_streams[c] > self.metrics.uplink_peak_streams[c]
+                {
+                    self.metrics.uplink_peak_streams[c] =
+                        self.uplink_streams[c];
+                }
             }
-            self.uplink_streams[c] += 1;
-            self.metrics.uplink_bytes[c] += bytes;
-            if self.uplink_streams[c] > self.metrics.uplink_peak_streams[c] {
-                self.metrics.uplink_peak_streams[c] = self.uplink_streams[c];
+        }
+        if self.cluster.topology().crosses_spine(src, dst) {
+            if self.spine_streams == 0 {
+                self.spine_busy_since = self.now;
+            }
+            self.spine_streams += 1;
+            self.metrics.spine_bytes += bytes;
+            if self.spine_streams > self.metrics.spine_peak_streams {
+                self.metrics.spine_peak_streams = self.spine_streams;
             }
         }
     }
@@ -198,17 +317,27 @@ impl SimCtx {
     /// engine calls this when the TransferDone event fires, before the
     /// scheduler reacts — so the scheduler sees the freed capacity).
     fn release_stream(&mut self, src: InstId, dst: InstId) {
-        let Some((ca, cb)) = self.cluster.topology().crossed_uplinks(src, dst)
-        else {
-            return;
-        };
-        for c in [ca, cb] {
-            debug_assert!(self.uplink_streams[c] > 0,
-                          "uplink {c} released more streams than registered");
-            self.uplink_streams[c] -= 1;
-            if self.uplink_streams[c] == 0 {
-                self.metrics.uplink_busy_s[c] +=
-                    self.now - self.uplink_busy_since[c];
+        if let Some((ca, cb)) =
+            self.cluster.topology().crossed_uplinks(src, dst)
+        {
+            for c in [ca, cb] {
+                debug_assert!(
+                    self.uplink_streams[c] > 0,
+                    "uplink {c} released more streams than registered"
+                );
+                self.uplink_streams[c] -= 1;
+                if self.uplink_streams[c] == 0 {
+                    self.metrics.uplink_busy_s[c] +=
+                        self.now - self.uplink_busy_since[c];
+                }
+            }
+        }
+        if self.cluster.topology().crosses_spine(src, dst) {
+            debug_assert!(self.spine_streams > 0,
+                          "spine released more streams than registered");
+            self.spine_streams -= 1;
+            if self.spine_streams == 0 {
+                self.metrics.spine_busy_s += self.now - self.spine_busy_since;
             }
         }
     }
@@ -392,6 +521,22 @@ impl SimCtx {
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
+        if self.contention_model == ContentionModel::MaxMin {
+            if overlap {
+                self.launch_flow(src, dst, req, bytes, false);
+            } else if self.nic_held[src] || self.nic_held[dst] {
+                // A queued transfer consumes no uplink/spine share
+                // while it waits — it joins the pool when both NICs
+                // free up (the fix over the admission model).
+                self.nic_waiting
+                    .push_back(QueuedXfer { src, dst, req, bytes });
+            } else {
+                self.nic_held[src] = true;
+                self.nic_held[dst] = true;
+                self.launch_flow(src, dst, req, bytes, true);
+            }
+            return;
+        }
         let dur = bytes / self.stream_bw(src, dst);
         self.register_stream(src, dst, bytes);
         let done = if overlap {
@@ -403,7 +548,7 @@ impl SimCtx {
             self.nic_busy[dst] = done;
             done
         };
-        self.push_event(done, Event::TransferDone { src, dst, req });
+        self.push_event(done, Event::TransferDone { src, dst, req, flow: None });
     }
 
     /// Schedule a per-layer pipelined transfer (Section 4.2.4): the
@@ -412,6 +557,13 @@ impl SimCtx {
     /// src→dst link, and the NIC serializes concurrent streams — so a
     /// saturated link queues hand-offs even though each is individually
     /// overlapped.
+    ///
+    /// Under the max-min model the overlapped prefill window is
+    /// credited at the UNCONTENDED link price (the per-layer stream ran
+    /// concurrently with compute, before joining the shared pool); only
+    /// the residual bytes ride the pool.  When the NIC is already busy
+    /// the window is lost, matching the admission model, where the
+    /// stream cannot begin before the link frees.
     pub fn start_transfer_pipelined(&mut self, src: InstId, dst: InstId,
                                     req: ReqId, tokens: f64, kind: XferKind,
                                     overlapped: f64) {
@@ -420,6 +572,19 @@ impl SimCtx {
             XferKind::PrefillHandoff => self.metrics.xfer_prefill_bytes += bytes,
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
+        }
+        if self.contention_model == ContentionModel::MaxMin {
+            if self.nic_held[src] || self.nic_held[dst] {
+                self.nic_waiting
+                    .push_back(QueuedXfer { src, dst, req, bytes });
+            } else {
+                let credited = overlapped.max(0.0) * self.link_bw(src, dst);
+                let remaining = (bytes - credited).max(0.0);
+                self.nic_held[src] = true;
+                self.nic_held[dst] = true;
+                self.launch_flow(src, dst, req, remaining, true);
+            }
+            return;
         }
         let wire = bytes / self.stream_bw(src, dst);
         self.register_stream(src, dst, bytes);
@@ -431,7 +596,135 @@ impl SimCtx {
         let done = begin + wire;
         self.nic_busy[src] = done;
         self.nic_busy[dst] = done;
-        self.push_event(done.max(self.now), Event::TransferDone { src, dst, req });
+        self.push_event(done.max(self.now),
+                        Event::TransferDone { src, dst, req, flow: None });
+    }
+
+    // ---- max-min sharing (progress-based, event-rescheduling) ------------
+
+    /// Start a max-min flow NOW: allocate its slot, meter its stream,
+    /// schedule (or water-fill) its completion.  `bytes` is what is
+    /// still to move (pipelined overlap already credited).
+    fn launch_flow(&mut self, src: InstId, dst: InstId, req: ReqId,
+                   bytes: f64, holds_nics: bool) {
+        let cap = self.link_bw(src, dst);
+        let topo = self.cluster.topology();
+        let uplinks = topo.crossed_uplinks(src, dst);
+        let spine = topo.crosses_spine(src, dst);
+        let contended = uplinks.is_some() || spine;
+        let id = self.flows.len();
+        self.flows.push(Some(Flow {
+            src,
+            dst,
+            req,
+            cap,
+            uplinks,
+            spine,
+            remaining: bytes,
+            rate: cap,
+            since: self.now,
+            event: usize::MAX,
+            holds_nics,
+        }));
+        if contended {
+            self.contended_flows.push(id);
+            self.register_stream(src, dst, bytes);
+            self.rerate_flows(Some(id));
+        } else {
+            // Uncontended: the fixed PR 2 point-to-point price, never
+            // rescheduled — bit-identical across contention models.
+            let ev = self.push_event(
+                self.now + bytes / cap,
+                Event::TransferDone { src, dst, req, flow: Some(id) },
+            );
+            self.flows[id].as_mut().unwrap().event = ev;
+        }
+    }
+
+    /// Advance every contended flow's progress to `now`, water-fill
+    /// max-min rates over the shared uplinks/spine, and reschedule the
+    /// completion of every flow whose rate changed.  `new_flow` marks a
+    /// just-launched flow (which always needs its first schedule and is
+    /// not counted as a reschedule).
+    fn rerate_flows(&mut self, new_flow: Option<usize>) {
+        let ids = self.contended_flows.clone();
+        if ids.is_empty() {
+            return;
+        }
+        let specs: Vec<FlowSpec> = ids
+            .iter()
+            .map(|&i| {
+                let f = self.flows[i].as_ref().unwrap();
+                FlowSpec { cap: f.cap, uplinks: f.uplinks, spine: f.spine }
+            })
+            .collect();
+        let topo = self.cluster.topology();
+        let rates =
+            maxmin_rates(&specs, topo.uplink_caps(), topo.spine_bw());
+        let now = self.now;
+        for (k, &i) in ids.iter().enumerate() {
+            let new_rate = rates[k];
+            let (old_event, remaining, src, dst, req, uplinks, spine);
+            {
+                let f = self.flows[i].as_mut().unwrap();
+                // Advance progress at the rate held so far.
+                f.remaining = (f.remaining - f.rate * (now - f.since)).max(0.0);
+                f.since = now;
+                if new_rate == f.rate && Some(i) != new_flow {
+                    // Same rate bit-for-bit: the pending completion
+                    // event is still exact — leave it untouched (this
+                    // is what keeps never-contended prices identical).
+                    continue;
+                }
+                f.rate = new_rate;
+                old_event = f.event;
+                remaining = f.remaining;
+                src = f.src;
+                dst = f.dst;
+                req = f.req;
+                uplinks = f.uplinks;
+                spine = f.spine;
+            }
+            if old_event != usize::MAX {
+                self.events[old_event] = None; // cancel the stale event
+            }
+            let ev = self.push_event(
+                now + remaining / new_rate,
+                Event::TransferDone { src, dst, req, flow: Some(i) },
+            );
+            self.flows[i].as_mut().unwrap().event = ev;
+            if Some(i) != new_flow {
+                // A live stream was re-rated: meter the reschedule on
+                // every shared capacity it rides.
+                if let Some((ca, cb)) = uplinks {
+                    self.metrics.uplink_resched[ca] += 1;
+                    if cb != ca {
+                        self.metrics.uplink_resched[cb] += 1;
+                    }
+                }
+                if spine {
+                    self.metrics.spine_resched += 1;
+                }
+            }
+        }
+    }
+
+    /// Start every NIC-queued transfer whose endpoints are now free
+    /// (FIFO; an activated transfer claims its NICs, which may keep
+    /// later entries waiting).
+    fn activate_waiting(&mut self) {
+        let mut i = 0;
+        while i < self.nic_waiting.len() {
+            let q = &self.nic_waiting[i];
+            if self.nic_held[q.src] || self.nic_held[q.dst] {
+                i += 1;
+                continue;
+            }
+            let q = self.nic_waiting.remove(i).unwrap();
+            self.nic_held[q.src] = true;
+            self.nic_held[q.dst] = true;
+            self.launch_flow(q.src, q.dst, q.req, q.bytes, true);
+        }
     }
 
     /// Meter replica-update traffic without scheduling an event (the
@@ -459,6 +752,10 @@ pub struct SimConfig {
     pub interconnect_bw: Option<f64>,
     /// Record the full (time, gap) TBT timeline (Figure 16).
     pub record_timeline: bool,
+    /// How concurrent streams share uplink/spine capacity (default:
+    /// the PR 3 admission-time fair share; `maxmin` opts into
+    /// progress-based sharing with event rescheduling).
+    pub contention_model: ContentionModel,
 }
 
 impl SimConfig {
@@ -468,6 +765,7 @@ impl SimConfig {
             llm,
             interconnect_bw: None,
             record_timeline: false,
+            contention_model: ContentionModel::Admission,
         }
     }
 
@@ -508,20 +806,28 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
         instances: (0..n).map(SimInstance::new).collect(),
         pending: VecDeque::new(),
         metrics: MetricsCollector::new(cfg.record_timeline, n_classes),
+        contention_model: cfg.contention_model,
         heap: BinaryHeap::new(),
         events: Vec::new(),
         seq: 0,
         nic_busy: vec![0.0; n],
         uplink_streams: Vec::new(),
         uplink_busy_since: Vec::new(),
+        spine_streams: 0,
+        spine_busy_since: 0.0,
+        flows: Vec::new(),
+        contended_flows: Vec::new(),
+        nic_held: vec![false; n],
+        nic_waiting: VecDeque::new(),
     };
-    if cfg.cluster.topology().contended() {
+    if cfg.cluster.topology().uplinks_enabled() {
         let n_up = cfg.cluster.topology().n_chassis();
         ctx.uplink_streams = vec![0; n_up];
         ctx.uplink_busy_since = vec![0.0; n_up];
         ctx.metrics.uplink_bytes = vec![0.0; n_up];
         ctx.metrics.uplink_peak_streams = vec![0; n_up];
         ctx.metrics.uplink_busy_s = vec![0.0; n_up];
+        ctx.metrics.uplink_resched = vec![0; n_up];
     }
 
     for i in 0..ctx.requests.len() {
@@ -532,8 +838,11 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
     sched.init(&mut ctx);
 
     while let Some(Reverse((OrdF64(t), _, idx))) = ctx.heap.pop() {
+        // A cancelled (rescheduled) event leaves a None slot behind.
+        let Some(ev) = ctx.events[idx].take() else {
+            continue;
+        };
         ctx.now = t;
-        let ev = ctx.events[idx].take().expect("event consumed twice");
         match ev {
             Event::Arrival(req) => {
                 ctx.pending.push_back(req);
@@ -547,8 +856,33 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
                 let completed = apply_work_effects(&mut ctx, inst, &work);
                 sched.on_work_done(&mut ctx, inst, work, completed);
             }
-            Event::TransferDone { src, dst, req } => {
-                ctx.release_stream(src, dst);
+            Event::TransferDone { src, dst, req, flow } => {
+                match flow {
+                    None => ctx.release_stream(src, dst),
+                    Some(id) => {
+                        // Max-min model: retire the flow, water-fill
+                        // the freed share over the survivors, then let
+                        // any NIC-queued transfer take the link.
+                        let f = ctx.flows[id]
+                            .take()
+                            .expect("flow finished twice");
+                        if f.uplinks.is_some() || f.spine {
+                            let pos = ctx
+                                .contended_flows
+                                .iter()
+                                .position(|&x| x == id)
+                                .expect("flow missing from pool index");
+                            ctx.contended_flows.remove(pos);
+                            ctx.release_stream(src, dst);
+                            ctx.rerate_flows(None);
+                        }
+                        if f.holds_nics {
+                            ctx.nic_held[src] = false;
+                            ctx.nic_held[dst] = false;
+                            ctx.activate_waiting();
+                        }
+                    }
+                }
                 sched.on_transfer_done(&mut ctx, src, dst, req);
             }
         }
@@ -655,22 +989,44 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         });
     }
 
-    // Per-uplink contention breakdown (empty unless contention is on).
-    // Every TransferDone fires before the heap drains, so stream counts
-    // are back to zero here and the busy intervals are fully flushed.
+    // Per-shared-link contention breakdown (empty unless contention is
+    // on).  Every TransferDone fires before the heap drains, so stream
+    // counts are back to zero here and the busy intervals are fully
+    // flushed.
+    debug_assert!(ctx.uplink_streams.iter().all(|&s| s == 0),
+                  "streams still in flight at end of run");
+    debug_assert!(ctx.spine_streams == 0,
+                  "spine streams still in flight at end of run");
+    debug_assert!(ctx.flows.iter().all(|f| f.is_none()),
+                  "max-min flows still in flight at end of run");
+    debug_assert!(ctx.contended_flows.is_empty(),
+                  "pool index retains finished flows");
+    debug_assert!(ctx.nic_waiting.is_empty(),
+                  "NIC-queued transfers never activated");
     let mut per_link = Vec::new();
-    if ctx.cluster.topology().contended() {
-        debug_assert!(ctx.uplink_streams.iter().all(|&s| s == 0),
-                      "streams still in flight at end of run");
+    if ctx.cluster.topology().uplinks_enabled() {
         for c in 0..ctx.cluster.topology().n_chassis() {
             per_link.push(crate::sim::metrics::LinkReport {
+                tier: "uplink",
                 chassis: c,
                 capacity: ctx.cluster.topology().uplink_bw(c),
                 bytes: ctx.metrics.uplink_bytes[c],
                 peak_streams: ctx.metrics.uplink_peak_streams[c],
                 busy_frac: ctx.metrics.uplink_busy_s[c] / makespan,
+                resched: ctx.metrics.uplink_resched[c],
             });
         }
+    }
+    if let Some(spine) = ctx.cluster.topology().spine_bw() {
+        per_link.push(crate::sim::metrics::LinkReport {
+            tier: "spine",
+            chassis: 0,
+            capacity: spine,
+            bytes: ctx.metrics.spine_bytes,
+            peak_streams: ctx.metrics.spine_peak_streams,
+            busy_frac: ctx.metrics.spine_busy_s / makespan,
+            resched: ctx.metrics.spine_resched,
+        });
     }
 
     let device = ctx.cluster.name();
@@ -965,6 +1321,100 @@ mod tests {
         assert!(r.per_link.iter().all(|l| l.bytes == 0.0
             && l.peak_streams == 0
             && l.busy_frac == 0.0));
+    }
+
+    #[test]
+    fn maxmin_streams_water_fill_the_uplink() {
+        // Same fan-out as the admission test above, but under max-min
+        // sharing: three equal streams each run at C/3 and ALL finish
+        // together at 3x the base price (the admission model instead
+        // produces the 1x/2x/3x staircase).  Total drain time matches
+        // — the models agree on aggregate capacity, not on shape.
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        let mut cfg = SimConfig::new(cluster, LLAMA2_70B);
+        cfg.contention_model = ContentionModel::MaxMin;
+        let mut probe =
+            XferProbe { k: 3, tokens: 1000.0, src: 0, dst: 2, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let bytes = cfg.llm.kv_bytes_per_token() * 1000.0;
+        let base = bytes / 10e9;
+        assert_eq!(probe.done.len(), 3);
+        for &(_, t) in &probe.done {
+            assert!((t - 3.0 * base).abs() < 1e-9 * base,
+                    "max-min stream finished at {t}, want {}", 3.0 * base);
+        }
+        // Streams were re-rated when the pool drained; the uplink rows
+        // record it.
+        assert_eq!(r.per_link.len(), 2);
+        for l in &r.per_link {
+            assert_eq!(l.tier, "uplink");
+            assert_eq!(l.peak_streams, 3);
+            assert!((l.busy_frac - 1.0).abs() < 1e-9, "{}", l.busy_frac);
+            assert!(l.resched > 0, "no rescheduling recorded");
+        }
+    }
+
+    #[test]
+    fn maxmin_single_stream_price_is_bit_identical() {
+        // One stream under max-min contention == the point-to-point
+        // price EXACTLY (the cross-model acceptance pin).
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        let mut cfg = SimConfig::new(cluster, LLAMA2_70B);
+        cfg.contention_model = ContentionModel::MaxMin;
+        let mut probe =
+            XferProbe { k: 1, tokens: 700.0, src: 1, dst: 3, done: vec![] };
+        run(&cfg, &empty_trace(), &mut probe);
+        let want = cfg.llm.kv_bytes_per_token() * 700.0 / 10e9;
+        assert_eq!(probe.done[0].1, want);
+    }
+
+    #[test]
+    fn maxmin_intra_chassis_streams_never_contend() {
+        // Max-min model, both endpoints in one chassis: NVLink stays
+        // point-to-point, every stream at the exact base price.
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        let mut cfg = SimConfig::new(cluster, LLAMA2_70B);
+        cfg.contention_model = ContentionModel::MaxMin;
+        let mut probe =
+            XferProbe { k: 4, tokens: 500.0, src: 0, dst: 1, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let base = cfg.llm.kv_bytes_per_token() * 500.0 / H100.local_conn_bw;
+        for &(_, t) in &probe.done {
+            assert_eq!(t, base);
+        }
+        assert!(r.per_link.iter().all(|l| l.resched == 0));
+    }
+
+    #[test]
+    fn spine_row_reported_and_admission_spine_shares() {
+        // Admission model + spine tier: the spine is one more shared
+        // capacity in the fair-share denominator, and per_link grows a
+        // spine row.
+        let mut cluster = ClusterSpec::homogeneous(H100, 4);
+        cluster.set_network_bw(10e9);
+        cluster.enable_contention(10e9);
+        cluster.enable_spine(5e9);
+        let cfg = SimConfig::new(cluster, LLAMA2_70B);
+        let mut probe =
+            XferProbe { k: 2, tokens: 1000.0, src: 0, dst: 2, done: vec![] };
+        let r = run(&cfg, &empty_trace(), &mut probe);
+        let bytes = cfg.llm.kv_bytes_per_token() * 1000.0;
+        // Stream 0 admitted at min(10, 10, 5/1) = 5 GB/s; stream 1 at
+        // min(10, 10/2, 5/2) = 2.5 GB/s.
+        assert!((probe.done[0].1 - bytes / 5e9).abs() < 1e-12);
+        assert!((probe.done[1].1 - bytes / 2.5e9).abs() < 1e-12);
+        assert_eq!(r.per_link.len(), 3);
+        let spine = r.per_link.last().unwrap();
+        assert_eq!(spine.tier, "spine");
+        assert_eq!(spine.capacity, 5e9);
+        assert_eq!(spine.peak_streams, 2);
+        assert!((spine.bytes - 2.0 * bytes).abs() < 1.0);
     }
 
     #[test]

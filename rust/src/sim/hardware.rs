@@ -202,13 +202,17 @@ pub struct Topology {
     /// Per-chassis shared uplink capacity (bytes/s); None = the legacy
     /// infinitely-parallel link model.
     uplinks: Option<Vec<f64>>,
+    /// Spine-tier capacity (bytes/s): one shared pipe above every
+    /// chassis uplink that ALL inter-chassis transfers cross; None =
+    /// no spine tier (the pre-PR 5 model).
+    spine: Option<f64>,
 }
 
 impl Topology {
     /// Uniform bandwidth on every link.
     pub fn flat(n: usize, bw: f64) -> Topology {
         assert!(bw > 0.0, "link bandwidth must be positive");
-        Topology { bw: vec![vec![bw; n]; n], uplinks: None }
+        Topology { bw: vec![vec![bw; n]; n], uplinks: None, spine: None }
     }
 
     /// Every link runs at the slower endpoint's device interconnect
@@ -223,7 +227,7 @@ impl Topology {
                     .min(instances[b].interconnect_bw());
             }
         }
-        Topology { bw, uplinks: None }
+        Topology { bw, uplinks: None, spine: None }
     }
 
     /// Intra-pair links (instances 2p and 2p+1 share a chassis) keep the
@@ -291,8 +295,14 @@ impl Topology {
         self.uplinks = Some(vec![uplink_bw; self.n_chassis()]);
     }
 
-    /// Is the shared-uplink contention model active?
+    /// Is any shared-capacity tier (per-chassis uplinks or the spine)
+    /// active?  The engine tracks in-flight streams when this is true.
     pub fn contended(&self) -> bool {
+        self.uplinks.is_some() || self.spine.is_some()
+    }
+
+    /// Are the per-chassis uplinks modeled?
+    pub fn uplinks_enabled(&self) -> bool {
         self.uplinks.is_some()
     }
 
@@ -300,6 +310,12 @@ impl Topology {
     /// is disabled.
     pub fn uplink_bw(&self, chassis: usize) -> f64 {
         self.uplinks.as_ref().expect("contention model disabled")[chassis]
+    }
+
+    /// Every chassis uplink capacity (empty when uplinks are disabled)
+    /// — the resource vector the max-min rate solver water-fills.
+    pub fn uplink_caps(&self) -> &[f64] {
+        self.uplinks.as_deref().unwrap_or(&[])
     }
 
     /// The chassis uplinks an a→b transfer crosses: none when the
@@ -313,6 +329,164 @@ impl Topology {
             Some((ca, cb))
         }
     }
+
+    // ---- spine tier ------------------------------------------------------
+
+    /// Add a spine tier: one shared capacity (bytes/s) above every
+    /// chassis uplink.  Every inter-chassis transfer crosses it, so the
+    /// whole cluster's cross-chassis traffic shares `spine_bw` — the
+    /// tier that saturates first in scale-out sweeps even when each
+    /// chassis uplink individually keeps up.
+    pub fn enable_spine(&mut self, spine_bw: f64) {
+        assert!(spine_bw > 0.0, "spine bandwidth must be positive");
+        self.spine = Some(spine_bw);
+    }
+
+    /// Spine-tier capacity, bytes/s (None: no spine tier).
+    pub fn spine_bw(&self) -> Option<f64> {
+        self.spine
+    }
+
+    /// Does an a→b transfer cross the spine tier?  Only inter-chassis
+    /// transfers do (and only when a spine is modeled).
+    pub fn crosses_spine(&self, a: usize, b: usize) -> bool {
+        self.spine.is_some() && Self::chassis_of(a) != Self::chassis_of(b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Max-min bandwidth sharing (PR 5 rate solver)
+// ---------------------------------------------------------------------------
+
+/// One in-flight stream, as seen by the max-min rate solver.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowSpec {
+    /// Point-to-point price of the stream's own link, bytes/s — the
+    /// stream's individual rate cap.
+    pub cap: f64,
+    /// The chassis uplinks the stream crosses (src side, dst side), if
+    /// any.  Indexes into the solver's `uplink_bw` slice.
+    pub uplinks: Option<(usize, usize)>,
+    /// Whether the stream crosses the spine tier.
+    pub spine: bool,
+}
+
+/// Slack under which a shared resource counts as saturated during
+/// water-filling: 1 byte/s is far below any realistic capacity
+/// (>= ~1e6 B/s) and far above float cancellation error at TB/s scale.
+const SATURATION_EPS: f64 = 1.0;
+
+/// Water-fill max-min rates for concurrent streams over the shared
+/// chassis uplinks and the optional spine tier.
+///
+/// Progressive filling: every unfrozen stream's rate rises at the same
+/// speed; a stream freezes when it reaches its own link cap (set to the
+/// cap EXACTLY, bit-for-bit) or when one of its shared resources
+/// saturates (which freezes every stream on that resource).  The
+/// properties `tests/integration_contention.rs` pins:
+///
+/// * conservation — rates on any resource sum to at most its capacity,
+///   reaching it (to float precision) when demand saturates it;
+/// * a stream never exceeds its point-to-point cap, and a single
+///   stream's rate is `min(cap, crossed capacities)` exactly — the
+///   admission model's single-stream price, so the two contention
+///   models price uncontended transfers bit-identically;
+/// * per-stream rates are monotonically non-increasing in the number
+///   of concurrent streams sharing the SAME bottleneck set (adding a
+///   stream on one link can legitimately raise a third stream's share
+///   on another — global per-stream monotonicity does not hold for
+///   any correct multi-resource max-min).
+pub fn maxmin_rates(flows: &[FlowSpec], uplink_bw: &[f64],
+                    spine_bw: Option<f64>) -> Vec<f64> {
+    let n = flows.len();
+    let mut rate = vec![0.0; n];
+    let mut frozen = vec![false; n];
+    let mut up_rem = uplink_bw.to_vec();
+    let mut spine_rem = spine_bw;
+    // Each round freezes at least one stream (its cap binds) or one
+    // resource (freezing every stream on it); the loop bound is
+    // float-noise insurance, not the termination argument.
+    for _ in 0..(n + up_rem.len() + 2) {
+        // Unfrozen stream counts per resource.
+        let mut up_active = vec![0usize; up_rem.len()];
+        let mut spine_active = 0usize;
+        let mut any = false;
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            any = true;
+            if let Some((a, b)) = f.uplinks {
+                up_active[a] += 1;
+                if b != a {
+                    up_active[b] += 1;
+                }
+            }
+            if f.spine {
+                spine_active += 1;
+            }
+        }
+        if !any {
+            break;
+        }
+        // The equal rate increment every unfrozen stream can take:
+        // the tightest cap residue or per-resource equal share.
+        let mut delta = f64::INFINITY;
+        for (i, f) in flows.iter().enumerate() {
+            if !frozen[i] {
+                delta = delta.min(f.cap - rate[i]);
+            }
+        }
+        for (c, &rem) in up_rem.iter().enumerate() {
+            if up_active[c] > 0 {
+                delta = delta.min(rem / up_active[c] as f64);
+            }
+        }
+        if let Some(rem) = spine_rem {
+            if spine_active > 0 {
+                delta = delta.min(rem / spine_active as f64);
+            }
+        }
+        let delta = delta.max(0.0);
+        // Grant the increment (delta is the global minimum, so every
+        // unfrozen stream consumes exactly delta from its resources);
+        // cap-bound streams land on their cap exactly.
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            if f.cap - rate[i] <= delta {
+                rate[i] = f.cap;
+                frozen[i] = true;
+            } else {
+                rate[i] += delta;
+            }
+            if let Some((a, b)) = f.uplinks {
+                up_rem[a] -= delta;
+                if b != a {
+                    up_rem[b] -= delta;
+                }
+            }
+            if f.spine {
+                spine_rem = spine_rem.map(|r| r - delta);
+            }
+        }
+        // Freeze every stream on a saturated resource.
+        for (i, f) in flows.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            let up_sat = f.uplinks.is_some_and(|(a, b)| {
+                up_rem[a] <= SATURATION_EPS || up_rem[b] <= SATURATION_EPS
+            });
+            let spine_sat =
+                f.spine && spine_rem.is_some_and(|r| r <= SATURATION_EPS);
+            if up_sat || spine_sat {
+                frozen[i] = true;
+            }
+        }
+    }
+    rate
 }
 
 // ---------------------------------------------------------------------------
@@ -466,18 +640,26 @@ impl ClusterSpec {
 
     /// Replace the topology with an inter-node network model (intra-pair
     /// links keep the local NVLink/HCCS rule).  A previously enabled
-    /// contention model survives the swap, so knob order does not
-    /// matter.
+    /// contention model (uplinks and/or spine) survives the swap, so
+    /// knob order does not matter.
     pub fn set_network_bw(&mut self, network_bw: f64) {
         let uplinks = self.topology.uplinks.clone();
+        let spine = self.topology.spine;
         self.topology = Topology::with_network(&self.instances, network_bw);
         self.topology.uplinks = uplinks;
+        self.topology.spine = spine;
     }
 
     /// Enable shared-uplink contention: one finite-capacity uplink per
     /// chassis (see [`Topology::enable_contention`]).
     pub fn enable_contention(&mut self, uplink_bw: f64) {
         self.topology.enable_contention(uplink_bw);
+    }
+
+    /// Add a spine tier above the chassis uplinks (see
+    /// [`Topology::enable_spine`]).
+    pub fn enable_spine(&mut self, spine_bw: f64) {
+        self.topology.enable_spine(spine_bw);
     }
 
     /// Override one link of the topology (symmetric).
@@ -669,6 +851,86 @@ mod tests {
         odd.enable_contention(25e9);
         assert_eq!(odd.topology().n_chassis(), 3);
         assert_eq!(odd.topology().uplink_bw(2), 25e9);
+    }
+
+    #[test]
+    fn spine_tier_defaults_off_and_survives_network_swap() {
+        let mut c = ClusterSpec::homogeneous(H100, 4);
+        assert_eq!(c.topology().spine_bw(), None);
+        assert!(!c.topology().crosses_spine(0, 3));
+        c.enable_spine(20e9);
+        c.set_network_bw(100e9);
+        assert_eq!(c.topology().spine_bw(), Some(20e9));
+        // Spine alone activates stream tracking, but not the uplinks.
+        assert!(c.topology().contended());
+        assert!(!c.topology().uplinks_enabled());
+        assert!(c.topology().uplink_caps().is_empty());
+        // Only inter-chassis transfers cross the spine.
+        assert!(!c.topology().crosses_spine(0, 1));
+        assert!(!c.topology().crosses_spine(2, 3));
+        assert!(c.topology().crosses_spine(1, 2));
+        assert!(c.topology().crosses_spine(3, 0));
+        // Spine composes with per-chassis uplinks.
+        c.enable_contention(50e9);
+        assert!(c.topology().uplinks_enabled());
+        assert_eq!(c.topology().uplink_caps(), &[50e9, 50e9][..]);
+        assert_eq!(c.topology().spine_bw(), Some(20e9));
+    }
+
+    #[test]
+    fn maxmin_single_stream_price_is_exact() {
+        // cap below the uplinks: the link itself binds, rate == cap
+        // bit-for-bit (the admission model's single-stream price).
+        let f = FlowSpec { cap: 10e9, uplinks: Some((0, 1)), spine: true };
+        let r = maxmin_rates(&[f], &[25e9, 25e9], Some(40e9));
+        assert_eq!(r, vec![10e9]);
+        // Uplink binds: rate == the uplink capacity.
+        let g = FlowSpec { cap: 100e9, uplinks: Some((0, 1)), spine: false };
+        let r = maxmin_rates(&[g], &[25e9, 25e9], None);
+        assert_eq!(r, vec![25e9]);
+        // Spine binds.
+        let h = FlowSpec { cap: 100e9, uplinks: None, spine: true };
+        let r = maxmin_rates(&[h], &[], Some(8e9));
+        assert_eq!(r, vec![8e9]);
+        // Nothing shared: rate == cap exactly.
+        let u = FlowSpec { cap: 42e9, uplinks: None, spine: false };
+        assert_eq!(maxmin_rates(&[u], &[], None), vec![42e9]);
+    }
+
+    #[test]
+    fn maxmin_fair_shares_and_conserves_capacity() {
+        // Three identical streams on one uplink pair: C/3 each, sum
+        // exactly C (to float precision).
+        let f = FlowSpec { cap: 100e9, uplinks: Some((0, 1)), spine: false };
+        let r = maxmin_rates(&[f; 3], &[30e9, 30e9], None);
+        for &x in &r {
+            assert!((x - 10e9).abs() < 1.0, "{x}");
+        }
+        let sum: f64 = r.iter().sum();
+        assert!((sum - 30e9).abs() < 10.0, "sum {sum}");
+    }
+
+    #[test]
+    fn maxmin_water_fills_past_capped_streams() {
+        // One stream capped well below the fair share releases its
+        // unused share to the other: cap 2 + (C - 2) = C conserved.
+        let capped = FlowSpec { cap: 2e9, uplinks: Some((0, 1)), spine: false };
+        let wide = FlowSpec { cap: 100e9, uplinks: Some((0, 1)), spine: false };
+        let r = maxmin_rates(&[capped, wide], &[10e9, 10e9], None);
+        assert_eq!(r[0], 2e9);
+        assert!((r[1] - 8e9).abs() < 10.0, "{}", r[1]);
+    }
+
+    #[test]
+    fn maxmin_spine_binds_across_chassis() {
+        // Two streams on DIFFERENT uplink pairs share only the spine:
+        // each uplink could carry 10, but the 8 GB/s spine splits 4/4.
+        let a = FlowSpec { cap: 100e9, uplinks: Some((0, 1)), spine: true };
+        let b = FlowSpec { cap: 100e9, uplinks: Some((2, 3)), spine: true };
+        let r = maxmin_rates(&[a, b], &[10e9; 4], Some(8e9));
+        for &x in &r {
+            assert!((x - 4e9).abs() < 10.0, "{x}");
+        }
     }
 
     #[test]

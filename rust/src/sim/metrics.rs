@@ -50,6 +50,16 @@ pub struct MetricsCollector {
     pub uplink_bytes: Vec<f64>,
     pub uplink_peak_streams: Vec<usize>,
     pub uplink_busy_s: Vec<f64>,
+    /// Times an in-flight stream on each uplink had its completion
+    /// event cancelled and rescheduled by the max-min rate solver
+    /// (always zero under the admission-time model).
+    pub uplink_resched: Vec<u64>,
+    /// Spine-tier counterparts of the per-uplink stats (scalars: there
+    /// is one spine); all zero when no spine tier is modeled.
+    pub spine_bytes: f64,
+    pub spine_peak_streams: usize,
+    pub spine_busy_s: f64,
+    pub spine_resched: u64,
 }
 
 impl MetricsCollector {
@@ -77,31 +87,40 @@ impl MetricsCollector {
     }
 }
 
-/// Per-uplink slice of a run (shared-uplink contention breakdown; one
-/// entry per chassis, only populated when contention is enabled).
+/// Per-shared-link slice of a run (contention breakdown): one entry
+/// per chassis uplink, plus one `tier = "spine"` entry when the spine
+/// tier is modeled.  Empty when contention is disabled.
 #[derive(Clone, Debug)]
 pub struct LinkReport {
-    /// Chassis index (instances 2c, 2c+1 share uplink `c`).
+    /// `"uplink"` or `"spine"`.
+    pub tier: &'static str,
+    /// Chassis index (instances 2c, 2c+1 share uplink `c`); 0 for the
+    /// spine row (there is one spine).
     pub chassis: usize,
-    /// Uplink capacity, bytes/s.
+    /// Link capacity, bytes/s.
     pub capacity: f64,
-    /// Total bytes that crossed this uplink.
+    /// Total bytes that crossed this link.
     pub bytes: f64,
-    /// Peak number of concurrent streams sharing the uplink.
+    /// Peak number of concurrent streams sharing the link.
     pub peak_streams: usize,
     /// Fraction of the makespan with at least one in-flight stream
-    /// (uplink occupancy — queueing shows up as occupancy near 1).
+    /// (occupancy — queueing shows up as occupancy near 1).
     pub busy_frac: f64,
+    /// In-flight completion events cancelled + rescheduled on this
+    /// link by the max-min rate solver (0 under the admission model).
+    pub resched: u64,
 }
 
 impl LinkReport {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
+            ("tier", Json::str(self.tier)),
             ("chassis", Json::num(self.chassis as f64)),
             ("capacity_gbs", Json::num(self.capacity / 1e9)),
             ("gb", Json::num(self.bytes / 1e9)),
             ("peak_streams", Json::num(self.peak_streams as f64)),
             ("busy_frac", Json::num(self.busy_frac)),
+            ("rescheds", Json::num(self.resched as f64)),
         ])
     }
 }

@@ -13,9 +13,11 @@ pub mod metrics;
 pub mod perfmodel;
 pub mod request;
 
-pub use engine::{run, Scheduler, SimConfig, SimCtx, Work, XferKind};
-pub use hardware::{known_device_names, ClusterSpec, DeviceSpec, InstanceSpec,
-                   Topology, ALL_DEVICES, ASCEND_910B2, A100, H100, MI300X};
+pub use engine::{run, ContentionModel, Scheduler, SimConfig, SimCtx, Work,
+                 XferKind};
+pub use hardware::{known_device_names, maxmin_rates, ClusterSpec, DeviceSpec,
+                   FlowSpec, InstanceSpec, Topology, ALL_DEVICES,
+                   ASCEND_910B2, A100, H100, MI300X};
 pub use instance::{Role, SimInstance};
 pub use llm::{LlmSpec, LLAMA2_70B};
 pub use metrics::{DeviceClassReport, LinkReport, MetricsCollector, RunReport};

@@ -1,9 +1,11 @@
 //! Golden-run regression harness: pins a line-per-metric JSON slice of
-//! the `RunReport` (JCT/TTFT/TPOT, prefix hit rate, per-device
-//! breakdown) for one seeded chat-workload run of EVERY scheduler on
-//! `h100x4` and `mixed:h100x2+910b2x2`, so refactors that perturb event
-//! ordering or float arithmetic show up as reviewable golden diffs
-//! instead of silent drift.
+//! the `RunReport` (JCT/TTFT/TPOT, prefix hit rate, per-device and
+//! per-link breakdowns) for one seeded chat-workload run of EVERY
+//! scheduler on `h100x4` and `mixed:h100x2+910b2x2` — plus a second
+//! set under the opt-in max-min contention model (contended uplinks +
+//! spine tier) — so refactors that perturb event ordering or float
+//! arithmetic show up as reviewable golden diffs instead of silent
+//! drift.
 //!
 //! Bless protocol (insta-style):
 //! * missing golden file  -> the test writes it and reports what to
@@ -18,7 +20,7 @@ use std::path::PathBuf;
 
 use accellm::builder::SimBuilder;
 use accellm::registry::{SchedSpec, SchedulerRegistry};
-use accellm::sim::RunReport;
+use accellm::sim::{ContentionModel, RunReport};
 use accellm::util::json::Json;
 use accellm::workload::{Trace, CHAT};
 
@@ -69,6 +71,14 @@ fn pin(r: &RunReport) -> String {
     ];
     for d in &r.per_device {
         lines.push((format!("per_device.{}", d.device), d.to_json()));
+    }
+    for l in &r.per_link {
+        let key = if l.tier == "spine" {
+            "per_link.spine".to_string()
+        } else {
+            format!("per_link.uplink{}", l.chassis)
+        };
+        lines.push((key, l.to_json()));
     }
     let mut out = String::from("{\n");
     for (i, (k, v)) in lines.iter().enumerate() {
@@ -136,6 +146,67 @@ fn golden_runreports_are_pinned() {
     if !blessed.is_empty() {
         eprintln!("blessed {} new golden file(s) — review and commit:",
                   blessed.len());
+        for f in &blessed {
+            eprintln!("  {f}");
+        }
+    }
+}
+
+/// The opt-in max-min model gets its own golden set: the contended
+/// mixed reference cluster (5 GB/s network + uplinks, 10 GB/s spine)
+/// under progress-based sharing, every scheduler, `__maxmin` file
+/// suffix.  The admission-model goldens above stay untouched — the
+/// default model must keep reproducing them bit-for-bit.
+#[test]
+fn golden_maxmin_runreports_are_pinned() {
+    let dir = golden_dir();
+    fs::create_dir_all(&dir).expect("create tests/golden");
+    let mut blessed = Vec::new();
+    let spec = "mixed:h100x2+910b2x2";
+    let trace = Trace::generate(CHAT, RATE, DUR, SEED);
+    for sched in scheds() {
+        let cell = || {
+            SimBuilder::parse_cluster(spec)
+                .expect("valid cluster spec")
+                .network_gbs(5.0)
+                .contention(5.0)
+                .spine(10.0)
+                .contention_model(ContentionModel::MaxMin)
+                .trace(trace.clone())
+                .scheduler(SchedSpec::parse(sched).unwrap())
+                .run()
+        };
+        let r1 = cell();
+        let r2 = cell();
+        let doc = pin(&r1);
+        assert_eq!(doc, pin(&r2),
+                   "{sched} maxmin on {spec}: nondeterministic replay");
+        assert_eq!(r1.completed, trace.len(),
+                   "{sched} maxmin on {spec}: dropped requests");
+        // Contended cluster: uplink + spine rows must be pinned too.
+        assert_eq!(r1.per_link.len(), 3, "{sched}: 2 uplinks + spine");
+        let file = dir.join(format!(
+            "{}__{}__maxmin.json",
+            sched,
+            spec.replace(':', "_").replace('+', "_")
+        ));
+        if file.exists() {
+            let want = fs::read_to_string(&file).expect("read golden file");
+            assert_eq!(
+                want, doc,
+                "max-min golden drift for {sched} on {spec} (file {}).\n\
+                 If this change is intentional: delete the file, rerun \
+                 `cargo test`, review the regenerated diff and commit it.",
+                file.display()
+            );
+        } else {
+            fs::write(&file, &doc).expect("write golden file");
+            blessed.push(file.display().to_string());
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!("blessed {} new max-min golden file(s) — review and \
+                   commit:", blessed.len());
         for f in &blessed {
             eprintln!("  {f}");
         }

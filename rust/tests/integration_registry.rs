@@ -70,13 +70,17 @@ fn all_aliases_resolve_to_the_same_descriptor() {
 #[test]
 fn default_param_specs_match_bare_names_bit_for_bit() {
     let explicit = [
-        ("accellm", "accellm:max_batch=256,flip_slack_ms=15"),
-        ("accellm-blind", "accellm-blind:max_batch=256,flip_slack_ms=15"),
-        ("splitwise", "splitwise:max_batch=256"),
+        ("accellm",
+         "accellm:max_batch=256,flip_slack_ms=15,max_prefill_batch=8,\
+          route_load_factor=1.25"),
+        ("accellm-blind",
+         "accellm-blind:max_batch=256,flip_slack_ms=15,max_prefill_batch=8"),
+        ("splitwise",
+         "splitwise:max_batch=256,max_prefill_batch=4,prefill_frac=0.25"),
         ("vllm", "vllm:max_batch=256"),
         ("accellm-prefix",
-         "accellm-prefix:max_batch=256,flip_slack_ms=15,vnodes=64,\
-          load_factor=1.5,cache_chunks=2048"),
+         "accellm-prefix:max_batch=256,flip_slack_ms=15,\
+          max_prefill_batch=8,vnodes=64,load_factor=1.5,cache_chunks=2048"),
     ];
     // Every registered scheduler must appear in the explicit list —
     // adding a descriptor without extending the pin is an error.
@@ -146,6 +150,28 @@ fn parameterized_specs_change_behavior() {
     assert!(starved.prefix_evictions > 0, "no evictions at 64 chunks");
     let roomy = cell("accellm-prefix", &doc);
     assert_eq!(roomy.prefix_evictions, 0, "default budget must not evict");
+}
+
+/// The PR 5 parameter promotions change behavior where they should: a
+/// larger splitwise prefill pool drains the 910B2 prompt queue faster
+/// in the paper's own blow-up regime (Figure 12b).
+#[test]
+fn splitwise_prefill_frac_relieves_the_prompt_queue() {
+    let cluster = ClusterSpec::parse("910b2x8").unwrap();
+    let trace = Trace::poisson(MIXED, 12.0, 40.0, 13);
+    let cell = |text: &str| {
+        SimBuilder::on(cluster.clone())
+            .trace(trace.clone())
+            .scheduler(SchedSpec::parse(text).unwrap())
+            .run()
+    };
+    let dflt = cell("splitwise"); // pool = 2 of 8
+    let wide = cell("splitwise:prefill_frac=0.5"); // pool = 4 of 8
+    assert_eq!(dflt.completed, trace.len());
+    assert_eq!(wide.completed, trace.len());
+    assert!(wide.ttft_mean < dflt.ttft_mean,
+            "4-machine pool {} !< 2-machine pool {}",
+            wide.ttft_mean, dflt.ttft_mean);
 }
 
 /// The README parameter table is the generated one — docs cannot rot.
