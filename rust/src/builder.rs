@@ -23,7 +23,8 @@
 
 use crate::registry::{SchedSpec, SchedulerRegistry};
 use crate::sim::{run, ClusterSpec, ContentionModel, DeviceSpec, LlmSpec,
-                 RunReport, Scheduler, SimConfig, LLAMA2_70B};
+                 RunReport, Scheduler, SimConfig, TelemetryConfig,
+                 LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec};
 
 /// Builder-style simulation run: cluster + topology knobs + trace +
@@ -35,6 +36,7 @@ pub struct SimBuilder {
     interconnect_bw: Option<f64>,
     record_timeline: bool,
     contention_model: ContentionModel,
+    telemetry: TelemetryConfig,
     trace: Option<Trace>,
     spec: Option<SchedSpec>,
 }
@@ -47,6 +49,7 @@ impl SimBuilder {
             interconnect_bw: None,
             record_timeline: false,
             contention_model: ContentionModel::Admission,
+            telemetry: TelemetryConfig::off(),
             trace: None,
             spec: None,
         }
@@ -131,6 +134,15 @@ impl SimBuilder {
         self
     }
 
+    /// Run telemetry: per-request latency spans, time-series fleet
+    /// probes, and Chrome-trace events.  `TelemetryConfig::off()` (the
+    /// default) keeps the engine on the zero-overhead path and every
+    /// golden byte-identical.
+    pub fn telemetry(mut self, cfg: TelemetryConfig) -> SimBuilder {
+        self.telemetry = cfg;
+        self
+    }
+
     pub fn cluster(&self) -> &ClusterSpec {
         &self.cluster
     }
@@ -141,6 +153,7 @@ impl SimBuilder {
         cfg.interconnect_bw = self.interconnect_bw;
         cfg.record_timeline = self.record_timeline;
         cfg.contention_model = self.contention_model;
+        cfg.telemetry = self.telemetry;
         cfg
     }
 
@@ -217,7 +230,8 @@ mod tests {
             .spine(8.0)
             .contention_model(ContentionModel::MaxMin)
             .interconnect_bw(Some(3e9))
-            .record_timeline(true);
+            .record_timeline(true)
+            .telemetry(TelemetryConfig::full(0.5));
         assert!(b.cluster().topology().contended());
         assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
         assert_eq!(b.cluster().topology().spine_bw(), Some(8e9));
@@ -225,9 +239,13 @@ mod tests {
         assert_eq!(cfg.interconnect_bw, Some(3e9));
         assert!(cfg.record_timeline);
         assert_eq!(cfg.contention_model, ContentionModel::MaxMin);
-        // The default stays the admission model (golden stability).
+        assert_eq!(cfg.telemetry, TelemetryConfig::full(0.5));
+        // The default stays the admission model with telemetry off
+        // (golden stability).
         let d = SimBuilder::parse_cluster("h100x4").unwrap().sim_config();
         assert_eq!(d.contention_model, ContentionModel::Admission);
+        assert_eq!(d.telemetry, TelemetryConfig::off());
+        assert!(!d.telemetry.enabled());
     }
 
     #[test]

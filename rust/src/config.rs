@@ -32,6 +32,12 @@
 //! `"contention_model"` picks how concurrent streams share capacity:
 //! `"admission"` (default, fixed fair share at admission) or
 //! `"maxmin"` (progress-based water-filling with event rescheduling).
+//!
+//! Telemetry keys: `"telemetry": true` turns on per-request spans and
+//! fleet probes (1 s interval), `"probe_interval"` sets the probe
+//! period in seconds (implies telemetry), `"trace_out"` /
+//! `"probes_out"` write a Chrome-trace JSON / probes CSV after the run
+//! (each implies the telemetry layers it needs).
 
 use std::path::Path;
 
@@ -39,7 +45,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::registry::SchedSpec;
 use crate::sim::{ClusterSpec, ContentionModel, DeviceSpec, SimConfig,
-                 LLAMA2_70B};
+                 TelemetryConfig, LLAMA2_70B};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
@@ -59,6 +65,12 @@ pub struct Experiment {
     pub interconnect_bw: Option<f64>,
     /// Bandwidth-sharing model for concurrent streams.
     pub contention_model: ContentionModel,
+    /// Run telemetry (spans / probes / trace events); off by default.
+    pub telemetry: TelemetryConfig,
+    /// Write a Chrome-trace JSON here after the run.
+    pub trace_out: Option<String>,
+    /// Write the probes CSV here after the run.
+    pub probes_out: Option<String>,
 }
 
 impl Default for Experiment {
@@ -73,6 +85,9 @@ impl Default for Experiment {
             seed: 7,
             interconnect_bw: None,
             contention_model: ContentionModel::Admission,
+            telemetry: TelemetryConfig::off(),
+            trace_out: None,
+            probes_out: None,
         }
     }
 }
@@ -207,6 +222,40 @@ impl Experiment {
             }
             exp.interconnect_bw = Some(v * 1e9);
         }
+        let telemetry_on =
+            j.get("telemetry").and_then(|x| x.as_bool()).unwrap_or(false);
+        let probe_interval = j.get("probe_interval").and_then(|x| x.as_f64());
+        if let Some(v) = probe_interval {
+            if v <= 0.0 {
+                return Err(anyhow!(
+                    "config: probe_interval must be positive"
+                ));
+            }
+        }
+        exp.trace_out = j
+            .get("trace_out")
+            .and_then(|x| x.as_str())
+            .map(|s| s.to_string());
+        exp.probes_out = j
+            .get("probes_out")
+            .and_then(|x| x.as_str())
+            .map(|s| s.to_string());
+        exp.telemetry = TelemetryConfig {
+            spans: telemetry_on
+                || probe_interval.is_some()
+                || exp.trace_out.is_some()
+                || exp.probes_out.is_some(),
+            probe_interval: if telemetry_on
+                || probe_interval.is_some()
+                || exp.trace_out.is_some()
+                || exp.probes_out.is_some()
+            {
+                Some(probe_interval.unwrap_or(1.0))
+            } else {
+                None
+            },
+            trace: exp.trace_out.is_some(),
+        };
         if exp.rates.is_empty() || exp.duration <= 0.0 {
             return Err(anyhow!("config: rates/duration invalid"));
         }
@@ -218,6 +267,7 @@ impl Experiment {
         let mut cfg = SimConfig::new(self.cluster.clone(), LLAMA2_70B);
         cfg.interconnect_bw = self.interconnect_bw;
         cfg.contention_model = self.contention_model;
+        cfg.telemetry = self.telemetry;
         cfg
     }
 }
@@ -424,6 +474,45 @@ mod tests {
         assert!(err.contains("bogus"), "{err}");
         assert!(Experiment::from_json_text(r#"{"scheduler":"nope"}"#)
             .is_err());
+    }
+
+    #[test]
+    fn parses_telemetry_knobs() {
+        // Default: everything off, zero-overhead path.
+        let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert_eq!(d.telemetry, TelemetryConfig::off());
+        assert!(d.trace_out.is_none() && d.probes_out.is_none());
+        // telemetry: true turns on spans + 1 s probes.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","telemetry":true}"#,
+        )
+        .unwrap();
+        assert!(e.telemetry.spans);
+        assert_eq!(e.telemetry.probe_interval, Some(1.0));
+        assert!(!e.telemetry.trace);
+        // probe_interval implies telemetry and sets the period.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","probe_interval":0.25}"#,
+        )
+        .unwrap();
+        assert_eq!(e.telemetry.probe_interval, Some(0.25));
+        assert!(e.telemetry.spans);
+        // trace_out implies spans + trace; probes_out implies probes.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","trace_out":"t.json",
+                "probes_out":"p.csv"}"#,
+        )
+        .unwrap();
+        assert!(e.telemetry.trace && e.telemetry.spans);
+        assert_eq!(e.telemetry.probe_interval, Some(1.0));
+        assert_eq!(e.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(e.probes_out.as_deref(), Some("p.csv"));
+        assert_eq!(e.sim_config().telemetry, e.telemetry);
+        // Non-positive probe intervals are rejected.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","probe_interval":0}"#
+        )
+        .is_err());
     }
 
     #[test]

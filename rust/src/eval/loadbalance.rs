@@ -1,0 +1,150 @@
+//! Load-imbalance-over-time evaluation (`figures --fig load_balance`).
+//!
+//! The paper's causal claim is that redundancy wins *because* it
+//! balances load (Section 4.1): a request can be admitted wherever a
+//! replica lives, so no instance accumulates a deep private queue.
+//! End-of-run aggregates cannot show that — two schedulers with equal
+//! mean JCT can have wildly different instantaneous load spreads.
+//! This figure samples per-instance primary-request load at a fixed
+//! interval (the run-telemetry probe layer) on the contended mixed
+//! fleet and emits one row per (scheduler, sample): max load, mean
+//! load, and the coefficient of variation across instances.  The
+//! companion test pins the ordering the paper predicts: the
+//! topology-aware `accellm` holds a lower time-averaged load CV than
+//! the topology-blind `accellm-blind` comparator.
+
+use crate::builder::SimBuilder;
+use crate::eval::contention::CONTENTION_CLUSTER;
+use crate::eval::figures::FigureOutput;
+use crate::registry::{SchedSpec, SchedulerRegistry};
+use crate::sim::{sample_stats, RunReport, TelemetryConfig};
+use crate::workload::{Trace, MIXED};
+
+/// Fixed seed/duration, matching the figure harness conventions.
+const SEED: u64 = 7;
+const DUR: f64 = 40.0;
+
+/// Same load as the contention sweep: heavy enough that routing
+/// quality shows up as queue-depth divergence.
+const RATE: f64 = 14.0;
+
+/// Starved network (GB/s) — the regime where blind routing piles load
+/// onto the deep-HBM pairs (the contention-sweep low end).
+pub const LOAD_BALANCE_GBS: f64 = 2.0;
+
+/// Probe sampling period in seconds.
+pub const PROBE_INTERVAL: f64 = 1.0;
+
+/// One scheduler on the contended mixed cluster with spans + probes
+/// recording on (no Chrome-trace events — the figure only needs the
+/// time series).
+pub fn run_load_balance(sched: &str) -> RunReport {
+    SimBuilder::parse_cluster(CONTENTION_CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(LOAD_BALANCE_GBS)
+        .contention(LOAD_BALANCE_GBS)
+        .telemetry(TelemetryConfig {
+            spans: true,
+            probe_interval: Some(PROBE_INTERVAL),
+            trace: false,
+        })
+        .trace(Trace::poisson(MIXED, RATE, DUR, SEED))
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
+        .run()
+}
+
+/// Imbalance-over-time for every sweep scheduler: one row per probe
+/// sample.
+pub fn load_balance() -> FigureOutput {
+    let mut rows = Vec::new();
+    for sched in SchedulerRegistry::sweep() {
+        let r = run_load_balance(sched);
+        for s in &r.probes {
+            let (load_max, load_mean, load_cv) = sample_stats(s);
+            let busy = s.instances.iter().filter(|i| i.busy).count();
+            rows.push(format!(
+                "{},{:.0},{},{:.1},{:.0},{:.3},{:.3},{},{}",
+                CONTENTION_CLUSTER.trim_start_matches("mixed:"),
+                LOAD_BALANCE_GBS,
+                sched,
+                s.t,
+                load_max,
+                load_mean,
+                load_cv,
+                busy,
+                s.pending
+            ));
+        }
+    }
+    FigureOutput {
+        id: "load_balance".into(),
+        title: "Per-instance load imbalance over time (primary requests \
+                resident, 1 s probes): every sweep scheduler on the \
+                starved contended mixed h100x4+910b2x4 fleet"
+            .into(),
+        header: "cluster,network_gbs,scheduler,t_s,load_max,load_mean,\
+                 load_cv,busy_instances,pending"
+            .into(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Time-averaged load CV over the loaded samples of one scheduler's
+    /// rows — the same statistic `ImbalanceReport::load_cv` aggregates.
+    fn mean_cv(f: &FigureOutput, sched: &str) -> f64 {
+        let needle = format!(",{sched},");
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for row in f.rows.iter().filter(|r| r.contains(&needle)) {
+            let cols: Vec<&str> = row.split(',').collect();
+            let mean: f64 = cols[5].parse().unwrap();
+            if mean > 0.0 {
+                sum += cols[6].parse::<f64>().unwrap();
+                n += 1;
+            }
+        }
+        assert!(n > 0, "no loaded samples for {sched}");
+        sum / n as f64
+    }
+
+    #[test]
+    fn accellm_balances_better_than_blind() {
+        // One figure build serves every assertion (each scheduler is a
+        // full simulation).
+        let f = load_balance();
+        assert!(!f.rows.is_empty());
+        let header_cols = f.header.split(',').count();
+        for row in &f.rows {
+            assert_eq!(row.split(',').count(), header_cols, "{row}");
+        }
+        // The paper's load-balancing claim, time-resolved: redundancy
+        // + topology-aware routing spreads primaries more evenly than
+        // blind free-memory routing on the starved network.
+        let aware = mean_cv(&f, "accellm");
+        let blind = mean_cv(&f, "accellm-blind");
+        assert!(
+            aware < blind,
+            "accellm load CV {aware} !< accellm-blind load CV {blind}"
+        );
+    }
+
+    #[test]
+    fn imbalance_report_matches_probe_rows() {
+        let r = run_load_balance("accellm");
+        let im = r.imbalance.expect("probes enabled");
+        assert!(im.samples > 0);
+        assert!(im.load_max_over_mean >= 1.0 - 1e-9);
+        assert!(im.load_cv >= 0.0);
+        // The report's sample count equals the loaded probe samples.
+        let loaded = r
+            .probes
+            .iter()
+            .filter(|s| sample_stats(s).1 > 0.0)
+            .count();
+        assert_eq!(im.samples, loaded);
+    }
+}

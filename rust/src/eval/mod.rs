@@ -11,6 +11,7 @@ pub mod bench;
 pub mod contention;
 pub mod figures;
 pub mod hetero;
+pub mod loadbalance;
 pub mod prefix;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
@@ -18,4 +19,5 @@ pub use bench::compare_bench;
 pub use contention::{contention, spine_sweep};
 pub use figures::{all_figures, figure_by_id, param_sweep, FigureOutput};
 pub use hetero::hetero;
+pub use loadbalance::load_balance;
 pub use prefix::prefix_locality;

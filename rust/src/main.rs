@@ -11,7 +11,8 @@ use accellm::eval::{all_figures, figure_by_id};
 use accellm::registry::{SchedSpec, SchedulerRegistry};
 #[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
-use accellm::sim::{ClusterSpec, ContentionModel, DeviceSpec, RunReport,
+use accellm::sim::{chrome_trace_json, probes_csv, ClusterSpec,
+                   ContentionModel, DeviceSpec, RunReport, TelemetryConfig,
                    ALL_DEVICES, LLAMA2_70B};
 use accellm::util::json::Json;
 #[cfg(feature = "pjrt")]
@@ -30,6 +31,8 @@ USAGE:
                    [--bw GB/s] [--network-gbs GB/s]
                    [--contention] [--uplink-gbs GB/s] [--spine-gbs GB/s]
                    [--contention-model admission|maxmin] [--json]
+                   [--telemetry] [--probe-interval S]
+                   [--trace-out FILE] [--probes-out FILE]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm bench    [--cluster SPEC] [--rate R] [--duration S]
                    [--out FILE] [--baseline FILE] [--max-regress F]
@@ -63,6 +66,13 @@ both models; `--fig spine_sweep` saturates the spine tier under
 max-min; `--fig param_sweep` sweeps the CHWBL load factor on the mixed
 fleet.  `accellm bench --baseline FILE` fails on >`--max-regress`
 (default 0.2) per-scheduler wall-clock regression.
+`--telemetry` records per-request latency-breakdown spans and
+time-series fleet probes (adds the span_*/load_* columns and the
+breakdown/imbalance JSON objects to the report); `--probe-interval`
+sets the sampling period in seconds (default 1); `--trace-out FILE`
+writes a Chrome-trace JSON (open in chrome://tracing or
+ui.perfetto.dev) and `--probes-out FILE` the probes CSV — each output
+flag implies the telemetry layers it needs.
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
 prefix-locality router.  Unknown flags left unconsumed by a subcommand
@@ -214,6 +224,63 @@ fn parse_contention_model(args: &Args) -> anyhow::Result<ContentionModel> {
     }
 }
 
+/// Telemetry flags shared by both simulate paths: `--telemetry`
+/// (spans + 1 s probes), `--probe-interval S`, `--trace-out FILE`,
+/// `--probes-out FILE`.  Output flags imply the telemetry layers they
+/// need.  Every flag is consulted unconditionally so the
+/// unknown-flag check stays accurate.
+fn parse_telemetry(
+    args: &Args,
+) -> anyhow::Result<(TelemetryConfig, Option<String>, Option<String>)> {
+    let on = args.has("telemetry");
+    let trace_out = args.get("trace-out").map(|s| s.to_string());
+    let probes_out = args.get("probes-out").map(|s| s.to_string());
+    let interval = match args.get("probe-interval") {
+        Some(v) => {
+            let s: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--probe-interval expects seconds")
+            })?;
+            anyhow::ensure!(s > 0.0, "--probe-interval must be positive");
+            Some(s)
+        }
+        None => None,
+    };
+    let cfg = TelemetryConfig {
+        spans: on
+            || interval.is_some()
+            || trace_out.is_some()
+            || probes_out.is_some(),
+        probe_interval: if on
+            || interval.is_some()
+            || trace_out.is_some()
+            || probes_out.is_some()
+        {
+            Some(interval.unwrap_or(1.0))
+        } else {
+            None
+        },
+        trace: trace_out.is_some(),
+    };
+    Ok((cfg, trace_out, probes_out))
+}
+
+/// Write the requested telemetry artifacts for a finished run.
+fn write_telemetry_outputs(
+    report: &RunReport,
+    trace_out: &Option<String>,
+    probes_out: &Option<String>,
+) -> anyhow::Result<()> {
+    if let Some(path) = trace_out {
+        std::fs::write(path, chrome_trace_json(report))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = probes_out {
+        std::fs::write(path, probes_csv(report))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
                                                 f64, f64, u64)> {
     let cluster = parse_cluster(args)?;
@@ -235,18 +302,43 @@ fn print_report(r: &RunReport, json: bool) {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    // Telemetry flags are consulted on both paths; on the config path
+    // the CLI flags override / extend the config-file keys.
+    let (cli_tel, cli_trace_out, cli_probes_out) = parse_telemetry(args)?;
     // Config file runs an entire experiment (possibly a rate sweep).
     if let Some(path) = args.get("config") {
         let exp = accellm::config::Experiment::from_file(Path::new(path))?;
+        let trace_out = cli_trace_out.or_else(|| exp.trace_out.clone());
+        let probes_out = cli_probes_out.or_else(|| exp.probes_out.clone());
+        let telemetry = TelemetryConfig {
+            spans: cli_tel.spans || exp.telemetry.spans,
+            probe_interval: cli_tel
+                .probe_interval
+                .or(exp.telemetry.probe_interval),
+            trace: cli_tel.trace
+                || exp.telemetry.trace
+                || trace_out.is_some(),
+        };
+        if (trace_out.is_some() || probes_out.is_some())
+            && exp.rates.len() > 1
+        {
+            anyhow::bail!(
+                "--trace-out/--probes-out need a single rate (the sweep \
+                 has {} rates; each run would overwrite the file)",
+                exp.rates.len()
+            );
+        }
         println!("{}", RunReport::csv_header());
         for &rate in &exp.rates {
             let report = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
                 .interconnect_bw(exp.interconnect_bw)
                 .contention_model(exp.contention_model)
+                .telemetry(telemetry)
                 .workload(exp.workload, rate, exp.duration, exp.seed)
                 .scheduler(exp.scheduler.clone())
                 .run();
             println!("{}", report.csv_row());
+            write_telemetry_outputs(&report, &trace_out, &probes_out)?;
         }
         return Ok(());
     }
@@ -267,10 +359,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let report = SimBuilder::new(cluster, LLAMA2_70B)
         .interconnect_bw(interconnect_bw)
         .contention_model(model)
+        .telemetry(cli_tel)
         .workload(workload, rate, duration, seed)
         .scheduler(spec)
         .run();
     print_report(&report, args.has("json"));
+    write_telemetry_outputs(&report, &cli_trace_out, &cli_probes_out)?;
     Ok(())
 }
 

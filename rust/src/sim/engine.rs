@@ -29,6 +29,8 @@ use crate::sim::llm::{LlmSpec, LLAMA2_70B};
 use crate::sim::metrics::{DeviceClassReport, MetricsCollector, RunReport};
 use crate::sim::perfmodel::PerfModel;
 use crate::sim::request::{InstId, ReqId, SimRequest};
+use crate::sim::telemetry::{InstProbe, LinkProbe, ProbeSample, Telemetry,
+                            TelemetryConfig, TraceTrack};
 use crate::util::OrdF64;
 use crate::workload::Trace;
 
@@ -56,6 +58,17 @@ pub enum XferKind {
     ReplicaUpdate,
     /// Whole-KV migration (role conversions in baselines).
     Migration,
+}
+
+impl XferKind {
+    /// Short label for trace spans.
+    pub fn name(self) -> &'static str {
+        match self {
+            XferKind::PrefillHandoff => "handoff",
+            XferKind::ReplicaUpdate => "replica",
+            XferKind::Migration => "migration",
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -218,6 +231,9 @@ pub struct SimCtx {
     nic_held: Vec<bool>,
     /// Max-min model: transfers waiting for both endpoint NICs, FIFO.
     nic_waiting: VecDeque<QueuedXfer>,
+    /// Telemetry collector (spans / probes / trace); every hook is a
+    /// no-op under the default all-off config.
+    telemetry: Telemetry,
 }
 
 impl SimCtx {
@@ -272,6 +288,38 @@ impl SimCtx {
             }
         }
         bw
+    }
+
+    /// Bandwidth a src→dst stream would get with NO other traffic in
+    /// flight: the point-to-point link price capped by the full (not
+    /// fair-shared) capacity of every uplink/spine crossed.  This is
+    /// the "wire price" telemetry spans charge as pure transfer time;
+    /// anything slower is attributed to contention.
+    pub fn uncontended_bw(&self, src: InstId, dst: InstId) -> f64 {
+        let mut bw = self.link_bw(src, dst);
+        let topo = self.cluster.topology();
+        if let Some((ca, cb)) = topo.crossed_uplinks(src, dst) {
+            bw = bw.min(topo.uplink_bw(ca)).min(topo.uplink_bw(cb));
+        }
+        if topo.crosses_spine(src, dst) {
+            if let Some(spine) = topo.spine_bw() {
+                bw = bw.min(spine);
+            }
+        }
+        bw
+    }
+
+    /// Which trace track a src→dst transfer renders on: the deepest
+    /// shared tier it crosses.
+    fn xfer_track(&self, src: InstId, dst: InstId) -> TraceTrack {
+        let topo = self.cluster.topology();
+        if topo.crosses_spine(src, dst) {
+            TraceTrack::Spine
+        } else if let Some((ca, _)) = topo.crossed_uplinks(src, dst) {
+            TraceTrack::Uplink(ca)
+        } else {
+            TraceTrack::Interconnect
+        }
     }
 
     /// Concurrent in-flight streams on one chassis uplink (0 when the
@@ -400,6 +448,7 @@ impl SimCtx {
         let bytes = self.kv_bytes(req);
         self.requests[req].primary = Some(inst);
         self.instances[inst].add_primary(bytes);
+        self.instances[inst].primary_reqs += 1;
     }
 
     /// Move the primary KV copy (accounting only — transfer time is the
@@ -408,9 +457,12 @@ impl SimCtx {
         let bytes = self.kv_bytes(req);
         if let Some(from) = self.requests[req].primary {
             self.instances[from].remove_primary(bytes);
+            self.instances[from].primary_reqs =
+                self.instances[from].primary_reqs.saturating_sub(1);
         }
         self.requests[req].primary = Some(to);
         self.instances[to].add_primary(bytes);
+        self.instances[to].primary_reqs += 1;
     }
 
     /// Record a redundant replica of `req` on `inst` (AcceLLM 4.1.2).
@@ -446,6 +498,9 @@ impl SimCtx {
         r.primary = Some(inst);
         self.instances[old].primary_to_replica(bytes);
         self.instances[inst].replica_to_primary(bytes);
+        self.instances[old].primary_reqs =
+            self.instances[old].primary_reqs.saturating_sub(1);
+        self.instances[inst].primary_reqs += 1;
     }
 
     /// Free every copy of a request's KV (engine calls this on EOS).
@@ -453,6 +508,8 @@ impl SimCtx {
         let bytes = self.kv_bytes(req);
         if let Some(p) = self.requests[req].primary.take() {
             self.instances[p].remove_primary(bytes);
+            self.instances[p].primary_reqs =
+                self.instances[p].primary_reqs.saturating_sub(1);
         }
         let reps = std::mem::take(&mut self.requests[req].replicas);
         for r in reps {
@@ -478,6 +535,15 @@ impl SimCtx {
             debug_assert!(self.requests[r].prefill_start.is_none());
             self.requests[r].prefill_start = Some(self.now);
         }
+        if self.telemetry.cfg.spans {
+            for &r in &reqs {
+                self.telemetry.on_prefill_start(r, self.now);
+            }
+        }
+        if self.telemetry.cfg.trace {
+            self.telemetry.work_start(inst, self.now,
+                                      format!("prefill x{}", reqs.len()));
+        }
         let i = &mut self.instances[inst];
         i.running = Some(Work::Prefill { reqs });
         i.busy_acc += dur;
@@ -501,6 +567,22 @@ impl SimCtx {
             self.requests[r].prefill_start = Some(self.now);
         }
         let dur = self.models[inst].mixed_step_time(batch.len(), kv, &plens);
+        if self.telemetry.cfg.spans {
+            for &r in &batch {
+                self.telemetry.on_decode_start(r, self.now);
+            }
+            for &r in &prefills {
+                self.telemetry.on_prefill_start(r, self.now);
+            }
+        }
+        if self.telemetry.cfg.trace {
+            let label = if prefills.is_empty() {
+                format!("decode b{}", batch.len())
+            } else {
+                format!("decode b{}+p{}", batch.len(), prefills.len())
+            };
+            self.telemetry.work_start(inst, self.now, label);
+        }
         let i = &mut self.instances[inst];
         i.running = Some(Work::DecodeStep { batch, prefills });
         i.busy_acc += dur;
@@ -521,6 +603,15 @@ impl SimCtx {
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
+        if self.telemetry.cfg.spans {
+            let wire = bytes / self.uncontended_bw(src, dst);
+            self.telemetry.on_xfer_start(req, self.now, wire);
+        }
+        if self.telemetry.cfg.trace {
+            let track = self.xfer_track(src, dst);
+            self.telemetry
+                .xfer_span_start(src, dst, req, self.now, kind.name(), track);
+        }
         if self.contention_model == ContentionModel::MaxMin {
             if overlap {
                 self.launch_flow(src, dst, req, bytes, false);
@@ -537,7 +628,13 @@ impl SimCtx {
             }
             return;
         }
-        let dur = bytes / self.stream_bw(src, dst);
+        let bw = self.stream_bw(src, dst);
+        let dur = bytes / bw;
+        if self.telemetry.cfg.probe_interval.is_some() {
+            let uplinks = self.cluster.topology().crossed_uplinks(src, dst);
+            let spine = self.cluster.topology().crosses_spine(src, dst);
+            self.telemetry.stream_admitted(src, dst, req, uplinks, spine, bw);
+        }
         self.register_stream(src, dst, bytes);
         let done = if overlap {
             self.now + dur
@@ -573,6 +670,19 @@ impl SimCtx {
             XferKind::ReplicaUpdate => self.metrics.xfer_replica_bytes += bytes,
             XferKind::Migration => self.metrics.xfer_migration_bytes += bytes,
         }
+        if self.telemetry.cfg.spans {
+            // The overlapped window already ran under prefill compute;
+            // only the residual wire time is owed to the transfer span.
+            let wire = (bytes / self.uncontended_bw(src, dst)
+                - overlapped.max(0.0))
+                .max(0.0);
+            self.telemetry.on_xfer_start(req, self.now, wire);
+        }
+        if self.telemetry.cfg.trace {
+            let track = self.xfer_track(src, dst);
+            self.telemetry
+                .xfer_span_start(src, dst, req, self.now, kind.name(), track);
+        }
         if self.contention_model == ContentionModel::MaxMin {
             if self.nic_held[src] || self.nic_held[dst] {
                 self.nic_waiting
@@ -586,7 +696,13 @@ impl SimCtx {
             }
             return;
         }
-        let wire = bytes / self.stream_bw(src, dst);
+        let bw = self.stream_bw(src, dst);
+        let wire = bytes / bw;
+        if self.telemetry.cfg.probe_interval.is_some() {
+            let uplinks = self.cluster.topology().crossed_uplinks(src, dst);
+            let spine = self.cluster.topology().crosses_spine(src, dst);
+            self.telemetry.stream_admitted(src, dst, req, uplinks, spine, bw);
+        }
         self.register_stream(src, dst, bytes);
         // The stream could have started as early as `now - overlapped`,
         // but no earlier than the link became free.
@@ -737,6 +853,123 @@ impl SimCtx {
     pub fn set_role(&mut self, inst: InstId, role: Role) {
         self.instances[inst].role = role;
     }
+
+    // ---- telemetry probes ------------------------------------------------
+
+    /// Take every due probe sample up to (and including) `upto`.
+    /// Called between event pops: state is constant on the interval
+    /// `(now, next event)`, so sampling lazily here observes exactly
+    /// the state a heap-scheduled sampler would — without ever pushing
+    /// events (which would shift `seq` tie-breaking and drift every
+    /// golden).
+    fn sample_probes(&mut self, upto: f64) {
+        while let Some(pt) = self.telemetry.next_probe_due() {
+            if pt > upto {
+                break;
+            }
+            let sample = self.build_probe(pt);
+            self.telemetry.record_sample(sample);
+        }
+    }
+
+    fn build_probe(&self, t: f64) -> ProbeSample {
+        let instances = self
+            .instances
+            .iter()
+            .map(|i| InstProbe {
+                load: i.primary_reqs,
+                busy: i.running.is_some(),
+                kv_bytes: i.kv_bytes(),
+            })
+            .collect();
+        let topo = self.cluster.topology();
+        let mut links = Vec::new();
+        match self.contention_model {
+            ContentionModel::Admission => {
+                // Stream rates are fixed at admission, so per-link
+                // allocated bandwidth comes from the telemetry ledger.
+                if topo.uplinks_enabled() {
+                    for c in 0..topo.n_chassis() {
+                        links.push(LinkProbe {
+                            tier: "uplink",
+                            chassis: c,
+                            streams: self.uplink_streams[c],
+                            rate: self
+                                .telemetry
+                                .uplink_alloc
+                                .get(c)
+                                .copied()
+                                .unwrap_or(0.0),
+                        });
+                    }
+                }
+                if topo.spine_bw().is_some() {
+                    links.push(LinkProbe {
+                        tier: "spine",
+                        chassis: 0,
+                        streams: self.spine_streams,
+                        rate: self.telemetry.spine_alloc,
+                    });
+                }
+                links.push(LinkProbe {
+                    tier: "interconnect",
+                    chassis: 0,
+                    streams: self.telemetry.admitted_streams(),
+                    rate: self.telemetry.total_alloc,
+                });
+            }
+            ContentionModel::MaxMin => {
+                // Rates are live on the in-flight flow table.
+                let n_up =
+                    if topo.uplinks_enabled() { topo.n_chassis() } else { 0 };
+                let mut up_rate = vec![0.0f64; n_up];
+                let mut up_n = vec![0usize; n_up];
+                let mut spine_rate = 0.0;
+                let mut spine_n = 0usize;
+                let mut tot_rate = 0.0;
+                let mut tot_n = 0usize;
+                for f in self.flows.iter().flatten() {
+                    tot_rate += f.rate;
+                    tot_n += 1;
+                    if let Some((ca, cb)) = f.uplinks {
+                        up_rate[ca] += f.rate;
+                        up_n[ca] += 1;
+                        if cb != ca {
+                            up_rate[cb] += f.rate;
+                            up_n[cb] += 1;
+                        }
+                    }
+                    if f.spine {
+                        spine_rate += f.rate;
+                        spine_n += 1;
+                    }
+                }
+                for c in 0..n_up {
+                    links.push(LinkProbe {
+                        tier: "uplink",
+                        chassis: c,
+                        streams: up_n[c],
+                        rate: up_rate[c],
+                    });
+                }
+                if topo.spine_bw().is_some() {
+                    links.push(LinkProbe {
+                        tier: "spine",
+                        chassis: 0,
+                        streams: spine_n,
+                        rate: spine_rate,
+                    });
+                }
+                links.push(LinkProbe {
+                    tier: "interconnect",
+                    chassis: 0,
+                    streams: tot_n,
+                    rate: tot_rate,
+                });
+            }
+        }
+        ProbeSample { t, pending: self.pending.len(), instances, links }
+    }
 }
 
 /// Configuration of one simulation run.
@@ -756,6 +989,8 @@ pub struct SimConfig {
     /// the PR 3 admission-time fair share; `maxmin` opts into
     /// progress-based sharing with event rescheduling).
     pub contention_model: ContentionModel,
+    /// Run telemetry (spans / probes / trace); default all off.
+    pub telemetry: TelemetryConfig,
 }
 
 impl SimConfig {
@@ -766,6 +1001,7 @@ impl SimConfig {
             interconnect_bw: None,
             record_timeline: false,
             contention_model: ContentionModel::Admission,
+            telemetry: TelemetryConfig::default(),
         }
     }
 
@@ -819,6 +1055,16 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
         contended_flows: Vec::new(),
         nic_held: vec![false; n],
         nic_waiting: VecDeque::new(),
+        telemetry: Telemetry::new(
+            cfg.telemetry,
+            trace.requests.len(),
+            n,
+            if cfg.cluster.topology().uplinks_enabled() {
+                cfg.cluster.topology().n_chassis()
+            } else {
+                0
+            },
+        ),
     };
     if cfg.cluster.topology().uplinks_enabled() {
         let n_up = cfg.cluster.topology().n_chassis();
@@ -842,9 +1088,15 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
         let Some(ev) = ctx.events[idx].take() else {
             continue;
         };
+        // State is constant on (now, t): take any probe samples due
+        // in that window before applying the event.
+        if ctx.telemetry.cfg.probe_interval.is_some() {
+            ctx.sample_probes(t);
+        }
         ctx.now = t;
         match ev {
             Event::Arrival(req) => {
+                ctx.telemetry.on_arrival(req, t);
                 ctx.pending.push_back(req);
                 sched.on_arrival(&mut ctx, req);
             }
@@ -854,11 +1106,17 @@ pub fn run(cfg: &SimConfig, trace: &Trace, sched: &mut dyn Scheduler) -> RunRepo
                     .take()
                     .expect("WorkDone on idle instance");
                 let completed = apply_work_effects(&mut ctx, inst, &work);
+                ctx.telemetry.work_end(inst, t);
                 sched.on_work_done(&mut ctx, inst, work, completed);
             }
             Event::TransferDone { src, dst, req, flow } => {
+                ctx.telemetry.on_xfer_done(req, t);
+                ctx.telemetry.xfer_span_end(src, dst, req, t);
                 match flow {
-                    None => ctx.release_stream(src, dst),
+                    None => {
+                        ctx.telemetry.stream_released(src, dst, req);
+                        ctx.release_stream(src, dst)
+                    }
                     Some(id) => {
                         // Max-min model: retire the flow, water-fill
                         // the freed share over the survivors, then let
@@ -906,6 +1164,7 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
                 req.last_token_at = now;
                 let ttft = now - req.arrival;
                 ctx.metrics.ttft_sample(ttft, class);
+                ctx.telemetry.on_first_token(r, now);
             }
         }
         Work::DecodeStep { batch, prefills } => {
@@ -929,7 +1188,9 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
                 if n_reps > 0 {
                     ctx.meter_replica_traffic(n_reps as f64);
                 }
-                if ctx.requests[r].generated >= ctx.requests[r].decode_len {
+                let finished =
+                    ctx.requests[r].generated >= ctx.requests[r].decode_len;
+                if finished {
                     ctx.requests[r].finish = Some(now);
                     let jct = now - ctx.requests[r].arrival;
                     ctx.metrics.jct.add(jct);
@@ -937,6 +1198,7 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
                     ctx.free_request_kv(r);
                     completed.push(r);
                 }
+                ctx.telemetry.on_decode_done(r, now, finished);
             }
             for &r in prefills {
                 let req = &mut ctx.requests[r];
@@ -944,6 +1206,7 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
                 req.last_token_at = now;
                 let ttft = now - req.arrival;
                 ctx.metrics.ttft_sample(ttft, class);
+                ctx.telemetry.on_first_token(r, now);
             }
         }
     }
@@ -1030,6 +1293,10 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
     }
 
     let device = ctx.cluster.name();
+    let (spans, breakdown) = ctx.telemetry.spans_report(&ctx.requests);
+    let imbalance = ctx.telemetry.imbalance();
+    let probes = std::mem::take(&mut ctx.telemetry.probes);
+    let trace_events = std::mem::take(&mut ctx.telemetry.trace_events);
     let m = &mut ctx.metrics;
     RunReport {
         scheduler: sched_name.to_string(),
@@ -1069,7 +1336,13 @@ fn finalize(mut ctx: SimCtx, trace: &Trace, sched_name: &str) -> RunReport {
         prefix_evictions: m.prefix_evictions,
         per_device,
         per_link,
-        tbt_timeline: std::mem::take(&mut m.tbt_timeline),
+        tbt_timeline: m.tbt_timeline.entries(),
+        tbt_timeline_total: m.tbt_timeline.total(),
+        spans,
+        breakdown,
+        imbalance,
+        probes,
+        trace_events,
     }
 }
 
@@ -1454,6 +1727,38 @@ mod tests {
         let want: u64 =
             trace.requests.iter().map(|q| q.decode_len as u64).sum();
         assert_eq!(total, want);
+    }
+
+    /// Full telemetry on the serial scheduler: spans conserve JCT,
+    /// probes + trace populate, and the core metrics match a
+    /// telemetry-off run bit for bit (the zero-overhead pin).
+    #[test]
+    fn telemetry_spans_conserve_and_do_not_perturb() {
+        let trace = Trace::poisson(MIXED, 0.5, 20.0, 1);
+        let off = run(&cfg(1), &trace, &mut SerialSched);
+        let mut tcfg = cfg(1);
+        tcfg.telemetry = TelemetryConfig::full(1.0);
+        let on = run(&tcfg, &trace, &mut SerialSched);
+        assert_eq!(off.jct_mean, on.jct_mean);
+        assert_eq!(off.ttft_p99, on.ttft_p99);
+        assert_eq!(off.makespan, on.makespan);
+        assert_eq!(off.completed, on.completed);
+        assert_eq!(on.spans.len(), on.completed);
+        for s in &on.spans {
+            assert!((s.span.total() - s.jct).abs() < 1e-9,
+                    "req {}: components {} vs jct {}", s.req,
+                    s.span.total(), s.jct);
+            assert!(s.span.queue_wait >= 0.0 && s.span.prefill > 0.0
+                    && s.span.decode > 0.0);
+        }
+        assert!(on.breakdown.is_some());
+        assert!(!on.probes.is_empty());
+        assert!(!on.trace_events.is_empty());
+        assert!(on.imbalance.is_some());
+        // The off-run carries none of it.
+        assert!(off.spans.is_empty() && off.breakdown.is_none()
+                && off.imbalance.is_none() && off.probes.is_empty()
+                && off.trace_events.is_empty());
     }
 
     /// Work duration follows the instance's own hardware: the same

@@ -31,6 +31,10 @@ pub struct SimInstance {
     pub replica_bytes: f64,
     /// High-water mark of primary+replica bytes.
     pub peak_kv_bytes: f64,
+    /// Primary requests currently resident — the per-instance load
+    /// signal telemetry probes sample (integer, maintained by the
+    /// engine's placement API; replicas do not count as load).
+    pub primary_reqs: usize,
 }
 
 impl SimInstance {
@@ -43,6 +47,7 @@ impl SimInstance {
             primary_bytes: 0.0,
             replica_bytes: 0.0,
             peak_kv_bytes: 0.0,
+            primary_reqs: 0,
         }
     }
 

@@ -9,8 +9,97 @@
 //! On heterogeneous clusters every metric is additionally broken down
 //! per device class (H100 vs 910B2 vs ...) — see [`DeviceClassReport`].
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::sim::telemetry::{BreakdownReport, ImbalanceReport, ProbeSample,
+                            RequestSpan, TraceEvent};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::util::OrdF64;
+
+/// Memory-bounded (time, gap) timeline for Figure 16: a stride-thinned
+/// backbone preserves the timeline's shape, while an exact worst-K heap
+/// keeps the largest gaps — the part tail quantiles actually read.
+///
+/// Below `Self::CAP` entries this records everything verbatim; past it
+/// the backbone stride doubles (so memory stays O(CAP + K) no matter
+/// how many decode tokens a run generates) and `total()` keeps the
+/// true sample count for quantile indexing.
+#[derive(Clone, Debug)]
+pub struct BoundedTimeline {
+    /// (index, time, gap) kept where `index % stride == 0`.
+    backbone: Vec<(u64, f64, f64)>,
+    stride: u64,
+    /// Min-heap of the K largest gaps seen, exact.
+    worst: BinaryHeap<Reverse<(OrdF64, u64, OrdF64)>>,
+    total: u64,
+}
+
+impl Default for BoundedTimeline {
+    fn default() -> Self {
+        BoundedTimeline {
+            backbone: Vec::new(),
+            stride: 1,
+            worst: BinaryHeap::new(),
+            total: 0,
+        }
+    }
+}
+
+impl BoundedTimeline {
+    /// Backbone compaction threshold.
+    pub const CAP: usize = 32768;
+    /// Exact worst-gap entries retained.
+    pub const WORST_K: usize = 4096;
+
+    pub fn push(&mut self, t: f64, gap: f64) {
+        let idx = self.total;
+        self.total += 1;
+        if idx % self.stride == 0 {
+            self.backbone.push((idx, t, gap));
+            if self.backbone.len() >= Self::CAP {
+                self.stride *= 2;
+                let stride = self.stride;
+                self.backbone.retain(|e| e.0 % stride == 0);
+            }
+        }
+        if self.worst.len() < Self::WORST_K {
+            self.worst.push(Reverse((OrdF64(gap), idx, OrdF64(t))));
+        } else if let Some(Reverse((min_gap, _, _))) = self.worst.peek() {
+            if gap > min_gap.0 {
+                self.worst.pop();
+                self.worst.push(Reverse((OrdF64(gap), idx, OrdF64(t))));
+            }
+        }
+    }
+
+    /// Number of gaps observed (NOT the number retained).
+    pub fn len(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Retained (time, gap) pairs in arrival order: the thinned
+    /// backbone plus the exact worst-K gaps, deduplicated.
+    pub fn entries(&self) -> Vec<(f64, f64)> {
+        let mut all = self.backbone.clone();
+        for r in &self.worst {
+            let Reverse((gap, idx, t)) = r;
+            all.push((*idx, t.0, gap.0));
+        }
+        all.sort_by_key(|e| e.0);
+        all.dedup_by_key(|e| e.0);
+        all.into_iter().map(|(_, t, g)| (t, g)).collect()
+    }
+}
 
 /// Collects samples during a simulation run.
 #[derive(Clone, Debug, Default)]
@@ -19,8 +108,8 @@ pub struct MetricsCollector {
     pub tbt: Summary,
     pub jct: Summary,
     /// (time, gap) pairs for worst-case TBT timelines (Figure 16);
-    /// only recorded when enabled to bound memory.
-    pub tbt_timeline: Vec<(f64, f64)>,
+    /// only recorded when enabled, and memory-bounded even then.
+    pub tbt_timeline: BoundedTimeline,
     pub record_timeline: bool,
     pub decode_tokens: u64,
     pub completed: usize,
@@ -77,7 +166,7 @@ impl MetricsCollector {
         self.decode_tokens += 1;
         self.decode_tokens_by_class[class] += 1;
         if self.record_timeline {
-            self.tbt_timeline.push((now, gap));
+            self.tbt_timeline.push(now, gap);
         }
     }
 
@@ -192,7 +281,7 @@ pub struct RunReport {
     pub xfer_prefill_bytes: f64,
     pub xfer_replica_bytes: f64,
     pub xfer_migration_bytes: f64,
-    /// Peak interconnect utilization estimate (bytes/s over busiest 1s).
+    /// Total bytes moved over the interconnect, all causes summed.
     pub xfer_total_bytes: f64,
 
     /// Prefix-cache outcome counts (zero for prefix-unaware schedulers).
@@ -213,13 +302,30 @@ pub struct RunReport {
     /// contention model is disabled).
     pub per_link: Vec<LinkReport>,
 
-    /// Raw timeline for Figure 16, if recorded.
+    /// Retained timeline for Figure 16, if recorded (thinned backbone
+    /// + exact worst gaps; see [`BoundedTimeline`]).
     pub tbt_timeline: Vec<(f64, f64)>,
+    /// Total gaps observed before capping — quantile indices over the
+    /// timeline must use this, not the retained length.
+    pub tbt_timeline_total: u64,
+
+    /// Per-request latency-breakdown spans (telemetry `spans`; empty
+    /// when telemetry is off).
+    pub spans: Vec<RequestSpan>,
+    /// Fleet-mean breakdown (None when telemetry is off).
+    pub breakdown: Option<BreakdownReport>,
+    /// Load-imbalance summary over probe samples (None when probes
+    /// are off).
+    pub imbalance: Option<ImbalanceReport>,
+    /// Raw probe samples (empty when probes are off).
+    pub probes: Vec<ProbeSample>,
+    /// Chrome-trace spans (empty when trace recording is off).
+    pub trace_events: Vec<TraceEvent>,
 }
 
 impl RunReport {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("scheduler", Json::str(&self.scheduler)),
             ("device", Json::str(&self.device)),
             ("workload", Json::str(&self.workload)),
@@ -252,13 +358,25 @@ impl RunReport {
              Json::arr(self.per_device.iter().map(|d| d.to_json()))),
             ("per_link",
              Json::arr(self.per_link.iter().map(|l| l.to_json()))),
-        ])
+        ];
+        // Telemetry aggregates only appear when recorded, so the
+        // default (off) JSON document is unchanged.
+        if let Some(b) = &self.breakdown {
+            pairs.push(("breakdown", b.to_json()));
+        }
+        if let Some(im) = &self.imbalance {
+            pairs.push(("imbalance", im.to_json()));
+        }
+        Json::obj(pairs)
     }
 
-    /// One CSV row (matches `csv_header`).
+    /// One CSV row (matches `csv_header`).  Telemetry columns are
+    /// zeros when telemetry was off for the run.
     pub fn csv_row(&self) -> String {
+        let b = self.breakdown.clone().unwrap_or_default();
+        let im = self.imbalance.clone().unwrap_or_default();
         format!(
-            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{}",
+            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{},{:.3},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.4}",
             self.scheduler,
             self.device,
             self.workload,
@@ -284,6 +402,16 @@ impl RunReport {
                 / 1e9,
             self.prefix_hit_rate,
             self.prefix_saved_tokens,
+            self.mean_kv_bytes / 1e9,
+            self.prefix_evictions,
+            b.queue_wait_mean,
+            b.prefill_mean,
+            b.xfer_wire_mean,
+            b.xfer_slow_mean,
+            b.decode_mean,
+            b.stall_mean,
+            im.load_max_over_mean,
+            im.load_cv,
         )
     }
 
@@ -291,7 +419,9 @@ impl RunReport {
         "scheduler,device,workload,n_instances,rate,n_requests,completed,makespan,\
          ttft_mean,ttft_p50,ttft_p99,tbt_mean,tbt_p99,tbt_max,\
          jct_mean,jct_p50,jct_p99,cost_eff_tok_inst_s,utilization,peak_kv_gb,xfer_gb,\
-         prefix_hit_rate,prefix_saved_tok"
+         prefix_hit_rate,prefix_saved_tok,mean_kv_gb,prefix_evictions,\
+         span_queue_s,span_prefill_s,span_xfer_wire_s,span_xfer_slow_s,\
+         span_decode_s,span_stall_s,load_max_over_mean,load_cv"
     }
 }
 
@@ -315,6 +445,55 @@ mod tests {
         m.token_gap(1.0, 0.02, 0);
         assert!(m.tbt_timeline.is_empty());
         assert_eq!(m.decode_tokens, 1);
+    }
+
+    #[test]
+    fn bounded_timeline_small_runs_record_everything() {
+        let mut tl = BoundedTimeline::default();
+        for i in 0..1000u64 {
+            tl.push(i as f64 * 0.01, (i % 13) as f64 * 1e-3);
+        }
+        assert_eq!(tl.len(), 1000);
+        assert_eq!(tl.total(), 1000);
+        let e = tl.entries();
+        assert_eq!(e.len(), 1000, "below CAP nothing is thinned");
+        for (i, &(t, g)) in e.iter().enumerate() {
+            assert_eq!(t, i as f64 * 0.01);
+            assert_eq!(g, (i as u64 % 13) as f64 * 1e-3);
+        }
+    }
+
+    #[test]
+    fn bounded_timeline_caps_memory_and_keeps_worst_gaps() {
+        let mut tl = BoundedTimeline::default();
+        let n = 200_000u64;
+        let spike_at = 123_457u64;
+        for i in 0..n {
+            let gap =
+                if i == spike_at { 99.0 } else { (i % 97) as f64 * 1e-3 };
+            tl.push(i as f64 * 0.01, gap);
+        }
+        assert_eq!(tl.total(), n);
+        let e = tl.entries();
+        assert!(e.len() <= BoundedTimeline::CAP + BoundedTimeline::WORST_K,
+                "retained {} entries", e.len());
+        assert!(e.len() >= BoundedTimeline::CAP / 2,
+                "backbone unexpectedly thin: {}", e.len());
+        // Exact worst gap survives, at its original timestamp.
+        let worst = e
+            .iter()
+            .cloned()
+            .fold((0.0, f64::NEG_INFINITY),
+                  |a, b| if b.1 > a.1 { b } else { a });
+        assert_eq!(worst.1, 99.0);
+        assert_eq!(worst.0, spike_at as f64 * 0.01);
+        // Entries stay in arrival (time) order.
+        assert!(e.windows(2).all(|w| w[0].0 <= w[1].0));
+        // The worst-K heap is exact, so essentially all of the top
+        // 4096 gaps (values >= 0.095 in this cycle) are retained.
+        let big = e.iter().filter(|&&(_, g)| g >= 0.095).count();
+        assert!(big >= BoundedTimeline::WORST_K / 2,
+                "worst tail underpopulated: {big}");
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod llm;
 pub mod metrics;
 pub mod perfmodel;
 pub mod request;
+pub mod telemetry;
 
 pub use engine::{run, ContentionModel, Scheduler, SimConfig, SimCtx, Work,
                  XferKind};
@@ -20,6 +21,11 @@ pub use hardware::{known_device_names, maxmin_rates, ClusterSpec, DeviceSpec,
                    ASCEND_910B2, A100, H100, MI300X};
 pub use instance::{Role, SimInstance};
 pub use llm::{LlmSpec, LLAMA2_70B};
-pub use metrics::{DeviceClassReport, LinkReport, MetricsCollector, RunReport};
+pub use metrics::{BoundedTimeline, DeviceClassReport, LinkReport,
+                  MetricsCollector, RunReport};
 pub use perfmodel::PerfModel;
 pub use request::{InstId, ReqId, SimRequest};
+pub use telemetry::{chrome_trace_json, probes_csv, sample_stats,
+                    BreakdownReport, ImbalanceReport, InstProbe, LinkProbe,
+                    ProbeSample, RequestSpan, SpanBreakdown, Telemetry,
+                    TelemetryConfig, TraceEvent, TraceTrack};

@@ -77,6 +77,11 @@ impl SimRequest {
         self.first_token.map(|t| t - self.arrival)
     }
 
+    /// Seconds spent queued before prefill computation began.
+    pub fn queue_wait(&self) -> Option<f64> {
+        self.prefill_start.map(|t| t - self.arrival)
+    }
+
     pub fn jct(&self) -> Option<f64> {
         self.finish.map(|t| t - self.arrival)
     }

@@ -1,0 +1,1012 @@
+//! Run telemetry: per-request latency-breakdown spans, time-series
+//! fleet probes, and Chrome-trace / Perfetto export.
+//!
+//! Everything here is **zero-overhead when off** (the default): the
+//! engine guards every hook call on the corresponding `TelemetryConfig`
+//! flag, the hooks re-check internally, and none of the machinery ever
+//! schedules heap events — probe samples are taken lazily inside the
+//! run loop between event pops, so enabling telemetry cannot perturb
+//! event ordering, float arithmetic, or the golden-pinned reports.
+//!
+//! Three layers:
+//! * **Spans** — a per-request phase machine (`Queued -> Prefill ->
+//!   Stalled <-> Transferring <-> Decoding -> Done`) that attributes
+//!   every wall-clock interval of a request's life to exactly one
+//!   bucket: queue-wait, prefill compute, KV-transfer wire time (the
+//!   uncontended price), transfer slowdown (contention-induced),
+//!   decode compute, or decode-stall.  Invariant: the six components
+//!   sum to the measured JCT (structurally — each hook closes the
+//!   open interval before transitioning).
+//! * **Probes** — a fixed-interval sampler of per-instance queue
+//!   depth / busy state / KV occupancy and per-link in-flight streams
+//!   + current rate, summarized into fleet load-imbalance statistics
+//!   (max/mean and coefficient of variation of instance load).
+//! * **Exporters** — `chrome_trace_json` (load into `chrome://tracing`
+//!   or <https://ui.perfetto.dev>) and `probes_csv`.
+
+use crate::sim::metrics::RunReport;
+use crate::sim::request::{ReqId, SimRequest};
+use crate::util::json::Json;
+use crate::util::OrdF64;
+
+/// What to record.  `Default` is everything off — the zero-overhead
+/// configuration every existing golden runs under.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TelemetryConfig {
+    /// Per-request latency-breakdown spans (enables `RunReport.spans`
+    /// and the `breakdown` aggregate).
+    pub spans: bool,
+    /// Probe sampling interval in seconds (None = probes off).
+    pub probe_interval: Option<f64>,
+    /// Record per-instance work slices + per-link transfer spans for
+    /// the Chrome-trace exporter.
+    pub trace: bool,
+}
+
+impl TelemetryConfig {
+    /// Everything off (the default).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// Everything on: spans + probes at `interval` seconds + trace.
+    pub fn full(interval: f64) -> Self {
+        TelemetryConfig {
+            spans: true,
+            probe_interval: Some(interval),
+            trace: true,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.spans || self.probe_interval.is_some() || self.trace
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// Where a request's JCT went, in seconds.  `total()` equals the
+/// measured JCT (finish - arrival) for every finished request.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanBreakdown {
+    /// Arrival until first prefill starts.
+    pub queue_wait: f64,
+    /// Prefill compute.
+    pub prefill: f64,
+    /// KV-transfer time at the uncontended wire price.
+    pub xfer_wire: f64,
+    /// KV-transfer time beyond the wire price: contention-induced
+    /// slowdown (sharing, NIC serialization, max-min throttling).
+    pub xfer_slow: f64,
+    /// Decode compute.
+    pub decode: f64,
+    /// Waiting between phases while placed (batch slot contention,
+    /// scheduler stalls).
+    pub stall: f64,
+}
+
+impl SpanBreakdown {
+    pub fn total(&self) -> f64 {
+        self.queue_wait + self.prefill + self.xfer_wire + self.xfer_slow
+            + self.decode + self.stall
+    }
+}
+
+/// One finished request's breakdown.
+#[derive(Clone, Debug)]
+pub struct RequestSpan {
+    pub req: ReqId,
+    pub jct: f64,
+    pub span: SpanBreakdown,
+}
+
+/// Fleet-mean breakdown over finished requests.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BreakdownReport {
+    pub n: usize,
+    pub queue_wait_mean: f64,
+    pub prefill_mean: f64,
+    pub xfer_wire_mean: f64,
+    pub xfer_slow_mean: f64,
+    pub decode_mean: f64,
+    pub stall_mean: f64,
+}
+
+impl BreakdownReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::num(self.n as f64)),
+            ("queue_wait_mean", Json::num(self.queue_wait_mean)),
+            ("prefill_mean", Json::num(self.prefill_mean)),
+            ("xfer_wire_mean", Json::num(self.xfer_wire_mean)),
+            ("xfer_slow_mean", Json::num(self.xfer_slow_mean)),
+            ("decode_mean", Json::num(self.decode_mean)),
+            ("stall_mean", Json::num(self.stall_mean)),
+        ])
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Prefill,
+    Stalled,
+    Transferring,
+    Decoding,
+    Done,
+}
+
+/// Per-request span state: the open interval since `mark` belongs to
+/// `phase`'s bucket; `close(t)` banks it and advances the mark.
+#[derive(Clone, Debug)]
+struct ReqTrack {
+    phase: Phase,
+    mark: f64,
+    /// In-flight KV transfers touching this request.
+    open_xfers: u32,
+    /// Remaining uncontended wire time owed by the open transfers;
+    /// elapsed Transferring time up to this budget is wire, the rest
+    /// is contention slowdown.
+    wire_due: f64,
+    span: SpanBreakdown,
+}
+
+impl ReqTrack {
+    fn new() -> Self {
+        ReqTrack {
+            phase: Phase::Queued,
+            mark: 0.0,
+            open_xfers: 0,
+            wire_due: 0.0,
+            span: SpanBreakdown::default(),
+        }
+    }
+
+    fn close(&mut self, t: f64) {
+        let dt = (t - self.mark).max(0.0);
+        match self.phase {
+            Phase::Queued => self.span.queue_wait += dt,
+            Phase::Prefill => self.span.prefill += dt,
+            Phase::Stalled => self.span.stall += dt,
+            Phase::Decoding => self.span.decode += dt,
+            Phase::Transferring => {
+                let wire = dt.min(self.wire_due);
+                self.span.xfer_wire += wire;
+                self.span.xfer_slow += dt - wire;
+                self.wire_due -= wire;
+            }
+            Phase::Done => {}
+        }
+        self.mark = t;
+    }
+
+    /// Phase to rest in when no compute is running.
+    fn idle_phase(&self) -> Phase {
+        if self.open_xfers > 0 {
+            Phase::Transferring
+        } else {
+            Phase::Stalled
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probes
+// ---------------------------------------------------------------------------
+
+/// One instance at one probe instant.
+#[derive(Clone, Debug)]
+pub struct InstProbe {
+    /// Primary (non-replica) requests resident on the instance — the
+    /// load signal the paper's balance argument is about.
+    pub load: usize,
+    pub busy: bool,
+    /// Current KV occupancy (primary + replica bytes).
+    pub kv_bytes: f64,
+}
+
+/// One shared link at one probe instant.  `tier` is "uplink",
+/// "spine", or "interconnect" (the all-streams aggregate).
+#[derive(Clone, Debug)]
+pub struct LinkProbe {
+    pub tier: &'static str,
+    pub chassis: usize,
+    pub streams: usize,
+    /// Aggregate allocated rate, bytes/s.
+    pub rate: f64,
+}
+
+/// A full fleet snapshot.
+#[derive(Clone, Debug)]
+pub struct ProbeSample {
+    pub t: f64,
+    /// Requests arrived but not yet placed.
+    pub pending: usize,
+    pub instances: Vec<InstProbe>,
+    pub links: Vec<LinkProbe>,
+}
+
+/// (max, mean, population-CV) of per-instance load in one sample.
+pub fn sample_stats(p: &ProbeSample) -> (f64, f64, f64) {
+    let n = p.instances.len();
+    if n == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let loads: Vec<f64> = p.instances.iter().map(|i| i.load as f64).collect();
+    let mean = loads.iter().sum::<f64>() / n as f64;
+    let max = loads.iter().cloned().fold(0.0, f64::max);
+    let var =
+        loads.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+    (max, mean, cv)
+}
+
+/// Time-averaged load-imbalance summary (samples with zero fleet load
+/// are skipped — an idle fleet is trivially balanced).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ImbalanceReport {
+    pub samples: usize,
+    pub load_max_over_mean: f64,
+    pub load_cv: f64,
+}
+
+impl ImbalanceReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("samples", Json::num(self.samples as f64)),
+            ("load_max_over_mean", Json::num(self.load_max_over_mean)),
+            ("load_cv", Json::num(self.load_cv)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace
+// ---------------------------------------------------------------------------
+
+/// A Chrome-trace track (rendered as one row per tid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceTrack {
+    Instance(usize),
+    Uplink(usize),
+    Spine,
+    Interconnect,
+}
+
+impl TraceTrack {
+    pub fn tid(&self) -> u64 {
+        match *self {
+            TraceTrack::Instance(i) => i as u64,
+            TraceTrack::Uplink(c) => 1000 + c as u64,
+            TraceTrack::Spine => 2000,
+            TraceTrack::Interconnect => 2001,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            TraceTrack::Instance(i) => format!("instance {i}"),
+            TraceTrack::Uplink(c) => format!("uplink {c}"),
+            TraceTrack::Spine => "spine".to_string(),
+            TraceTrack::Interconnect => "interconnect".to_string(),
+        }
+    }
+}
+
+/// One closed span on a track: instance tracks export as complete
+/// ("X") events, link tracks as async ("b"/"e") pairs so overlapping
+/// transfers render side by side.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub track: TraceTrack,
+    pub start: f64,
+    pub end: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Collector
+// ---------------------------------------------------------------------------
+
+/// One admitted stream's rate allocation (admission contention model;
+/// the rate is fixed at admission, so a ledger is the only way to
+/// know per-link allocated bandwidth at probe time).
+#[derive(Clone, Debug)]
+struct StreamAlloc {
+    src: usize,
+    dst: usize,
+    req: ReqId,
+    uplinks: Option<(usize, usize)>,
+    spine: bool,
+    rate: f64,
+}
+
+/// The telemetry collector owned by the engine.  Every hook is a
+/// no-op unless its layer is enabled, and every per-request hook
+/// tolerates unknown request ids (engine unit tests fire transfers
+/// against empty traces).
+#[derive(Clone, Debug, Default)]
+pub struct Telemetry {
+    pub cfg: TelemetryConfig,
+    reqs: Vec<ReqTrack>,
+    pub probes: Vec<ProbeSample>,
+    probe_count: u64,
+    pub trace_events: Vec<TraceEvent>,
+    open_work: Vec<Option<(f64, String)>>,
+    open_spans: Vec<(usize, usize, ReqId, f64, &'static str, TraceTrack)>,
+    ledger: Vec<StreamAlloc>,
+    /// Allocated bytes/s per chassis uplink (admission model).
+    pub uplink_alloc: Vec<f64>,
+    pub spine_alloc: f64,
+    pub total_alloc: f64,
+}
+
+impl Telemetry {
+    pub fn new(
+        cfg: TelemetryConfig,
+        n_requests: usize,
+        n_instances: usize,
+        n_chassis: usize,
+    ) -> Self {
+        Telemetry {
+            reqs: if cfg.spans {
+                vec![ReqTrack::new(); n_requests]
+            } else {
+                Vec::new()
+            },
+            open_work: if cfg.trace {
+                vec![None; n_instances]
+            } else {
+                Vec::new()
+            },
+            uplink_alloc: if cfg.probe_interval.is_some() {
+                vec![0.0; n_chassis]
+            } else {
+                Vec::new()
+            },
+            cfg,
+            ..Default::default()
+        }
+    }
+
+    // -- span hooks --------------------------------------------------------
+
+    pub fn on_arrival(&mut self, req: ReqId, t: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.mark = t;
+        }
+    }
+
+    pub fn on_prefill_start(&mut self, req: ReqId, t: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.phase = Phase::Prefill;
+        }
+    }
+
+    pub fn on_first_token(&mut self, req: ReqId, t: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.phase = tr.idle_phase();
+        }
+    }
+
+    pub fn on_decode_start(&mut self, req: ReqId, t: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.phase = Phase::Decoding;
+        }
+    }
+
+    pub fn on_decode_done(&mut self, req: ReqId, t: f64, finished: bool) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.phase = if finished { Phase::Done } else { tr.idle_phase() };
+        }
+    }
+
+    /// `wire` is the transfer's uncontended duration (bytes over the
+    /// path's uncontended bandwidth) — the budget split against the
+    /// actually elapsed Transferring time.
+    pub fn on_xfer_start(&mut self, req: ReqId, t: f64, wire: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.open_xfers += 1;
+            tr.wire_due += wire.max(0.0);
+            // A background transfer under active compute keeps the
+            // compute attribution; otherwise the request is now
+            // transfer-bound.
+            if tr.phase == Phase::Stalled || tr.phase == Phase::Queued {
+                tr.phase = Phase::Transferring;
+            }
+        }
+    }
+
+    pub fn on_xfer_done(&mut self, req: ReqId, t: f64) {
+        if !self.cfg.spans {
+            return;
+        }
+        if let Some(tr) = self.reqs.get_mut(req) {
+            tr.close(t);
+            tr.open_xfers = tr.open_xfers.saturating_sub(1);
+            if tr.open_xfers == 0 {
+                tr.wire_due = 0.0;
+                if tr.phase == Phase::Transferring {
+                    tr.phase = Phase::Stalled;
+                }
+            }
+        }
+    }
+
+    // -- trace hooks -------------------------------------------------------
+
+    pub fn work_start(&mut self, inst: usize, t: f64, label: String) {
+        if !self.cfg.trace {
+            return;
+        }
+        if let Some(slot) = self.open_work.get_mut(inst) {
+            *slot = Some((t, label));
+        }
+    }
+
+    pub fn work_end(&mut self, inst: usize, t: f64) {
+        if !self.cfg.trace {
+            return;
+        }
+        if let Some(slot) = self.open_work.get_mut(inst) {
+            if let Some((start, name)) = slot.take() {
+                self.trace_events.push(TraceEvent {
+                    name,
+                    track: TraceTrack::Instance(inst),
+                    start,
+                    end: t,
+                });
+            }
+        }
+    }
+
+    pub fn xfer_span_start(
+        &mut self,
+        src: usize,
+        dst: usize,
+        req: ReqId,
+        t: f64,
+        kind: &'static str,
+        track: TraceTrack,
+    ) {
+        if !self.cfg.trace {
+            return;
+        }
+        self.open_spans.push((src, dst, req, t, kind, track));
+    }
+
+    pub fn xfer_span_end(&mut self, src: usize, dst: usize, req: ReqId, t: f64) {
+        if !self.cfg.trace {
+            return;
+        }
+        // FIFO match: concurrent same-key transfers close in launch
+        // order (deterministic, and the only information available).
+        if let Some(pos) = self
+            .open_spans
+            .iter()
+            .position(|e| e.0 == src && e.1 == dst && e.2 == req)
+        {
+            let (_, _, _, start, kind, track) = self.open_spans.remove(pos);
+            self.trace_events.push(TraceEvent {
+                name: format!("{kind} r{req} {src}->{dst}"),
+                track,
+                start,
+                end: t,
+            });
+        }
+    }
+
+    // -- admission-model stream ledger -------------------------------------
+
+    pub fn stream_admitted(
+        &mut self,
+        src: usize,
+        dst: usize,
+        req: ReqId,
+        uplinks: Option<(usize, usize)>,
+        spine: bool,
+        rate: f64,
+    ) {
+        if self.cfg.probe_interval.is_none() {
+            return;
+        }
+        if let Some((a, b)) = uplinks {
+            if let Some(x) = self.uplink_alloc.get_mut(a) {
+                *x += rate;
+            }
+            if b != a {
+                if let Some(x) = self.uplink_alloc.get_mut(b) {
+                    *x += rate;
+                }
+            }
+        }
+        if spine {
+            self.spine_alloc += rate;
+        }
+        self.total_alloc += rate;
+        self.ledger.push(StreamAlloc { src, dst, req, uplinks, spine, rate });
+    }
+
+    pub fn stream_released(&mut self, src: usize, dst: usize, req: ReqId) {
+        if self.cfg.probe_interval.is_none() {
+            return;
+        }
+        if let Some(pos) = self
+            .ledger
+            .iter()
+            .position(|s| s.src == src && s.dst == dst && s.req == req)
+        {
+            let s = self.ledger.remove(pos);
+            if let Some((a, b)) = s.uplinks {
+                if let Some(x) = self.uplink_alloc.get_mut(a) {
+                    *x -= s.rate;
+                }
+                if b != a {
+                    if let Some(x) = self.uplink_alloc.get_mut(b) {
+                        *x -= s.rate;
+                    }
+                }
+            }
+            if s.spine {
+                self.spine_alloc -= s.rate;
+            }
+            self.total_alloc -= s.rate;
+        }
+    }
+
+    pub fn admitted_streams(&self) -> usize {
+        self.ledger.len()
+    }
+
+    // -- probe machinery ---------------------------------------------------
+
+    /// The next probe instant, if probes are on (samples at dt, 2dt, …).
+    pub fn next_probe_due(&self) -> Option<f64> {
+        self.cfg
+            .probe_interval
+            .map(|dt| (self.probe_count + 1) as f64 * dt)
+    }
+
+    pub fn record_sample(&mut self, s: ProbeSample) {
+        self.probes.push(s);
+        self.probe_count += 1;
+    }
+
+    // -- reports -----------------------------------------------------------
+
+    /// Spans + fleet-mean breakdown over finished requests.
+    pub fn spans_report(
+        &self,
+        requests: &[SimRequest],
+    ) -> (Vec<RequestSpan>, Option<BreakdownReport>) {
+        if !self.cfg.spans {
+            return (Vec::new(), None);
+        }
+        let mut spans = Vec::new();
+        let mut agg = BreakdownReport::default();
+        for (i, r) in requests.iter().enumerate() {
+            let Some(finish) = r.finish else { continue };
+            let Some(tr) = self.reqs.get(i) else { continue };
+            spans.push(RequestSpan {
+                req: i,
+                jct: finish - r.arrival,
+                span: tr.span,
+            });
+            agg.n += 1;
+            agg.queue_wait_mean += tr.span.queue_wait;
+            agg.prefill_mean += tr.span.prefill;
+            agg.xfer_wire_mean += tr.span.xfer_wire;
+            agg.xfer_slow_mean += tr.span.xfer_slow;
+            agg.decode_mean += tr.span.decode;
+            agg.stall_mean += tr.span.stall;
+        }
+        if agg.n > 0 {
+            let n = agg.n as f64;
+            agg.queue_wait_mean /= n;
+            agg.prefill_mean /= n;
+            agg.xfer_wire_mean /= n;
+            agg.xfer_slow_mean /= n;
+            agg.decode_mean /= n;
+            agg.stall_mean /= n;
+        }
+        (spans, Some(agg))
+    }
+
+    /// Time-averaged imbalance over recorded samples (None when
+    /// probes are off).
+    pub fn imbalance(&self) -> Option<ImbalanceReport> {
+        self.cfg.probe_interval?;
+        let mut rep = ImbalanceReport::default();
+        for p in &self.probes {
+            let (max, mean, cv) = sample_stats(p);
+            if mean <= 0.0 {
+                continue;
+            }
+            rep.samples += 1;
+            rep.load_max_over_mean += max / mean;
+            rep.load_cv += cv;
+        }
+        if rep.samples > 0 {
+            rep.load_max_over_mean /= rep.samples as f64;
+            rep.load_cv /= rep.samples as f64;
+        }
+        Some(rep)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporters
+// ---------------------------------------------------------------------------
+
+/// Chrome-trace ("Trace Event Format") JSON for a report recorded
+/// with `trace` (and optionally probes, which become counter tracks).
+pub fn chrome_trace_json(r: &RunReport) -> String {
+    chrome_trace_from(&r.trace_events, &r.probes)
+}
+
+pub fn chrome_trace_from(
+    events: &[TraceEvent],
+    probes: &[ProbeSample],
+) -> String {
+    let us = 1e6; // trace timestamps are microseconds
+    let mut meta: Vec<Json> = vec![Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str("accellm-sim"))])),
+    ])];
+    let mut tids: Vec<(u64, String)> =
+        events.iter().map(|e| (e.track.tid(), e.track.label())).collect();
+    tids.sort();
+    tids.dedup();
+    for (tid, label) in &tids {
+        meta.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(*tid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(label))])),
+        ]));
+    }
+    let mut timed: Vec<(f64, Json)> = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        let tid = Json::num(e.track.tid() as f64);
+        match e.track {
+            TraceTrack::Instance(_) => timed.push((
+                e.start,
+                Json::obj(vec![
+                    ("name", Json::str(&e.name)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.start * us)),
+                    ("dur", Json::num(((e.end - e.start) * us).max(0.0))),
+                    ("pid", Json::num(0.0)),
+                    ("tid", tid),
+                ]),
+            )),
+            _ => {
+                // Async pair: overlapping transfers on a shared link
+                // render side by side instead of nesting wrongly.
+                for (ph, t) in [("b", e.start), ("e", e.end)] {
+                    timed.push((
+                        t,
+                        Json::obj(vec![
+                            ("name", Json::str(&e.name)),
+                            ("cat", Json::str("xfer")),
+                            ("ph", Json::str(ph)),
+                            ("id", Json::num(i as f64)),
+                            ("ts", Json::num(t * us)),
+                            ("pid", Json::num(0.0)),
+                            ("tid", tid.clone()),
+                        ]),
+                    ));
+                }
+            }
+        }
+    }
+    for p in probes {
+        for (i, ip) in p.instances.iter().enumerate() {
+            timed.push((
+                p.t,
+                Json::obj(vec![
+                    ("name", Json::str(&format!("kv_gb inst{i}"))),
+                    ("ph", Json::str("C")),
+                    ("ts", Json::num(p.t * us)),
+                    ("pid", Json::num(0.0)),
+                    ("args",
+                     Json::obj(vec![("gb", Json::num(ip.kv_bytes / 1e9))])),
+                ]),
+            ));
+            timed.push((
+                p.t,
+                Json::obj(vec![
+                    ("name", Json::str(&format!("queue inst{i}"))),
+                    ("ph", Json::str("C")),
+                    ("ts", Json::num(p.t * us)),
+                    ("pid", Json::num(0.0)),
+                    ("args",
+                     Json::obj(vec![("reqs", Json::num(ip.load as f64))])),
+                ]),
+            ));
+        }
+        timed.push((
+            p.t,
+            Json::obj(vec![
+                ("name", Json::str("pending")),
+                ("ph", Json::str("C")),
+                ("ts", Json::num(p.t * us)),
+                ("pid", Json::num(0.0)),
+                ("args",
+                 Json::obj(vec![("reqs", Json::num(p.pending as f64))])),
+            ]),
+        ));
+    }
+    // Stable sort -> globally monotone timestamps (the CI check).
+    timed.sort_by(|a, b| OrdF64(a.0).cmp(&OrdF64(b.0)));
+    meta.extend(timed.into_iter().map(|(_, j)| j));
+    Json::obj(vec![
+        ("traceEvents", Json::arr(meta)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .encode()
+}
+
+/// Long-format probes CSV: one `fleet` row plus one row per instance
+/// and per shared link, per sample.  Non-applicable columns are empty.
+pub fn probes_csv(r: &RunReport) -> String {
+    probes_csv_from(&r.probes)
+}
+
+pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
+    let mut out =
+        String::from("t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending\n");
+    for p in probes {
+        let load: usize = p.instances.iter().map(|i| i.load).sum();
+        let busy = p.instances.iter().filter(|i| i.busy).count();
+        let kv: f64 = p.instances.iter().map(|i| i.kv_bytes).sum();
+        let (streams, rate) = p
+            .links
+            .iter()
+            .find(|l| l.tier == "interconnect")
+            .map(|l| (l.streams, l.rate))
+            .unwrap_or((0, 0.0));
+        out.push_str(&format!(
+            "{:.3},fleet,,{},{},{:.4},{},{:.3},{}\n",
+            p.t, load, busy, kv / 1e9, streams, rate / 1e9, p.pending
+        ));
+        for (i, ip) in p.instances.iter().enumerate() {
+            out.push_str(&format!(
+                "{:.3},instance,{},{},{},{:.4},,,\n",
+                p.t, i, ip.load, ip.busy as u8, ip.kv_bytes / 1e9
+            ));
+        }
+        for l in p.links.iter().filter(|l| l.tier != "interconnect") {
+            let id = if l.tier == "uplink" {
+                l.chassis.to_string()
+            } else {
+                String::new()
+            };
+            out.push_str(&format!(
+                "{:.3},{},{},,,,{},{:.3},\n",
+                p.t, l.tier, id, l.streams, l.rate / 1e9
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans_cfg() -> TelemetryConfig {
+        TelemetryConfig { spans: true, ..Default::default() }
+    }
+
+    #[test]
+    fn span_components_sum_and_split() {
+        let mut t = Telemetry::new(spans_cfg(), 1, 2, 0);
+        t.on_arrival(0, 1.0);
+        t.on_prefill_start(0, 2.0);
+        t.on_first_token(0, 3.5);
+        t.on_xfer_start(0, 3.5, 0.4); // wire price 0.4s
+        t.on_xfer_done(0, 4.5); // actually took 1.0s -> 0.6s slowdown
+        t.on_decode_start(0, 5.0);
+        t.on_decode_done(0, 5.2, false);
+        t.on_decode_start(0, 5.3);
+        t.on_decode_done(0, 5.5, true);
+        let s = t.reqs[0].span;
+        assert!((s.queue_wait - 1.0).abs() < 1e-12);
+        assert!((s.prefill - 1.5).abs() < 1e-12);
+        assert!((s.xfer_wire - 0.4).abs() < 1e-12);
+        assert!((s.xfer_slow - 0.6).abs() < 1e-12);
+        assert!((s.decode - 0.4).abs() < 1e-12);
+        assert!((s.stall - 0.6).abs() < 1e-12);
+        assert!((s.total() - 4.5).abs() < 1e-12, "components == JCT");
+        assert_eq!(t.reqs[0].phase, Phase::Done);
+    }
+
+    #[test]
+    fn zero_duration_and_unknown_requests_are_safe() {
+        let mut t = Telemetry::new(spans_cfg(), 1, 1, 0);
+        // Unknown request id (engine unit tests do this): no panic.
+        t.on_xfer_start(99, 0.0, 1.0);
+        t.on_xfer_done(99, 0.0);
+        // Zero-elapsed pipelined transfer: no negative buckets.
+        t.on_arrival(0, 0.0);
+        t.on_prefill_start(0, 0.0);
+        t.on_first_token(0, 1.0);
+        t.on_xfer_start(0, 1.0, 0.5);
+        t.on_xfer_done(0, 1.0);
+        let s = t.reqs[0].span;
+        assert_eq!(s.xfer_wire, 0.0);
+        assert_eq!(s.xfer_slow, 0.0);
+        assert!((s.total() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_hooks_do_nothing() {
+        let mut t = Telemetry::new(TelemetryConfig::off(), 4, 4, 2);
+        t.on_arrival(0, 1.0);
+        t.on_prefill_start(0, 2.0);
+        t.work_start(0, 1.0, "prefill".into());
+        t.work_end(0, 2.0);
+        t.stream_admitted(0, 1, 0, Some((0, 1)), true, 5e9);
+        assert!(t.reqs.is_empty());
+        assert!(t.trace_events.is_empty());
+        assert!(t.probes.is_empty());
+        assert_eq!(t.total_alloc, 0.0);
+        let (spans, breakdown) = t.spans_report(&[]);
+        assert!(spans.is_empty() && breakdown.is_none());
+        assert!(t.imbalance().is_none());
+        assert!(t.next_probe_due().is_none());
+    }
+
+    #[test]
+    fn stream_ledger_tracks_link_allocations() {
+        let cfg = TelemetryConfig {
+            probe_interval: Some(1.0),
+            ..Default::default()
+        };
+        let mut t = Telemetry::new(cfg, 4, 4, 2);
+        t.stream_admitted(0, 2, 7, Some((0, 1)), true, 3e9);
+        t.stream_admitted(0, 1, 8, None, false, 5e9);
+        assert_eq!(t.admitted_streams(), 2);
+        assert_eq!(t.uplink_alloc, vec![3e9, 3e9]);
+        assert_eq!(t.spine_alloc, 3e9);
+        assert_eq!(t.total_alloc, 8e9);
+        t.stream_released(0, 2, 7);
+        assert_eq!(t.uplink_alloc, vec![0.0, 0.0]);
+        assert_eq!(t.spine_alloc, 0.0);
+        assert_eq!(t.total_alloc, 5e9);
+        // Releasing an unknown stream is a no-op.
+        t.stream_released(3, 3, 3);
+        assert_eq!(t.admitted_streams(), 1);
+    }
+
+    #[test]
+    fn imbalance_math() {
+        let cfg = TelemetryConfig {
+            probe_interval: Some(1.0),
+            ..Default::default()
+        };
+        let mut t = Telemetry::new(cfg, 0, 2, 0);
+        let inst = |load: usize| InstProbe {
+            load,
+            busy: load > 0,
+            kv_bytes: 0.0,
+        };
+        // Idle sample: skipped.
+        t.record_sample(ProbeSample {
+            t: 1.0,
+            pending: 0,
+            instances: vec![inst(0), inst(0)],
+            links: Vec::new(),
+        });
+        // loads [4, 0]: mean 2, max 4, pop-std 2 -> cv 1.0.
+        t.record_sample(ProbeSample {
+            t: 2.0,
+            pending: 1,
+            instances: vec![inst(4), inst(0)],
+            links: Vec::new(),
+        });
+        let rep = t.imbalance().unwrap();
+        assert_eq!(rep.samples, 1);
+        assert!((rep.load_max_over_mean - 2.0).abs() < 1e-12);
+        assert!((rep.load_cv - 1.0).abs() < 1e-12);
+        assert_eq!(t.next_probe_due(), Some(3.0));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_monotone() {
+        let cfg = TelemetryConfig { trace: true, ..Default::default() };
+        let mut t = Telemetry::new(cfg, 2, 2, 1);
+        t.work_start(0, 0.5, "prefill x2".into());
+        t.work_end(0, 1.5);
+        t.xfer_span_start(0, 1, 0, 1.5, "kv", TraceTrack::Uplink(0));
+        t.xfer_span_end(0, 1, 0, 2.0);
+        t.work_start(1, 0.2, "decode b4".into());
+        t.work_end(1, 0.9);
+        let doc = chrome_trace_from(&t.trace_events, &[]);
+        let parsed = Json::parse(&doc).expect("valid JSON");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        let mut n_x = 0;
+        let mut n_async = 0;
+        let mut last_ts = f64::NEG_INFINITY;
+        for e in events {
+            let ph = e.get("ph").and_then(|p| p.as_str()).unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let ts = e.get("ts").and_then(|x| x.as_f64()).unwrap();
+            assert!(ts >= last_ts, "timestamps must be monotone");
+            last_ts = ts;
+            match ph {
+                "X" => {
+                    n_x += 1;
+                    assert!(e.get("dur").and_then(|x| x.as_f64()).unwrap()
+                            >= 0.0);
+                }
+                "b" | "e" => n_async += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(n_x, 2);
+        assert_eq!(n_async, 2);
+    }
+
+    #[test]
+    fn probes_csv_shape() {
+        let sample = ProbeSample {
+            t: 1.0,
+            pending: 3,
+            instances: vec![
+                InstProbe { load: 2, busy: true, kv_bytes: 2e9 },
+                InstProbe { load: 0, busy: false, kv_bytes: 0.0 },
+            ],
+            links: vec![
+                LinkProbe { tier: "uplink", chassis: 0, streams: 1, rate: 4e9 },
+                LinkProbe { tier: "spine", chassis: 0, streams: 1, rate: 4e9 },
+                LinkProbe {
+                    tier: "interconnect",
+                    chassis: 0,
+                    streams: 2,
+                    rate: 9e9,
+                },
+            ],
+        };
+        let csv = probes_csv_from(&[sample]);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        // header + fleet + 2 instances + uplink + spine.
+        assert_eq!(lines.len(), 6);
+        let n_cols = lines[0].split(',').count();
+        for l in &lines {
+            assert_eq!(l.split(',').count(), n_cols, "ragged row: {l}");
+        }
+        assert!(lines[1].starts_with("1.000,fleet,,2,1,2.0000,2,9.000,3"));
+    }
+}

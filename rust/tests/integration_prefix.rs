@@ -40,6 +40,17 @@ fn chat_end_to_end_nonzero_hit_rate() {
         .expect("prefix_hit_rate column");
     let reported: f64 = cols[hit_col].parse().unwrap();
     assert!(reported > 0.0);
+    // Telemetry columns exist in every row (zeros when telemetry is
+    // off, as here) so sweep CSVs stay rectangular.
+    for name in ["span_queue_s", "load_cv", "mean_kv_gb",
+                 "prefix_evictions"] {
+        let col = header_cols
+            .iter()
+            .position(|c| c.trim() == name)
+            .unwrap_or_else(|| panic!("{name} column missing"));
+        let v: f64 = cols[col].parse().unwrap();
+        assert!(v >= 0.0, "{name} = {v}");
+    }
 }
 
 /// The headline property: on both session workloads, prefix-locality

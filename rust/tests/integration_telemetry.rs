@@ -1,0 +1,208 @@
+//! Run-telemetry integration (ISSUE 6): span-breakdown conservation
+//! across every registry scheduler under BOTH contention models,
+//! zero-perturbation (telemetry-on vs telemetry-off runs are
+//! bit-identical on every core metric) over randomized scenarios, and
+//! exporter well-formedness (Chrome-trace JSON + probes CSV).
+
+use accellm::builder::SimBuilder;
+use accellm::registry::{SchedSpec, SchedulerRegistry};
+use accellm::sim::{chrome_trace_json, probes_csv, ContentionModel,
+                   RunReport, TelemetryConfig};
+use accellm::util::json::Json;
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::workload::{WorkloadSpec, MIXED};
+
+/// Small contended mixed fleet: cross-chassis transfers, both device
+/// classes, cheap enough to sweep every scheduler twice.
+const CLUSTER: &str = "mixed:h100x2+910b2x2";
+
+fn run_one(sched: &str, model: ContentionModel,
+           tel: TelemetryConfig) -> RunReport {
+    SimBuilder::parse_cluster(CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(2.0)
+        .contention(2.0)
+        .contention_model(model)
+        .telemetry(tel)
+        .workload(MIXED, 10.0, 20.0, 7)
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"))
+        .run()
+}
+
+const MODELS: [ContentionModel; 2] =
+    [ContentionModel::Admission, ContentionModel::MaxMin];
+
+/// The tentpole invariant: every finished request's span components
+/// (queue + prefill + wire + slowdown + decode + stall) sum to its
+/// measured JCT within 1e-9 — for every sweep scheduler, under both
+/// bandwidth-sharing models.
+#[test]
+fn span_components_sum_to_jct_for_every_scheduler_and_model() {
+    for model in MODELS {
+        for sched in SchedulerRegistry::sweep() {
+            let r = run_one(sched, model, TelemetryConfig::full(1.0));
+            let tag = format!("{sched}/{}", model.name());
+            assert!(r.completed > 0, "{tag}: nothing completed");
+            assert_eq!(r.spans.len(), r.completed,
+                       "{tag}: span per finished request");
+            for s in &r.spans {
+                let b = &s.span;
+                for (name, v) in [("queue_wait", b.queue_wait),
+                                  ("prefill", b.prefill),
+                                  ("xfer_wire", b.xfer_wire),
+                                  ("xfer_slow", b.xfer_slow),
+                                  ("decode", b.decode),
+                                  ("stall", b.stall)] {
+                    assert!(v >= 0.0, "{tag} req {}: {name} = {v}", s.req);
+                }
+                assert!((b.total() - s.jct).abs() < 1e-9,
+                        "{tag} req {}: components {} != jct {}",
+                        s.req, b.total(), s.jct);
+            }
+            // The aggregated breakdown is the per-span mean, so its
+            // components sum to the mean JCT.
+            let b = r.breakdown.as_ref().expect("spans enabled");
+            assert_eq!(b.n, r.completed, "{tag}");
+            let sum = b.queue_wait_mean + b.prefill_mean + b.xfer_wire_mean
+                + b.xfer_slow_mean + b.decode_mean + b.stall_mean;
+            assert!((sum - r.jct_mean).abs() < 1e-6,
+                    "{tag}: breakdown means {sum} != jct_mean {}",
+                    r.jct_mean);
+        }
+    }
+}
+
+/// Zero-overhead-when-on: recording spans/probes/trace events must not
+/// move a single event — every core metric is bit-identical between a
+/// telemetry-off and a telemetry-on run of the same random scenario.
+#[test]
+fn prop_telemetry_never_perturbs_the_simulation() {
+    let scheds: Vec<&'static str> = SchedulerRegistry::sweep().collect();
+    let workloads = ["light", "mixed", "heavy", "chat"];
+    check(
+        8,
+        |rng| {
+            let sched = scheds[rng.uniform_usize(0, scheds.len() - 1)];
+            let wl = workloads[rng.uniform_usize(0, workloads.len() - 1)];
+            let rate = rng.uniform_f64(2.0, 12.0);
+            let dur = rng.uniform_f64(8.0, 20.0);
+            let seed = rng.uniform_u64(0, u64::from(u32::MAX));
+            let maxmin = rng.next_f64() < 0.5;
+            (sched, wl, rate, dur, seed, maxmin)
+        },
+        |&(sched, wl, rate, dur, seed, maxmin)| {
+            let model = if maxmin {
+                ContentionModel::MaxMin
+            } else {
+                ContentionModel::Admission
+            };
+            let spec = WorkloadSpec::by_name(wl).expect("known workload");
+            let run = |tel: TelemetryConfig| {
+                SimBuilder::parse_cluster(CLUSTER)
+                    .expect("valid cluster spec")
+                    .network_gbs(2.0)
+                    .contention(2.0)
+                    .contention_model(model)
+                    .telemetry(tel)
+                    .workload(spec, rate, dur, seed)
+                    .scheduler(SchedSpec::parse(sched).expect("known"))
+                    .run()
+            };
+            let off = run(TelemetryConfig::off());
+            let on = run(TelemetryConfig::full(0.5));
+            prop_assert(off.completed == on.completed, "completed")?;
+            prop_assert(off.makespan == on.makespan, "makespan")?;
+            prop_assert(off.jct_mean == on.jct_mean, "jct_mean")?;
+            prop_assert(off.ttft_p99 == on.ttft_p99, "ttft_p99")?;
+            prop_assert(off.tbt_mean == on.tbt_mean, "tbt_mean")?;
+            prop_assert(off.utilization == on.utilization, "utilization")?;
+            prop_assert(off.peak_kv_bytes == on.peak_kv_bytes,
+                        "peak_kv_bytes")?;
+            // The off-run stays on the zero-overhead path...
+            prop_assert(off.spans.is_empty() && off.probes.is_empty()
+                            && off.trace_events.is_empty(),
+                        "telemetry-off run recorded something")?;
+            // ...and the on-run conserves every span.
+            prop_assert(on.spans.len() == on.completed, "span count")?;
+            for s in &on.spans {
+                prop_assert((s.span.total() - s.jct).abs() < 1e-9,
+                            "span components != jct")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Exporters: the Chrome trace parses as JSON with >0 complete events
+/// and monotone timestamps; the probes CSV has a fixed header and
+/// rectangular rows; the JSON report carries breakdown + imbalance.
+#[test]
+fn exporters_emit_wellformed_artifacts() {
+    let r = run_one("accellm", ContentionModel::Admission,
+                    TelemetryConfig::full(1.0));
+    let trace = chrome_trace_json(&r);
+    let j = Json::parse(&trace).expect("trace JSON parses");
+    let events = j
+        .get("traceEvents")
+        .and_then(|x| x.as_arr())
+        .expect("traceEvents array");
+    let mut n_complete = 0;
+    let mut n_async = 0;
+    let mut last_ts = f64::NEG_INFINITY;
+    for e in events {
+        let ph = e.get("ph").and_then(|x| x.as_str()).expect("ph");
+        if ph == "M" {
+            continue; // metadata carries no timestamp
+        }
+        let ts = e.get("ts").and_then(|x| x.as_f64()).expect("ts");
+        assert!(ts >= last_ts, "timestamps regress: {ts} < {last_ts}");
+        last_ts = ts;
+        match ph {
+            "X" => {
+                n_complete += 1;
+                let dur = e.get("dur").and_then(|x| x.as_f64()).unwrap();
+                assert!(dur >= 0.0, "negative duration");
+            }
+            "b" | "e" => n_async += 1,
+            "C" => {}
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert!(n_complete > 0, "no complete (X) events");
+    assert!(n_async % 2 == 0, "unpaired async events");
+
+    let csv = probes_csv(&r);
+    let mut lines = csv.lines();
+    let header = lines.next().expect("csv header");
+    assert_eq!(header, "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending");
+    let ncol = header.split(',').count();
+    let mut rows = 0;
+    for line in lines {
+        assert_eq!(line.split(',').count(), ncol, "ragged row: {line}");
+        rows += 1;
+    }
+    assert!(rows > 0, "no probe rows");
+
+    let doc = r.to_json();
+    assert!(doc.get("breakdown").is_some(), "breakdown absent from JSON");
+    assert!(doc.get("imbalance").is_some(), "imbalance absent from JSON");
+}
+
+/// The default run path carries no telemetry: empty vectors, absent
+/// JSON objects — the golden-stability contract.
+#[test]
+fn telemetry_off_by_default_leaves_report_clean() {
+    let r = SimBuilder::parse_cluster(CLUSTER)
+        .expect("valid cluster spec")
+        .workload(MIXED, 6.0, 15.0, 7)
+        .scheduler(SchedSpec::parse("accellm").expect("known"))
+        .run();
+    assert!(r.spans.is_empty());
+    assert!(r.probes.is_empty());
+    assert!(r.trace_events.is_empty());
+    assert!(r.breakdown.is_none());
+    assert!(r.imbalance.is_none());
+    let doc = r.to_json();
+    assert!(doc.get("breakdown").is_none());
+    assert!(doc.get("imbalance").is_none());
+}
