@@ -22,9 +22,9 @@
 //! cluster/trace plumbing.
 
 use crate::registry::{SchedSpec, SchedulerRegistry};
-use crate::sim::{run, ClusterSpec, ContentionModel, DeviceSpec, LlmSpec,
-                 RunReport, Scheduler, SimConfig, TelemetryConfig,
-                 LLAMA2_70B};
+use crate::sim::{run, run_arrivals, ClusterSpec, ContentionModel,
+                 DeviceSpec, LlmSpec, RunReport, Scheduler, SimConfig,
+                 TelemetryConfig, LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec};
 
 /// Builder-style simulation run: cluster + topology knobs + trace +
@@ -38,6 +38,9 @@ pub struct SimBuilder {
     contention_model: ContentionModel,
     telemetry: TelemetryConfig,
     trace: Option<Trace>,
+    /// Streamed workload (spec, rate, duration, seed): arrivals are
+    /// generated lazily inside the engine instead of materialized.
+    stream: Option<(WorkloadSpec, f64, f64, u64)>,
     spec: Option<SchedSpec>,
 }
 
@@ -51,6 +54,7 @@ impl SimBuilder {
             contention_model: ContentionModel::Admission,
             telemetry: TelemetryConfig::off(),
             trace: None,
+            stream: None,
             spec: None,
         }
     }
@@ -79,6 +83,7 @@ impl SimBuilder {
     /// Request trace to replay.
     pub fn trace(mut self, trace: Trace) -> SimBuilder {
         self.trace = Some(trace);
+        self.stream = None;
         self
     }
 
@@ -87,6 +92,17 @@ impl SimBuilder {
     pub fn workload(self, wl: WorkloadSpec, rate: f64, duration: f64,
                     seed: u64) -> SimBuilder {
         self.trace(Trace::generate(wl, rate, duration, seed))
+    }
+
+    /// Like [`SimBuilder::workload`], but arrivals are generated
+    /// lazily inside the engine ([`crate::sim::run_arrivals`]) instead
+    /// of materialized up front — same requests, same report, bit for
+    /// bit, with O(in-flight) memory.  The fleet-scale path.
+    pub fn workload_streamed(mut self, wl: WorkloadSpec, rate: f64,
+                             duration: f64, seed: u64) -> SimBuilder {
+        self.stream = Some((wl, rate, duration, seed));
+        self.trace = None;
+        self
     }
 
     /// Inter-node network bandwidth in GB/s (intra-pair links keep
@@ -167,21 +183,65 @@ impl SimBuilder {
             .expect("SimBuilder::run needs .scheduler(..)");
         let cfg = self.sim_config();
         let mut sched = SchedulerRegistry::build(&spec, &cfg.cluster);
-        let trace = self
-            .trace
-            .expect("SimBuilder::run needs .trace(..) or .workload(..)");
-        run(&cfg, &trace, sched.as_mut())
+        Self::dispatch(cfg, self.trace, self.stream, sched.as_mut())
     }
 
     /// Run with an externally constructed scheduler (ablation
     /// variants, `Validated` wrappers, audit harnesses).
     pub fn run_with(self, sched: &mut dyn Scheduler) -> RunReport {
         let cfg = self.sim_config();
-        let trace = self
-            .trace
-            .expect("SimBuilder::run_with needs .trace(..) or .workload(..)");
-        run(&cfg, &trace, sched)
+        Self::dispatch(cfg, self.trace, self.stream, sched)
     }
+
+    fn dispatch(cfg: SimConfig, trace: Option<Trace>,
+                stream: Option<(WorkloadSpec, f64, f64, u64)>,
+                sched: &mut dyn Scheduler) -> RunReport {
+        if let Some(trace) = trace {
+            run(&cfg, &trace, sched)
+        } else if let Some((wl, rate, duration, seed)) = stream {
+            run_arrivals(&cfg, wl.name, rate,
+                         Trace::arrivals(wl, rate, duration, seed), sched)
+        } else {
+            panic!("SimBuilder needs .trace(..), .workload(..), or \
+                    .workload_streamed(..)");
+        }
+    }
+}
+
+/// Run several independently configured simulations across `threads`
+/// OS threads (work-stealing over an atomic index; no dependencies
+/// beyond `std`).  Reports come back in job order, and every job is
+/// the same deterministic single-threaded simulation it would be via
+/// [`SimBuilder::run`] — parallelism never changes results, only
+/// wall-clock.  `threads <= 1` runs serially on the caller's thread.
+pub fn run_many(jobs: Vec<SimBuilder>, threads: usize) -> Vec<RunReport> {
+    if threads <= 1 || jobs.len() <= 1 {
+        return jobs.into_iter().map(SimBuilder::run).collect();
+    }
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<SimBuilder>>> =
+        jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<RunReport>>> =
+        slots.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(slots.len()) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let job = slots[i].lock().unwrap().take().expect("job claimed once");
+                let report = job.run();
+                *results[i].lock().unwrap() = Some(report);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.into_inner().unwrap().expect("all jobs ran"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -269,5 +329,64 @@ mod tests {
         SimBuilder::homogeneous(H100, 2)
             .scheduler(SchedSpec::parse("vllm").unwrap())
             .run();
+    }
+
+    /// Tentpole contract: the streaming arrival path is
+    /// indistinguishable from materializing the trace first — for
+    /// every workload family, including the contended MaxMin engine
+    /// path where event order is most delicate.
+    #[test]
+    fn streamed_workload_matches_materialized_bit_for_bit() {
+        use crate::workload::{CHAT, SHARED_DOC};
+        for wl in [MIXED, CHAT, SHARED_DOC] {
+            for sched in ["accellm", "splitwise"] {
+                let mk = || {
+                    SimBuilder::homogeneous(H100, 4)
+                        .contention(25.0)
+                        .spine(40.0)
+                        .contention_model(ContentionModel::MaxMin)
+                        .scheduler(SchedSpec::parse(sched).unwrap())
+                };
+                let a = mk().workload(wl, 6.0, 30.0, 7).run();
+                let b = mk().workload_streamed(wl, 6.0, 30.0, 7).run();
+                assert_eq!(a.completed, b.completed, "{} {}", wl.name, sched);
+                assert_eq!(a.makespan, b.makespan, "{} {}", wl.name, sched);
+                assert_eq!(a.jct_mean, b.jct_mean, "{} {}", wl.name, sched);
+                assert_eq!(a.jct_p99, b.jct_p99, "{} {}", wl.name, sched);
+                assert_eq!(a.ttft_p99, b.ttft_p99, "{} {}", wl.name, sched);
+                assert_eq!(a.tbt_p99, b.tbt_p99, "{} {}", wl.name, sched);
+                assert_eq!(a.peak_kv_bytes, b.peak_kv_bytes,
+                           "{} {}", wl.name, sched);
+                assert_eq!(a.xfer_total_bytes, b.xfer_total_bytes,
+                           "{} {}", wl.name, sched);
+                assert_eq!(a.n_requests, b.n_requests,
+                           "{} {}", wl.name, sched);
+            }
+        }
+    }
+
+    /// Parallel sweep execution returns the same reports in the same
+    /// order as running each job serially.
+    #[test]
+    fn run_many_parallel_matches_serial() {
+        let mk_jobs = || -> Vec<SimBuilder> {
+            (0..6usize)
+                .map(|i| {
+                    SimBuilder::homogeneous(H100, 2 + (i % 3))
+                        .workload(MIXED, 4.0 + i as f64, 20.0, i as u64)
+                        .scheduler(SchedSpec::parse("accellm").unwrap())
+                })
+                .collect()
+        };
+        let serial = run_many(mk_jobs(), 1);
+        let parallel = run_many(mk_jobs(), 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.completed, p.completed);
+            assert_eq!(s.makespan, p.makespan);
+            assert_eq!(s.jct_mean, p.jct_mean);
+            assert_eq!(s.scheduler, p.scheduler);
+            assert_eq!(s.device, p.device);
+        }
     }
 }

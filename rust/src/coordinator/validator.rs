@@ -34,7 +34,7 @@ impl<S: Scheduler> Validated<S> {
         let n = ctx.n_instances();
         let mut primary_bytes = vec![0.0f64; n];
         let mut replica_bytes = vec![0.0f64; n];
-        for req in &ctx.requests {
+        for (_, req) in ctx.requests.iter() {
             if req.is_finished() {
                 assert!(req.primary.is_none() && req.replicas.is_empty(),
                         "[{site}] finished request {} still holds KV", req.id);

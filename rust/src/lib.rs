@@ -75,7 +75,7 @@ pub mod sim;
 pub mod util;
 pub mod workload;
 
-pub use builder::SimBuilder;
+pub use builder::{run_many, SimBuilder};
 pub use coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Vllm};
 pub use prefix::{ChwblRouter, PrefixIndex};
 pub use registry::{SchedSpec, SchedulerRegistry};

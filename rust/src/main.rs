@@ -5,7 +5,7 @@ use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
 use std::time::Duration;
 
-use accellm::builder::SimBuilder;
+use accellm::builder::{run_many, SimBuilder};
 use accellm::cli::Args;
 use accellm::eval::{all_figures, figure_by_id};
 use accellm::registry::{SchedSpec, SchedulerRegistry};
@@ -34,14 +34,17 @@ USAGE:
                    [--telemetry] [--probe-interval S]
                    [--trace-out FILE] [--probes-out FILE]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
-  accellm bench    [--cluster SPEC] [--rate R] [--duration S]
-                   [--out FILE] [--baseline FILE] [--max-regress F]
-                                                  # wall-clock scheduler bench (JSON)
+  accellm bench    [--scenario sweep|fleet] [--cluster SPEC] [--rate R]
+                   [--duration S] [--requests N] [--scheduler SPEC]
+                   [--reps N] [--out FILE]
+                   [--baseline FILE] [--max-regress F]
+                                                  # wall-clock perf bench (JSON)
   accellm serve    [--policy accellm|splitwise|vllm] [--instances N]
                    [--requests N] [--rate R] [--max-new N] [--slots B]
                    [--artifacts DIR] [--seed K]   # real model over PJRT
   accellm sweep    [--cluster SPEC | --device ... --instances N]
-                   [--workload ...] [--duration S] # rate sweep, all schedulers
+                   [--workload ...] [--duration S] [--jobs N]
+                                                  # rate sweep, all schedulers
   accellm --list-devices                           # known DeviceSpecs
   accellm --list-schedulers                        # schedulers + parameters
 
@@ -65,7 +68,13 @@ NIC-queued transfer holds no uplink share while waiting).
 both models; `--fig spine_sweep` saturates the spine tier under
 max-min; `--fig param_sweep` sweeps the CHWBL load factor on the mixed
 fleet.  `accellm bench --baseline FILE` fails on >`--max-regress`
-(default 0.2) per-scheduler wall-clock regression.
+(default 0.2) per-scheduler wall-clock regression; `--scenario fleet`
+instead streams ~`--requests` (default 1M) arrivals through a
+contended 1,024-instance cluster under max-min sharing without
+materializing the trace, and records wall time plus peak RSS in the
+JSON document.  `accellm sweep --jobs N` runs the rate×scheduler grid
+on N threads (each cell stays a deterministic single-threaded
+simulation, so the CSV is identical at any `--jobs`).
 `--telemetry` records per-request latency-breakdown spans and
 time-series fleet probes (adds the span_*/load_* columns and the
 breakdown/imbalance JSON objects to the report); `--probe-interval`
@@ -371,17 +380,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let (cluster, workload, _, duration, seed) = parse_common(args)?;
     let model = parse_contention_model(args)?;
-    println!("{}", RunReport::csv_header());
+    // `--jobs N` runs the sweep grid on N OS threads.  Each cell is the
+    // same deterministic single-threaded simulation (streamed arrivals,
+    // same seed), so the CSV is byte-identical at any thread count.
+    let jobs_n = args.get_usize("jobs", 1).map_err(anyhow::Error::msg)?;
+    let mut jobs = Vec::new();
     for &rate in &accellm::eval::figures::RATE_SWEEP {
-        let trace = Trace::generate(workload, rate, duration, seed);
         for name in SchedulerRegistry::sweep() {
-            let report = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+            jobs.push(SimBuilder::new(cluster.clone(), LLAMA2_70B)
                 .contention_model(model)
-                .trace(trace.clone())
-                .scheduler(SchedSpec::parse(name).expect("registry name"))
-                .run();
-            println!("{}", report.csv_row());
+                .workload_streamed(workload, rate, duration, seed)
+                .scheduler(SchedSpec::parse(name).expect("registry name")));
         }
+    }
+    println!("{}", RunReport::csv_header());
+    for report in run_many(jobs, jobs_n) {
+        println!("{}", report.csv_row());
     }
     Ok(())
 }
@@ -414,7 +428,45 @@ fn cmd_figures(args: &Args) -> anyhow::Result<()> {
 /// a previous bench document and fails on any per-scheduler wall-clock
 /// regression beyond `--max-regress` (default 0.20 = +20%).
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
-    let out = args.get_or("out", "BENCH.json");
+    let out = args.get_or("out", "BENCH.json").to_string();
+    let doc = match args.get_or("scenario", "sweep") {
+        "sweep" => bench_sweep(args)?,
+        "fleet" => bench_fleet(args)?,
+        other => anyhow::bail!(
+            "unknown --scenario '{other}' (known: sweep, fleet)"),
+    };
+    std::fs::write(&out, doc.encode() + "\n")?;
+    println!("wrote {out}");
+
+    // Perf trajectory: compare against a previous PR's bench document.
+    // `compare_bench` refuses to diff documents whose scenario identity
+    // (cluster / workload / rate / duration / request count) differs,
+    // so a sweep baseline can never silently gate a fleet run.
+    if let Some(baseline_path) = args.get("baseline") {
+        let max_regress = args
+            .get_f64("max-regress", 0.20)
+            .map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(max_regress >= 0.0,
+                        "--max-regress must be non-negative");
+        let text = std::fs::read_to_string(baseline_path).map_err(|e| {
+            anyhow::anyhow!("reading baseline {baseline_path}: {e}")
+        })?;
+        let baseline = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("baseline {baseline_path}: {e}"))?;
+        let deltas =
+            accellm::eval::compare_bench(&baseline, &doc, max_regress)?;
+        println!("perf trajectory vs {baseline_path} \
+                  (budget +{:.0}%):", max_regress * 100.0);
+        for d in &deltas {
+            println!("{}", d.line());
+        }
+    }
+    Ok(())
+}
+
+/// Default bench scenario: every registry scheduler over a fixed small
+/// materialized trace, best-of-4 wall time each.
+fn bench_sweep(args: &Args) -> anyhow::Result<Json> {
     // Same cluster resolution as simulate/sweep (--cluster or legacy
     // --device/--instances, plus --network-gbs and the contention
     // knobs).
@@ -462,7 +514,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             ("jct_mean_s", Json::num(r.jct_mean)),
         ]));
     }
-    let doc = Json::obj(vec![
+    Ok(Json::obj(vec![
         ("bench", Json::str("fixed-scenario scheduler sweep")),
         ("cluster", Json::str(&cluster.name())),
         ("workload", Json::str("mixed")),
@@ -471,31 +523,117 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         ("seed", Json::num(seed as f64)),
         ("n_requests", Json::num(trace.len() as f64)),
         ("results", Json::arr(results)),
-    ]);
-    std::fs::write(out, doc.encode() + "\n")?;
-    println!("wrote {out}");
+    ]))
+}
 
-    // Perf trajectory: compare against a previous PR's bench document.
-    if let Some(baseline_path) = args.get("baseline") {
-        let max_regress = args
-            .get_f64("max-regress", 0.20)
-            .map_err(anyhow::Error::msg)?;
-        anyhow::ensure!(max_regress >= 0.0,
-                        "--max-regress must be non-negative");
-        let text = std::fs::read_to_string(baseline_path).map_err(|e| {
-            anyhow::anyhow!("reading baseline {baseline_path}: {e}")
-        })?;
-        let baseline = Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("baseline {baseline_path}: {e}"))?;
-        let deltas =
-            accellm::eval::compare_bench(&baseline, &doc, max_regress)?;
-        println!("perf trajectory vs {baseline_path} \
-                  (budget +{:.0}%):", max_regress * 100.0);
-        for d in &deltas {
-            println!("{}", d.line());
-        }
+/// `--scenario fleet`: stream ~1M Poisson requests through a
+/// 1,024-instance contended cluster (max-min water-filling) without
+/// ever materializing the trace.  Exercises the streaming-arrival,
+/// event-slab, request-reclamation and incremental-rerate paths at
+/// fleet scale; reports wall time and peak RSS so CI can watch both.
+fn bench_fleet(args: &Args) -> anyhow::Result<Json> {
+    let mut cluster = match args.get("cluster") {
+        Some(spec) => ClusterSpec::parse(spec).map_err(anyhow::Error::msg)?,
+        None => ClusterSpec::parse("h100x1024").map_err(anyhow::Error::msg)?,
+    };
+    // Cross-chassis contention is the point of the scenario, so it is
+    // always on: --network-gbs prices inter-node links (default
+    // 25 GB/s) and every chassis uplink shares that capacity
+    // (--uplink-gbs to override).  --contention is consulted but
+    // redundant here.
+    let network_gbs =
+        args.get_f64("network-gbs", 25.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(network_gbs > 0.0, "--network-gbs must be positive");
+    cluster.set_network_bw(network_gbs * 1e9);
+    let uplink_gbs =
+        args.get_f64("uplink-gbs", network_gbs).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(uplink_gbs > 0.0, "--uplink-gbs must be positive");
+    let _ = args.has("contention");
+    cluster.enable_contention(uplink_gbs * 1e9);
+    if let Some(v) = args.get("spine-gbs") {
+        let gbs: f64 = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--spine-gbs expects GB/s"))?;
+        anyhow::ensure!(gbs > 0.0, "--spine-gbs must be positive");
+        cluster.enable_spine(gbs * 1e9);
     }
-    Ok(())
+    let model = match args.get("contention-model") {
+        Some(v) => ContentionModel::parse(v).map_err(anyhow::Error::msg)?,
+        None => ContentionModel::MaxMin,
+    };
+    let workload = WorkloadSpec::by_name(args.get_or("workload", "mixed"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --workload"))?;
+    let requests = args
+        .get_u64("requests", 1_000_000)
+        .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(requests >= 1, "--requests must be >= 1");
+    let rate = args.get_f64("rate", 20_000.0).map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(rate > 0.0, "--rate must be positive");
+    // Horizon sized so the Poisson stream yields ~`--requests` arrivals.
+    let duration = requests as f64 / rate;
+    let seed = args.get_u64("seed", 7).map_err(anyhow::Error::msg)?;
+    let sched_name = args.get_or("scheduler", "accellm");
+    let spec = SchedSpec::parse(sched_name).map_err(anyhow::Error::msg)?;
+    let reps =
+        args.get_usize("reps", 2).map_err(anyhow::Error::msg)?.max(1);
+
+    let mut best = f64::INFINITY;
+    let mut last: Option<RunReport> = None;
+    for _ in 0..reps {
+        let builder = SimBuilder::new(cluster.clone(), LLAMA2_70B)
+            .contention_model(model)
+            .workload_streamed(workload, rate, duration, seed)
+            .scheduler(spec.clone());
+        let t0 = std::time::Instant::now();
+        let r = builder.run();
+        best = best.min(t0.elapsed().as_secs_f64());
+        last = Some(r);
+    }
+    let r = last.expect("at least one repetition");
+    anyhow::ensure!(r.completed == r.n_requests,
+                    "{sched_name} dropped requests in the fleet scenario");
+    let peak_rss = peak_rss_mb();
+    println!("fleet: {} requests | {} | wall {:.2} s best \
+              ({:.0} req/s wall) | sim makespan {:.1} s{}",
+             r.n_requests, cluster.name(), best,
+             r.n_requests as f64 / best, r.makespan,
+             peak_rss
+                 .map(|mb| format!(" | peak RSS {mb:.0} MB"))
+                 .unwrap_or_default());
+
+    let result = Json::obj(vec![
+        ("scheduler", Json::str(sched_name)),
+        ("wall_ms_best", Json::num(best * 1e3)),
+        ("requests_per_wall_s", Json::num(r.n_requests as f64 / best)),
+        ("completed", Json::num(r.completed as f64)),
+        ("sim_makespan_s", Json::num(r.makespan)),
+        ("ttft_mean_s", Json::num(r.ttft_mean)),
+        ("jct_mean_s", Json::num(r.jct_mean)),
+    ]);
+    let mut fields = vec![
+        ("bench", Json::str("fleet-scale streaming scenario")),
+        ("scenario", Json::str("fleet")),
+        ("cluster", Json::str(&cluster.name())),
+        ("workload", Json::str(workload.name)),
+        ("rate", Json::num(rate)),
+        ("duration_s", Json::num(duration)),
+        ("seed", Json::num(seed as f64)),
+        ("n_requests", Json::num(r.n_requests as f64)),
+        ("results", Json::arr(vec![result])),
+    ];
+    if let Some(mb) = peak_rss {
+        fields.push(("peak_rss_mb", Json::num(mb)));
+    }
+    Ok(Json::obj(fields))
+}
+
+/// Peak resident set size of this process in MB (Linux `VmHWM`; `None`
+/// on other platforms).
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -933,6 +933,97 @@ mod tests {
         }
     }
 
+    /// The incremental-rerate premise: solving each connected component
+    /// of the flow/resource sharing graph in isolation yields the same
+    /// rates as one global water-fill.  Randomized flow sets over 6
+    /// uplink pairs, with and without a spine (spine on merges
+    /// everything into one component, exercising the trivial case too).
+    #[test]
+    fn maxmin_component_solve_equals_global_solve() {
+        // Tiny deterministic PRNG (xorshift) — no external dependency.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let uplinks: Vec<f64> =
+            (0..6).map(|i| (10 + 5 * i) as f64 * 1e9).collect();
+        for trial in 0..20 {
+            let with_spine = trial % 2 == 0;
+            let spine = with_spine.then_some(60e9);
+            let n = 3 + (next() % 12) as usize;
+            let flows: Vec<FlowSpec> = (0..n)
+                .map(|_| {
+                    let a = (next() % 6) as usize;
+                    let mut b = (next() % 6) as usize;
+                    if b == a {
+                        b = (a + 1) % 6;
+                    }
+                    FlowSpec {
+                        cap: (5 + next() % 40) as f64 * 1e9,
+                        uplinks: Some((a, b)),
+                        spine: with_spine && next() % 2 == 0,
+                    }
+                })
+                .collect();
+            let global = maxmin_rates(&flows, &uplinks, spine);
+
+            // Union-find components over shared uplinks (+ one virtual
+            // spine node), then per-component solves.
+            const SPINE_NODE: usize = 6;
+            let mut parent: Vec<usize> = (0..7).collect();
+            fn find(p: &mut Vec<usize>, x: usize) -> usize {
+                if p[x] != x {
+                    let r = find(p, p[x]);
+                    p[x] = r;
+                    r
+                }
+                else {
+                    x
+                }
+            }
+            for f in &flows {
+                let (a, b) = f.uplinks.unwrap();
+                let ra = find(&mut parent, a);
+                let rb = find(&mut parent, b);
+                parent[ra] = rb;
+                if f.spine {
+                    let rs = find(&mut parent, SPINE_NODE);
+                    let rb = find(&mut parent, b);
+                    parent[rs] = rb;
+                }
+            }
+            let mut piecewise = vec![0.0f64; n];
+            let roots: Vec<usize> =
+                (0..n).map(|i| find(&mut parent, flows[i].uplinks.unwrap().0))
+                      .collect();
+            let mut distinct = roots.clone();
+            distinct.sort_unstable();
+            distinct.dedup();
+            for &root in &distinct {
+                let members: Vec<usize> = (0..n)
+                    .filter(|&i| roots[i] == root)
+                    .collect();
+                let sub: Vec<FlowSpec> =
+                    members.iter().map(|&i| flows[i]).collect();
+                let rates = maxmin_rates(&sub, &uplinks, spine);
+                for (k, &i) in members.iter().enumerate() {
+                    piecewise[i] = rates[k];
+                }
+            }
+            for i in 0..n {
+                assert!(
+                    (piecewise[i] - global[i]).abs()
+                        <= 1e-6 * global[i].max(1.0),
+                    "trial {trial} flow {i}: component {} vs global {}",
+                    piecewise[i], global[i]
+                );
+            }
+        }
+    }
+
     #[test]
     fn network_and_link_overrides() {
         let mut c = ClusterSpec::homogeneous(H100, 4);

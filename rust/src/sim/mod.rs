@@ -14,8 +14,8 @@ pub mod perfmodel;
 pub mod request;
 pub mod telemetry;
 
-pub use engine::{run, ContentionModel, Scheduler, SimConfig, SimCtx, Work,
-                 XferKind};
+pub use engine::{run, run_arrivals, ContentionModel, Scheduler, SimConfig,
+                 SimCtx, Work, XferKind};
 pub use hardware::{known_device_names, maxmin_rates, ClusterSpec, DeviceSpec,
                    FlowSpec, InstanceSpec, Topology, ALL_DEVICES,
                    ASCEND_910B2, A100, H100, MI300X};
@@ -24,7 +24,7 @@ pub use llm::{LlmSpec, LLAMA2_70B};
 pub use metrics::{BoundedTimeline, DeviceClassReport, LinkReport,
                   MetricsCollector, RunReport};
 pub use perfmodel::PerfModel;
-pub use request::{InstId, ReqId, SimRequest};
+pub use request::{InstId, ReqId, RequestStore, SimRequest};
 pub use telemetry::{chrome_trace_json, probes_csv, sample_stats,
                     BreakdownReport, ImbalanceReport, InstProbe, LinkProbe,
                     ProbeSample, RequestSpan, SpanBreakdown, Telemetry,

@@ -91,6 +91,180 @@ impl SimRequest {
     }
 }
 
+/// Requests per [`RequestStore`] page.
+const PAGE: usize = 1024;
+
+/// What a read of a reclaimed request resolves to: an inert, finished
+/// request holding no KV.  Every field agrees with the state the engine
+/// leaves a request in at EOS reclamation time *as far as schedulers
+/// consult it* — `is_finished()` is true, `primary`/`replicas` are
+/// empty (KV was freed at EOS) — so late scheduler reads (e.g. a
+/// transfer completing after its request finished) behave exactly as
+/// they would against the live entry.
+static TOMBSTONE: SimRequest = SimRequest {
+    id: usize::MAX,
+    arrival: 0.0,
+    prompt_len: 0,
+    decode_len: 0,
+    generated: 0,
+    prefill_start: Some(0.0),
+    first_token: Some(0.0),
+    finish: Some(0.0),
+    last_token_at: 0.0,
+    primary: None,
+    replicas: Vec::new(),
+    prefix_chunks: Vec::new(),
+    cached_prefix: 0,
+};
+
+#[derive(Debug, Default)]
+struct Page {
+    /// `None` once the page has been reclaimed.
+    slots: Option<Vec<SimRequest>>,
+    /// Requests on this page that reached EOS.
+    finished: usize,
+}
+
+/// Dense, paged request table with whole-page reclamation.
+///
+/// `ReqId`s are stable admission indices — schedulers hold ids across
+/// events and the CHWBL prefix router hashes the raw id — so slots are
+/// NEVER reused (reuse would silently alias two requests).  Instead,
+/// once every request on a fully populated page has finished, the
+/// page's storage is queued for dropping; reads of a reclaimed id
+/// resolve to a static finished [`struct@TOMBSTONE`] and writes panic.
+/// That keeps resident memory proportional to requests in flight, not
+/// requests ever admitted — the difference between streaming a million
+/// requests and OOMing on them.
+///
+/// Drops are deferred: the engine calls [`RequestStore::reclaim`] at
+/// the top of its event loop, after the scheduler has finished reacting
+/// to the completions of the previous event.
+#[derive(Debug)]
+pub struct RequestStore {
+    pages: Vec<Page>,
+    /// Requests ever admitted == the next ReqId.
+    total: usize,
+    /// Whole-page reclamation on/off (off when span telemetry or a
+    /// caller needs every request alive at finalize).
+    reclaim_enabled: bool,
+    /// Fully finished, fully populated pages awaiting the deferred drop.
+    ripe: Vec<usize>,
+}
+
+impl RequestStore {
+    pub fn new(reclaim_enabled: bool) -> RequestStore {
+        RequestStore {
+            pages: Vec::new(),
+            total: 0,
+            reclaim_enabled,
+            ripe: Vec::new(),
+        }
+    }
+
+    /// Requests ever admitted (NOT the count still resident).
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Admit the next request; its `id` must equal [`Self::len`] (ids
+    /// are admission order).
+    pub fn push(&mut self, req: SimRequest) -> ReqId {
+        debug_assert_eq!(req.id, self.total, "ReqIds are admission order");
+        let id = self.total;
+        if id % PAGE == 0 {
+            self.pages.push(Page {
+                slots: Some(Vec::with_capacity(PAGE)),
+                finished: 0,
+            });
+        }
+        self.pages
+            .last_mut()
+            .unwrap()
+            .slots
+            .as_mut()
+            .expect("push into reclaimed page")
+            .push(req);
+        self.total += 1;
+        id
+    }
+
+    /// Record that `id` reached EOS; a fully finished, fully populated
+    /// page becomes ripe for the next [`Self::reclaim`].
+    pub fn note_finished(&mut self, id: ReqId) {
+        let p = id / PAGE;
+        let page = &mut self.pages[p];
+        page.finished += 1;
+        debug_assert!(page.finished <= PAGE, "page over-finished");
+        if self.reclaim_enabled
+            && page.finished == PAGE
+            && page.slots.as_ref().is_some_and(|s| s.len() == PAGE)
+        {
+            self.ripe.push(p);
+        }
+    }
+
+    /// Whether a deferred page drop is pending (cheap loop-top check).
+    pub fn has_ripe(&self) -> bool {
+        !self.ripe.is_empty()
+    }
+
+    /// Drop every ripe page's storage; returns the number of pages
+    /// freed.  Safe only between events (no borrows outstanding).
+    pub fn reclaim(&mut self) -> usize {
+        let n = self.ripe.len();
+        for p in self.ripe.drain(..) {
+            self.pages[p].slots = None;
+        }
+        n
+    }
+
+    /// Live (resident) entries, in id order, with their ids.  Reclaimed
+    /// pages are skipped — callers that need every request (span
+    /// telemetry, the validator) run with reclamation disabled.
+    pub fn iter(&self) -> impl Iterator<Item = (ReqId, &SimRequest)> {
+        self.pages.iter().enumerate().flat_map(|(p, page)| {
+            page.slots.iter().flat_map(move |slots| {
+                slots.iter().enumerate().map(move |(k, r)| (p * PAGE + k, r))
+            })
+        })
+    }
+
+    /// Resident entries (excludes reclaimed pages) — test/diagnostic.
+    pub fn resident(&self) -> usize {
+        self.pages
+            .iter()
+            .map(|p| p.slots.as_ref().map_or(0, |s| s.len()))
+            .sum()
+    }
+}
+
+impl std::ops::Index<ReqId> for RequestStore {
+    type Output = SimRequest;
+
+    fn index(&self, id: ReqId) -> &SimRequest {
+        match self.pages[id / PAGE].slots {
+            Some(ref slots) => &slots[id % PAGE],
+            None => &TOMBSTONE,
+        }
+    }
+}
+
+impl std::ops::IndexMut<ReqId> for RequestStore {
+    fn index_mut(&mut self, id: ReqId) -> &mut SimRequest {
+        let slots = self.pages[id / PAGE].slots.as_mut().unwrap_or_else(|| {
+            panic!("write to reclaimed request {id} (finished and \
+                    page-dropped); mutating finished requests is an \
+                    engine invariant violation")
+        });
+        &mut slots[id % PAGE]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +285,74 @@ mod tests {
         assert_eq!(r.kv_tokens(), 300);
         r.generated = 20;
         assert_eq!(r.kv_tokens(), 320);
+    }
+
+    fn filled_store(n: usize, reclaim: bool) -> RequestStore {
+        let mut store = RequestStore::new(reclaim);
+        for i in 0..n {
+            store.push(SimRequest::new(i, i as f64, 100, 10));
+        }
+        store
+    }
+
+    #[test]
+    fn store_reclaims_only_full_finished_pages() {
+        // 2.5 pages; finish everything on page 0 and half of page 1.
+        let n = 2 * PAGE + PAGE / 2;
+        let mut store = filled_store(n, true);
+        for i in 0..PAGE + PAGE / 2 {
+            store[i].finish = Some(1.0);
+            store.note_finished(i);
+        }
+        assert!(store.has_ripe());
+        assert_eq!(store.reclaim(), 1);
+        assert_eq!(store.len(), n);
+        assert_eq!(store.resident(), n - PAGE);
+        // Reclaimed ids read as finished tombstones holding no KV.
+        assert!(store[0].is_finished());
+        assert!(store[0].primary.is_none() && store[0].replicas.is_empty());
+        // Live ids still read their own state.
+        assert_eq!(store[2 * PAGE].arrival, (2 * PAGE) as f64);
+        assert!(!store[2 * PAGE].is_finished());
+        // Iteration skips the dropped page but keeps true ids.
+        let ids: Vec<ReqId> = store.iter().map(|(id, _)| id).collect();
+        assert_eq!(ids.len(), n - PAGE);
+        assert_eq!(ids[0], PAGE);
+        assert_eq!(*ids.last().unwrap(), n - 1);
+    }
+
+    #[test]
+    fn store_keeps_pages_when_reclaim_disabled() {
+        let mut store = filled_store(PAGE, false);
+        for i in 0..PAGE {
+            store[i].finish = Some(1.0);
+            store.note_finished(i);
+        }
+        assert!(!store.has_ripe());
+        assert_eq!(store.reclaim(), 0);
+        assert_eq!(store.resident(), PAGE);
+    }
+
+    #[test]
+    #[should_panic(expected = "reclaimed request")]
+    fn store_write_to_reclaimed_id_panics() {
+        let mut store = filled_store(PAGE, true);
+        for i in 0..PAGE {
+            store[i].finish = Some(1.0);
+            store.note_finished(i);
+        }
+        store.reclaim();
+        store[3].generated += 1;
+    }
+
+    #[test]
+    fn store_partial_last_page_is_never_reclaimed() {
+        let mut store = filled_store(10, true);
+        for i in 0..10 {
+            store[i].finish = Some(1.0);
+            store.note_finished(i);
+        }
+        assert!(!store.has_ripe());
+        assert_eq!(store.resident(), 10);
     }
 }

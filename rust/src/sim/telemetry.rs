@@ -344,18 +344,11 @@ pub struct Telemetry {
 }
 
 impl Telemetry {
-    pub fn new(
-        cfg: TelemetryConfig,
-        n_requests: usize,
-        n_instances: usize,
-        n_chassis: usize,
-    ) -> Self {
+    pub fn new(cfg: TelemetryConfig, n_instances: usize, n_chassis: usize) -> Self {
         Telemetry {
-            reqs: if cfg.spans {
-                vec![ReqTrack::new(); n_requests]
-            } else {
-                Vec::new()
-            },
+            // Per-request tracks grow on arrival (the engine streams
+            // arrivals, so the total is unknown up front).
+            reqs: Vec::new(),
             open_work: if cfg.trace {
                 vec![None; n_instances]
             } else {
@@ -377,9 +370,10 @@ impl Telemetry {
         if !self.cfg.spans {
             return;
         }
-        if let Some(tr) = self.reqs.get_mut(req) {
-            tr.mark = t;
+        if req >= self.reqs.len() {
+            self.reqs.resize_with(req + 1, ReqTrack::new);
         }
+        self.reqs[req].mark = t;
     }
 
     pub fn on_prefill_start(&mut self, req: ReqId, t: f64) {
@@ -600,16 +594,19 @@ impl Telemetry {
     // -- reports -----------------------------------------------------------
 
     /// Spans + fleet-mean breakdown over finished requests.
-    pub fn spans_report(
+    pub fn spans_report<'a, I>(
         &self,
-        requests: &[SimRequest],
-    ) -> (Vec<RequestSpan>, Option<BreakdownReport>) {
+        requests: I,
+    ) -> (Vec<RequestSpan>, Option<BreakdownReport>)
+    where
+        I: IntoIterator<Item = (ReqId, &'a SimRequest)>,
+    {
         if !self.cfg.spans {
             return (Vec::new(), None);
         }
         let mut spans = Vec::new();
         let mut agg = BreakdownReport::default();
-        for (i, r) in requests.iter().enumerate() {
+        for (i, r) in requests {
             let Some(finish) = r.finish else { continue };
             let Some(tr) = self.reqs.get(i) else { continue };
             spans.push(RequestSpan {
@@ -829,7 +826,7 @@ mod tests {
 
     #[test]
     fn span_components_sum_and_split() {
-        let mut t = Telemetry::new(spans_cfg(), 1, 2, 0);
+        let mut t = Telemetry::new(spans_cfg(), 2, 0);
         t.on_arrival(0, 1.0);
         t.on_prefill_start(0, 2.0);
         t.on_first_token(0, 3.5);
@@ -852,7 +849,7 @@ mod tests {
 
     #[test]
     fn zero_duration_and_unknown_requests_are_safe() {
-        let mut t = Telemetry::new(spans_cfg(), 1, 1, 0);
+        let mut t = Telemetry::new(spans_cfg(), 1, 0);
         // Unknown request id (engine unit tests do this): no panic.
         t.on_xfer_start(99, 0.0, 1.0);
         t.on_xfer_done(99, 0.0);
@@ -870,7 +867,7 @@ mod tests {
 
     #[test]
     fn disabled_hooks_do_nothing() {
-        let mut t = Telemetry::new(TelemetryConfig::off(), 4, 4, 2);
+        let mut t = Telemetry::new(TelemetryConfig::off(), 4, 2);
         t.on_arrival(0, 1.0);
         t.on_prefill_start(0, 2.0);
         t.work_start(0, 1.0, "prefill".into());
@@ -880,7 +877,8 @@ mod tests {
         assert!(t.trace_events.is_empty());
         assert!(t.probes.is_empty());
         assert_eq!(t.total_alloc, 0.0);
-        let (spans, breakdown) = t.spans_report(&[]);
+        let (spans, breakdown) =
+            t.spans_report(std::iter::empty::<(ReqId, &SimRequest)>());
         assert!(spans.is_empty() && breakdown.is_none());
         assert!(t.imbalance().is_none());
         assert!(t.next_probe_due().is_none());
@@ -892,7 +890,7 @@ mod tests {
             probe_interval: Some(1.0),
             ..Default::default()
         };
-        let mut t = Telemetry::new(cfg, 4, 4, 2);
+        let mut t = Telemetry::new(cfg, 4, 2);
         t.stream_admitted(0, 2, 7, Some((0, 1)), true, 3e9);
         t.stream_admitted(0, 1, 8, None, false, 5e9);
         assert_eq!(t.admitted_streams(), 2);
@@ -914,7 +912,7 @@ mod tests {
             probe_interval: Some(1.0),
             ..Default::default()
         };
-        let mut t = Telemetry::new(cfg, 0, 2, 0);
+        let mut t = Telemetry::new(cfg, 2, 0);
         let inst = |load: usize| InstProbe {
             load,
             busy: load > 0,
@@ -944,7 +942,7 @@ mod tests {
     #[test]
     fn chrome_trace_is_valid_and_monotone() {
         let cfg = TelemetryConfig { trace: true, ..Default::default() };
-        let mut t = Telemetry::new(cfg, 2, 2, 1);
+        let mut t = Telemetry::new(cfg, 2, 1);
         t.work_start(0, 0.5, "prefill x2".into());
         t.work_end(0, 1.5);
         t.xfer_span_start(0, 1, 0, 1.5, "kv", TraceTrack::Uplink(0));

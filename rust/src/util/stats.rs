@@ -1,38 +1,151 @@
-//! Streaming statistics: running moments, exact percentile sets, and
-//! fixed-resolution latency histograms.
+//! Streaming statistics: running moments, exact-then-sketched
+//! percentile summaries, and fixed-resolution latency histograms.
 //!
 //! The metric pipeline (TTFT / TBT / JCT / cost-efficiency, Section 3.4 of
-//! the paper) is built on these.  `Summary` keeps every sample (exact
-//! percentiles — the figure harness wants faithful p50/p99, and sample
-//! counts are bounded by simulated requests), `Histogram` is the O(1)
-//! alternative used on the real serving hot path.
+//! the paper) is built on these.  `Summary` keeps every sample while the
+//! count stays below [`Summary::SPILL`] (exact percentiles — the figure
+//! harness wants faithful p50/p99, and golden runs are small), then
+//! spills into a mergeable quantile sketch — a log-bucketed [`Histogram`]
+//! plus an exact worst-K tail — so fleet-scale runs (hundreds of
+//! millions of TBT samples) stay O(1) in memory.
 
-/// Exact-sample summary: O(n) memory, exact quantiles.
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::OrdF64;
+
+/// Percentile summary: exact below [`Summary::SPILL`] samples, a
+/// mergeable quantile sketch past it.
+///
+/// While exact, behavior (including float rounding of `mean` and the
+/// linear-interpolated `quantile`) is byte-identical to the historical
+/// all-samples implementation — committed goldens never spill.  Once
+/// spilled, memory is O(`SPILL` + `TAIL_K`) regardless of sample count:
+/// quantiles come from the histogram (~2% relative error) except deep
+/// in the upper tail, where the worst-K heap keeps the largest `TAIL_K`
+/// samples exactly (so `max`, and any quantile whose rank lands in the
+/// retained tail, stay exact).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     samples: Vec<f64>,
     sorted: bool,
+    sketch: Option<Box<TailSketch>>,
+}
+
+/// Spilled state: log-bucketed body + exact upper tail + running moments.
+#[derive(Clone, Debug)]
+struct TailSketch {
+    hist: Histogram,
+    /// Min-heap of the `TAIL_K` largest samples (exact extreme tail).
+    tail: BinaryHeap<Reverse<OrdF64>>,
+    sum_sq: f64,
+}
+
+impl TailSketch {
+    fn new() -> Self {
+        TailSketch {
+            hist: Histogram::latency(),
+            tail: BinaryHeap::with_capacity(Summary::TAIL_K + 1),
+            sum_sq: 0.0,
+        }
+    }
+
+    fn add(&mut self, x: f64) {
+        self.hist.add(x);
+        self.sum_sq += x * x;
+        self.offer_tail(x);
+    }
+
+    fn offer_tail(&mut self, x: f64) {
+        if self.tail.len() < Summary::TAIL_K {
+            self.tail.push(Reverse(OrdF64(x)));
+        } else if let Some(&Reverse(min)) = self.tail.peek() {
+            if x > min.0 {
+                self.tail.pop();
+                self.tail.push(Reverse(OrdF64(x)));
+            }
+        }
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        let n = self.hist.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
+        // Ranks >= n - tail.len() are held exactly by the worst-K heap;
+        // interpolate there, fall back to the histogram elsewhere.
+        let mut tail: Vec<f64> = self.tail.iter().map(|r| r.0 .0).collect();
+        tail.sort_by(f64::total_cmp);
+        let start = (n as usize - tail.len()) as f64;
+        if pos >= start {
+            let off = pos - start;
+            let lo = off.floor() as usize;
+            let hi = (off.ceil() as usize).min(tail.len() - 1);
+            if lo == hi {
+                tail[lo]
+            } else {
+                let frac = off - lo as f64;
+                tail[lo] * (1.0 - frac) + tail[hi] * frac
+            }
+        } else {
+            self.hist.quantile(q)
+        }
+    }
 }
 
 impl Summary {
+    /// Sample count at which the exact vector spills into the sketch.
+    pub const SPILL: usize = 131_072;
+    /// Largest samples retained exactly after the spill.
+    pub const TAIL_K: usize = 16_384;
+
     pub fn new() -> Self {
         Self::default()
     }
 
     pub fn add(&mut self, x: f64) {
+        if let Some(s) = &mut self.sketch {
+            s.add(x);
+            return;
+        }
         self.samples.push(x);
         self.sorted = false;
+        if self.samples.len() >= Self::SPILL {
+            self.spill();
+        }
+    }
+
+    fn spill(&mut self) {
+        let mut s = Box::new(TailSketch::new());
+        for &x in &self.samples {
+            s.add(x);
+        }
+        self.samples = Vec::new();
+        self.sorted = false;
+        self.sketch = Some(s);
+    }
+
+    /// True once the summary has abandoned exact samples for the sketch.
+    pub fn is_sketched(&self) -> bool {
+        self.sketch.is_some()
     }
 
     pub fn len(&self) -> usize {
-        self.samples.len()
+        match &self.sketch {
+            Some(s) => s.hist.count() as usize,
+            None => self.samples.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples.is_empty()
+        self.len() == 0
     }
 
     pub fn mean(&self) -> f64 {
+        if let Some(s) = &self.sketch {
+            return s.hist.mean();
+        }
         if self.samples.is_empty() {
             return 0.0;
         }
@@ -40,10 +153,23 @@ impl Summary {
     }
 
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        match &self.sketch {
+            Some(s) => s.hist.sum(),
+            None => self.samples.iter().sum(),
+        }
     }
 
     pub fn std(&self) -> f64 {
+        if let Some(s) = &self.sketch {
+            let n = s.hist.count();
+            if n < 2 {
+                return 0.0;
+            }
+            let m = s.hist.mean();
+            return ((s.sum_sq - n as f64 * m * m) / (n - 1) as f64)
+                .max(0.0)
+                .sqrt();
+        }
         let n = self.samples.len();
         if n < 2 {
             return 0.0;
@@ -56,14 +182,16 @@ impl Summary {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples
-                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
 
     /// Linear-interpolated quantile, q in [0, 1].
     pub fn quantile(&mut self, q: f64) -> f64 {
+        if let Some(s) = &self.sketch {
+            return s.quantile(q);
+        }
         if self.samples.is_empty() {
             return 0.0;
         }
@@ -93,16 +221,48 @@ impl Summary {
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        match &self.sketch {
+            Some(s) => s.hist.max,
+            None => {
+                self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+            }
+        }
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        match &self.sketch {
+            Some(s) => s.hist.min,
+            None => self.samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
     }
 
     pub fn merge(&mut self, other: &Summary) {
-        self.samples.extend_from_slice(&other.samples);
-        self.sorted = false;
+        match &other.sketch {
+            None => {
+                if let Some(s) = &mut self.sketch {
+                    for &x in &other.samples {
+                        s.add(x);
+                    }
+                } else {
+                    self.samples.extend_from_slice(&other.samples);
+                    self.sorted = false;
+                    if self.samples.len() >= Self::SPILL {
+                        self.spill();
+                    }
+                }
+            }
+            Some(o) => {
+                if self.sketch.is_none() {
+                    self.spill();
+                }
+                let s = self.sketch.as_mut().expect("just spilled");
+                s.hist.merge(&o.hist);
+                s.sum_sq += o.sum_sq;
+                for r in &o.tail {
+                    s.offer_tail(r.0 .0);
+                }
+            }
+        }
     }
 }
 
@@ -162,6 +322,10 @@ impl Histogram {
 
     pub fn count(&self) -> u64 {
         self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
     }
 
     pub fn mean(&self) -> f64 {
@@ -285,6 +449,79 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 3);
         assert!((a.max() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_spills_past_threshold_and_tracks_exact() {
+        // Reference quantiles computed by hand so the reference itself
+        // never spills.
+        let n = Summary::SPILL + 50_000;
+        let mut s = Summary::new();
+        let mut rng = Pcg64::new(17);
+        let mut all = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x = 10f64.powf(rng.uniform_f64(-3.0, 1.0));
+            s.add(x);
+            all.push(x);
+        }
+        assert!(s.is_sketched(), "must spill past SPILL samples");
+        assert_eq!(s.len(), n);
+        all.sort_by(f64::total_cmp);
+        let exact_q = |q: f64| {
+            let pos = q * (n - 1) as f64;
+            let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+            let frac = pos - lo as f64;
+            all[lo] * (1.0 - frac) + all[hi] * frac
+        };
+        let exact_mean = all.iter().sum::<f64>() / n as f64;
+        assert!((s.mean() - exact_mean).abs() / exact_mean < 1e-9);
+        for q in [0.5, 0.9, 0.99] {
+            let rel = (s.quantile(q) - exact_q(q)).abs() / exact_q(q);
+            assert!(rel < 0.08, "q={q}: rel err {rel}");
+        }
+        // Ranks inside the worst-K tail are exact, as is the max.
+        assert_eq!(s.max(), all[n - 1]);
+        let deep = 1.0 - (Summary::TAIL_K as f64 / 2.0) / (n - 1) as f64;
+        assert!((s.quantile(deep) - exact_q(deep)).abs() < 1e-12,
+                "deep-tail quantile must come from the exact worst-K heap");
+    }
+
+    #[test]
+    fn summary_below_spill_is_exact_and_unsketched() {
+        let mut s = Summary::new();
+        for i in 0..1000 {
+            s.add(i as f64);
+        }
+        assert!(!s.is_sketched());
+        assert_eq!(s.len(), 1000);
+        assert!((s.quantile(0.5) - 499.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_merge_across_spill_states() {
+        // exact + exact staying small: unchanged semantics.
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        a.add(1.0);
+        b.add(3.0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+        // exact merged into a sketched summary.
+        let mut big = Summary::new();
+        for _ in 0..Summary::SPILL {
+            big.add(0.5);
+        }
+        assert!(big.is_sketched());
+        big.merge(&b);
+        assert_eq!(big.len(), Summary::SPILL + 1);
+        assert_eq!(big.max(), 3.0);
+        // sketch merged into sketch: counts add, max survives.
+        let mut big2 = big.clone();
+        big2.merge(&big);
+        assert_eq!(big2.len(), 2 * (Summary::SPILL + 1));
+        assert_eq!(big2.max(), 3.0);
+        assert!((big2.mean() - big.mean()).abs() < 1e-12);
     }
 
     #[test]

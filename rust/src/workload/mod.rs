@@ -145,45 +145,125 @@ pub struct Trace {
     pub requests: Vec<RequestTemplate>,
 }
 
+/// Lazily generated, time-sorted arrival sequence: the streaming
+/// counterpart of [`Trace::generate`].  Yields exactly the requests the
+/// materialized trace would contain, in the same order, from the same
+/// seed — `Trace::generate(..).requests == Trace::arrivals(..).collect()`
+/// bit for bit — but holds O(active sessions) state instead of the whole
+/// trace, so a million-request run never allocates a million templates
+/// up front.
+pub enum ArrivalStream {
+    Poisson(PoissonStream),
+    Chat(sessions::ChatStream),
+    SharedDoc(sessions::SharedDocStream),
+}
+
+impl Iterator for ArrivalStream {
+    type Item = RequestTemplate;
+
+    fn next(&mut self) -> Option<RequestTemplate> {
+        match self {
+            ArrivalStream::Poisson(s) => s.next(),
+            ArrivalStream::Chat(s) => s.next(),
+            ArrivalStream::SharedDoc(s) => s.next(),
+        }
+    }
+}
+
+/// Streaming open-loop Poisson arrivals with i.i.d. uniform lengths
+/// (the paper's methodology).  Draw order per request is identical to
+/// the historical materialized loop: gap, prompt, decode.
+pub struct PoissonStream {
+    spec: WorkloadSpec,
+    rate: f64,
+    duration: f64,
+    t: f64,
+    rng: Pcg64,
+    done: bool,
+}
+
+impl PoissonStream {
+    pub fn new(spec: WorkloadSpec, rate: f64, duration: f64,
+               seed: u64) -> PoissonStream {
+        assert!(rate > 0.0 && duration > 0.0);
+        PoissonStream {
+            spec,
+            rate,
+            duration,
+            t: 0.0,
+            rng: Pcg64::new(seed),
+            done: false,
+        }
+    }
+}
+
+impl Iterator for PoissonStream {
+    type Item = RequestTemplate;
+
+    fn next(&mut self) -> Option<RequestTemplate> {
+        if self.done {
+            return None;
+        }
+        self.t += self.rng.exponential(self.rate);
+        if self.t >= self.duration {
+            self.done = true;
+            return None;
+        }
+        Some(RequestTemplate {
+            arrival: self.t,
+            prompt_len: self.rng.uniform_u64(self.spec.prefill_min as u64,
+                                             self.spec.prefill_max as u64)
+                as u32,
+            decode_len: self.rng.uniform_u64(self.spec.decode_min as u64,
+                                             self.spec.decode_max as u64)
+                as u32,
+            prefix_chunks: Vec::new(),
+        })
+    }
+}
+
 impl Trace {
+    /// Streaming arrival generator for the spec's [`WorkloadKind`] —
+    /// feed directly to [`crate::sim::run_arrivals`] to simulate
+    /// without materializing the trace.
+    pub fn arrivals(spec: WorkloadSpec, rate: f64, duration: f64,
+                    seed: u64) -> ArrivalStream {
+        match spec.kind {
+            WorkloadKind::Uniform => {
+                ArrivalStream::Poisson(PoissonStream::new(spec, rate,
+                                                          duration, seed))
+            }
+            WorkloadKind::Chat => ArrivalStream::Chat(
+                sessions::ChatStream::new(spec, rate, duration, seed)),
+            WorkloadKind::SharedDoc => ArrivalStream::SharedDoc(
+                sessions::SharedDocStream::new(spec, rate, duration, seed)),
+        }
+    }
+
     /// Generate a trace according to the spec's [`WorkloadKind`]: the
     /// single entry point the CLI / config / eval layers use, so every
-    /// workload family is selectable by name.
+    /// workload family is selectable by name.  Materializes
+    /// [`Trace::arrivals`].
     pub fn generate(spec: WorkloadSpec, rate: f64, duration: f64,
                     seed: u64) -> Trace {
-        match spec.kind {
-            WorkloadKind::Uniform => Trace::poisson(spec, rate, duration, seed),
-            WorkloadKind::Chat => {
-                sessions::chat_trace(spec, rate, duration, seed)
-            }
-            WorkloadKind::SharedDoc => {
-                sessions::shared_doc_trace(spec, rate, duration, seed)
-            }
+        Trace {
+            spec,
+            rate,
+            seed,
+            requests: Trace::arrivals(spec, rate, duration, seed).collect(),
         }
     }
 
     /// Generate an open-loop Poisson trace of `rate` req/s for `duration`
-    /// seconds with i.i.d. uniform lengths (the paper's methodology).
+    /// seconds with i.i.d. uniform lengths, regardless of the spec's
+    /// kind (the paper's methodology).
     pub fn poisson(spec: WorkloadSpec, rate: f64, duration: f64, seed: u64) -> Trace {
-        assert!(rate > 0.0 && duration > 0.0);
-        let mut rng = Pcg64::new(seed);
-        let mut t = 0.0;
-        let mut requests = Vec::new();
-        loop {
-            t += rng.exponential(rate);
-            if t >= duration {
-                break;
-            }
-            requests.push(RequestTemplate {
-                arrival: t,
-                prompt_len: rng.uniform_u64(spec.prefill_min as u64,
-                                            spec.prefill_max as u64) as u32,
-                decode_len: rng.uniform_u64(spec.decode_min as u64,
-                                            spec.decode_max as u64) as u32,
-                prefix_chunks: Vec::new(),
-            });
+        Trace {
+            spec,
+            rate,
+            seed,
+            requests: PoissonStream::new(spec, rate, duration, seed).collect(),
         }
-        Trace { spec, rate, seed, requests }
     }
 
     /// A burst of `n` simultaneous requests at t=0 (closed experiments,

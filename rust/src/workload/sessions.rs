@@ -25,8 +25,12 @@
 //! exactly the same request sequence, and per-session RNG streams are
 //! forked so session contents do not depend on arrival interleaving.
 
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
 use crate::prefix::{chunk_hash, CHUNK_TOKENS};
 use crate::util::rng::Pcg64;
+use crate::util::OrdF64;
 use crate::workload::{RequestTemplate, Trace, WorkloadSpec};
 
 /// Turns per chat session (uniform, inclusive).
@@ -54,38 +58,77 @@ fn prompt_chunks(stream_key: u64, shared_len: u32) -> Vec<u64> {
         .collect()
 }
 
-/// Multi-turn chat trace.  `rate` is the target *request* rate; session
-/// arrivals run at `rate / E[turns]` so the generated request rate
-/// matches the uniform workloads at the same `--rate`.
-pub fn chat_trace(spec: WorkloadSpec, rate: f64, duration: f64,
-                  seed: u64) -> Trace {
-    assert!(rate > 0.0 && duration > 0.0);
-    let mut rng = Pcg64::new(seed);
-    let mean_turns = (TURNS_MIN + TURNS_MAX) as f64 / 2.0;
-    let session_rate = rate / mean_turns;
-    let mut requests = Vec::new();
-    let mut t = 0.0;
-    let mut session = 0u64;
-    loop {
-        t += rng.exponential(session_rate);
-        if t >= duration {
-            break;
+/// Streaming multi-turn chat arrivals.  `rate` is the target *request*
+/// rate; session arrivals run at `rate / E[turns]` so the generated
+/// request rate matches the uniform workloads at the same `--rate`.
+///
+/// Sessions spawn lazily in start-time order; each spawned session's
+/// turns are generated eagerly from its forked RNG (bounded: at most
+/// [`TURNS_MAX`] turns) and merged with every other live session's
+/// turns through a k-way heap keyed `(arrival, session)`.  Because a
+/// session's turns are emitted in session order and arrivals within a
+/// session strictly increase, this yields exactly the order the
+/// historical implementation produced by materializing everything and
+/// stable-sorting by arrival (ties broken by session spawn order).
+/// State is O(sessions active at the cursor), not O(total requests).
+pub struct ChatStream {
+    spec: WorkloadSpec,
+    duration: f64,
+    rng: Pcg64,
+    session_rate: f64,
+    /// Start time of the next un-spawned session (None: horizon hit).
+    next_session_t: Option<f64>,
+    next_session_idx: u64,
+    /// Earliest remaining turn of each live session.
+    heap: BinaryHeap<Reverse<(OrdF64, u64)>>,
+    /// Remaining turns per live session, front = earliest.
+    pending: HashMap<u64, VecDeque<RequestTemplate>>,
+}
+
+impl ChatStream {
+    pub fn new(spec: WorkloadSpec, rate: f64, duration: f64,
+               seed: u64) -> ChatStream {
+        assert!(rate > 0.0 && duration > 0.0);
+        let mut rng = Pcg64::new(seed);
+        let mean_turns = (TURNS_MIN + TURNS_MAX) as f64 / 2.0;
+        let session_rate = rate / mean_turns;
+        let t = rng.exponential(session_rate);
+        ChatStream {
+            spec,
+            duration,
+            rng,
+            session_rate,
+            next_session_t: (t < duration).then_some(t),
+            next_session_idx: 0,
+            heap: BinaryHeap::new(),
+            pending: HashMap::new(),
         }
-        let mut srng = rng.fork(session);
+    }
+
+    /// Generate the session starting at `t` (same per-session draw
+    /// order as the historical loop: fork, stream key, turn count,
+    /// then user/decode/think per turn) and draw the next session's
+    /// start time.
+    fn spawn_session(&mut self, t: f64) {
+        let session = self.next_session_idx;
+        self.next_session_idx += 1;
+        let mut srng = self.rng.fork(session);
         let stream_key = srng.next_u64();
         let turns = srng.uniform_usize(TURNS_MIN, TURNS_MAX);
         let mut context: u32 = 0;
         let mut at = t;
+        let mut queue = VecDeque::new();
         for _ in 0..turns {
-            if at >= duration {
+            if at >= self.duration {
                 break;
             }
-            let user = srng.uniform_u64(spec.prefill_min as u64,
-                                        spec.prefill_max as u64) as u32;
+            let user = srng.uniform_u64(self.spec.prefill_min as u64,
+                                        self.spec.prefill_max as u64) as u32;
             let prompt_len = (context + user).min(MAX_CONTEXT_TOKENS);
-            let decode_len = srng.uniform_u64(spec.decode_min as u64,
-                                              spec.decode_max as u64) as u32;
-            requests.push(RequestTemplate {
+            let decode_len = srng.uniform_u64(self.spec.decode_min as u64,
+                                              self.spec.decode_max as u64)
+                as u32;
+            queue.push_back(RequestTemplate {
                 arrival: at,
                 prompt_len,
                 decode_len,
@@ -95,47 +138,126 @@ pub fn chat_trace(spec: WorkloadSpec, rate: f64, duration: f64,
             at += decode_len as f64 * TOKEN_PACE_S
                 + srng.exponential(1.0 / THINK_MEAN_S);
         }
-        session += 1;
+        if let Some(front) = queue.front() {
+            self.heap.push(Reverse((OrdF64(front.arrival), session)));
+            self.pending.insert(session, queue);
+        }
+        let next = t + self.rng.exponential(self.session_rate);
+        self.next_session_t = (next < self.duration).then_some(next);
     }
-    requests.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    Trace { spec, rate, seed, requests }
 }
 
-/// Shared-document fan-out trace: Poisson request arrivals at `rate`,
-/// each picking one of [`N_DOCS`] documents uniformly and appending a
-/// short query suffix.  Only the document part carries prefix chunks.
+impl Iterator for ChatStream {
+    type Item = RequestTemplate;
+
+    fn next(&mut self) -> Option<RequestTemplate> {
+        // Spawn every session that could precede the earliest pending
+        // turn: a session's first turn arrives at its start time, and
+        // session start times increase, so once the next start time
+        // passes the heap minimum no un-spawned session can matter yet.
+        while let Some(ts) = self.next_session_t {
+            let due = self
+                .heap
+                .peek()
+                .map_or(true, |Reverse((a, _))| ts <= a.0);
+            if !due {
+                break;
+            }
+            self.spawn_session(ts);
+        }
+        let Reverse((_, session)) = self.heap.pop()?;
+        let queue = self.pending.get_mut(&session).expect("live session");
+        let req = queue.pop_front().expect("non-empty session queue");
+        match queue.front() {
+            Some(nx) => {
+                self.heap.push(Reverse((OrdF64(nx.arrival), session)));
+            }
+            None => {
+                self.pending.remove(&session);
+            }
+        }
+        Some(req)
+    }
+}
+
+/// Streaming shared-document fan-out arrivals: Poisson at `rate`, each
+/// request picking one of [`N_DOCS`] documents uniformly and appending
+/// a short query suffix.  Only the document part carries prefix chunks.
+pub struct SharedDocStream {
+    spec: WorkloadSpec,
+    rate: f64,
+    duration: f64,
+    t: f64,
+    rng: Pcg64,
+    docs: Vec<(u64, u32)>,
+    done: bool,
+}
+
+impl SharedDocStream {
+    pub fn new(spec: WorkloadSpec, rate: f64, duration: f64,
+               seed: u64) -> SharedDocStream {
+        assert!(rate > 0.0 && duration > 0.0);
+        let mut rng = Pcg64::new(seed);
+        let docs: Vec<(u64, u32)> = (0..N_DOCS)
+            .map(|d| {
+                let mut drng = rng.fork(d);
+                let key = drng.next_u64();
+                let len =
+                    drng.uniform_u64(DOC_MIN_TOKENS, DOC_MAX_TOKENS) as u32;
+                (key, len)
+            })
+            .collect();
+        SharedDocStream { spec, rate, duration, t: 0.0, rng, docs, done: false }
+    }
+}
+
+impl Iterator for SharedDocStream {
+    type Item = RequestTemplate;
+
+    fn next(&mut self) -> Option<RequestTemplate> {
+        if self.done {
+            return None;
+        }
+        self.t += self.rng.exponential(self.rate);
+        if self.t >= self.duration {
+            self.done = true;
+            return None;
+        }
+        let (doc_key, doc_len) =
+            self.docs[self.rng.uniform_usize(0, self.docs.len() - 1)];
+        let suffix = self.rng.uniform_u64(self.spec.prefill_min as u64,
+                                          self.spec.prefill_max as u64) as u32;
+        Some(RequestTemplate {
+            arrival: self.t,
+            prompt_len: doc_len + suffix,
+            decode_len: self.rng.uniform_u64(self.spec.decode_min as u64,
+                                             self.spec.decode_max as u64)
+                as u32,
+            prefix_chunks: prompt_chunks(doc_key, doc_len),
+        })
+    }
+}
+
+/// Multi-turn chat trace (materialized [`ChatStream`]).
+pub fn chat_trace(spec: WorkloadSpec, rate: f64, duration: f64,
+                  seed: u64) -> Trace {
+    Trace {
+        spec,
+        rate,
+        seed,
+        requests: ChatStream::new(spec, rate, duration, seed).collect(),
+    }
+}
+
+/// Shared-document fan-out trace (materialized [`SharedDocStream`]).
 pub fn shared_doc_trace(spec: WorkloadSpec, rate: f64, duration: f64,
                         seed: u64) -> Trace {
-    assert!(rate > 0.0 && duration > 0.0);
-    let mut rng = Pcg64::new(seed);
-    let docs: Vec<(u64, u32)> = (0..N_DOCS)
-        .map(|d| {
-            let mut drng = rng.fork(d);
-            let key = drng.next_u64();
-            let len =
-                drng.uniform_u64(DOC_MIN_TOKENS, DOC_MAX_TOKENS) as u32;
-            (key, len)
-        })
-        .collect();
-    let mut requests = Vec::new();
-    let mut t = 0.0;
-    loop {
-        t += rng.exponential(rate);
-        if t >= duration {
-            break;
-        }
-        let (doc_key, doc_len) = docs[rng.uniform_usize(0, docs.len() - 1)];
-        let suffix = rng.uniform_u64(spec.prefill_min as u64,
-                                     spec.prefill_max as u64) as u32;
-        requests.push(RequestTemplate {
-            arrival: t,
-            prompt_len: doc_len + suffix,
-            decode_len: rng.uniform_u64(spec.decode_min as u64,
-                                        spec.decode_max as u64) as u32,
-            prefix_chunks: prompt_chunks(doc_key, doc_len),
-        });
+    Trace {
+        spec,
+        rate,
+        seed,
+        requests: SharedDocStream::new(spec, rate, duration, seed).collect(),
     }
-    Trace { spec, rate, seed, requests }
 }
 
 #[cfg(test)]
@@ -202,7 +324,7 @@ mod tests {
             }
             multi_turn += 1;
             let mut sorted: Vec<_> = turns.clone();
-            sorted.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+            sorted.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
             for w in sorted.windows(2) {
                 let (prev, next) = (&w[0].prefix_chunks, &w[1].prefix_chunks);
                 assert!(next.len() >= prev.len(),
@@ -234,6 +356,63 @@ mod tests {
         for r in &t.requests {
             assert!(r.arrival >= prev && r.arrival < 40.0);
             prev = r.arrival;
+        }
+    }
+
+    /// The historical chat generator: materialize every session's turns
+    /// in spawn order, then stable-sort by arrival.  The lazy k-way
+    /// merge in [`ChatStream`] must reproduce it bit for bit.
+    fn chat_reference(spec: WorkloadSpec, rate: f64, duration: f64,
+                      seed: u64) -> Vec<RequestTemplate> {
+        let mut rng = Pcg64::new(seed);
+        let session_rate = rate / ((TURNS_MIN + TURNS_MAX) as f64 / 2.0);
+        let mut requests = Vec::new();
+        let mut t = 0.0;
+        let mut session = 0u64;
+        loop {
+            t += rng.exponential(session_rate);
+            if t >= duration {
+                break;
+            }
+            let mut srng = rng.fork(session);
+            let stream_key = srng.next_u64();
+            let turns = srng.uniform_usize(TURNS_MIN, TURNS_MAX);
+            let mut context: u32 = 0;
+            let mut at = t;
+            for _ in 0..turns {
+                if at >= duration {
+                    break;
+                }
+                let user = srng.uniform_u64(spec.prefill_min as u64,
+                                            spec.prefill_max as u64) as u32;
+                let prompt_len = (context + user).min(MAX_CONTEXT_TOKENS);
+                let decode_len = srng.uniform_u64(spec.decode_min as u64,
+                                                  spec.decode_max as u64)
+                    as u32;
+                requests.push(RequestTemplate {
+                    arrival: at,
+                    prompt_len,
+                    decode_len,
+                    prefix_chunks: prompt_chunks(stream_key, prompt_len),
+                });
+                context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
+                at += decode_len as f64 * TOKEN_PACE_S
+                    + srng.exponential(1.0 / THINK_MEAN_S);
+            }
+            session += 1;
+        }
+        requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        requests
+    }
+
+    #[test]
+    fn chat_stream_matches_materialized_reference() {
+        for seed in [1, 7, 42] {
+            let streamed: Vec<RequestTemplate> =
+                ChatStream::new(CHAT, 8.0, 120.0, seed).collect();
+            assert!(!streamed.is_empty());
+            assert_eq!(streamed, chat_reference(CHAT, 8.0, 120.0, seed),
+                       "seed {seed}");
         }
     }
 }
