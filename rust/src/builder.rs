@@ -22,9 +22,10 @@
 //! cluster/trace plumbing.
 
 use crate::registry::{SchedSpec, SchedulerRegistry};
-use crate::sim::{run, run_arrivals, ClusterSpec, ContentionModel,
-                 DeviceSpec, LlmSpec, RunReport, Scheduler, SimConfig,
-                 TelemetryConfig, LLAMA2_70B};
+use crate::sim::{run, run_arrivals, AutoscaleSpec, ClusterSpec,
+                 ContentionModel, DeviceSpec, LlmSpec, MembershipTimeline,
+                 RunReport, Scheduler, SimConfig, TelemetryConfig,
+                 LLAMA2_70B};
 use crate::workload::{Trace, WorkloadSpec};
 
 /// Builder-style simulation run: cluster + topology knobs + trace +
@@ -42,6 +43,8 @@ pub struct SimBuilder {
     /// generated lazily inside the engine instead of materialized.
     stream: Option<(WorkloadSpec, f64, f64, u64)>,
     spec: Option<SchedSpec>,
+    membership: Option<MembershipTimeline>,
+    autoscale: Option<AutoscaleSpec>,
 }
 
 impl SimBuilder {
@@ -56,6 +59,8 @@ impl SimBuilder {
             trace: None,
             stream: None,
             spec: None,
+            membership: None,
+            autoscale: None,
         }
     }
 
@@ -159,6 +164,22 @@ impl SimBuilder {
         self
     }
 
+    /// Cluster-membership event timeline (elastic fleets):
+    /// `[cold=S;]action:inst@t[;...]` with join/drain/crash actions.
+    /// `None` (the default) keeps the fleet static and every golden
+    /// byte-identical.
+    pub fn events(mut self, timeline: MembershipTimeline) -> SimBuilder {
+        self.membership = Some(timeline);
+        self
+    }
+
+    /// Queue-depth-driven autoscaler policy
+    /// (`interval=5,up=8,down=1,cold=2,min=2`).
+    pub fn autoscale(mut self, spec: AutoscaleSpec) -> SimBuilder {
+        self.autoscale = Some(spec);
+        self
+    }
+
     pub fn cluster(&self) -> &ClusterSpec {
         &self.cluster
     }
@@ -170,6 +191,8 @@ impl SimBuilder {
         cfg.record_timeline = self.record_timeline;
         cfg.contention_model = self.contention_model;
         cfg.telemetry = self.telemetry;
+        cfg.membership = self.membership.clone();
+        cfg.autoscale = self.autoscale;
         cfg
     }
 
@@ -291,7 +314,9 @@ mod tests {
             .contention_model(ContentionModel::MaxMin)
             .interconnect_bw(Some(3e9))
             .record_timeline(true)
-            .telemetry(TelemetryConfig::full(0.5));
+            .telemetry(TelemetryConfig::full(0.5))
+            .events(MembershipTimeline::parse("crash:1@5").unwrap())
+            .autoscale(AutoscaleSpec::default());
         assert!(b.cluster().topology().contended());
         assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
         assert_eq!(b.cluster().topology().spine_bw(), Some(8e9));
@@ -300,12 +325,15 @@ mod tests {
         assert!(cfg.record_timeline);
         assert_eq!(cfg.contention_model, ContentionModel::MaxMin);
         assert_eq!(cfg.telemetry, TelemetryConfig::full(0.5));
-        // The default stays the admission model with telemetry off
-        // (golden stability).
+        assert_eq!(cfg.membership.as_ref().unwrap().events.len(), 1);
+        assert_eq!(cfg.autoscale, Some(AutoscaleSpec::default()));
+        // The default stays the admission model with telemetry off and
+        // a static fleet (golden stability).
         let d = SimBuilder::parse_cluster("h100x4").unwrap().sim_config();
         assert_eq!(d.contention_model, ContentionModel::Admission);
         assert_eq!(d.telemetry, TelemetryConfig::off());
         assert!(!d.telemetry.enabled());
+        assert!(d.membership.is_none() && d.autoscale.is_none());
     }
 
     #[test]

@@ -38,14 +38,20 @@
 //! period in seconds (implies telemetry), `"trace_out"` /
 //! `"probes_out"` write a Chrome-trace JSON / probes CSV after the run
 //! (each implies the telemetry layers it needs).
+//!
+//! Elastic-fleet keys: `"events"` holds a membership timeline
+//! (`"cold=2;crash:3@10;join:3@30"` — join/drain/crash actions over a
+//! frozen cluster spec) and `"autoscale"` a queue-depth autoscaler
+//! policy (`"interval=5,up=8,down=1,cold=2,min=2"`).  Omitting both
+//! keeps the fleet static and every golden byte-identical.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::registry::SchedSpec;
-use crate::sim::{ClusterSpec, ContentionModel, DeviceSpec, SimConfig,
-                 TelemetryConfig, LLAMA2_70B};
+use crate::sim::{AutoscaleSpec, ClusterSpec, ContentionModel, DeviceSpec,
+                 MembershipTimeline, SimConfig, TelemetryConfig, LLAMA2_70B};
 use crate::util::json::Json;
 use crate::workload::WorkloadSpec;
 
@@ -71,6 +77,10 @@ pub struct Experiment {
     pub trace_out: Option<String>,
     /// Write the probes CSV here after the run.
     pub probes_out: Option<String>,
+    /// Cluster-membership event timeline (elastic fleets).
+    pub membership: Option<MembershipTimeline>,
+    /// Queue-depth-driven autoscaler policy.
+    pub autoscale: Option<AutoscaleSpec>,
 }
 
 impl Default for Experiment {
@@ -88,6 +98,8 @@ impl Default for Experiment {
             telemetry: TelemetryConfig::off(),
             trace_out: None,
             probes_out: None,
+            membership: None,
+            autoscale: None,
         }
     }
 }
@@ -256,6 +268,17 @@ impl Experiment {
             },
             trace: exp.trace_out.is_some(),
         };
+        if let Some(v) = j.get("events").and_then(|x| x.as_str()) {
+            let t = MembershipTimeline::parse(v)
+                .map_err(|e| anyhow!("config: {e}"))?;
+            t.validate(exp.cluster.len())
+                .map_err(|e| anyhow!("config: {e}"))?;
+            exp.membership = Some(t);
+        }
+        if let Some(v) = j.get("autoscale").and_then(|x| x.as_str()) {
+            exp.autoscale = Some(
+                AutoscaleSpec::parse(v).map_err(|e| anyhow!("config: {e}"))?);
+        }
         if exp.rates.is_empty() || exp.duration <= 0.0 {
             return Err(anyhow!("config: rates/duration invalid"));
         }
@@ -268,6 +291,8 @@ impl Experiment {
         cfg.interconnect_bw = self.interconnect_bw;
         cfg.contention_model = self.contention_model;
         cfg.telemetry = self.telemetry;
+        cfg.membership = self.membership.clone();
+        cfg.autoscale = self.autoscale;
         cfg
     }
 }
@@ -513,6 +538,41 @@ mod tests {
             r#"{"cluster":"h100x4","probe_interval":0}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_elastic_fleet_knobs() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","events":"cold=2;crash:3@10;join:3@30",
+                "autoscale":"interval=2,up=4,min=1"}"#,
+        )
+        .unwrap();
+        let t = e.membership.as_ref().unwrap();
+        assert_eq!(t.cold_start, 2.0);
+        assert_eq!(t.events.len(), 2);
+        let a = e.autoscale.unwrap();
+        assert_eq!((a.interval, a.up, a.min_active), (2.0, 4.0, 1));
+        let c = e.sim_config();
+        assert!(c.membership.is_some() && c.autoscale.is_some());
+        // A timeline addressing an instance outside the cluster is
+        // rejected at config-parse time, as are malformed specs.
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","events":"crash:9@10"}"#
+        )
+        .is_err());
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","events":"explode:0@1"}"#
+        )
+        .is_err());
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","autoscale":"interval=0"}"#
+        )
+        .is_err());
+        // Default: static fleet.
+        let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert!(d.membership.is_none() && d.autoscale.is_none());
+        let dc = d.sim_config();
+        assert!(dc.membership.is_none() && dc.autoscale.is_none());
     }
 
     #[test]

@@ -57,8 +57,8 @@ use crate::coordinator::{pair_service_weights, set_kv_tokens,
                          DEFAULT_MAX_DECODE_BATCH};
 use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
 use crate::prefix::splitmix64;
-use crate::sim::{ClusterSpec, InstId, PerfModel, ReqId, Role, Scheduler,
-                 SimCtx, Work, XferKind, LLAMA2_70B};
+use crate::sim::{Avail, ClusterSpec, InstId, MembershipChange, PerfModel,
+                 ReqId, Role, Scheduler, SimCtx, Work, XferKind, LLAMA2_70B};
 
 /// Prompts folded into one prefill work item (registry parameter
 /// `max_prefill_batch`; this constant is its default).
@@ -140,6 +140,12 @@ pub struct AcceLlm {
     in_handoff: Vec<(ReqId, InstId)>,
     /// Per-instance flag: currently serving prefill work.
     prefilling: Vec<bool>,
+    /// pair -> can take new arrivals (at least one Active member);
+    /// mirrors membership events, all-true on a static fleet.
+    pair_usable: Vec<bool>,
+    /// Crash-recovery re-replication transfers in flight: (req, new
+    /// replica holder).
+    in_rerep: Vec<(ReqId, InstId)>,
 }
 
 impl AcceLlm {
@@ -234,8 +240,7 @@ impl AcceLlm {
             cluster
                 .instance(y)
                 .prefill_flops()
-                .partial_cmp(&cluster.instance(x).prefill_flops())
-                .unwrap()
+                .total_cmp(&cluster.instance(x).prefill_flops())
                 .then(x.cmp(&y))
         });
         (0..n / 2).map(|k| (ids[k], ids[n - 1 - k])).collect()
@@ -379,6 +384,8 @@ impl AcceLlm {
             replicas_on: vec![Vec::new(); n],
             in_handoff: Vec::new(),
             prefilling: vec![false; n],
+            pair_usable: vec![true; n / 2],
+            in_rerep: Vec::new(),
         }
     }
 
@@ -396,6 +403,13 @@ impl AcceLlm {
 
     pub fn n_pairs(&self) -> usize {
         self.n_pairs
+    }
+
+    /// Can this pair take new arrivals?  True while at least one member
+    /// is Active (always, on a static fleet); compositions that route
+    /// around the inner scheduler must honor it.
+    pub fn pair_usable(&self, pair: usize) -> bool {
+        self.pair_usable[pair]
     }
 
     /// The capacity-weighted arrival router, when hardware-aware
@@ -440,22 +454,25 @@ impl AcceLlm {
     /// memory — kept bit-identical.  Free-memory routing is the
     /// `accellm-blind` failure mode on mixed fleets: deep-HBM pairs
     /// soak up arrivals far past their service rate.
-    pub fn pick_pair(&self, ctx: &SimCtx, req: ReqId) -> usize {
+    ///
+    /// Returns `None` only when every pair is fully down (elastic
+    /// fleets): the caller parks the request until an instance joins.
+    pub fn pick_pair(&self, ctx: &SimCtx, req: ReqId) -> Option<usize> {
         match &self.router {
             Some(router) => {
                 let loads: Vec<usize> =
                     (0..self.n_pairs).map(|p| self.pair_load(p)).collect();
-                router.route(splitmix64(req as u64), &loads)
+                router.try_route(splitmix64(req as u64), &loads).ok()
             }
             None => (0..self.n_pairs)
+                .filter(|&p| self.pair_usable[p])
                 .max_by(|&a, &b| {
                     let (a0, a1) = self.pairs[a];
                     let (b0, b1) = self.pairs[b];
                     let fa = ctx.free_bytes(a0) + ctx.free_bytes(a1);
                     let fb = ctx.free_bytes(b0) + ctx.free_bytes(b1);
-                    fa.partial_cmp(&fb).unwrap()
-                })
-                .expect("no pairs"),
+                    fa.total_cmp(&fb)
+                }),
         }
     }
 
@@ -463,7 +480,7 @@ impl AcceLlm {
     /// partner keeps decoding (or there is nothing to decode in the pair)
     /// — the no-interference rule.
     fn can_prefill(&self, ctx: &SimCtx, inst: InstId) -> bool {
-        if ctx.is_busy(inst) || self.prefilling[inst] {
+        if !ctx.is_active(inst) || ctx.is_busy(inst) || self.prefilling[inst] {
             return false;
         }
         let partner = self.partner(inst);
@@ -480,10 +497,13 @@ impl AcceLlm {
         debug_assert!(!ctx.is_busy(inst));
 
         // Migrate decodable requests to the partner (replica promotion).
+        // A non-Active partner takes no new decode load: its requests
+        // stay put (and pause during the prefill) instead.
+        let migrate = ctx.is_active(partner);
         let set = std::mem::take(&mut self.sets[inst]);
         let mut kept = Vec::new();
         for r in set {
-            if ctx.requests[r].has_replica_on(partner) {
+            if migrate && ctx.requests[r].has_replica_on(partner) {
                 ctx.swap_primary_with_replica(r, partner);
                 // Bookkeeping: replica moved sides.
                 self.replicas_on[partner].retain(|&x| x != r);
@@ -510,7 +530,11 @@ impl AcceLlm {
     }
 
     fn kick_decode(&mut self, ctx: &mut SimCtx, inst: InstId) {
-        if ctx.is_busy(inst) || self.prefilling[inst] || self.sets[inst].is_empty() {
+        if ctx.avail(inst) == Avail::Down
+            || ctx.is_busy(inst)
+            || self.prefilling[inst]
+            || self.sets[inst].is_empty()
+        {
             return;
         }
         let batch = crate::coordinator::capped_batch(&self.sets[inst],
@@ -573,6 +597,9 @@ impl AcceLlm {
         let (a, b) = self.pairs[pair];
         if !self.rebalance || self.prefilling[a] || self.prefilling[b] {
             return; // only balance when both members decode
+        }
+        if !ctx.is_active(a) || !ctx.is_active(b) {
+            return; // never shift load onto a draining/dead member
         }
         loop {
             let (big, small) = if self.sets[a].len() > self.sets[b].len() {
@@ -647,6 +674,28 @@ impl AcceLlm {
         self.replicas_on[inst].retain(|r| !completed.contains(r));
         self.replicas_on[partner].retain(|r| !completed.contains(r));
         self.in_handoff.retain(|(r, _)| !completed.contains(r));
+        self.in_rerep.retain(|(r, _)| !completed.contains(r));
+    }
+
+    /// Re-derive per-pair usability from instance availability and keep
+    /// the arrival router's holder set in sync.  A pair can take new
+    /// arrivals as long as at least one member is Active.
+    fn refresh_pair_usability(&mut self, ctx: &SimCtx) {
+        for p in 0..self.n_pairs {
+            let (a, b) = self.pairs[p];
+            let usable = ctx.is_active(a) || ctx.is_active(b);
+            if usable == self.pair_usable[p] {
+                continue;
+            }
+            self.pair_usable[p] = usable;
+            if let Some(router) = &mut self.router {
+                if usable {
+                    router.add_holder(p);
+                } else {
+                    router.remove_holder(p);
+                }
+            }
+        }
     }
 }
 
@@ -663,8 +712,14 @@ impl Scheduler for AcceLlm {
     }
 
     fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
-        let pair = self.pick_pair(ctx, req);
-        self.enqueue_on_pair(ctx, req, pair);
+        match self.pick_pair(ctx, req) {
+            Some(pair) => self.enqueue_on_pair(ctx, req, pair),
+            None => {
+                // Every pair fully down: park until an instance joins.
+                ctx.pending.retain(|&r| r != req);
+                ctx.pending.push_back(req);
+            }
+        }
     }
 
     fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, work: Work,
@@ -675,9 +730,22 @@ impl Scheduler for AcceLlm {
             Work::Prefill { reqs } => {
                 self.prefilling[inst] = false;
                 ctx.set_role(inst, Role::Decode);
+                let partner = self.partner(inst);
+                if !ctx.is_active(partner) {
+                    // Partner drained/crashed mid-prefill: no hand-off
+                    // target.  Decode at the prefill site, degraded
+                    // (these requests carry no replica until recovery).
+                    for &r in &reqs {
+                        self.sets[inst].push(r);
+                    }
+                    self.kick_pair(ctx, pair);
+                    if !self.prefilling[inst] {
+                        self.kick_decode(ctx, inst);
+                    }
+                    return;
+                }
                 // Per-layer pipelined replica stream to the partner: only
                 // the residual beyond the prefill compute remains.
-                let partner = self.partner(inst);
                 for &r in &reqs {
                     let tokens = ctx.requests[r].prompt_len as f64;
                     let compute = ctx.now
@@ -711,6 +779,29 @@ impl Scheduler for AcceLlm {
 
     fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
                         dst: InstId, req: ReqId) {
+        // Crash-recovery re-replication stream finished: install the
+        // fresh replica, unless the world changed underneath it.
+        if let Some(pos) = self
+            .in_rerep
+            .iter()
+            .position(|&(r, d)| r == req && d == dst)
+        {
+            self.in_rerep.swap_remove(pos);
+            let rq = &ctx.requests[req];
+            if rq.is_finished()
+                || ctx.avail(dst) == Avail::Down
+                || rq.has_replica_on(dst)
+                || rq.primary == Some(dst)
+            {
+                return;
+            }
+            let bytes = ctx.kv_bytes(req);
+            if self.make_room_for_replica(ctx, dst, bytes) {
+                ctx.place_replica(req, dst);
+                self.replicas_on[dst].push(req);
+            }
+            return;
+        }
         // Prefill→partner replica stream finished.
         let Some(pos) = self.in_handoff.iter().position(|&(r, _)| r == req)
         else {
@@ -718,6 +809,13 @@ impl Scheduler for AcceLlm {
         };
         self.in_handoff.swap_remove(pos);
         if ctx.requests[req].is_finished() {
+            return;
+        }
+        if ctx.avail(dst) == Avail::Down {
+            // Partner died while the hand-off was in flight: decode at
+            // the prefill site, degraded.
+            self.sets[src].push(req);
+            self.kick_decode(ctx, src);
             return;
         }
         let bytes = ctx.kv_bytes(req);
@@ -753,6 +851,132 @@ impl Scheduler for AcceLlm {
         }
         self.sets[primary_side].push(req);
         self.kick_decode(ctx, primary_side);
+    }
+
+    /// Elasticity (ISSUE 8).  Pairing stays structural: a crashed
+    /// member leaves its pair running degraded on the survivor, and a
+    /// rejoin restores the original pair — no re-pairing shuffle.  What
+    /// IS priced is redundancy recovery: survivors that lost their
+    /// replica get a new one via real `Migration` transfers over the
+    /// contended links.
+    fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                            change: &MembershipChange) {
+        match change {
+            MembershipChange::Joined(inst) => {
+                let inst = *inst;
+                self.prefilling[inst] = false;
+                ctx.set_role(inst, Role::Decode);
+                self.refresh_pair_usability(ctx);
+                // Route any backlog parked while its pair was down.
+                let backlog: Vec<ReqId> = ctx.pending.iter().copied().collect();
+                for r in backlog {
+                    self.on_arrival(ctx, r);
+                }
+                self.kick_pair(ctx, self.pair_of(inst));
+            }
+            MembershipChange::Draining(inst) => {
+                let inst = *inst;
+                let partner = self.partner(inst);
+                // Shed replica-backed decodes onto an Active partner so
+                // the drain empties sooner (promotion is free); replica-
+                // less requests finish in place — Draining keeps serving
+                // its residents.
+                if ctx.is_active(partner) && !ctx.is_busy(inst) {
+                    let set = std::mem::take(&mut self.sets[inst]);
+                    let mut kept = Vec::new();
+                    for r in set {
+                        if ctx.requests[r].has_replica_on(partner) {
+                            ctx.swap_primary_with_replica(r, partner);
+                            self.replicas_on[partner].retain(|&x| x != r);
+                            self.replicas_on[inst].push(r);
+                            self.sets[partner].push(r);
+                        } else {
+                            kept.push(r);
+                        }
+                    }
+                    self.sets[inst] = kept;
+                    self.kick_decode(ctx, partner);
+                }
+                self.refresh_pair_usability(ctx);
+            }
+            MembershipChange::Crashed { inst, requeued, rode_through } => {
+                let inst = *inst;
+                let partner = self.partner(inst);
+                self.prefilling[inst] = false;
+                // Replicas hosted on the dead machine are gone: their
+                // primaries elsewhere just lost redundancy.
+                let orphans: Vec<ReqId> =
+                    std::mem::take(&mut self.replicas_on[inst]);
+                self.sets[inst].clear();
+                // Requests the engine scrubbed outright: purge every
+                // index before they re-arrive through `on_arrival`.
+                for &r in requeued {
+                    for q in &mut self.queues {
+                        q.retain(|&x| x != r);
+                    }
+                    for s in &mut self.sets {
+                        s.retain(|&x| x != r);
+                    }
+                    for rep in &mut self.replicas_on {
+                        rep.retain(|&x| x != r);
+                    }
+                }
+                self.in_handoff
+                    .retain(|(r, i)| !requeued.contains(r) && *i != inst);
+                self.in_rerep
+                    .retain(|(r, d)| !requeued.contains(r) && *d != inst);
+                // Survivors the engine promoted (replica → primary on
+                // the surviving member): adopt into its decode set.
+                for &r in rode_through {
+                    let p = ctx.requests[r].primary.expect("promoted survivor");
+                    if !self.sets[p].contains(&r) {
+                        self.sets[p].push(r);
+                    }
+                    self.replicas_on[p].retain(|&x| x != r);
+                }
+                // Honest re-replication: every survivor that lost its
+                // replica streams a fresh one to the least-loaded Active
+                // machine (other than its primary) — a real, metered
+                // transfer, not a free flag flip.
+                if self.replicate {
+                    let mut lost_redundancy = orphans;
+                    lost_redundancy.extend(rode_through.iter().copied());
+                    for r in lost_redundancy {
+                        let rq = &ctx.requests[r];
+                        if rq.is_finished() || !rq.replicas.is_empty() {
+                            continue;
+                        }
+                        let Some(p) = rq.primary else { continue };
+                        if self.in_rerep.iter().any(|&(x, _)| x == r) {
+                            continue;
+                        }
+                        let target = (0..ctx.n_instances())
+                            .filter(|&i| i != p && ctx.is_active(i))
+                            .max_by(|&x, &y| {
+                                ctx.free_bytes(x).total_cmp(&ctx.free_bytes(y))
+                            });
+                        let Some(target) = target else { continue };
+                        let tokens = ctx.requests[r].kv_tokens() as f64;
+                        ctx.start_transfer(p, target, r, tokens,
+                                           XferKind::Migration, true);
+                        self.in_rerep.push((r, target));
+                    }
+                }
+                self.refresh_pair_usability(ctx);
+                // A fully-down pair's queued prompts re-route elsewhere.
+                let pair = self.pair_of(inst);
+                if !self.pair_usable[pair] {
+                    let orphaned: Vec<ReqId> =
+                        self.queues[pair].drain(..).collect();
+                    for r in orphaned {
+                        self.on_arrival(ctx, r);
+                    }
+                }
+                if ctx.avail(partner) != Avail::Down {
+                    self.kick_decode(ctx, partner);
+                }
+            }
+        }
     }
 }
 
@@ -1002,6 +1226,42 @@ mod tests {
         assert!(AcceLlm::with_identity_pairing(&mixed).router().is_none());
         let homog = ClusterSpec::homogeneous(H100, 4);
         assert!(AcceLlm::new(&homog).router().is_none());
+    }
+
+    #[test]
+    fn crash_rides_through_on_replicas_and_re_replicates() {
+        // One pair member dies mid-run: its decodes with a fresh replica
+        // on the partner are promoted (ride-through, no re-prefill), and
+        // redundancy is restored via real, metered Migration transfers.
+        use crate::sim::MembershipTimeline;
+        let trace = Trace::poisson(MIXED, 4.0, 30.0, 19);
+        let mut cfg = cfg_dev(4, H100);
+        cfg.membership = Some(MembershipTimeline::parse("crash:1@8").unwrap());
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.expect("membership report");
+        assert_eq!(ms.crashes, 1);
+        assert_eq!(ms.final_active, 3);
+        assert!(ms.rode_through > 0,
+                "redundancy must save in-flight decodes: {ms:?}");
+        assert!(r.xfer_migration_bytes > 0.0,
+                "re-replication must be priced as real transfers");
+    }
+
+    #[test]
+    fn rejoin_restores_the_pair_and_completes() {
+        // Crash then rejoin of the same instance: the static pairing
+        // means the pair resumes as-was once the cold start elapses.
+        use crate::sim::MembershipTimeline;
+        let trace = Trace::poisson(MIXED, 4.0, 40.0, 23);
+        let mut cfg = cfg_dev(4, H100);
+        cfg.membership = Some(
+            MembershipTimeline::parse("cold=1;crash:2@8;join:2@20").unwrap());
+        let r = run(&cfg, &trace, &mut AcceLlm::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.expect("membership report");
+        assert_eq!((ms.crashes, ms.joins), (1, 1));
+        assert_eq!(ms.final_active, 4);
     }
 
     #[test]

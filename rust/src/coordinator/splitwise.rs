@@ -24,8 +24,8 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::set_kv_tokens;
-use crate::sim::{ClusterSpec, InstId, ReqId, Role, Scheduler, SimCtx, Work,
-                 XferKind};
+use crate::sim::{Avail, ClusterSpec, InstId, MembershipChange, ReqId, Role,
+                 Scheduler, SimCtx, Work, XferKind};
 
 /// How many prompts a prefill machine folds into one batch (queue drain
 /// cap; prefill time is linear in tokens so batching mostly reduces
@@ -81,8 +81,7 @@ impl Splitwise {
             cluster
                 .instance(y)
                 .prefill_flops()
-                .partial_cmp(&cluster.instance(x).prefill_flops())
-                .unwrap()
+                .total_cmp(&cluster.instance(x).prefill_flops())
                 .then(x.cmp(&y))
         });
         let mut prefill_insts: Vec<InstId> = ids[..n_prefill].to_vec();
@@ -127,11 +126,15 @@ impl Splitwise {
         self.prefill_insts.contains(&inst)
     }
 
-    /// Drain the prompt queue onto any idle prefill machine.
+    /// Drain the prompt queue onto any idle, Active prefill machine
+    /// (crashed/draining machines take no new prompts; a rejoined one
+    /// re-enters the pool automatically).
     fn kick_prefill(&mut self, ctx: &mut SimCtx) {
         let pool = self.prefill_insts.clone();
         for inst in pool {
-            if ctx.is_busy(inst) || self.queue.is_empty() {
+            if !ctx.is_active(inst) || ctx.is_busy(inst)
+                || self.queue.is_empty()
+            {
                 continue;
             }
             let n = self.queue.len().min(self.max_prefill_batch);
@@ -167,10 +170,19 @@ impl Splitwise {
         self.decode_insts
             .iter()
             .copied()
-            .max_by(|&a, &b| {
-                ctx.free_bytes(a)
-                    .partial_cmp(&ctx.free_bytes(b))
-                    .unwrap()
+            .filter(|&i| ctx.is_active(i))
+            .max_by(|&a, &b| ctx.free_bytes(a).total_cmp(&ctx.free_bytes(b)))
+            .or_else(|| {
+                // Degenerate elastic fleet: no Active decode machine.
+                // Fall back to any surviving (draining) one rather than
+                // dropping the hand-off.
+                self.decode_insts
+                    .iter()
+                    .copied()
+                    .filter(|&i| ctx.avail(i) != Avail::Down)
+                    .max_by(|&a, &b| {
+                        ctx.free_bytes(a).total_cmp(&ctx.free_bytes(b))
+                    })
             })
             .expect("no decode instances")
     }
@@ -227,21 +239,58 @@ impl Scheduler for Splitwise {
         }
     }
 
-    fn on_transfer_done(&mut self, ctx: &mut SimCtx, _src: InstId,
+    fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
                         dst: InstId, req: ReqId) {
         // Hand-off transfers are scheduled at prefill completion, so the
         // prefill is always done by now; the residual link time (if any)
         // has elapsed and the request can start decoding on `dst`.
-        let pos = self
-            .in_transfer
-            .iter()
-            .position(|&(r, _)| r == req)
-            .expect("unknown transfer");
+        let Some(pos) =
+            self.in_transfer.iter().position(|&(r, _)| r == req)
+        else {
+            // The transfer raced a crash: its request was purged from
+            // our books (source died and the engine re-queued it from
+            // scratch).  Nothing to deliver.
+            return;
+        };
         self.in_transfer.swap_remove(pos);
+        if ctx.avail(dst) == Avail::Down {
+            // Destination died while the KV was on the wire.  The
+            // source still holds the primary: pay a real migration to a
+            // surviving decode machine.
+            let new_dst = self.least_loaded_decode(ctx);
+            let tokens = ctx.requests[req].kv_tokens() as f64;
+            ctx.start_transfer(src, new_dst, req, tokens,
+                               XferKind::Migration, true);
+            self.in_transfer.push((req, new_dst));
+            return;
+        }
         debug_assert!(ctx.requests[req].first_token.is_some());
         ctx.move_primary(req, dst);
         self.sets[dst].push(req);
         self.kick_decode(ctx, dst);
+    }
+
+    fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                            change: &MembershipChange) {
+        match change {
+            MembershipChange::Joined(_) => {
+                // A joined prefill machine can drain the queue; a
+                // decode joiner becomes a hand-off target automatically
+                // via `least_loaded_decode`.
+                self.kick_prefill(ctx);
+            }
+            // Draining: `kick_prefill`/`least_loaded_decode` already
+            // exclude non-Active machines; resident decodes finish.
+            MembershipChange::Draining(_) => {}
+            MembershipChange::Crashed { inst, requeued, .. } => {
+                self.sets[*inst].clear();
+                // Forget in-flight hand-offs of requests the engine
+                // just reset — their KV restarts from prefill; hand-offs
+                // TO the dead machine stay booked and are re-routed at
+                // completion (see on_transfer_done).
+                self.in_transfer.retain(|(r, _)| !requeued.contains(r));
+            }
+        }
     }
 }
 
@@ -389,6 +438,23 @@ mod tests {
         let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
         assert!(r.xfer_prefill_bytes > 0.0);
         assert_eq!(r.xfer_replica_bytes, 0.0);
+    }
+
+    #[test]
+    fn crash_of_decode_machine_requeues_and_completes() {
+        // Splitwise keeps one KV copy: a decode-machine crash loses all
+        // resident state (no ride-through) but everything still
+        // completes via re-prefill.
+        use crate::sim::MembershipTimeline;
+        let trace = Trace::poisson(MIXED, 3.0, 30.0, 21);
+        let mut cfg = cfg_dev(4, H100);
+        cfg.membership = Some(MembershipTimeline::parse("crash:3@8").unwrap());
+        let r = run(&cfg, &trace, &mut Splitwise::new(&cfg.cluster));
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.expect("membership report");
+        assert_eq!(ms.crashes, 1);
+        assert_eq!(ms.rode_through, 0, "splitwise has no replicas");
+        assert_eq!(ms.final_active, 3);
     }
 
     #[test]

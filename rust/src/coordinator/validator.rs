@@ -15,7 +15,7 @@
 //! randomized traces; the checks are O(requests) per event, so this is
 //! a test-only harness, not a production wrapper.
 
-use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
+use crate::sim::{InstId, MembershipChange, ReqId, Scheduler, SimCtx, Work};
 
 /// Wraps a scheduler and panics on the first invariant violation.
 pub struct Validated<S: Scheduler> {
@@ -112,6 +112,12 @@ impl<S: Scheduler> Scheduler for Validated<S> {
                         dst: InstId, req: ReqId) {
         self.inner.on_transfer_done(ctx, src, dst, req);
         self.validate(ctx, "on_transfer_done");
+    }
+
+    fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                            change: &MembershipChange) {
+        self.inner.on_membership_change(ctx, change);
+        self.validate(ctx, "on_membership_change");
     }
 }
 

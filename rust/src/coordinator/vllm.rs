@@ -20,7 +20,7 @@
 //! baseline of the `hetero` evaluation.
 
 use crate::coordinator::{capped_batch, DEFAULT_MAX_DECODE_BATCH};
-use crate::sim::{InstId, ReqId, Scheduler, SimCtx, Work};
+use crate::sim::{InstId, MembershipChange, ReqId, Scheduler, SimCtx, Work};
 
 pub struct Vllm {
     /// Per-instance running decode sets (requests with KV resident here).
@@ -73,6 +73,25 @@ impl Vllm {
             ctx.start_decode_step(inst, batch, vec![]);
         }
     }
+
+    /// Round-robin over Active instances; None when nothing can take
+    /// traffic.  On a static fleet this is exactly the original
+    /// `next_rr % n` (pinned by the goldens).
+    fn route(&mut self, ctx: &SimCtx) -> Option<InstId> {
+        let n = ctx.n_instances();
+        let active = ctx.n_active();
+        if active == n {
+            let inst = self.next_rr % n;
+            self.next_rr += 1;
+            return Some(inst);
+        }
+        if active == 0 {
+            return None;
+        }
+        let k = self.next_rr % active;
+        self.next_rr += 1;
+        (0..n).filter(|&i| ctx.is_active(i)).nth(k)
+    }
 }
 
 impl Scheduler for Vllm {
@@ -82,10 +101,14 @@ impl Scheduler for Vllm {
 
     fn on_arrival(&mut self, ctx: &mut SimCtx, req: ReqId) {
         ctx.pending.retain(|&r| r != req);
-        let inst = self.next_rr % ctx.n_instances();
-        self.next_rr += 1;
-        self.waiting[inst].push(req);
-        self.kick(ctx, inst);
+        match self.route(ctx) {
+            Some(inst) => {
+                self.waiting[inst].push(req);
+                self.kick(ctx, inst);
+            }
+            // No active instance: park it until one joins.
+            None => ctx.pending.push_back(req),
+        }
     }
 
     fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId, _work: Work,
@@ -94,6 +117,39 @@ impl Scheduler for Vllm {
             self.sets[inst].retain(|r| !completed.contains(r));
         }
         self.kick(ctx, inst);
+    }
+
+    fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                            change: &MembershipChange) {
+        match change {
+            MembershipChange::Joined(_) => {
+                // Route any backlog parked while no instance was active.
+                let backlog: Vec<ReqId> = ctx.pending.iter().copied().collect();
+                for r in backlog {
+                    self.on_arrival(ctx, r);
+                }
+            }
+            MembershipChange::Draining(inst) => {
+                // Resident decodes finish in place; un-started prompts
+                // move elsewhere.
+                let orphaned: Vec<ReqId> =
+                    self.waiting[*inst].drain(..).collect();
+                for r in orphaned {
+                    self.on_arrival(ctx, r);
+                }
+            }
+            MembershipChange::Crashed { inst, .. } => {
+                // The engine scrubbed the KV and re-queues the dead
+                // residents through on_arrival; drop our bookkeeping and
+                // re-route prompts that never started.
+                self.sets[*inst].clear();
+                let orphaned: Vec<ReqId> =
+                    self.waiting[*inst].drain(..).collect();
+                for r in orphaned {
+                    self.on_arrival(ctx, r);
+                }
+            }
+        }
     }
 }
 
@@ -135,6 +191,22 @@ mod tests {
         let m = PerfModel::new(InstanceSpec::new(H100), LLAMA2_70B);
         let upper = m.prefill_time_one(1000) * 3.0;
         assert!(r.ttft_mean < upper, "ttft {} vs {}", r.ttft_mean, upper);
+    }
+
+    #[test]
+    fn crash_requeues_and_completes() {
+        // A mid-run crash loses the instance's KV outright (no replicas
+        // to ride on); everything still completes via re-queue.
+        use crate::sim::MembershipTimeline;
+        let trace = Trace::poisson(MIXED, 2.0, 30.0, 19);
+        let mut c = cfg(4);
+        c.membership = Some(MembershipTimeline::parse("crash:1@5").unwrap());
+        let r = run(&c, &trace, &mut Vllm::new(4));
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.expect("membership report");
+        assert_eq!(ms.crashes, 1);
+        assert_eq!(ms.rode_through, 0, "vllm has no replicas to ride on");
+        assert_eq!(ms.final_active, 3);
     }
 
     #[test]

@@ -428,15 +428,17 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "spine_sweep" => crate::eval::contention::spine_sweep(),
         "param_sweep" => param_sweep(),
         "load_balance" => crate::eval::loadbalance::load_balance(),
+        "scale_events" => crate::eval::scale_events::scale_events(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 20] = [
+pub const ALL_IDS: [&str; 21] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
     "hetero", "contention", "spine_sweep", "param_sweep", "load_balance",
+    "scale_events",
 ];
 
 /// Generate everything (the `make bench` payload).

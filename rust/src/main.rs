@@ -11,8 +11,9 @@ use accellm::eval::{all_figures, figure_by_id};
 use accellm::registry::{SchedSpec, SchedulerRegistry};
 #[cfg(feature = "pjrt")]
 use accellm::server::{serve_trace, ClusterConfig, ServePolicy, ServeRequest};
-use accellm::sim::{chrome_trace_json, probes_csv, ClusterSpec,
-                   ContentionModel, DeviceSpec, RunReport, TelemetryConfig,
+use accellm::sim::{chrome_trace_json, probes_csv, AutoscaleSpec,
+                   ClusterSpec, ContentionModel, DeviceSpec,
+                   MembershipTimeline, RunReport, TelemetryConfig,
                    ALL_DEVICES, LLAMA2_70B};
 use accellm::util::json::Json;
 #[cfg(feature = "pjrt")]
@@ -33,6 +34,7 @@ USAGE:
                    [--contention-model admission|maxmin] [--json]
                    [--telemetry] [--probe-interval S]
                    [--trace-out FILE] [--probes-out FILE]
+                   [--events TIMELINE] [--autoscale SPEC]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm bench    [--scenario sweep|fleet] [--cluster SPEC] [--rate R]
                    [--duration S] [--requests N] [--scheduler SPEC]
@@ -84,9 +86,23 @@ ui.perfetto.dev) and `--probes-out FILE` the probes CSV — each output
 flag implies the telemetry layers it needs.
 `chat` and `shared-doc` are session workloads with shared prompt
 prefixes; pair them with `--scheduler accellm-prefix` to exercise the
-prefix-locality router.  Unknown flags left unconsumed by a subcommand
-are reported as errors.  Run `make artifacts` once before
-`accellm serve` (needs a build with `--features pjrt`).";
+prefix-locality router.
+`--events` makes the fleet elastic: a `;`-separated timeline of
+membership events over the frozen cluster spec, each
+`join:INST@T`, `drain:INST@T`, or `crash:INST@T` (an optional leading
+`cold=S` sets the join warm-up window, default 2 s) — e.g.
+`--events 'cold=2;crash:3@10;join:3@30'`.  A crash re-queues the
+victim's in-flight requests (schedulers with replicas ride through on
+the surviving copy) and re-replication is priced over the contended
+links; a drain finishes resident work but takes no new; a join pays
+the cold-start window before taking traffic.  `--autoscale` adds a
+queue-depth autoscaler (`interval=5,up=8,down=1,cold=2,min=2`: scale
+up when in-flight > up x active, drain when < down x active, never
+below min).  `accellm figures --fig scale_events` plots JCT/goodput
+through a crash timeline for every scheduler.  Unknown flags left
+unconsumed by a subcommand are reported as errors.  Run
+`make artifacts` once before `accellm serve` (needs a build with
+`--features pjrt`).";
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -290,6 +306,28 @@ fn write_telemetry_outputs(
     Ok(())
 }
 
+/// `--events` / `--autoscale` flags (elastic fleets); the timeline is
+/// validated against the cluster size `n`.
+fn parse_membership(args: &Args, n: usize)
+    -> anyhow::Result<(Option<MembershipTimeline>, Option<AutoscaleSpec>)> {
+    let membership = match args.get("events") {
+        Some(spec) => {
+            let t = MembershipTimeline::parse(spec)
+                .map_err(anyhow::Error::msg)?;
+            t.validate(n).map_err(anyhow::Error::msg)?;
+            Some(t)
+        }
+        None => None,
+    };
+    let autoscale = match args.get("autoscale") {
+        Some(spec) => {
+            Some(AutoscaleSpec::parse(spec).map_err(anyhow::Error::msg)?)
+        }
+        None => None,
+    };
+    Ok((membership, autoscale))
+}
+
 fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
                                                 f64, f64, u64)> {
     let cluster = parse_cluster(args)?;
@@ -337,15 +375,25 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 exp.rates.len()
             );
         }
+        // CLI elastic-fleet flags override the config-file keys.
+        let (cli_mem, cli_auto) = parse_membership(args, exp.cluster.len())?;
+        let membership = cli_mem.or_else(|| exp.membership.clone());
+        let autoscale = cli_auto.or(exp.autoscale);
         println!("{}", RunReport::csv_header());
         for &rate in &exp.rates {
-            let report = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
+            let mut b = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
                 .interconnect_bw(exp.interconnect_bw)
                 .contention_model(exp.contention_model)
                 .telemetry(telemetry)
                 .workload(exp.workload, rate, exp.duration, exp.seed)
-                .scheduler(exp.scheduler.clone())
-                .run();
+                .scheduler(exp.scheduler.clone());
+            if let Some(t) = membership.clone() {
+                b = b.events(t);
+            }
+            if let Some(a) = autoscale {
+                b = b.autoscale(a);
+            }
+            let report = b.run();
             println!("{}", report.csv_row());
             write_telemetry_outputs(&report, &trace_out, &probes_out)?;
         }
@@ -365,13 +413,20 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         }
         None => None,
     };
-    let report = SimBuilder::new(cluster, LLAMA2_70B)
+    let (membership, autoscale) = parse_membership(args, cluster.len())?;
+    let mut b = SimBuilder::new(cluster, LLAMA2_70B)
         .interconnect_bw(interconnect_bw)
         .contention_model(model)
         .telemetry(cli_tel)
         .workload(workload, rate, duration, seed)
-        .scheduler(spec)
-        .run();
+        .scheduler(spec);
+    if let Some(t) = membership {
+        b = b.events(t);
+    }
+    if let Some(a) = autoscale {
+        b = b.autoscale(a);
+    }
+    let report = b.run();
     print_report(&report, args.has("json"));
     write_telemetry_outputs(&report, &cli_trace_out, &cli_probes_out)?;
     Ok(())

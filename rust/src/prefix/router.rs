@@ -27,6 +27,19 @@ use crate::prefix::hash::splitmix64;
 /// Virtual nodes per holder (arc-length smoothing).
 pub const DEFAULT_VNODES: usize = 64;
 
+/// Typed error for routing over a ring drained to zero holders
+/// (every holder removed by scale-down / crash churn).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NoHolders;
+
+impl std::fmt::Display for NoHolders {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "router has no holders (ring drained to zero)")
+    }
+}
+
+impl std::error::Error for NoHolders {}
+
 /// Hash ring with bounded-load routing.
 #[derive(Clone, Debug)]
 pub struct ChwblRouter {
@@ -98,23 +111,64 @@ impl ChwblRouter {
         self.ring.len()
     }
 
+    /// Holders currently on the ring.  Every holder carries exactly
+    /// `vnodes` virtual nodes, so this is ring size over vnode count.
+    pub fn n_holders(&self) -> usize {
+        self.ring.len() / self.vnodes
+    }
+
+    pub fn contains_holder(&self, holder: usize) -> bool {
+        self.ring.iter().any(|&(_, h)| h == holder)
+    }
+
+    /// Holder ids currently on the ring (ascending, deduplicated).
+    pub fn holders(&self) -> Vec<usize> {
+        let mut hs: Vec<usize> = self.ring.iter().map(|&(_, h)| h).collect();
+        hs.sort_unstable();
+        hs.dedup();
+        hs
+    }
+
+    /// Capacity of holders still on the ring (weighted rings under
+    /// churn must not count drained holders in the denominator).
+    fn live_weight_sum(&self, w: &[f64]) -> f64 {
+        let mut on_ring = vec![false; w.len()];
+        for &(_, h) in &self.ring {
+            on_ring[h] = true;
+        }
+        w.iter()
+            .enumerate()
+            .filter(|&(h, _)| on_ring[h])
+            .map(|(_, wh)| wh)
+            .sum()
+    }
+
     /// Uniform CHWBL bound for the *next* placement:
-    /// `ceil(c * (total+1) / n)`.
+    /// `ceil(c * (total+1) / n)` over the holders on the ring.  A
+    /// drained ring admits nothing (bound 0) instead of dividing by
+    /// zero; with every holder live this is the classic bound exactly.
     pub fn load_bound(&self, loads: &[usize]) -> usize {
+        let n = self.n_holders();
+        if n == 0 {
+            return 0;
+        }
         let total: usize = loads.iter().sum();
-        ((self.load_factor * (total + 1) as f64) / loads.len() as f64).ceil()
-            as usize
+        ((self.load_factor * (total + 1) as f64) / n as f64).ceil() as usize
     }
 
     /// Per-holder bound for the next placement.  Uniform rings use the
     /// classic `ceil(c * (total+1) / n)`; weighted rings scale it by
-    /// the holder's capacity share: `ceil(c * (total+1) * w_h / W)`.
+    /// the holder's capacity share: `ceil(c * (total+1) * w_h / W)`,
+    /// with `W` summed over holders still on the ring.
     pub fn load_bound_for(&self, holder: usize, loads: &[usize]) -> usize {
         match &self.weights {
             None => self.load_bound(loads),
             Some(w) => {
+                let wsum = self.live_weight_sum(w);
+                if wsum <= 0.0 {
+                    return 0;
+                }
                 let total: usize = loads.iter().sum();
-                let wsum: f64 = w.iter().sum();
                 (self.load_factor * (total + 1) as f64 * w[holder] / wsum)
                     .ceil() as usize
             }
@@ -124,15 +178,25 @@ impl ChwblRouter {
     /// Route `key` to a holder: walk the ring clockwise from the key's
     /// position and take the first holder whose current load is under
     /// its (capacity-weighted) bound.  `loads[h]` is holder `h`'s
-    /// in-flight load.
+    /// in-flight load.  Panics on an empty ring — membership-churn
+    /// call sites use [`ChwblRouter::try_route`].
     pub fn route(&self, key: u64, loads: &[usize]) -> usize {
-        assert!(!self.ring.is_empty(), "router has no holders");
+        self.try_route(key, loads).expect("router has no holders")
+    }
+
+    /// Like [`ChwblRouter::route`], but a ring drained to zero holders
+    /// is a typed [`NoHolders`] error instead of a panic.
+    pub fn try_route(&self, key: u64, loads: &[usize])
+                     -> Result<usize, NoHolders> {
+        if self.ring.is_empty() {
+            return Err(NoHolders);
+        }
         // Bounds are loop-invariant during the walk: hoist them (the
         // walk may visit every virtual node on a saturated ring).
         let uniform_bound = self.load_bound(loads);
         let weighted_bounds: Option<Vec<usize>> = self.weights.as_ref().map(|w| {
             let total: usize = loads.iter().sum();
-            let wsum: f64 = w.iter().sum();
+            let wsum = self.live_weight_sum(w);
             w.iter()
                 .map(|wh| {
                     (self.load_factor * (total + 1) as f64 * wh / wsum).ceil()
@@ -149,14 +213,20 @@ impl ChwblRouter {
                 Some(b) => b[h],
             };
             if loads.get(h).copied().unwrap_or(0) < bound {
-                return h;
+                return Ok(h);
             }
         }
         // Unreachable for load_factor >= 1: the per-holder bounds sum to
         // > total load, so some holder is strictly under its bound and
         // every holder appears on the ring.  Kept as a deterministic
-        // fallback.
-        (0..loads.len()).min_by_key(|&h| (loads[h], h)).unwrap_or(0)
+        // fallback — restricted to ring holders so churn never routes
+        // to a removed one.
+        Ok(self
+            .ring
+            .iter()
+            .map(|&(_, h)| h)
+            .min_by_key(|&h| (loads.get(h).copied().unwrap_or(0), h))
+            .expect("ring checked non-empty"))
     }
 }
 
@@ -336,6 +406,123 @@ mod tests {
                         &format!("after {m} placements holder {h} has {} > \
                                   weighted bound {bound}", loads[h]),
                     )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_ring_is_a_typed_error_not_a_panic() {
+        let mut r = ChwblRouter::new(2, 16, 1.25);
+        r.remove_holder(0);
+        r.remove_holder(1);
+        assert_eq!(r.n_holders(), 0);
+        assert!(r.holders().is_empty());
+        let loads = vec![3usize, 5];
+        assert_eq!(r.try_route(7, &loads), Err(NoHolders));
+        // The bound math is guarded: a drained ring admits nothing
+        // instead of dividing by zero.
+        assert_eq!(r.load_bound(&loads), 0);
+        assert_eq!(r.load_bound_for(0, &loads), 0);
+        let mut w = ChwblRouter::with_weights(&[2.0, 1.0], 16, 1.25);
+        w.remove_holder(0);
+        w.remove_holder(1);
+        assert_eq!(w.try_route(7, &loads), Err(NoHolders));
+        assert_eq!(w.load_bound_for(1, &loads), 0);
+        // Re-adding a holder restores routing.
+        w.add_holder(1);
+        assert_eq!(w.try_route(7, &loads), Ok(1));
+    }
+
+    /// Satellite property: under interleaved `add_holder` /
+    /// `remove_holder` churn, every step remaps ~1/n of the key space
+    /// (adds move keys only TO the new holder; removes move only the
+    /// removed holder's keys, never to a dead holder) and the bounded-
+    /// loads invariant holds over the live holders after every step.
+    #[test]
+    fn prop_churn_remaps_few_keys_and_keeps_bounds() {
+        check(
+            25,
+            |rng| (rng.uniform_usize(3, 8), rng.next_u64()),
+            |&(n0, seed)| {
+                let c = 1.25;
+                let mut rng = Pcg64::new(seed);
+                let mut r = ChwblRouter::new(n0, 32, c);
+                let mut live: Vec<usize> = (0..n0).collect();
+                let mut next_id = n0;
+                let keys: Vec<u64> =
+                    (0..400).map(|_| rng.next_u64()).collect();
+                for _step in 0..12 {
+                    let zero = vec![0usize; next_id];
+                    let before: Vec<usize> = keys
+                        .iter()
+                        .map(|&k| r.try_route(k, &zero).unwrap())
+                        .collect();
+                    if live.len() <= 2 || rng.next_f64() < 0.5 {
+                        let h = next_id;
+                        next_id += 1;
+                        r.add_holder(h);
+                        live.push(h);
+                        let zero = vec![0usize; next_id];
+                        let mut moved = 0usize;
+                        for (i, &k) in keys.iter().enumerate() {
+                            let b = r.try_route(k, &zero).unwrap();
+                            if b != before[i] {
+                                prop_assert(
+                                    b == h,
+                                    "add moved a key between old holders",
+                                )?;
+                                moved += 1;
+                            }
+                        }
+                        // Expected share 1/n; allow 3x slack.
+                        prop_assert(
+                            moved * live.len() <= keys.len() * 3,
+                            &format!("add remapped {moved}/{} across {} \
+                                      holders", keys.len(), live.len()),
+                        )?;
+                    } else {
+                        let gone = live
+                            .swap_remove(rng.uniform_usize(0, live.len() - 1));
+                        r.remove_holder(gone);
+                        for (i, &k) in keys.iter().enumerate() {
+                            let b = r.try_route(k, &zero).unwrap();
+                            if before[i] == gone {
+                                prop_assert(
+                                    live.contains(&b),
+                                    "key routed to a dead holder",
+                                )?;
+                            } else {
+                                prop_assert(
+                                    b == before[i],
+                                    "remove moved an unaffected key",
+                                )?;
+                            }
+                        }
+                    }
+                    // Bounded loads over the survivors: sequential
+                    // skewed placements never exceed ceil(c*m/n_live).
+                    let mut loads = vec![0usize; next_id];
+                    let hot = rng.next_u64();
+                    for m in 1..=200usize {
+                        let key = if rng.next_f64() < 0.5 {
+                            hot
+                        } else {
+                            rng.next_u64()
+                        };
+                        let h = r.try_route(key, &loads).unwrap();
+                        prop_assert(live.contains(&h),
+                                    "placement on a dead holder")?;
+                        loads[h] += 1;
+                        let bound =
+                            (c * m as f64 / live.len() as f64).ceil() as usize;
+                        prop_assert(
+                            loads[h] <= bound,
+                            &format!("after {m} placements holder {h} has \
+                                      {} > {bound}", loads[h]),
+                        )?;
+                    }
                 }
                 Ok(())
             },

@@ -27,7 +27,8 @@ use crate::prefix::hash::splitmix64;
 use crate::prefix::index::{IndexStats, PrefixIndex};
 use crate::prefix::router::{ChwblRouter, DEFAULT_VNODES};
 use crate::prefix::CHUNK_TOKENS;
-use crate::sim::{ClusterSpec, InstId, ReqId, Scheduler, SimCtx, Work};
+use crate::sim::{ClusterSpec, InstId, MembershipChange, ReqId, Scheduler,
+                 SimCtx, Work};
 
 /// Default per-pair prefix-cache budget, in chunks.  2048 chunks x 32
 /// tokens x ~320 KiB/token (Llama-2-70B) ~= 21 GB of the pair's HBM
@@ -126,8 +127,11 @@ impl Scheduler for AcceLlmPrefix {
 
         let pair = match self.index.best_match(&ctx.requests[req].prefix_chunks)
         {
-            Some((p, _)) if loads[p] < self.router.load_bound_for(p, &loads) => {
-                p
+            Some((p, _))
+                if self.inner.pair_usable(p)
+                    && loads[p] < self.router.load_bound_for(p, &loads) =>
+            {
+                Some(p)
             }
             _ => {
                 // Cold start or locality overruled by load: CHWBL.
@@ -136,8 +140,14 @@ impl Scheduler for AcceLlmPrefix {
                     .first()
                     .copied()
                     .unwrap_or_else(|| splitmix64(req as u64));
-                self.router.route(key, &loads)
+                self.router.try_route(key, &loads).ok()
             }
+        };
+        let Some(pair) = pair else {
+            // Every pair fully down: park until an instance joins.
+            ctx.pending.retain(|&r| r != req);
+            ctx.pending.push_back(req);
+            return;
         };
         // Credit whatever the chosen pair actually caches (a CHWBL
         // spill may still land a partial match) and refresh its LRU.
@@ -167,6 +177,24 @@ impl Scheduler for AcceLlmPrefix {
     fn on_transfer_done(&mut self, ctx: &mut SimCtx, src: InstId,
                         dst: InstId, req: ReqId) {
         self.inner.on_transfer_done(ctx, src, dst, req);
+    }
+
+    fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                            change: &MembershipChange) {
+        self.inner.on_membership_change(ctx, change);
+        // Mirror the inner pair usability onto the locality router, and
+        // forget a fully-down pair's published prefixes — the KV they
+        // pointed at left with the hardware.
+        for p in 0..self.inner.n_pairs() {
+            let usable = self.inner.pair_usable(p);
+            if usable && !self.router.contains_holder(p) {
+                self.router.add_holder(p);
+            } else if !usable && self.router.contains_holder(p) {
+                self.router.remove_holder(p);
+                ctx.metrics.prefix_evictions +=
+                    self.index.remove_holder(p) as u64;
+            }
+        }
     }
 }
 

@@ -86,6 +86,16 @@ enum Event {
         /// fixed-rate admission-model transfers).
         flow: Option<usize>,
     },
+    /// Next entry of the membership timeline fires (index into
+    /// `SimCtx::timeline`; entries chain one at a time so an exhausted
+    /// timeline never keeps the run alive).
+    Membership(usize),
+    /// Periodic autoscaler evaluation.  Deliberately does NOT advance
+    /// `ctx.now` unless an action fires, so an inert autoscaler leaves
+    /// the run bit-identical.
+    AutoscaleTick,
+    /// A joining instance finished its cold-start window.
+    WarmupDone(InstId),
 }
 
 /// One pending event in the [`EventQueue`] slab.
@@ -191,6 +201,12 @@ impl EventQueue {
         self.remove_heap_entry(pos);
         self.slots[id] = None;
         self.free.push(id);
+    }
+
+    /// Scheduled time of a pending event (panics on a dead slot, like
+    /// [`Self::cancel`]).
+    fn time_of(&self, id: usize) -> f64 {
+        self.slots[id].as_ref().expect("queried a dead event slot").t
     }
 
     /// Detach the heap entry at `pos` (the slot itself is left to the
@@ -354,6 +370,44 @@ struct QueuedXfer {
     bytes: f64,
 }
 
+/// Availability of one instance under elastic membership.  The
+/// [`ClusterSpec`] itself stays frozen (ids, devices, topology);
+/// membership events toggle availability over it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Avail {
+    /// Taking traffic.
+    Active,
+    /// Joined but still inside its cold-start window.
+    Warming,
+    /// Takes no new work; resident decodes run to completion.
+    Draining,
+    /// Not serving (never joined, or crashed out).
+    Down,
+}
+
+/// A cluster-membership transition, delivered to
+/// [`Scheduler::on_membership_change`] after the engine has updated
+/// availability and KV state.
+#[derive(Clone, Debug)]
+pub enum MembershipChange {
+    /// `inst` finished its cold-start window and may take traffic.
+    Joined(InstId),
+    /// `inst` stops taking new work; its resident decodes finish in
+    /// place and its KV stays valid.
+    Draining(InstId),
+    /// `inst` fail-stopped: every KV byte it held is gone.  `requeued`
+    /// requests lost their only copy — they are back on `ctx.pending`,
+    /// rewound to their pre-prefill state, and the engine re-delivers
+    /// each through `on_arrival` right after this hook returns.
+    /// `rode_through` requests survived on a replica holder, which is
+    /// now their primary — the redundancy dividend.
+    Crashed {
+        inst: InstId,
+        requeued: Vec<ReqId>,
+        rode_through: Vec<ReqId>,
+    },
+}
+
 /// The policy under evaluation.
 pub trait Scheduler {
     fn name(&self) -> &'static str;
@@ -368,6 +422,14 @@ pub trait Scheduler {
     /// A KV transfer finished.
     fn on_transfer_done(&mut self, _ctx: &mut SimCtx, _src: InstId,
                         _dst: InstId, _req: ReqId) {
+    }
+    /// Cluster membership changed (crash/drain/join).  Policies that
+    /// index work by instance must purge a crashed instance, stop
+    /// routing to Down/Draining instances, and adopt `rode_through`
+    /// requests on their promoted replicas.  The default ignores
+    /// membership, which is correct for static fleets.
+    fn on_membership_change(&mut self, _ctx: &mut SimCtx,
+                            _change: &MembershipChange) {
     }
 }
 
@@ -436,6 +498,25 @@ pub struct SimCtx {
     nic_held: Vec<bool>,
     /// Max-min model: transfers waiting for both endpoint NICs, FIFO.
     nic_waiting: VecDeque<QueuedXfer>,
+    /// Per-instance availability under elastic membership (all Active
+    /// on a static fleet).
+    avail: Vec<Avail>,
+    /// Pending WorkDone event id per instance (`usize::MAX` when
+    /// idle), so a crash can cancel in-flight work and refund the
+    /// busy time that will never execute.
+    work_event: Vec<usize>,
+    /// Membership timeline (time-sorted; `timeline[idx]` fires at
+    /// `Event::Membership(idx)`, entries chained one at a time).
+    timeline: Vec<MembershipEvent>,
+    /// Cold-start window (seconds) timeline joins pay before Active.
+    cold_start: f64,
+    /// Autoscaler policy (None = no ticks ever scheduled).
+    autoscale: Option<AutoscaleSpec>,
+    /// Membership machinery configured (timeline or autoscaler):
+    /// gates the report so static runs stay byte-identical.
+    membership_on: bool,
+    /// Membership counters accumulated over the run.
+    mstats: crate::sim::metrics::MembershipReport,
     /// Telemetry collector (spans / probes / trace); every hook is a
     /// no-op under the default all-off config.
     telemetry: Telemetry,
@@ -464,6 +545,21 @@ impl SimCtx {
     /// transfers thanks to the free list.
     pub fn flow_slab_capacity(&self) -> usize {
         self.flows.len()
+    }
+
+    /// Availability of one instance (always Active on a static fleet).
+    pub fn avail(&self, inst: InstId) -> Avail {
+        self.avail[inst]
+    }
+
+    /// Is the instance taking traffic?
+    pub fn is_active(&self, inst: InstId) -> bool {
+        self.avail[inst] == Avail::Active
+    }
+
+    /// Number of Active instances.
+    pub fn n_active(&self) -> usize {
+        self.avail.iter().filter(|&&a| a == Avail::Active).count()
     }
 
     /// Cost model of one instance.
@@ -741,6 +837,8 @@ impl SimCtx {
     pub fn start_prefill(&mut self, inst: InstId, reqs: Vec<ReqId>) {
         assert!(!self.is_busy(inst), "instance {inst} is busy");
         assert!(!reqs.is_empty());
+        debug_assert!(self.avail[inst] != Avail::Down,
+                      "prefill started on down instance {inst}");
         let lens: Vec<u32> = reqs
             .iter()
             .map(|&r| self.requests[r].uncached_prompt_tokens())
@@ -762,7 +860,8 @@ impl SimCtx {
         let i = &mut self.instances[inst];
         i.running = Some(Work::Prefill { reqs });
         i.busy_acc += dur;
-        self.push_event(self.now + dur, Event::WorkDone(inst));
+        let ev = self.push_event(self.now + dur, Event::WorkDone(inst));
+        self.work_event[inst] = ev;
     }
 
     /// Begin one decode step on `inst` for `batch` (KV primaries must
@@ -772,6 +871,8 @@ impl SimCtx {
                              prefills: Vec<ReqId>) {
         assert!(!self.is_busy(inst), "instance {inst} is busy");
         assert!(!batch.is_empty() || !prefills.is_empty());
+        debug_assert!(self.avail[inst] != Avail::Down,
+                      "decode step started on down instance {inst}");
         let kv: f64 = batch.iter().map(|&r| self.kv_tokens(r) as f64).sum();
         let plens: Vec<u32> = prefills
             .iter()
@@ -801,7 +902,8 @@ impl SimCtx {
         let i = &mut self.instances[inst];
         i.running = Some(Work::DecodeStep { batch, prefills });
         i.busy_acc += dur;
-        self.push_event(self.now + dur, Event::WorkDone(inst));
+        let ev = self.push_event(self.now + dur, Event::WorkDone(inst));
+        self.work_event[inst] = ev;
     }
 
     /// Start a KV transfer of `tokens` over the src→dst link.  The link
@@ -812,6 +914,9 @@ impl SimCtx {
     /// only its bytes are metered.
     pub fn start_transfer(&mut self, src: InstId, dst: InstId, req: ReqId,
                           tokens: f64, kind: XferKind, overlap: bool) {
+        debug_assert!(self.avail[src] != Avail::Down
+                          && self.avail[dst] != Avail::Down,
+                      "transfer {src}->{dst} touches a down instance");
         let bytes = self.kv_bytes_tokens(tokens);
         match kind {
             XferKind::PrefillHandoff => self.metrics.xfer_prefill_bytes += bytes,
@@ -879,6 +984,9 @@ impl SimCtx {
     pub fn start_transfer_pipelined(&mut self, src: InstId, dst: InstId,
                                     req: ReqId, tokens: f64, kind: XferKind,
                                     overlapped: f64) {
+        debug_assert!(self.avail[src] != Avail::Down
+                          && self.avail[dst] != Avail::Down,
+                      "transfer {src}->{dst} touches a down instance");
         let bytes = self.kv_bytes_tokens(tokens);
         match kind {
             XferKind::PrefillHandoff => self.metrics.xfer_prefill_bytes += bytes,
@@ -1269,7 +1377,206 @@ impl SimCtx {
                 });
             }
         }
-        ProbeSample { t, pending: self.pending.len(), instances, links }
+        ProbeSample {
+            t,
+            pending: self.pending.len(),
+            active: self.avail.iter().filter(|&&a| a == Avail::Active).count(),
+            instances,
+            links,
+        }
+    }
+}
+
+/// Default cold-start window (seconds) a joining instance pays before
+/// it can take traffic: model load + KV-allocator warmup.
+pub const DEFAULT_COLD_START_S: f64 = 2.0;
+
+/// What happens to an instance at a membership-timeline entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipAction {
+    /// Instance comes up; Active after the cold-start window.
+    Join,
+    /// Graceful departure: finish resident work, take no new traffic.
+    Drain,
+    /// Abrupt failure: running work is cancelled, unreplicated KV is
+    /// lost and its requests re-queued from scratch.
+    Crash,
+}
+
+/// One scripted membership event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MembershipEvent {
+    /// Absolute sim time the event fires.
+    pub t: f64,
+    pub action: MembershipAction,
+    pub inst: InstId,
+}
+
+/// A scripted timeline of membership events over a frozen
+/// [`ClusterSpec`]: elasticity toggles per-instance *availability*, it
+/// never re-shapes the spec, so topology pricing and ids stay stable.
+///
+/// Spec grammar: `"[cold=SECONDS;]action:inst@t[;action:inst@t...]"`,
+/// e.g. `"cold=3;join:4@10;crash:0@25"`.  Instances whose first mention
+/// is a `join` start the run Down.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MembershipTimeline {
+    /// Events, stably sorted by time (equal-time events keep spec
+    /// order).
+    pub events: Vec<MembershipEvent>,
+    /// Cold-start window for every join in this timeline.
+    pub cold_start: f64,
+}
+
+impl MembershipTimeline {
+    /// Parse the `"[cold=S;]action:inst@t[;...]"` grammar.
+    pub fn parse(spec: &str) -> Result<MembershipTimeline, String> {
+        let mut cold_start = DEFAULT_COLD_START_S;
+        let mut events = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            if let Some(v) = part.strip_prefix("cold=") {
+                cold_start = v
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad cold-start {v:?}"))?;
+                if !cold_start.is_finite() || cold_start < 0.0 {
+                    return Err(format!("bad cold-start {v:?}"));
+                }
+                continue;
+            }
+            let (action, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad membership event {part:?} \
+                                        (want action:inst@t)"))?;
+            let action = match action {
+                "join" => MembershipAction::Join,
+                "drain" => MembershipAction::Drain,
+                "crash" => MembershipAction::Crash,
+                other => {
+                    return Err(format!("unknown membership action \
+                                        {other:?}"))
+                }
+            };
+            let (inst, t) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("bad membership event {part:?} \
+                                        (want action:inst@t)"))?;
+            let inst = inst
+                .parse::<usize>()
+                .map_err(|_| format!("bad instance id {inst:?}"))?;
+            let t = t
+                .parse::<f64>()
+                .map_err(|_| format!("bad event time {t:?}"))?;
+            if !t.is_finite() || t < 0.0 {
+                return Err(format!("bad event time {t:?}"));
+            }
+            events.push(MembershipEvent { t, action, inst });
+        }
+        if events.is_empty() {
+            return Err("empty membership timeline".into());
+        }
+        events.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Ok(MembershipTimeline { events, cold_start })
+    }
+
+    /// Check every event targets an instance of an `n`-wide cluster.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        for e in &self.events {
+            if e.inst >= n {
+                return Err(format!("membership event targets instance \
+                                    {} but the cluster has {n}",
+                                   e.inst));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Queue-depth-driven autoscaler: every `interval` seconds, compare
+/// in-flight requests per active instance against the `up`/`down`
+/// watermarks and wake a Down instance (paying `cold_start`) or drain
+/// the highest-id Active one.
+///
+/// Spec grammar: `"interval=5,up=8,down=1,cold=2,min=2"`; omitted keys
+/// keep their defaults.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscaleSpec {
+    /// Seconds between policy evaluations.
+    pub interval: f64,
+    /// Scale up when in-flight > `up` × active instances.
+    pub up: f64,
+    /// Drain when in-flight < `down` × active instances.
+    pub down: f64,
+    /// Cold-start window paid by autoscaler-woken instances.
+    pub cold_start: f64,
+    /// Never drain below this many Active instances.
+    pub min_active: usize,
+}
+
+impl Default for AutoscaleSpec {
+    fn default() -> AutoscaleSpec {
+        AutoscaleSpec {
+            interval: 5.0,
+            up: 8.0,
+            down: 1.0,
+            cold_start: DEFAULT_COLD_START_S,
+            min_active: 1,
+        }
+    }
+}
+
+impl AutoscaleSpec {
+    /// Parse the `"k=v,k=v"` grammar; empty string = all defaults.
+    pub fn parse(spec: &str) -> Result<AutoscaleSpec, String> {
+        let mut a = AutoscaleSpec::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad autoscale option {part:?} \
+                                        (want k=v)"))?;
+            match k {
+                "interval" => {
+                    a.interval = v
+                        .parse()
+                        .map_err(|_| format!("bad interval {v:?}"))?
+                }
+                "up" => {
+                    a.up =
+                        v.parse().map_err(|_| format!("bad up {v:?}"))?
+                }
+                "down" => {
+                    a.down = v
+                        .parse()
+                        .map_err(|_| format!("bad down {v:?}"))?
+                }
+                "cold" => {
+                    a.cold_start = v
+                        .parse()
+                        .map_err(|_| format!("bad cold {v:?}"))?
+                }
+                "min" => {
+                    a.min_active = v
+                        .parse()
+                        .map_err(|_| format!("bad min {v:?}"))?
+                }
+                other => {
+                    return Err(format!("unknown autoscale key \
+                                        {other:?}"))
+                }
+            }
+        }
+        if !a.interval.is_finite() || a.interval <= 0.0 {
+            return Err(format!("autoscale interval must be positive, \
+                                got {}", a.interval));
+        }
+        Ok(a)
     }
 }
 
@@ -1292,6 +1599,11 @@ pub struct SimConfig {
     pub contention_model: ContentionModel,
     /// Run telemetry (spans / probes / trace); default all off.
     pub telemetry: TelemetryConfig,
+    /// Scripted cluster-membership timeline (joins / drains / crashes);
+    /// None = static fleet, zero membership machinery in the event loop.
+    pub membership: Option<MembershipTimeline>,
+    /// Queue-depth-driven autoscaler policy; None = no autoscaler.
+    pub autoscale: Option<AutoscaleSpec>,
 }
 
 impl SimConfig {
@@ -1303,6 +1615,8 @@ impl SimConfig {
             record_timeline: false,
             contention_model: ContentionModel::Admission,
             telemetry: TelemetryConfig::default(),
+            membership: None,
+            autoscale: None,
         }
     }
 
@@ -1381,6 +1695,13 @@ where
         flow_mark: Vec::new(),
         nic_held: vec![false; n],
         nic_waiting: VecDeque::new(),
+        avail: vec![Avail::Active; n],
+        work_event: vec![usize::MAX; n],
+        timeline: Vec::new(),
+        cold_start: DEFAULT_COLD_START_S,
+        autoscale: None,
+        membership_on: false,
+        mstats: Default::default(),
         telemetry: Telemetry::new(
             cfg.telemetry,
             n,
@@ -1401,6 +1722,34 @@ where
         ctx.metrics.uplink_peak_streams = vec![0; n_up];
         ctx.metrics.uplink_busy_s = vec![0.0; n_up];
         ctx.metrics.uplink_resched = vec![0; n_up];
+    }
+
+    // Membership machinery pushes ZERO heap events when both specs are
+    // None, which is what keeps static runs byte-identical to the
+    // pre-elasticity engine (pinned by tests and the goldens).
+    if let Some(tl) = &cfg.membership {
+        tl.validate(n).expect("membership timeline references an \
+                               instance outside the cluster");
+        ctx.membership_on = true;
+        ctx.cold_start = tl.cold_start;
+        ctx.timeline = tl.events.clone();
+        // Instances whose first scripted mention is a Join start Down:
+        // the timeline is how late-arriving capacity is expressed.
+        for inst in 0..n {
+            let first = ctx.timeline.iter().find(|e| e.inst == inst);
+            if let Some(e) = first {
+                if e.action == MembershipAction::Join {
+                    ctx.avail[inst] = Avail::Down;
+                }
+            }
+        }
+        let t0 = ctx.timeline[0].t;
+        ctx.push_event(t0, Event::Membership(0));
+    }
+    if let Some(a) = cfg.autoscale {
+        ctx.membership_on = true;
+        ctx.autoscale = Some(a);
+        ctx.push_event(a.interval, Event::AutoscaleTick);
     }
 
     let mut arrivals = arrivals.into_iter().peekable();
@@ -1447,9 +1796,14 @@ where
         if ctx.telemetry.cfg.probe_interval.is_some() {
             ctx.sample_probes(t);
         }
-        ctx.now = t;
+        // `ctx.now` is advanced inside each arm: control events that
+        // turn out to be no-ops (an inert autoscaler tick, a membership
+        // event after the fleet drained) must NOT move the clock, or
+        // they would inflate the makespan of otherwise-identical runs.
         match ev {
             Event::WorkDone(inst) => {
+                ctx.now = t;
+                ctx.work_event[inst] = usize::MAX;
                 let work = ctx.instances[inst]
                     .running
                     .take()
@@ -1459,6 +1813,7 @@ where
                 sched.on_work_done(&mut ctx, inst, work, completed);
             }
             Event::TransferDone { src, dst, req, flow } => {
+                ctx.now = t;
                 ctx.telemetry.on_xfer_done(req, t);
                 ctx.telemetry.xfer_span_end(src, dst, req, t);
                 match flow {
@@ -1508,6 +1863,68 @@ where
                 }
                 sched.on_transfer_done(&mut ctx, src, dst, req);
             }
+            Event::Membership(idx) => {
+                // Liveness: membership events only matter while there
+                // is (or will be) work in flight.  Checking arrivals +
+                // unfinished requests — NOT `queue.live()` — avoids a
+                // ping-pong where a pending tick and a pending timeline
+                // entry keep each other alive forever.
+                let live = arrivals.peek().is_some()
+                    || ctx.requests.len() as u64 > ctx.metrics.completed;
+                if live {
+                    ctx.now = t;
+                    let e = ctx.timeline[idx];
+                    match e.action {
+                        MembershipAction::Join => {
+                            let cold = ctx.cold_start;
+                            apply_join(&mut ctx, e.inst, cold);
+                        }
+                        MembershipAction::Drain => {
+                            apply_drain(&mut ctx, sched, e.inst)
+                        }
+                        MembershipAction::Crash => {
+                            apply_crash(&mut ctx, sched, e.inst)
+                        }
+                    }
+                    // Chain one entry at a time so an exhausted
+                    // timeline never keeps the run alive.
+                    let next = idx + 1;
+                    if next < ctx.timeline.len() {
+                        let nt = ctx.timeline[next].t.max(t);
+                        ctx.push_event(nt, Event::Membership(next));
+                    }
+                }
+            }
+            Event::AutoscaleTick => {
+                let live = arrivals.peek().is_some()
+                    || ctx.requests.len() as u64 > ctx.metrics.completed;
+                if live {
+                    // `autoscale_tick` advances `ctx.now` only if an
+                    // action actually fires, so a never-triggering
+                    // autoscaler leaves the metrics bit-identical.
+                    autoscale_tick(&mut ctx, sched, t);
+                    let interval =
+                        ctx.autoscale.expect("tick without spec").interval;
+                    ctx.push_event(t + interval, Event::AutoscaleTick);
+                }
+            }
+            Event::WarmupDone(inst) => {
+                // Only a still-Warming instance activates: a crash or
+                // drain during the cold-start window wins.
+                if ctx.avail[inst] == Avail::Warming {
+                    ctx.avail[inst] = Avail::Active;
+                    let live = arrivals.peek().is_some()
+                        || ctx.requests.len() as u64
+                            > ctx.metrics.completed;
+                    if live {
+                        ctx.now = t;
+                        sched.on_membership_change(
+                            &mut ctx,
+                            &MembershipChange::Joined(inst),
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -1525,8 +1942,13 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
         Work::Prefill { reqs } => {
             for &r in reqs {
                 let req = &mut ctx.requests[r];
-                req.first_token = Some(now);
                 req.last_token_at = now;
+                // A crash-requeued request re-prefills; TTFT keeps the
+                // user-visible first stamp.
+                if req.first_token.is_some() {
+                    continue;
+                }
+                req.first_token = Some(now);
                 let ttft = now - req.arrival;
                 ctx.metrics.ttft_sample(ttft, class);
                 ctx.telemetry.on_first_token(r, now);
@@ -1571,8 +1993,12 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
             }
             for &r in prefills {
                 let req = &mut ctx.requests[r];
-                req.first_token = Some(now);
                 req.last_token_at = now;
+                // See the Prefill arm: re-prefills keep the first TTFT.
+                if req.first_token.is_some() {
+                    continue;
+                }
+                req.first_token = Some(now);
                 let ttft = now - req.arrival;
                 ctx.metrics.ttft_sample(ttft, class);
                 ctx.telemetry.on_first_token(r, now);
@@ -1580,6 +2006,159 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
         }
     }
     completed
+}
+
+/// Abrupt failure of `inst`: cancel its running work, scrub every KV
+/// copy it held (a surviving replica makes the loss invisible to the
+/// request — the AcceLLM ride-through; otherwise all progress is lost
+/// and the request re-queues from scratch), then notify the scheduler.
+fn apply_crash(ctx: &mut SimCtx, sched: &mut dyn Scheduler, inst: InstId) {
+    if ctx.avail[inst] == Avail::Down {
+        return;
+    }
+    ctx.avail[inst] = Avail::Down;
+    ctx.mstats.crashes += 1;
+
+    // Cancel whatever was running: refund the un-run tail of the busy
+    // interval and forget the pending WorkDone.
+    let mut requeued: Vec<ReqId> = Vec::new();
+    if let Some(work) = ctx.instances[inst].running.take() {
+        let ev = ctx.work_event[inst];
+        debug_assert!(ev != usize::MAX, "running work without an event");
+        let t_done = ctx.queue.time_of(ev);
+        ctx.queue.cancel(ev);
+        ctx.work_event[inst] = usize::MAX;
+        ctx.instances[inst].busy_acc -= t_done - ctx.now;
+        ctx.telemetry.work_end(inst, ctx.now);
+        // Mid-prefill prompts whose primary was already placed are
+        // caught by the KV scrub below; the rest are re-queued here.
+        let interrupted: Vec<ReqId> = match work {
+            Work::Prefill { reqs } => reqs,
+            Work::DecodeStep { prefills, .. } => prefills,
+        };
+        for r in interrupted {
+            let req = &mut ctx.requests[r];
+            req.prefill_start = None;
+            if req.primary.is_none() {
+                req.cached_prefix = 0;
+                requeued.push(r);
+            }
+        }
+    }
+
+    // Scrub every live KV copy on the crashed instance.
+    let mut promote: Vec<(ReqId, InstId)> = Vec::new();
+    let mut lost: Vec<ReqId> = Vec::new();
+    let mut drop_rep: Vec<ReqId> = Vec::new();
+    {
+        let avail = &ctx.avail;
+        for (r, req) in ctx.requests.iter() {
+            if req.is_finished() {
+                continue;
+            }
+            if req.primary == Some(inst) {
+                match req
+                    .replicas
+                    .iter()
+                    .find(|&&h| avail[h] != Avail::Down)
+                {
+                    Some(&h) => promote.push((r, h)),
+                    None => lost.push(r),
+                }
+            } else if req.replicas.contains(&inst) {
+                drop_rep.push(r);
+            }
+        }
+    }
+    let mut rode_through: Vec<ReqId> = Vec::new();
+    for (r, h) in promote {
+        ctx.swap_primary_with_replica(r, h);
+        ctx.drop_replica(r, inst);
+        rode_through.push(r);
+    }
+    for r in drop_rep {
+        ctx.drop_replica(r, inst);
+    }
+    for &r in &lost {
+        // Free first: `kv_bytes` prices the CURRENT token count, which
+        // the progress resets below would corrupt.
+        ctx.free_request_kv(r);
+        let req = &mut ctx.requests[r];
+        req.generated = 0;
+        req.prefill_start = None;
+        req.cached_prefix = 0;
+    }
+    requeued.extend(lost);
+
+    ctx.mstats.requeued += requeued.len() as u64;
+    ctx.mstats.rode_through += rode_through.len() as u64;
+    for &r in &requeued {
+        ctx.pending.push_back(r);
+    }
+    sched.on_membership_change(ctx, &MembershipChange::Crashed {
+        inst,
+        requeued: requeued.clone(),
+        rode_through,
+    });
+    for r in requeued {
+        sched.on_arrival(ctx, r);
+    }
+}
+
+/// Graceful departure: `inst` stops taking new work but keeps its KV
+/// and finishes resident requests.
+fn apply_drain(ctx: &mut SimCtx, sched: &mut dyn Scheduler, inst: InstId) {
+    if !matches!(ctx.avail[inst], Avail::Active | Avail::Warming) {
+        return;
+    }
+    ctx.avail[inst] = Avail::Draining;
+    ctx.mstats.drains += 1;
+    sched.on_membership_change(ctx, &MembershipChange::Draining(inst));
+}
+
+/// Bring a Down instance up; it turns Active (and scheduler-visible)
+/// only after the cold-start window elapses.
+fn apply_join(ctx: &mut SimCtx, inst: InstId, cold_start: f64) {
+    if ctx.avail[inst] != Avail::Down {
+        return;
+    }
+    ctx.avail[inst] = Avail::Warming;
+    ctx.mstats.joins += 1;
+    ctx.push_event(ctx.now + cold_start, Event::WarmupDone(inst));
+}
+
+/// One autoscaler evaluation at time `t`.  Advances `ctx.now` (and so
+/// perturbs the run) only when an action actually fires.
+fn autoscale_tick(ctx: &mut SimCtx, sched: &mut dyn Scheduler, t: f64) {
+    let spec = ctx.autoscale.expect("autoscale tick without a spec");
+    let n_active = ctx.n_active();
+    if n_active == 0 {
+        return;
+    }
+    let in_flight =
+        (ctx.requests.len() as u64 - ctx.metrics.completed) as f64;
+    if in_flight > spec.up * n_active as f64 {
+        // Backlog: wake the lowest-id Down instance, paying cold start.
+        if let Some(inst) =
+            (0..ctx.avail.len()).find(|&i| ctx.avail[i] == Avail::Down)
+        {
+            ctx.now = t;
+            ctx.mstats.autoscale_ups += 1;
+            apply_join(ctx, inst, spec.cold_start);
+        }
+    } else if in_flight < spec.down * n_active as f64
+        && n_active > spec.min_active
+    {
+        // Idle capacity: drain the highest-id Active instance.
+        if let Some(inst) = (0..ctx.avail.len())
+            .rev()
+            .find(|&i| ctx.avail[i] == Avail::Active)
+        {
+            ctx.now = t;
+            ctx.mstats.autoscale_downs += 1;
+            apply_drain(ctx, sched, inst);
+        }
+    }
 }
 
 fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
@@ -1669,6 +2248,14 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
     let imbalance = ctx.telemetry.imbalance();
     let probes = std::mem::take(&mut ctx.telemetry.probes);
     let trace_events = std::mem::take(&mut ctx.telemetry.trace_events);
+    let membership = if ctx.membership_on {
+        let mut ms = ctx.mstats.clone();
+        ms.final_active =
+            ctx.avail.iter().filter(|&&a| a == Avail::Active).count();
+        Some(ms)
+    } else {
+        None
+    };
     let m = &mut ctx.metrics;
     RunReport {
         scheduler: sched_name.to_string(),
@@ -1715,6 +2302,7 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
         imbalance,
         probes,
         trace_events,
+        membership,
     }
 }
 
@@ -2247,5 +2835,185 @@ mod tests {
         assert_eq!(h.completed, a.completed);
         assert!(a.jct_mean > 1.3 * h.jct_mean,
                 "910B2 {} vs H100 {}", a.jct_mean, h.jct_mean);
+    }
+
+    /// Elastic-aware serial policy: FIFO through `ctx.pending`, one
+    /// request at a time, always on the lowest-id idle Active instance
+    /// (so crashed work re-queued by the engine lands on a survivor).
+    struct ActiveSerialSched;
+
+    impl ActiveSerialSched {
+        fn kick(&self, ctx: &mut SimCtx) {
+            while !ctx.pending.is_empty() {
+                let Some(inst) = (0..ctx.n_instances())
+                    .find(|&i| ctx.is_active(i) && !ctx.is_busy(i))
+                else {
+                    return;
+                };
+                let r = ctx.pending.pop_front().unwrap();
+                ctx.start_prefill(inst, vec![r]);
+            }
+        }
+    }
+
+    impl Scheduler for ActiveSerialSched {
+        fn name(&self) -> &'static str {
+            "active-serial"
+        }
+
+        fn on_arrival(&mut self, ctx: &mut SimCtx, _req: ReqId) {
+            self.kick(ctx);
+        }
+
+        fn on_work_done(&mut self, ctx: &mut SimCtx, inst: InstId,
+                        work: Work, _completed: Vec<ReqId>) {
+            match work {
+                Work::Prefill { reqs } => {
+                    let r = reqs[0];
+                    ctx.place_primary(r, inst);
+                    ctx.start_decode_step(inst, vec![r], vec![]);
+                }
+                Work::DecodeStep { batch, .. } => {
+                    let r = batch[0];
+                    if !ctx.requests[r].is_finished()
+                        && ctx.requests[r].primary == Some(inst)
+                    {
+                        ctx.start_decode_step(inst, vec![r], vec![]);
+                    } else {
+                        self.kick(ctx);
+                    }
+                }
+            }
+        }
+
+        fn on_membership_change(&mut self, ctx: &mut SimCtx,
+                                _change: &MembershipChange) {
+            self.kick(ctx);
+        }
+    }
+
+    #[test]
+    fn membership_timeline_parses_and_validates() {
+        let t =
+            MembershipTimeline::parse("cold=3;join:1@5;crash:0@2.5").unwrap();
+        assert_eq!(t.cold_start, 3.0);
+        // Events come out time-sorted regardless of spec order.
+        assert_eq!(t.events[0].t, 2.5);
+        assert_eq!(t.events[0].action, MembershipAction::Crash);
+        assert_eq!(t.events[1].inst, 1);
+        assert_eq!(t.events[1].action, MembershipAction::Join);
+        assert!(t.validate(2).is_ok());
+        assert!(t.validate(1).is_err(), "instance 1 needs a 2-wide fleet");
+        assert!(MembershipTimeline::parse("").is_err());
+        assert!(MembershipTimeline::parse("explode:0@1").is_err());
+        assert!(MembershipTimeline::parse("crash:0@-1").is_err());
+        assert!(MembershipTimeline::parse("cold=-1;crash:0@1").is_err());
+    }
+
+    #[test]
+    fn autoscale_spec_parses_with_defaults() {
+        assert_eq!(AutoscaleSpec::parse("").unwrap(), AutoscaleSpec::default());
+        let s = AutoscaleSpec::parse("interval=2,up=4,down=0.5,cold=1,min=2")
+            .unwrap();
+        assert_eq!(s.interval, 2.0);
+        assert_eq!(s.up, 4.0);
+        assert_eq!(s.down, 0.5);
+        assert_eq!(s.cold_start, 1.0);
+        assert_eq!(s.min_active, 2);
+        assert!(AutoscaleSpec::parse("interval=0").is_err());
+        assert!(AutoscaleSpec::parse("bogus=1").is_err());
+    }
+
+    /// Satellite 4 pin: a run with the membership machinery present but
+    /// inert (an autoscaler whose thresholds no run reaches) reproduces
+    /// the static run bit for bit — control events must not advance the
+    /// clock or perturb any metric.
+    #[test]
+    fn inert_membership_machinery_is_bit_identical() {
+        let trace = Trace::poisson(MIXED, 0.5, 20.0, 1);
+        let base = run(&cfg(1), &trace, &mut SerialSched);
+        let mut c = cfg(1);
+        c.autoscale = Some(AutoscaleSpec {
+            interval: 1.0,
+            up: 1e18,
+            down: 0.0,
+            cold_start: 1.0,
+            min_active: 1,
+        });
+        let on = run(&c, &trace, &mut SerialSched);
+        assert_eq!(base.makespan, on.makespan);
+        assert_eq!(base.jct_mean, on.jct_mean);
+        assert_eq!(base.ttft_p99, on.ttft_p99);
+        assert_eq!(base.completed, on.completed);
+        assert!(base.membership.is_none(), "static runs report no membership");
+        let ms = on.membership.expect("elastic run reports membership");
+        assert_eq!(ms.crashes + ms.drains + ms.joins, 0);
+        assert_eq!(ms.autoscale_ups + ms.autoscale_downs, 0);
+        assert_eq!(ms.final_active, 1);
+    }
+
+    #[test]
+    fn crash_requeues_lost_requests_and_completes() {
+        let trace = Trace::poisson(MIXED, 1.0, 20.0, 7);
+        let mut c = cfg(2);
+        c.membership = Some(MembershipTimeline::parse("crash:0@10").unwrap());
+        let r = run(&c, &trace, &mut ActiveSerialSched);
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.unwrap();
+        assert_eq!(ms.crashes, 1);
+        assert!(ms.requeued > 0, "a mid-run crash must interrupt something");
+        assert_eq!(ms.rode_through, 0, "serial policy keeps no replicas");
+        assert_eq!(ms.final_active, 1);
+    }
+
+    #[test]
+    fn join_then_crash_fails_over_to_the_joined_instance() {
+        // Instance 1 starts Down (its first mention is a join), warms up
+        // from t=5, and must carry the fleet alone after 0 dies at t=10.
+        let trace = Trace::poisson(MIXED, 1.0, 15.0, 9);
+        let mut c = cfg(2);
+        c.membership = Some(
+            MembershipTimeline::parse("cold=2;join:1@5;crash:0@10").unwrap());
+        let r = run(&c, &trace, &mut ActiveSerialSched);
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.unwrap();
+        assert_eq!((ms.crashes, ms.joins), (1, 1));
+        assert_eq!(ms.final_active, 1);
+    }
+
+    #[test]
+    fn drain_finishes_resident_work_but_takes_no_new() {
+        let trace = Trace::poisson(MIXED, 1.0, 20.0, 11);
+        let mut c = cfg(2);
+        c.membership = Some(MembershipTimeline::parse("drain:0@6").unwrap());
+        let r = run(&c, &trace, &mut ActiveSerialSched);
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.unwrap();
+        assert_eq!(ms.drains, 1);
+        assert_eq!(ms.requeued, 0, "draining never interrupts resident work");
+        assert_eq!(ms.final_active, 1);
+    }
+
+    #[test]
+    fn autoscaler_wakes_a_down_instance_under_backlog() {
+        // Instance 1 starts Down (its only timeline mention is a join
+        // far past the run); the autoscaler must wake it from the
+        // queue-depth signal alone.
+        let trace = Trace::poisson(MIXED, 2.0, 20.0, 13);
+        let mut c = cfg(2);
+        c.membership = Some(MembershipTimeline::parse("join:1@1000").unwrap());
+        c.autoscale = Some(AutoscaleSpec {
+            interval: 1.0,
+            up: 2.0,
+            down: 0.0,
+            cold_start: 0.5,
+            min_active: 1,
+        });
+        let r = run(&c, &trace, &mut ActiveSerialSched);
+        assert_eq!(r.completed, trace.len());
+        let ms = r.membership.unwrap();
+        assert!(ms.autoscale_ups >= 1,
+                "backlog never woke the spare: {ms:?}");
+        assert_eq!(ms.final_active, 2);
     }
 }

@@ -496,6 +496,13 @@ pub fn maxmin_rates(flows: &[FlowSpec], uplink_bw: &[f64],
 /// Per-instance hardware description of a whole cluster plus its
 /// interconnect topology — the tentpole replacement for the old
 /// global `InstanceSpec`.
+///
+/// The spec is *frozen* for the lifetime of a run: elastic fleets
+/// (`--events` / `--autoscale`) never add or remove entries here.
+/// Joins, drains, and crashes toggle per-instance availability
+/// (`Avail`) in the engine over this fixed roster, so hardware
+/// identity, scheduler pairing, and topology pricing stay stable
+/// across membership churn.
 #[derive(Clone, Debug)]
 pub struct ClusterSpec {
     instances: Vec<InstanceSpec>,

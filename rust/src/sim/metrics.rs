@@ -245,6 +245,43 @@ impl DeviceClassReport {
     }
 }
 
+/// What cluster elasticity did to a run: scripted + autoscaled
+/// membership changes and their request-level consequences.  `None` on
+/// `RunReport` (and absent from its JSON) for static runs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MembershipReport {
+    /// Scripted + autoscaler-initiated events applied.
+    pub crashes: u64,
+    pub drains: u64,
+    pub joins: u64,
+    /// Autoscaler decisions (subsets of `joins`/`drains`).
+    pub autoscale_ups: u64,
+    pub autoscale_downs: u64,
+    /// Requests whose KV died with a crashed instance and restarted
+    /// from scratch.
+    pub requeued: u64,
+    /// Requests that survived a primary-holder crash via a live
+    /// replica (the AcceLLM ride-through).
+    pub rode_through: u64,
+    /// Active instances when the run ended.
+    pub final_active: usize,
+}
+
+impl MembershipReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("crashes", Json::num(self.crashes as f64)),
+            ("drains", Json::num(self.drains as f64)),
+            ("joins", Json::num(self.joins as f64)),
+            ("autoscale_ups", Json::num(self.autoscale_ups as f64)),
+            ("autoscale_downs", Json::num(self.autoscale_downs as f64)),
+            ("requeued", Json::num(self.requeued as f64)),
+            ("rode_through", Json::num(self.rode_through as f64)),
+            ("final_active", Json::num(self.final_active as f64)),
+        ])
+    }
+}
+
 /// Immutable summary of one finished simulation run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -321,6 +358,10 @@ pub struct RunReport {
     pub probes: Vec<ProbeSample>,
     /// Chrome-trace spans (empty when trace recording is off).
     pub trace_events: Vec<TraceEvent>,
+    /// Membership-event outcomes (None for static runs — keeps the
+    /// report, its JSON, and the goldens byte-identical without
+    /// elasticity).
+    pub membership: Option<MembershipReport>,
 }
 
 impl RunReport {
@@ -366,6 +407,9 @@ impl RunReport {
         }
         if let Some(im) = &self.imbalance {
             pairs.push(("imbalance", im.to_json()));
+        }
+        if let Some(ms) = &self.membership {
+            pairs.push(("membership", ms.to_json()));
         }
         Json::obj(pairs)
     }

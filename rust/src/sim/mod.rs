@@ -14,15 +14,17 @@ pub mod perfmodel;
 pub mod request;
 pub mod telemetry;
 
-pub use engine::{run, run_arrivals, ContentionModel, Scheduler, SimConfig,
-                 SimCtx, Work, XferKind};
+pub use engine::{run, run_arrivals, AutoscaleSpec, Avail, ContentionModel,
+                 MembershipAction, MembershipChange, MembershipEvent,
+                 MembershipTimeline, Scheduler, SimConfig, SimCtx, Work,
+                 XferKind, DEFAULT_COLD_START_S};
 pub use hardware::{known_device_names, maxmin_rates, ClusterSpec, DeviceSpec,
                    FlowSpec, InstanceSpec, Topology, ALL_DEVICES,
                    ASCEND_910B2, A100, H100, MI300X};
 pub use instance::{Role, SimInstance};
 pub use llm::{LlmSpec, LLAMA2_70B};
 pub use metrics::{BoundedTimeline, DeviceClassReport, LinkReport,
-                  MetricsCollector, RunReport};
+                  MembershipReport, MetricsCollector, RunReport};
 pub use perfmodel::PerfModel;
 pub use request::{InstId, ReqId, RequestStore, SimRequest};
 pub use telemetry::{chrome_trace_json, probes_csv, sample_stats,

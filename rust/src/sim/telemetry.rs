@@ -224,6 +224,9 @@ pub struct ProbeSample {
     pub t: f64,
     /// Requests arrived but not yet placed.
     pub pending: usize,
+    /// Instances currently Active (taking traffic) — tracks
+    /// membership events; equals the fleet size on static runs.
+    pub active: usize,
     pub instances: Vec<InstProbe>,
     pub links: Vec<LinkProbe>,
 }
@@ -779,8 +782,9 @@ pub fn probes_csv(r: &RunReport) -> String {
 }
 
 pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
-    let mut out =
-        String::from("t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending\n");
+    let mut out = String::from(
+        "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending,active\n",
+    );
     for p in probes {
         let load: usize = p.instances.iter().map(|i| i.load).sum();
         let busy = p.instances.iter().filter(|i| i.busy).count();
@@ -792,12 +796,13 @@ pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
             .map(|l| (l.streams, l.rate))
             .unwrap_or((0, 0.0));
         out.push_str(&format!(
-            "{:.3},fleet,,{},{},{:.4},{},{:.3},{}\n",
-            p.t, load, busy, kv / 1e9, streams, rate / 1e9, p.pending
+            "{:.3},fleet,,{},{},{:.4},{},{:.3},{},{}\n",
+            p.t, load, busy, kv / 1e9, streams, rate / 1e9, p.pending,
+            p.active
         ));
         for (i, ip) in p.instances.iter().enumerate() {
             out.push_str(&format!(
-                "{:.3},instance,{},{},{},{:.4},,,\n",
+                "{:.3},instance,{},{},{},{:.4},,,,\n",
                 p.t, i, ip.load, ip.busy as u8, ip.kv_bytes / 1e9
             ));
         }
@@ -808,7 +813,7 @@ pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
                 String::new()
             };
             out.push_str(&format!(
-                "{:.3},{},{},,,,{},{:.3},\n",
+                "{:.3},{},{},,,,{},{:.3},,\n",
                 p.t, l.tier, id, l.streams, l.rate / 1e9
             ));
         }
@@ -922,6 +927,7 @@ mod tests {
         t.record_sample(ProbeSample {
             t: 1.0,
             pending: 0,
+            active: 2,
             instances: vec![inst(0), inst(0)],
             links: Vec::new(),
         });
@@ -929,6 +935,7 @@ mod tests {
         t.record_sample(ProbeSample {
             t: 2.0,
             pending: 1,
+            active: 2,
             instances: vec![inst(4), inst(0)],
             links: Vec::new(),
         });
@@ -982,6 +989,7 @@ mod tests {
         let sample = ProbeSample {
             t: 1.0,
             pending: 3,
+            active: 2,
             instances: vec![
                 InstProbe { load: 2, busy: true, kv_bytes: 2e9 },
                 InstProbe { load: 0, busy: false, kv_bytes: 0.0 },

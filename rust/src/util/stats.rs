@@ -38,6 +38,11 @@ struct TailSketch {
     hist: Histogram,
     /// Min-heap of the `TAIL_K` largest samples (exact extreme tail).
     tail: BinaryHeap<Reverse<OrdF64>>,
+    /// Sorted snapshot of `tail`, rebuilt lazily on the first quantile
+    /// after an insert — p50/p90/p99/p999 on one fleet report sort the
+    /// worst-K heap once, not four times.
+    sorted_tail: Vec<f64>,
+    tail_dirty: bool,
     sum_sq: f64,
 }
 
@@ -46,6 +51,8 @@ impl TailSketch {
         TailSketch {
             hist: Histogram::latency(),
             tail: BinaryHeap::with_capacity(Summary::TAIL_K + 1),
+            sorted_tail: Vec::new(),
+            tail_dirty: false,
             sum_sq: 0.0,
         }
     }
@@ -59,15 +66,17 @@ impl TailSketch {
     fn offer_tail(&mut self, x: f64) {
         if self.tail.len() < Summary::TAIL_K {
             self.tail.push(Reverse(OrdF64(x)));
+            self.tail_dirty = true;
         } else if let Some(&Reverse(min)) = self.tail.peek() {
             if x > min.0 {
                 self.tail.pop();
                 self.tail.push(Reverse(OrdF64(x)));
+                self.tail_dirty = true;
             }
         }
     }
 
-    fn quantile(&self, q: f64) -> f64 {
+    fn quantile(&mut self, q: f64) -> f64 {
         let n = self.hist.count();
         if n == 0 {
             return 0.0;
@@ -75,10 +84,15 @@ impl TailSketch {
         let pos = q.clamp(0.0, 1.0) * (n - 1) as f64;
         // Ranks >= n - tail.len() are held exactly by the worst-K heap;
         // interpolate there, fall back to the histogram elsewhere.
-        let mut tail: Vec<f64> = self.tail.iter().map(|r| r.0 .0).collect();
-        tail.sort_by(f64::total_cmp);
-        let start = (n as usize - tail.len()) as f64;
-        if pos >= start {
+        if self.tail_dirty {
+            self.sorted_tail.clear();
+            self.sorted_tail.extend(self.tail.iter().map(|r| r.0 .0));
+            self.sorted_tail.sort_by(f64::total_cmp);
+            self.tail_dirty = false;
+        }
+        let tail = &self.sorted_tail;
+        let start = (n as usize).saturating_sub(tail.len()) as f64;
+        if pos >= start && !tail.is_empty() {
             let off = pos - start;
             let lo = off.floor() as usize;
             let hi = (off.ceil() as usize).min(tail.len() - 1);
@@ -189,7 +203,7 @@ impl Summary {
 
     /// Linear-interpolated quantile, q in [0, 1].
     pub fn quantile(&mut self, q: f64) -> f64 {
-        if let Some(s) = &self.sketch {
+        if let Some(s) = &mut self.sketch {
             return s.quantile(q);
         }
         if self.samples.is_empty() {
@@ -522,6 +536,28 @@ mod tests {
         assert_eq!(big2.len(), 2 * (Summary::SPILL + 1));
         assert_eq!(big2.max(), 3.0);
         assert!((big2.mean() - big.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sketch_tail_cache_invalidates_on_insert_and_merge() {
+        // The cached sorted tail must never serve stale data: a new
+        // global max inserted (or merged in) after a quantile call has
+        // to show up in the next deep-tail quantile.
+        let mut s = Summary::new();
+        for i in 0..Summary::SPILL {
+            s.add(i as f64 / Summary::SPILL as f64);
+        }
+        assert!(s.is_sketched());
+        let before = s.quantile(1.0);
+        assert!(before < 50.0);
+        s.add(100.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        let mut other = Summary::new();
+        other.add(1000.0);
+        s.merge(&other);
+        assert_eq!(s.quantile(1.0), 1000.0);
+        // Repeated calls without inserts reuse the cache and agree.
+        assert_eq!(s.quantile(1.0), 1000.0);
     }
 
     #[test]
