@@ -45,6 +45,7 @@ pub struct SimBuilder {
     spec: Option<SchedSpec>,
     membership: Option<MembershipTimeline>,
     autoscale: Option<AutoscaleSpec>,
+    response_cache: Option<crate::respcache::ResponseCacheSpec>,
 }
 
 impl SimBuilder {
@@ -61,6 +62,7 @@ impl SimBuilder {
             spec: None,
             membership: None,
             autoscale: None,
+            response_cache: None,
         }
     }
 
@@ -180,6 +182,17 @@ impl SimBuilder {
         self
     }
 
+    /// Cluster-front response cache
+    /// (`exact=N,ttl=S,semantic=0.9,hit_ms=1`).  `None` (the default)
+    /// keeps arrivals untouched and every golden byte-identical.
+    pub fn response_cache(
+        mut self,
+        spec: crate::respcache::ResponseCacheSpec,
+    ) -> SimBuilder {
+        self.response_cache = Some(spec);
+        self
+    }
+
     pub fn cluster(&self) -> &ClusterSpec {
         &self.cluster
     }
@@ -193,6 +206,7 @@ impl SimBuilder {
         cfg.telemetry = self.telemetry;
         cfg.membership = self.membership.clone();
         cfg.autoscale = self.autoscale;
+        cfg.response_cache = self.response_cache;
         cfg
     }
 
@@ -316,7 +330,13 @@ mod tests {
             .record_timeline(true)
             .telemetry(TelemetryConfig::full(0.5))
             .events(MembershipTimeline::parse("crash:1@5").unwrap())
-            .autoscale(AutoscaleSpec::default());
+            .autoscale(AutoscaleSpec::default())
+            .response_cache(
+                crate::respcache::ResponseCacheSpec::parse(
+                    "exact=64,ttl=30,semantic=0.9,hit_ms=1",
+                )
+                .unwrap(),
+            );
         assert!(b.cluster().topology().contended());
         assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
         assert_eq!(b.cluster().topology().spine_bw(), Some(8e9));
@@ -327,6 +347,8 @@ mod tests {
         assert_eq!(cfg.telemetry, TelemetryConfig::full(0.5));
         assert_eq!(cfg.membership.as_ref().unwrap().events.len(), 1);
         assert_eq!(cfg.autoscale, Some(AutoscaleSpec::default()));
+        let rc = cfg.response_cache.expect("response cache reaches config");
+        assert_eq!((rc.exact, rc.ttl, rc.semantic), (64, 30.0, Some(0.9)));
         // The default stays the admission model with telemetry off and
         // a static fleet (golden stability).
         let d = SimBuilder::parse_cluster("h100x4").unwrap().sim_config();
@@ -334,6 +356,7 @@ mod tests {
         assert_eq!(d.telemetry, TelemetryConfig::off());
         assert!(!d.telemetry.enabled());
         assert!(d.membership.is_none() && d.autoscale.is_none());
+        assert!(d.response_cache.is_none());
     }
 
     #[test]

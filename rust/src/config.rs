@@ -44,12 +44,18 @@
 //! frozen cluster spec) and `"autoscale"` a queue-depth autoscaler
 //! policy (`"interval=5,up=8,down=1,cold=2,min=2"`).  Omitting both
 //! keeps the fleet static and every golden byte-identical.
+//!
+//! `"response_cache"` enables the cluster-front response cache with
+//! the same spec grammar as `--response-cache`
+//! (`"exact=4096,ttl=600,semantic=0.9,hit_ms=1"`).  Omitting it keeps
+//! every request on the fleet and the goldens byte-identical.
 
 use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::registry::SchedSpec;
+use crate::respcache::ResponseCacheSpec;
 use crate::sim::{AutoscaleSpec, ClusterSpec, ContentionModel, DeviceSpec,
                  MembershipTimeline, SimConfig, TelemetryConfig, LLAMA2_70B};
 use crate::util::json::Json;
@@ -81,6 +87,8 @@ pub struct Experiment {
     pub membership: Option<MembershipTimeline>,
     /// Queue-depth-driven autoscaler policy.
     pub autoscale: Option<AutoscaleSpec>,
+    /// Cluster-front response cache (exact + semantic tiers).
+    pub response_cache: Option<ResponseCacheSpec>,
 }
 
 impl Default for Experiment {
@@ -100,6 +108,7 @@ impl Default for Experiment {
             probes_out: None,
             membership: None,
             autoscale: None,
+            response_cache: None,
         }
     }
 }
@@ -279,6 +288,10 @@ impl Experiment {
             exp.autoscale = Some(
                 AutoscaleSpec::parse(v).map_err(|e| anyhow!("config: {e}"))?);
         }
+        if let Some(v) = j.get("response_cache").and_then(|x| x.as_str()) {
+            exp.response_cache = Some(ResponseCacheSpec::parse(v)
+                .map_err(|e| anyhow!("config: {e}"))?);
+        }
         if exp.rates.is_empty() || exp.duration <= 0.0 {
             return Err(anyhow!("config: rates/duration invalid"));
         }
@@ -293,6 +306,7 @@ impl Experiment {
         cfg.telemetry = self.telemetry;
         cfg.membership = self.membership.clone();
         cfg.autoscale = self.autoscale;
+        cfg.response_cache = self.response_cache;
         cfg
     }
 }
@@ -573,6 +587,35 @@ mod tests {
         assert!(d.membership.is_none() && d.autoscale.is_none());
         let dc = d.sim_config();
         assert!(dc.membership.is_none() && dc.autoscale.is_none());
+    }
+
+    #[test]
+    fn parses_response_cache_knob() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4",
+                "response_cache":"exact=512,ttl=120,semantic=0.92,hit_ms=2"}"#,
+        )
+        .unwrap();
+        let rc = e.response_cache.unwrap();
+        assert_eq!((rc.exact, rc.ttl, rc.semantic), (512, 120.0, Some(0.92)));
+        assert_eq!(rc.hit_latency, 2e-3);
+        assert!(e.sim_config().response_cache.is_some());
+        // Malformed specs are rejected at config-parse time with the
+        // spec grammar's actionable message.
+        let err = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","response_cache":"exact=0"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("exact"), "{err}");
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","response_cache":"semantic=1.5"}"#
+        )
+        .is_err());
+        // Default: no cache, fleet serves every request.
+        let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert!(d.response_cache.is_none());
+        assert!(d.sim_config().response_cache.is_none());
     }
 
     #[test]

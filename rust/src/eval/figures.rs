@@ -429,16 +429,17 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "param_sweep" => param_sweep(),
         "load_balance" => crate::eval::loadbalance::load_balance(),
         "scale_events" => crate::eval::scale_events::scale_events(),
+        "response_cache" => crate::eval::respcache::response_cache(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 21] = [
+pub const ALL_IDS: [&str; 22] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
     "hetero", "contention", "spine_sweep", "param_sweep", "load_balance",
-    "scale_events",
+    "scale_events", "response_cache",
 ];
 
 /// Generate everything (the `make bench` payload).

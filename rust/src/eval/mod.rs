@@ -13,6 +13,7 @@ pub mod figures;
 pub mod hetero;
 pub mod loadbalance;
 pub mod prefix;
+pub mod respcache;
 pub mod scale_events;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
@@ -22,4 +23,5 @@ pub use figures::{all_figures, figure_by_id, param_sweep, FigureOutput};
 pub use hetero::hetero;
 pub use loadbalance::load_balance;
 pub use prefix::prefix_locality;
+pub use respcache::response_cache;
 pub use scale_events::scale_events;

@@ -68,6 +68,7 @@ pub mod eval;
 pub mod kvcache;
 pub mod prefix;
 pub mod registry;
+pub mod respcache;
 pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod server;
@@ -79,6 +80,7 @@ pub use builder::{run_many, SimBuilder};
 pub use coordinator::{AcceLlm, AcceLlmPrefix, Splitwise, Vllm};
 pub use prefix::{ChwblRouter, PrefixIndex};
 pub use registry::{SchedSpec, SchedulerRegistry};
+pub use respcache::{ResponseCache, ResponseCacheReport, ResponseCacheSpec};
 pub use sim::{run, ClusterSpec, PerfModel, RunReport, Scheduler, SimConfig,
               Topology};
 pub use workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED, SHARED_DOC};

@@ -35,6 +35,7 @@ USAGE:
                    [--telemetry] [--probe-interval S]
                    [--trace-out FILE] [--probes-out FILE]
                    [--events TIMELINE] [--autoscale SPEC]
+                   [--response-cache SPEC]
   accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
   accellm bench    [--scenario sweep|fleet] [--cluster SPEC] [--rate R]
                    [--duration S] [--requests N] [--scheduler SPEC]
@@ -99,7 +100,19 @@ the cold-start window before taking traffic.  `--autoscale` adds a
 queue-depth autoscaler (`interval=5,up=8,down=1,cold=2,min=2`: scale
 up when in-flight > up x active, drain when < down x active, never
 below min).  `accellm figures --fig scale_events` plots JCT/goodput
-through a crash timeline for every scheduler.  Unknown flags left
+through a crash timeline for every scheduler.
+`--response-cache 'exact=N,ttl=S,semantic=T,hit_ms=L'` puts a
+cluster-front response cache between arrival generation and the
+scheduler: exact-tier capacity `exact` entries with per-entry TTL
+`ttl` seconds, an optional semantic tier at similarity threshold
+`semantic` (omit the key for exact-only), and per-hit latency
+`hit_ms` milliseconds.  Hits are served at the cache and never reach
+an instance (they are excluded from JCT/TTFT, which cover
+fleet-served requests); the report gains a `response_cache` JSON
+block and `resp_*` CSV columns, kept separate from the `prefix_*`
+columns so request-level and prefill-only reuse never double-count.
+`accellm figures --fig response_cache` sweeps fleet size x cache on
+the contended mixed fleet.  Unknown flags left
 unconsumed by a subcommand are reported as errors.  Run
 `make artifacts` once before `accellm serve` (needs a build with
 `--features pjrt`).";
@@ -328,6 +341,21 @@ fn parse_membership(args: &Args, n: usize)
     Ok((membership, autoscale))
 }
 
+/// `--response-cache "exact=N,ttl=S,semantic=0.9,hit_ms=1"` — the
+/// cluster-front response cache.  Consulted unconditionally in
+/// `cmd_simulate` so the consumed-flag audit stays accurate.
+fn parse_response_cache(
+    args: &Args,
+) -> anyhow::Result<Option<accellm::respcache::ResponseCacheSpec>> {
+    match args.get("response-cache") {
+        Some(spec) => Ok(Some(
+            accellm::respcache::ResponseCacheSpec::parse(spec)
+                .map_err(anyhow::Error::msg)?,
+        )),
+        None => Ok(None),
+    }
+}
+
 fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
                                                 f64, f64, u64)> {
     let cluster = parse_cluster(args)?;
@@ -352,6 +380,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // Telemetry flags are consulted on both paths; on the config path
     // the CLI flags override / extend the config-file keys.
     let (cli_tel, cli_trace_out, cli_probes_out) = parse_telemetry(args)?;
+    let cli_rc = parse_response_cache(args)?;
     // Config file runs an entire experiment (possibly a rate sweep).
     if let Some(path) = args.get("config") {
         let exp = accellm::config::Experiment::from_file(Path::new(path))?;
@@ -366,19 +395,30 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
                 || exp.telemetry.trace
                 || trace_out.is_some(),
         };
+        // CLI flags override the config-file keys.
+        let (cli_mem, cli_auto) = parse_membership(args, exp.cluster.len())?;
+        let membership = cli_mem.or_else(|| exp.membership.clone());
+        let autoscale = cli_auto.or(exp.autoscale);
+        let response_cache = cli_rc.or(exp.response_cache);
+        // Per-run file outputs and a multi-rate sweep cannot mix: each
+        // run would overwrite the file — and with a response cache the
+        // probes CSV additionally carries a per-run hit-rate track, so
+        // name the cache in the error when one is configured.
         if (trace_out.is_some() || probes_out.is_some())
             && exp.rates.len() > 1
         {
             anyhow::bail!(
-                "--trace-out/--probes-out need a single rate (the sweep \
-                 has {} rates; each run would overwrite the file)",
+                "--trace-out/--probes-out{} need a single rate (the sweep \
+                 has {} rates; each run would overwrite the file) — drop \
+                 the file outputs or pin one rate",
+                if response_cache.is_some() {
+                    " with --response-cache"
+                } else {
+                    ""
+                },
                 exp.rates.len()
             );
         }
-        // CLI elastic-fleet flags override the config-file keys.
-        let (cli_mem, cli_auto) = parse_membership(args, exp.cluster.len())?;
-        let membership = cli_mem.or_else(|| exp.membership.clone());
-        let autoscale = cli_auto.or(exp.autoscale);
         println!("{}", RunReport::csv_header());
         for &rate in &exp.rates {
             let mut b = SimBuilder::new(exp.cluster.clone(), LLAMA2_70B)
@@ -392,6 +432,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             }
             if let Some(a) = autoscale {
                 b = b.autoscale(a);
+            }
+            if let Some(rc) = response_cache {
+                b = b.response_cache(rc);
             }
             let report = b.run();
             println!("{}", report.csv_row());
@@ -425,6 +468,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(a) = autoscale {
         b = b.autoscale(a);
+    }
+    if let Some(rc) = cli_rc {
+        b = b.response_cache(rc);
     }
     let report = b.run();
     print_report(&report, args.has("json"));

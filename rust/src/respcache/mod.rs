@@ -1,0 +1,559 @@
+//! Cluster-front response cache (ISSUE 9): exact + semantic tiers
+//! ABOVE the KV prefix index.
+//!
+//! AcceLLM's redundancy argument — strategically duplicated data buys
+//! latency and load balance — applies one tier higher than KV blocks:
+//! whole responses repeat across millions of users (chat re-asks,
+//! shared-doc near-duplicates), and a request whose response is already
+//! cached never needs to touch an instance at all.  This module models
+//! the production proxy design from ROADMAP direction 2: an
+//! **exact-match tier** (splitmix-hashed prompt, per-entry TTL, LRU
+//! capacity in entries, ~1 ms hits) and a **semantic tier** (similarity
+//! to a popular-prompt cluster vs a configurable threshold) sitting
+//! between arrival generation and scheduler admission.
+//!
+//! Placement in the stack (see `sim::engine::run_arrivals`): the engine
+//! consults [`ResponseCache::lookup`] BEFORE creating a `SimRequest`.
+//! A hit completes at the cache's hit latency and never reaches
+//! `on_arrival` — no KV, no queueing, no events, no clock motion — so a
+//! disabled cache (the default) is bit-invisible to every golden.
+//! Hits therefore also shrink the load that the PR 8 autoscaler's
+//! watermarks see: cached requests never enter the pending queue the
+//! `up=`/`down=` thresholds are compared against.
+//!
+//! **No double counting vs the prefix index.**  The prefix index
+//! discounts *prefill tokens* of requests that DO run; this cache
+//! removes *whole requests* before they run, so a cache-hit request
+//! never touches the prefix index.  The report keeps the two effects in
+//! separate fields (`saved_prefill_tokens`/`saved_decode_tokens` here,
+//! `prefix_*` columns there) so they compose multiplicatively and can
+//! be audited independently.
+//!
+//! Determinism: iteration-order–dependent state lives in `BTreeMap`s
+//! (LRU keyed by a monotone tick, expiry keyed by `f64::to_bits`, which
+//! is order-preserving for the non-negative timestamps the simulator
+//! produces), never in `HashMap` iteration.  Same spec + same arrival
+//! stream ⇒ same hits, byte for byte.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Spec
+// ---------------------------------------------------------------------------
+
+/// Parsed `--response-cache "exact=N,ttl=S,semantic=0.9,hit_ms=1"`
+/// spec (also the config-file `"response_cache"` string).
+///
+/// * `exact=N` — exact-tier capacity in entries (LRU beyond it);
+/// * `ttl=S` — per-entry time-to-live in seconds (lazy expiry);
+/// * `semantic=T` — enable the semantic tier at similarity threshold
+///   `T` in (0, 1]; omitted = exact tier only;
+/// * `hit_ms=L` — modeled cache-hit service latency in milliseconds
+///   (hits are cheap but not free).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ResponseCacheSpec {
+    /// Exact-tier capacity in entries; LRU eviction beyond it.
+    pub exact: usize,
+    /// Per-entry TTL, seconds.  Expiry is lazy (checked per lookup).
+    pub ttl: f64,
+    /// Semantic-tier similarity threshold in (0, 1]; None = tier off.
+    pub semantic: Option<f64>,
+    /// Hit service latency, seconds (spec key is in milliseconds).
+    pub hit_latency: f64,
+}
+
+impl Default for ResponseCacheSpec {
+    fn default() -> Self {
+        Self { exact: 1024, ttl: 300.0, semantic: None, hit_latency: 1e-3 }
+    }
+}
+
+impl ResponseCacheSpec {
+    /// Parse the `k=v` comma grammar; same shape as `AutoscaleSpec`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut spec = Self::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!("bad response-cache option {part:?} (want k=v)")
+            })?;
+            match k.trim() {
+                "exact" => {
+                    spec.exact = v
+                        .parse()
+                        .map_err(|_| format!("bad exact capacity {v:?}"))?;
+                }
+                "ttl" => {
+                    spec.ttl =
+                        v.parse().map_err(|_| format!("bad ttl {v:?}"))?;
+                }
+                "semantic" => {
+                    spec.semantic = Some(
+                        v.parse()
+                            .map_err(|_| format!("bad semantic threshold {v:?}"))?,
+                    );
+                }
+                "hit_ms" => {
+                    let ms: f64 =
+                        v.parse().map_err(|_| format!("bad hit_ms {v:?}"))?;
+                    spec.hit_latency = ms / 1e3;
+                }
+                other => {
+                    return Err(format!("unknown response-cache key {other:?}"))
+                }
+            }
+        }
+        if spec.exact == 0 {
+            return Err("response-cache exact capacity must be >= 1".into());
+        }
+        if !(spec.ttl > 0.0 && spec.ttl.is_finite()) {
+            return Err(format!("response-cache ttl must be positive, got {}",
+                               spec.ttl));
+        }
+        if let Some(th) = spec.semantic {
+            if !(th > 0.0 && th <= 1.0) {
+                return Err(format!(
+                    "semantic threshold must be in (0, 1], got {th}"
+                ));
+            }
+        }
+        if !(spec.hit_latency >= 0.0 && spec.hit_latency.is_finite()) {
+            return Err(format!("response-cache hit_ms must be >= 0, got {}",
+                               spec.hit_latency * 1e3));
+        }
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache
+// ---------------------------------------------------------------------------
+
+/// Which tier served a hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HitTier {
+    /// Prompt hash matched a live entry byte-for-byte.
+    Exact,
+    /// Similarity to a live popular-prompt cluster cleared the
+    /// threshold (the embedding tier of the production proxy).
+    Semantic,
+}
+
+/// One live exact-tier entry.
+struct Entry {
+    /// Popular-prompt cluster the cached response belongs to; the
+    /// semantic tier answers for a topic while any entry of it lives.
+    topic: u64,
+    /// Absolute expiry time (insert time + TTL).
+    expires: f64,
+    /// LRU position (key into [`ResponseCache::lru`]).
+    tick: u64,
+}
+
+/// The fleet-front cache.  One per run, owned by `SimCtx`; all lookups
+/// funnel through [`lookup`](Self::lookup) so the stats can never
+/// disagree with the decisions.
+pub struct ResponseCache {
+    spec: ResponseCacheSpec,
+    /// Live entries by prompt hash.
+    entries: HashMap<u64, Entry>,
+    /// LRU order: monotone tick → prompt hash (first = coldest).
+    lru: BTreeMap<u64, u64>,
+    /// Lazy-expiry queue: (expires.to_bits(), prompt hash).  to_bits
+    /// is monotone over the non-negative f64 timestamps the sim emits,
+    /// so range scans pop entries in expiry order deterministically.
+    expiry: BTreeMap<(u64, u64), ()>,
+    /// Live entry count per topic (semantic-tier membership test).
+    topics: HashMap<u64, usize>,
+    tick: u64,
+    // Stats (cumulative over the run).
+    lookups: u64,
+    exact_hits: u64,
+    semantic_hits: u64,
+    evictions: u64,
+    expired: u64,
+    saved_prefill_tokens: u64,
+    saved_decode_tokens: u64,
+}
+
+impl ResponseCache {
+    pub fn new(spec: ResponseCacheSpec) -> Self {
+        Self {
+            spec,
+            entries: HashMap::new(),
+            lru: BTreeMap::new(),
+            expiry: BTreeMap::new(),
+            topics: HashMap::new(),
+            tick: 0,
+            lookups: 0,
+            exact_hits: 0,
+            semantic_hits: 0,
+            evictions: 0,
+            expired: 0,
+            saved_prefill_tokens: 0,
+            saved_decode_tokens: 0,
+        }
+    }
+
+    pub fn spec(&self) -> ResponseCacheSpec {
+        self.spec
+    }
+
+    /// Cumulative lookups so far (telemetry probe track).
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    /// Cumulative hits (both tiers) so far (telemetry probe track).
+    pub fn hits(&self) -> u64 {
+        self.exact_hits + self.semantic_hits
+    }
+
+    /// Live exact-tier entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The one entry point: consult the cache for a request arriving at
+    /// `now`.  `Some(tier)` means the request is served at the cache
+    /// (the engine then never admits it); `None` means miss — the
+    /// prompt is inserted (the response it will produce becomes
+    /// reusable) and the request proceeds to the scheduler.
+    pub fn lookup(
+        &mut self,
+        now: f64,
+        prompt_key: u64,
+        topic: u64,
+        similarity: f64,
+        prompt_len: u32,
+        decode_len: u32,
+    ) -> Option<HitTier> {
+        self.purge_expired(now);
+        self.lookups += 1;
+
+        // Exact tier: hash match on a live entry.  Reads refresh LRU
+        // position but NOT the TTL (responses go stale by age, not by
+        // popularity).
+        if let Some(entry) = self.entries.get_mut(&prompt_key) {
+            let old = entry.tick;
+            self.tick += 1;
+            entry.tick = self.tick;
+            self.lru.remove(&old);
+            self.lru.insert(self.tick, prompt_key);
+            self.exact_hits += 1;
+            self.saved_prefill_tokens += prompt_len as u64;
+            self.saved_decode_tokens += decode_len as u64;
+            return Some(HitTier::Exact);
+        }
+
+        // Semantic tier: a near-duplicate of a popular prompt clears
+        // the threshold iff some response for that cluster is live.
+        // Serving from a neighbor does not insert the new prompt (the
+        // proxy returns the cached response without re-keying it).
+        if let Some(th) = self.spec.semantic {
+            if similarity >= th
+                && self.topics.get(&topic).copied().unwrap_or(0) > 0
+            {
+                self.semantic_hits += 1;
+                self.saved_prefill_tokens += prompt_len as u64;
+                self.saved_decode_tokens += decode_len as u64;
+                return Some(HitTier::Semantic);
+            }
+        }
+
+        // Miss: the fleet will produce this response; cache it.
+        self.tick += 1;
+        let expires = now + self.spec.ttl;
+        self.entries.insert(
+            prompt_key,
+            Entry { topic, expires, tick: self.tick },
+        );
+        self.lru.insert(self.tick, prompt_key);
+        self.expiry.insert((expires.to_bits(), prompt_key), ());
+        *self.topics.entry(topic).or_insert(0) += 1;
+        while self.entries.len() > self.spec.exact {
+            // Coldest entry first (smallest tick).
+            let (&tick, &victim) =
+                self.lru.iter().next().expect("lru tracks every entry");
+            self.lru.remove(&tick);
+            let e = self.entries.remove(&victim).expect("entry exists");
+            self.expiry.remove(&(e.expires.to_bits(), victim));
+            self.drop_topic(e.topic);
+            self.evictions += 1;
+        }
+        None
+    }
+
+    /// Drop every entry whose TTL elapsed at or before `now`.
+    fn purge_expired(&mut self, now: f64) {
+        let cutoff = now.to_bits();
+        loop {
+            let Some((&(bits, key), _)) = self.expiry.iter().next() else {
+                break;
+            };
+            if bits > cutoff {
+                break;
+            }
+            self.expiry.remove(&(bits, key));
+            let e = self.entries.remove(&key).expect("expiry tracks entries");
+            self.lru.remove(&e.tick);
+            self.drop_topic(e.topic);
+            self.expired += 1;
+        }
+    }
+
+    fn drop_topic(&mut self, topic: u64) {
+        if let Some(n) = self.topics.get_mut(&topic) {
+            *n -= 1;
+            if *n == 0 {
+                self.topics.remove(&topic);
+            }
+        }
+    }
+
+    /// Snapshot the run-level report block.
+    pub fn report(&self) -> ResponseCacheReport {
+        let hits = self.exact_hits + self.semantic_hits;
+        ResponseCacheReport {
+            lookups: self.lookups,
+            exact_hits: self.exact_hits,
+            semantic_hits: self.semantic_hits,
+            misses: self.lookups - hits,
+            evictions: self.evictions,
+            expired: self.expired,
+            saved_prefill_tokens: self.saved_prefill_tokens,
+            saved_decode_tokens: self.saved_decode_tokens,
+            hit_rate: if self.lookups > 0 {
+                hits as f64 / self.lookups as f64
+            } else {
+                0.0
+            },
+            hit_latency: self.spec.hit_latency,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Report
+// ---------------------------------------------------------------------------
+
+/// `RunReport.response_cache` block — present only when the cache was
+/// configured (mirrors the membership/breakdown gating so cache-off
+/// reports stay byte-identical to the pre-cache goldens).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResponseCacheReport {
+    pub lookups: u64,
+    pub exact_hits: u64,
+    pub semantic_hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub expired: u64,
+    /// Prefill tokens the fleet never ran (request-level reuse —
+    /// distinct from the prefix index's prefill-only discount).
+    pub saved_prefill_tokens: u64,
+    /// Decode tokens the fleet never ran.
+    pub saved_decode_tokens: u64,
+    /// (exact + semantic) / lookups.
+    pub hit_rate: f64,
+    /// Modeled per-hit service latency, seconds.
+    pub hit_latency: f64,
+}
+
+impl ResponseCacheReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lookups", Json::num(self.lookups as f64)),
+            ("exact_hits", Json::num(self.exact_hits as f64)),
+            ("semantic_hits", Json::num(self.semantic_hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            (
+                "saved_prefill_tokens",
+                Json::num(self.saved_prefill_tokens as f64),
+            ),
+            (
+                "saved_decode_tokens",
+                Json::num(self.saved_decode_tokens as f64),
+            ),
+            ("hit_rate", Json::num(self.hit_rate)),
+            ("hit_latency_s", Json::num(self.hit_latency)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> ResponseCacheSpec {
+        ResponseCacheSpec::parse(s).expect("valid spec")
+    }
+
+    #[test]
+    fn parses_full_grammar_and_defaults() {
+        let d = ResponseCacheSpec::default();
+        assert_eq!(d.exact, 1024);
+        assert_eq!(d.ttl, 300.0);
+        assert!(d.semantic.is_none());
+        assert_eq!(d.hit_latency, 1e-3);
+        // Empty string keeps the defaults (same as AutoscaleSpec).
+        assert_eq!(spec(""), d);
+        let s = spec("exact=64,ttl=30,semantic=0.9,hit_ms=2");
+        assert_eq!(s.exact, 64);
+        assert_eq!(s.ttl, 30.0);
+        assert_eq!(s.semantic, Some(0.9));
+        assert!((s.hit_latency - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "exact",            // no '='
+            "exact=zero",       // unparseable value
+            "exact=0",          // capacity floor
+            "ttl=0",            // ttl must be positive
+            "ttl=-5",
+            "semantic=0",       // threshold range
+            "semantic=1.5",
+            "hit_ms=-1",
+            "volume=11",        // unknown key
+        ] {
+            assert!(
+                ResponseCacheSpec::parse(bad).is_err(),
+                "accepted malformed spec {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn exact_tier_hits_repeats_and_counts_saved_tokens() {
+        let mut c = ResponseCache::new(spec("exact=8,ttl=100"));
+        assert_eq!(c.lookup(0.0, 7, 7, 1.0, 100, 20), None);
+        assert_eq!(c.lookup(1.0, 7, 7, 1.0, 100, 20), Some(HitTier::Exact));
+        assert_eq!(c.lookup(2.0, 9, 9, 1.0, 50, 10), None);
+        let r = c.report();
+        assert_eq!((r.lookups, r.exact_hits, r.misses), (3, 1, 2));
+        assert_eq!(r.saved_prefill_tokens, 100);
+        assert_eq!(r.saved_decode_tokens, 20);
+        assert!((r.hit_rate - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn semantic_tier_gates_on_threshold_and_live_topic() {
+        let mut c = ResponseCache::new(spec("exact=8,ttl=100,semantic=0.9"));
+        // Near-duplicate of a topic nothing is cached for: miss.
+        assert_eq!(c.lookup(0.0, 1, 42, 0.95, 10, 5), None);
+        // Exact entry for topic 42 now live (key 2) → near-dup hits.
+        assert_eq!(c.lookup(1.0, 2, 42, 1.0, 10, 5), None);
+        assert_eq!(
+            c.lookup(2.0, 3, 42, 0.95, 10, 5),
+            Some(HitTier::Semantic)
+        );
+        // Below the threshold: miss even with the topic live.
+        assert_eq!(c.lookup(3.0, 4, 42, 0.89, 10, 5), None);
+        let r = c.report();
+        assert_eq!(r.semantic_hits, 1);
+    }
+
+    #[test]
+    fn lru_evicts_coldest_first_in_insert_order() {
+        // Property: with capacity K, inserting K+1 distinct keys evicts
+        // exactly the least-recently-used one, for every rotation of
+        // which key got touched in between.
+        for refreshed in 0u64..4 {
+            let mut c = ResponseCache::new(spec("exact=4,ttl=1000"));
+            for k in 0u64..4 {
+                assert_eq!(c.lookup(k as f64, k, k, 1.0, 1, 1), None);
+            }
+            // Touch `refreshed` so it becomes the warmest entry.
+            assert_eq!(
+                c.lookup(10.0, refreshed, refreshed, 1.0, 1, 1),
+                Some(HitTier::Exact)
+            );
+            // One more insert evicts the coldest SURVIVOR: the smallest
+            // key other than `refreshed`.
+            assert_eq!(c.lookup(11.0, 99, 99, 1.0, 1, 1), None);
+            assert_eq!(c.report().evictions, 1);
+            let victim = (0u64..4).find(|k| *k != refreshed).unwrap();
+            // The victim misses (gone); the refreshed key still hits.
+            assert_eq!(c.lookup(12.0, refreshed, refreshed, 1.0, 1, 1),
+                       Some(HitTier::Exact));
+            // Capacity pressure from the victim's re-insert evicts the
+            // next-coldest, never the refreshed key.
+            assert_eq!(c.lookup(13.0, victim, victim, 1.0, 1, 1), None);
+            assert_eq!(c.lookup(14.0, refreshed, refreshed, 1.0, 1, 1),
+                       Some(HitTier::Exact));
+        }
+    }
+
+    #[test]
+    fn ttl_expiry_is_monotone_in_time() {
+        // Property: an entry hits at every probe time strictly inside
+        // its TTL and misses at every probe at-or-after expiry —
+        // crossing the boundary once, in one direction, for a ladder
+        // of insert times.
+        for insert_at in 0..5 {
+            let t0 = insert_at as f64;
+            let mut c = ResponseCache::new(spec("exact=16,ttl=10"));
+            assert_eq!(c.lookup(t0, 1, 1, 1.0, 1, 1), None);
+            let mut seen_miss = false;
+            for step in 1..=20 {
+                let t = t0 + step as f64;
+                let hit = c.lookup(t, 1, 1, 1.0, 1, 1).is_some();
+                if hit {
+                    assert!(
+                        !seen_miss,
+                        "entry resurrected at t={t} (insert {t0})"
+                    );
+                    assert!(t < t0 + 10.0, "hit past TTL at t={t}");
+                } else {
+                    // The miss RE-INSERTS (fresh TTL) — so only check
+                    // the first boundary crossing, then stop.
+                    assert!(t >= t0 + 10.0, "expired early at t={t}");
+                    seen_miss = true;
+                    break;
+                }
+            }
+            assert!(seen_miss, "entry never expired (insert {t0})");
+            assert_eq!(c.report().expired, 1);
+        }
+    }
+
+    #[test]
+    fn expiry_drops_semantic_coverage_with_the_entry() {
+        let mut c = ResponseCache::new(spec("exact=8,ttl=5,semantic=0.9"));
+        assert_eq!(c.lookup(0.0, 1, 42, 1.0, 1, 1), None);
+        assert_eq!(c.lookup(1.0, 2, 42, 0.95, 1, 1),
+                   Some(HitTier::Semantic));
+        // Past the only topic-42 entry's TTL: the semantic tier must
+        // stop answering for the topic.
+        assert_eq!(c.lookup(6.0, 3, 42, 0.95, 1, 1), None);
+        assert_eq!(c.report().expired, 1);
+    }
+
+    #[test]
+    fn report_json_has_every_field() {
+        let mut c = ResponseCache::new(spec("exact=4,ttl=10,semantic=0.9"));
+        c.lookup(0.0, 1, 1, 1.0, 10, 5);
+        c.lookup(1.0, 1, 1, 1.0, 10, 5);
+        let j = c.report().to_json().encode();
+        for key in [
+            "\"lookups\"", "\"exact_hits\"", "\"semantic_hits\"",
+            "\"misses\"", "\"evictions\"", "\"expired\"",
+            "\"saved_prefill_tokens\"", "\"saved_decode_tokens\"",
+            "\"hit_rate\"", "\"hit_latency_s\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

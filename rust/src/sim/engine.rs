@@ -520,6 +520,10 @@ pub struct SimCtx {
     /// Telemetry collector (spans / probes / trace); every hook is a
     /// no-op under the default all-off config.
     telemetry: Telemetry,
+    /// Cluster-front response cache (None = disabled, the default).
+    /// Hits are short-circuited in `run_arrivals` before a SimRequest
+    /// exists, so a disabled cache is bit-invisible to every golden.
+    respcache: Option<crate::respcache::ResponseCache>,
 }
 
 impl SimCtx {
@@ -1377,12 +1381,18 @@ impl SimCtx {
                 });
             }
         }
+        let (resp_lookups, resp_hits) = match &self.respcache {
+            Some(c) => (c.lookups(), c.hits()),
+            None => (0, 0),
+        };
         ProbeSample {
             t,
             pending: self.pending.len(),
             active: self.avail.iter().filter(|&&a| a == Avail::Active).count(),
             instances,
             links,
+            resp_lookups,
+            resp_hits,
         }
     }
 }
@@ -1604,6 +1614,10 @@ pub struct SimConfig {
     pub membership: Option<MembershipTimeline>,
     /// Queue-depth-driven autoscaler policy; None = no autoscaler.
     pub autoscale: Option<AutoscaleSpec>,
+    /// Cluster-front response cache (exact + semantic tiers above KV
+    /// prefix reuse); None = disabled, bit-identical to the pre-cache
+    /// engine.
+    pub response_cache: Option<crate::respcache::ResponseCacheSpec>,
 }
 
 impl SimConfig {
@@ -1617,6 +1631,7 @@ impl SimConfig {
             telemetry: TelemetryConfig::default(),
             membership: None,
             autoscale: None,
+            response_cache: None,
         }
     }
 
@@ -1711,6 +1726,9 @@ where
                 0
             },
         ),
+        respcache: cfg
+            .response_cache
+            .map(crate::respcache::ResponseCache::new),
     };
     if cfg.cluster.topology().uplinks_enabled() {
         let n_up = cfg.cluster.topology().n_chassis();
@@ -1778,6 +1796,23 @@ where
             last_arrival = tmpl.arrival;
             if ctx.telemetry.cfg.probe_interval.is_some() {
                 ctx.sample_probes(tmpl.arrival);
+            }
+            // Cluster-front response cache: a hit is served at the
+            // cache's own latency and never reaches the fleet — no
+            // SimRequest, no events, no scheduler callback, and (like
+            // inert control events) no clock motion.  Hits therefore
+            // never enter the pending queue the autoscaler watermarks
+            // read, nor the prefix index: request-level reuse and
+            // prefill-only reuse stay separately accounted.
+            if let Some(cache) = ctx.respcache.as_mut() {
+                if cache
+                    .lookup(tmpl.arrival, tmpl.prompt_key, tmpl.topic,
+                            tmpl.similarity, tmpl.prompt_len,
+                            tmpl.decode_len)
+                    .is_some()
+                {
+                    continue;
+                }
             }
             ctx.now = tmpl.arrival;
             let id = ctx.requests.len();
@@ -2256,6 +2291,7 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
     } else {
         None
     };
+    let response_cache = ctx.respcache.as_ref().map(|c| c.report());
     let m = &mut ctx.metrics;
     RunReport {
         scheduler: sched_name.to_string(),
@@ -2303,6 +2339,7 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
         probes,
         trace_events,
         membership,
+        response_cache,
     }
 }
 

@@ -362,6 +362,12 @@ pub struct RunReport {
     /// report, its JSON, and the goldens byte-identical without
     /// elasticity).
     pub membership: Option<MembershipReport>,
+    /// Cluster-front response-cache outcomes (None when the cache is
+    /// disabled — same byte-identity gating as `membership`).
+    /// Request-level reuse; the `prefix_*` fields above count
+    /// prefill-only reuse of requests that DID run, so the two never
+    /// double-count.
+    pub response_cache: Option<crate::respcache::ResponseCacheReport>,
 }
 
 impl RunReport {
@@ -411,6 +417,9 @@ impl RunReport {
         if let Some(ms) = &self.membership {
             pairs.push(("membership", ms.to_json()));
         }
+        if let Some(rc) = &self.response_cache {
+            pairs.push(("response_cache", rc.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -419,8 +428,9 @@ impl RunReport {
     pub fn csv_row(&self) -> String {
         let b = self.breakdown.clone().unwrap_or_default();
         let im = self.imbalance.clone().unwrap_or_default();
+        let rc = self.response_cache.clone().unwrap_or_default();
         format!(
-            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{},{:.3},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.4}",
+            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{},{:.3},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.4},{:.4},{},{},{},{},{},{}",
             self.scheduler,
             self.device,
             self.workload,
@@ -456,6 +466,13 @@ impl RunReport {
             b.stall_mean,
             im.load_max_over_mean,
             im.load_cv,
+            rc.hit_rate,
+            rc.exact_hits,
+            rc.semantic_hits,
+            rc.saved_prefill_tokens,
+            rc.saved_decode_tokens,
+            rc.evictions,
+            rc.expired,
         )
     }
 
@@ -465,7 +482,10 @@ impl RunReport {
          jct_mean,jct_p50,jct_p99,cost_eff_tok_inst_s,utilization,peak_kv_gb,xfer_gb,\
          prefix_hit_rate,prefix_saved_tok,mean_kv_gb,prefix_evictions,\
          span_queue_s,span_prefill_s,span_xfer_wire_s,span_xfer_slow_s,\
-         span_decode_s,span_stall_s,load_max_over_mean,load_cv"
+         span_decode_s,span_stall_s,load_max_over_mean,load_cv,\
+         resp_hit_rate,resp_exact_hits,resp_semantic_hits,\
+         resp_saved_prefill_tok,resp_saved_decode_tok,resp_evictions,\
+         resp_expired"
     }
 }
 

@@ -247,6 +247,27 @@ mod tests {
         assert!(t < ascend().prefill_time_one(750));
     }
 
+    /// Pins the mfu/hbm_eff anchoring documented on the device consts
+    /// (arXiv 2506.00008): effective — not paper — throughput must keep
+    /// H100 strictly above A100 on both axes, and MI300X's generation
+    /// gap must survive its lower MFU on prefill while its HBM keeps
+    /// the decode crown.
+    #[test]
+    fn effective_throughput_ordering_survives_the_efficiency_anchors() {
+        let eff = |d| InstanceSpec::new(d);
+        // H100 989e12 × 0.50 vs A100 312e12 × 0.45.
+        assert!(eff(H100).prefill_flops() > eff(A100).prefill_flops());
+        // H100 3.35 TB/s × 0.80 vs A100 2.039 TB/s × 0.80.
+        assert!(eff(H100).decode_bw() > eff(A100).decode_bw());
+        // MI300X 1307e12 × 0.35 still clears A100, and its 5.3 TB/s
+        // HBM keeps it the decode-leaning extreme of the fleet.
+        assert!(eff(MI300X).prefill_flops() > eff(A100).prefill_flops());
+        for dev in ALL_DEVICES {
+            assert!(eff(MI300X).decode_bw() >= eff(dev).decode_bw(),
+                    "{} out-decodes MI300X", dev.name);
+        }
+    }
+
     /// Property (every device x TP degree): more prompt tokens never
     /// prefill faster.
     #[test]

@@ -229,6 +229,12 @@ pub struct ProbeSample {
     pub active: usize,
     pub instances: Vec<InstProbe>,
     pub links: Vec<LinkProbe>,
+    /// Cumulative response-cache lookups at sample time (0 when the
+    /// cache is disabled).
+    pub resp_lookups: u64,
+    /// Cumulative response-cache hits (both tiers) at sample time —
+    /// with `resp_lookups` this gives a time-resolved hit-rate track.
+    pub resp_hits: u64,
 }
 
 /// (max, mean, population-CV) of per-instance load in one sample.
@@ -783,7 +789,8 @@ pub fn probes_csv(r: &RunReport) -> String {
 
 pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
     let mut out = String::from(
-        "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending,active\n",
+        "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending,active,\
+         resp_hits,resp_hit_rate\n",
     );
     for p in probes {
         let load: usize = p.instances.iter().map(|i| i.load).sum();
@@ -795,14 +802,21 @@ pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
             .find(|l| l.tier == "interconnect")
             .map(|l| (l.streams, l.rate))
             .unwrap_or((0, 0.0));
+        // Cumulative-at-sample-time response-cache track (all zeros
+        // when the cache is disabled).
+        let hit_rate = if p.resp_lookups > 0 {
+            p.resp_hits as f64 / p.resp_lookups as f64
+        } else {
+            0.0
+        };
         out.push_str(&format!(
-            "{:.3},fleet,,{},{},{:.4},{},{:.3},{},{}\n",
+            "{:.3},fleet,,{},{},{:.4},{},{:.3},{},{},{},{:.4}\n",
             p.t, load, busy, kv / 1e9, streams, rate / 1e9, p.pending,
-            p.active
+            p.active, p.resp_hits, hit_rate
         ));
         for (i, ip) in p.instances.iter().enumerate() {
             out.push_str(&format!(
-                "{:.3},instance,{},{},{},{:.4},,,,\n",
+                "{:.3},instance,{},{},{},{:.4},,,,,,\n",
                 p.t, i, ip.load, ip.busy as u8, ip.kv_bytes / 1e9
             ));
         }
@@ -813,7 +827,7 @@ pub fn probes_csv_from(probes: &[ProbeSample]) -> String {
                 String::new()
             };
             out.push_str(&format!(
-                "{:.3},{},{},,,,{},{:.3},,\n",
+                "{:.3},{},{},,,,{},{:.3},,,,\n",
                 p.t, l.tier, id, l.streams, l.rate / 1e9
             ));
         }
@@ -930,6 +944,8 @@ mod tests {
             active: 2,
             instances: vec![inst(0), inst(0)],
             links: Vec::new(),
+            resp_lookups: 0,
+            resp_hits: 0,
         });
         // loads [4, 0]: mean 2, max 4, pop-std 2 -> cv 1.0.
         t.record_sample(ProbeSample {
@@ -938,6 +954,8 @@ mod tests {
             active: 2,
             instances: vec![inst(4), inst(0)],
             links: Vec::new(),
+            resp_lookups: 0,
+            resp_hits: 0,
         });
         let rep = t.imbalance().unwrap();
         assert_eq!(rep.samples, 1);
@@ -1004,6 +1022,8 @@ mod tests {
                     rate: 9e9,
                 },
             ],
+            resp_lookups: 10,
+            resp_hits: 4,
         };
         let csv = probes_csv_from(&[sample]);
         let lines: Vec<&str> = csv.trim_end().lines().collect();
@@ -1014,5 +1034,8 @@ mod tests {
             assert_eq!(l.split(',').count(), n_cols, "ragged row: {l}");
         }
         assert!(lines[1].starts_with("1.000,fleet,,2,1,2.0000,2,9.000,3"));
+        // The fleet row carries the cache track: cumulative hits and
+        // the realized hit rate.
+        assert!(lines[1].ends_with(",4,0.4000"), "fleet row: {}", lines[1]);
     }
 }

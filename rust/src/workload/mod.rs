@@ -44,6 +44,14 @@ pub struct WorkloadSpec {
     pub prefill_max: u32,
     pub decode_min: u32,
     pub decode_max: u32,
+    /// Probability a request is an exact re-ask of one of the family's
+    /// [`POPULAR_POOL`] popular prompts (response-cache exact-tier
+    /// candidates; see [`response_identity`]).
+    pub repeat_prob: f64,
+    /// Probability a request is a near-duplicate of a popular prompt
+    /// (semantic-tier candidate: unique prompt hash, popular topic,
+    /// similarity drawn in [0.85, 0.995]).
+    pub near_dup_prob: f64,
 }
 
 pub const LIGHT: WorkloadSpec = WorkloadSpec {
@@ -53,6 +61,8 @@ pub const LIGHT: WorkloadSpec = WorkloadSpec {
     prefill_max: 500,
     decode_min: 20,
     decode_max: 500,
+    repeat_prob: 0.25,
+    near_dup_prob: 0.10,
 };
 
 pub const MIXED: WorkloadSpec = WorkloadSpec {
@@ -62,6 +72,8 @@ pub const MIXED: WorkloadSpec = WorkloadSpec {
     prefill_max: 1000,
     decode_min: 20,
     decode_max: 1000,
+    repeat_prob: 0.25,
+    near_dup_prob: 0.10,
 };
 
 pub const HEAVY: WorkloadSpec = WorkloadSpec {
@@ -71,10 +83,14 @@ pub const HEAVY: WorkloadSpec = WorkloadSpec {
     prefill_max: 1000,
     decode_min: 500,
     decode_max: 1000,
+    repeat_prob: 0.25,
+    near_dup_prob: 0.10,
 };
 
 /// Multi-turn chat: 20–200 fresh user tokens per turn on top of the
-/// accumulated context, 50–300 decoded tokens per reply.
+/// accumulated context, 50–300 decoded tokens per reply.  Re-asks are
+/// the canonical chat repeat pattern ("what's the weather" from a
+/// million users), near-duplicates the paraphrased variants.
 pub const CHAT: WorkloadSpec = WorkloadSpec {
     name: "chat",
     kind: WorkloadKind::Chat,
@@ -82,10 +98,14 @@ pub const CHAT: WorkloadSpec = WorkloadSpec {
     prefill_max: 200,
     decode_min: 50,
     decode_max: 300,
+    repeat_prob: 0.15,
+    near_dup_prob: 0.10,
 };
 
 /// Shared-document fan-out: 20–120-token queries appended to a long
-/// shared document, short extractive answers.
+/// shared document, short extractive answers.  Many users asking
+/// almost-the-same question of the same document makes this the
+/// near-duplicate-heavy family.
 pub const SHARED_DOC: WorkloadSpec = WorkloadSpec {
     name: "shared-doc",
     kind: WorkloadKind::SharedDoc,
@@ -93,6 +113,8 @@ pub const SHARED_DOC: WorkloadSpec = WorkloadSpec {
     prefill_max: 120,
     decode_min: 20,
     decode_max: 150,
+    repeat_prob: 0.10,
+    near_dup_prob: 0.25,
 };
 
 impl WorkloadSpec {
@@ -121,7 +143,7 @@ impl WorkloadSpec {
 }
 
 /// One generated request: arrival time + prompt/decode token counts +
-/// prefix identity.
+/// prefix identity + response identity.
 #[derive(Clone, Debug, PartialEq)]
 pub struct RequestTemplate {
     pub arrival: f64,
@@ -132,6 +154,74 @@ pub struct RequestTemplate {
     /// the uniform workloads).  Invariant: `prefix_chunks.len() *
     /// CHUNK_TOKENS <= prompt_len`.
     pub prefix_chunks: Vec<u64>,
+    /// Stable hash of the whole prompt — the response-cache exact-tier
+    /// key (see [`response_identity`]).
+    pub prompt_key: u64,
+    /// Popular-prompt cluster the request belongs to; equals its own
+    /// `prompt_key` for one-off prompts.
+    pub topic: u64,
+    /// Similarity to the cluster's canonical prompt, in (0, 1]: 1.0
+    /// for exact repeats and one-offs, [0.85, 0.995] for
+    /// near-duplicates (the semantic tier compares it to its
+    /// threshold).
+    pub similarity: f64,
+}
+
+/// Popular prompts per workload family that repeats/near-duplicates
+/// are drawn from.  Small enough that the pool warms up within a few
+/// hundred requests, large enough that LRU/TTL churn is observable.
+pub const POPULAR_POOL: u64 = 16;
+
+/// Derive a request's response identity `(prompt_key, topic,
+/// similarity)` for the cluster-front response cache.
+///
+/// Everything is hashed out of ALREADY-DRAWN state (arrival, lengths,
+/// a caller salt) with splitmix64 — never from fresh RNG draws — so
+/// adding the response-cache fields, or retuning `repeat_prob` /
+/// `near_dup_prob`, cannot perturb the arrival/length streams the
+/// goldens pin.  `salt` disambiguates requests that share (arrival,
+/// lengths): 0 where arrivals are a.s. distinct (Poisson/phased/doc),
+/// the burst index for `Trace::burst`, `stream_key ^ turn` for chat.
+///
+/// With probability `repeat_prob` the request re-asks one of the
+/// family's [`POPULAR_POOL`] canonical prompts (key == topic,
+/// similarity 1.0 — exact-tier hit once the pool entry is warm); with
+/// probability `near_dup_prob` it is a paraphrase (fresh key, popular
+/// topic, similarity uniform in [0.85, 0.995] — semantic-tier
+/// candidate); otherwise it is a one-off (fresh key == topic).
+pub fn response_identity(
+    spec: &WorkloadSpec,
+    arrival: f64,
+    prompt_len: u32,
+    decode_len: u32,
+    salt: u64,
+) -> (u64, u64, f64) {
+    use crate::prefix::splitmix64;
+    let family = spec
+        .name
+        .bytes()
+        .fold(0x9e37_79b9_7f4a_7c15_u64, |h, b| splitmix64(h ^ b as u64));
+    let base = splitmix64(
+        arrival.to_bits()
+            ^ splitmix64(((prompt_len as u64) << 32) | decode_len as u64)
+            ^ splitmix64(salt ^ family),
+    );
+    // 53-bit uniform in [0, 1): the repeat/near-dup/one-off selector.
+    let u = (splitmix64(base ^ 0x5245_5045_4154) >> 11) as f64
+        / (1u64 << 53) as f64;
+    let pool_slot = splitmix64(base ^ 0x504f_4f4c) % POPULAR_POOL;
+    let pool_key = splitmix64(family ^ splitmix64(pool_slot + 1));
+    if u < spec.repeat_prob {
+        (pool_key, pool_key, 1.0)
+    } else if u < spec.repeat_prob + spec.near_dup_prob {
+        let fresh = splitmix64(base ^ 0x4e45_4152);
+        let v = (splitmix64(base ^ 0x5349_4d49) >> 11) as f64
+            / (1u64 << 53) as f64;
+        (fresh, pool_key, 0.85 + 0.145 * v)
+    } else {
+        let fresh = splitmix64(base ^ 0x554e_4951);
+        (fresh, fresh, 1.0)
+    }
 }
 
 /// Deterministic workload trace (record/replay: the same seed + spec +
@@ -209,15 +299,22 @@ impl Iterator for PoissonStream {
             self.done = true;
             return None;
         }
+        let prompt_len = self.rng.uniform_u64(self.spec.prefill_min as u64,
+                                              self.spec.prefill_max as u64)
+            as u32;
+        let decode_len = self.rng.uniform_u64(self.spec.decode_min as u64,
+                                              self.spec.decode_max as u64)
+            as u32;
+        let (prompt_key, topic, similarity) =
+            response_identity(&self.spec, self.t, prompt_len, decode_len, 0);
         Some(RequestTemplate {
             arrival: self.t,
-            prompt_len: self.rng.uniform_u64(self.spec.prefill_min as u64,
-                                             self.spec.prefill_max as u64)
-                as u32,
-            decode_len: self.rng.uniform_u64(self.spec.decode_min as u64,
-                                             self.spec.decode_max as u64)
-                as u32,
+            prompt_len,
+            decode_len,
             prefix_chunks: Vec::new(),
+            prompt_key,
+            topic,
+            similarity,
         })
     }
 }
@@ -271,13 +368,27 @@ impl Trace {
     pub fn burst(spec: WorkloadSpec, n: usize, seed: u64) -> Trace {
         let mut rng = Pcg64::new(seed);
         let requests = (0..n)
-            .map(|_| RequestTemplate {
-                arrival: 0.0,
-                prompt_len: rng.uniform_u64(spec.prefill_min as u64,
-                                            spec.prefill_max as u64) as u32,
-                decode_len: rng.uniform_u64(spec.decode_min as u64,
-                                            spec.decode_max as u64) as u32,
-                prefix_chunks: Vec::new(),
+            .map(|i| {
+                let prompt_len = rng.uniform_u64(spec.prefill_min as u64,
+                                                 spec.prefill_max as u64)
+                    as u32;
+                let decode_len = rng.uniform_u64(spec.decode_min as u64,
+                                                 spec.decode_max as u64)
+                    as u32;
+                // Burst arrivals all land at t=0: the index is the
+                // salt that keeps identities distinct.
+                let (prompt_key, topic, similarity) = response_identity(
+                    &spec, 0.0, prompt_len, decode_len, i as u64,
+                );
+                RequestTemplate {
+                    arrival: 0.0,
+                    prompt_len,
+                    decode_len,
+                    prefix_chunks: Vec::new(),
+                    prompt_key,
+                    topic,
+                    similarity,
+                }
             })
             .collect();
         Trace { spec, rate: f64::INFINITY, seed, requests }
@@ -297,15 +408,23 @@ impl Trace {
                     if t >= dur {
                         break;
                     }
+                    let prompt_len = rng.uniform_u64(spec.prefill_min as u64,
+                                                     spec.prefill_max as u64)
+                        as u32;
+                    let decode_len = rng.uniform_u64(spec.decode_min as u64,
+                                                     spec.decode_max as u64)
+                        as u32;
+                    let (prompt_key, topic, similarity) = response_identity(
+                        &spec, base + t, prompt_len, decode_len, 0,
+                    );
                     requests.push(RequestTemplate {
                         arrival: base + t,
-                        prompt_len: rng.uniform_u64(spec.prefill_min as u64,
-                                                    spec.prefill_max as u64)
-                            as u32,
-                        decode_len: rng.uniform_u64(spec.decode_min as u64,
-                                                    spec.decode_max as u64)
-                            as u32,
+                        prompt_len,
+                        decode_len,
                         prefix_chunks: Vec::new(),
+                        prompt_key,
+                        topic,
+                        similarity,
                     });
                 }
             }
@@ -399,6 +518,82 @@ mod tests {
         assert!((phase1 as f64 - 200.0).abs() < 60.0);
         assert_eq!(phase2, 0);
         assert!((phase3 as f64 - 2000.0).abs() < 200.0);
+    }
+
+    #[test]
+    fn response_identity_frequencies_match_the_knobs() {
+        // ~10k requests: exact-repeat fraction (prompt_key shared with
+        // at least one other request, similarity 1.0) tracks
+        // repeat_prob, near-duplicate fraction (similarity < 1.0)
+        // tracks near_dup_prob, and every similarity is in range.
+        let t = Trace::poisson(MIXED, 50.0, 200.0, 7);
+        let n = t.len() as f64;
+        let mut counts = std::collections::HashMap::new();
+        for r in &t.requests {
+            *counts.entry(r.prompt_key).or_insert(0u32) += 1;
+        }
+        let repeated = t
+            .requests
+            .iter()
+            .filter(|r| r.similarity == 1.0 && counts[&r.prompt_key] > 1)
+            .count() as f64;
+        let near = t
+            .requests
+            .iter()
+            .filter(|r| r.similarity < 1.0)
+            .count() as f64;
+        assert!(
+            (repeated / n - MIXED.repeat_prob).abs() < 0.04,
+            "repeat fraction {} vs knob {}",
+            repeated / n,
+            MIXED.repeat_prob
+        );
+        assert!(
+            (near / n - MIXED.near_dup_prob).abs() < 0.03,
+            "near-dup fraction {} vs knob {}",
+            near / n,
+            MIXED.near_dup_prob
+        );
+        for r in &t.requests {
+            assert!((0.85..=1.0).contains(&r.similarity), "{}", r.similarity);
+            if r.similarity < 1.0 {
+                // Near-duplicates point at a popular topic, never at
+                // themselves.
+                assert_ne!(r.prompt_key, r.topic);
+            } else {
+                // Repeats and one-offs are their own topic.
+                assert_eq!(r.prompt_key, r.topic);
+            }
+        }
+        // Repeats share POPULAR_POOL canonical keys.
+        let pool_keys: std::collections::HashSet<u64> = t
+            .requests
+            .iter()
+            .filter(|r| r.similarity == 1.0 && counts[&r.prompt_key] > 1)
+            .map(|r| r.prompt_key)
+            .collect();
+        assert!(pool_keys.len() as u64 <= POPULAR_POOL,
+                "{} pool keys", pool_keys.len());
+    }
+
+    #[test]
+    fn response_identity_is_a_pure_function_of_drawn_state() {
+        // Same inputs, same identity — and the salt separates requests
+        // that share (arrival, lengths), as in a burst.
+        let a = response_identity(&MIXED, 1.5, 100, 50, 0);
+        assert_eq!(a, response_identity(&MIXED, 1.5, 100, 50, 0));
+        assert_ne!(a, response_identity(&MIXED, 1.5, 100, 50, 1));
+        let burst = Trace::burst(MIXED, 64, 3);
+        let one_off_keys: Vec<u64> = burst
+            .requests
+            .iter()
+            .map(|r| r.prompt_key)
+            .collect();
+        let distinct: std::collections::HashSet<&u64> =
+            one_off_keys.iter().collect();
+        // Popular-pool collisions are expected; one-offs must not all
+        // collapse onto one key.
+        assert!(distinct.len() > 16, "{} distinct keys", distinct.len());
     }
 
     #[test]

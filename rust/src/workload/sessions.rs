@@ -31,7 +31,8 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use crate::prefix::{chunk_hash, CHUNK_TOKENS};
 use crate::util::rng::Pcg64;
 use crate::util::OrdF64;
-use crate::workload::{RequestTemplate, Trace, WorkloadSpec};
+use crate::workload::{response_identity, RequestTemplate, Trace,
+                      WorkloadSpec};
 
 /// Turns per chat session (uniform, inclusive).
 pub const TURNS_MIN: usize = 3;
@@ -118,7 +119,7 @@ impl ChatStream {
         let mut context: u32 = 0;
         let mut at = t;
         let mut queue = VecDeque::new();
-        for _ in 0..turns {
+        for turn in 0..turns {
             if at >= self.duration {
                 break;
             }
@@ -128,11 +129,21 @@ impl ChatStream {
             let decode_len = srng.uniform_u64(self.spec.decode_min as u64,
                                               self.spec.decode_max as u64)
                 as u32;
+            // Identity is hashed from drawn state, never fresh draws
+            // (see `response_identity`); the salt separates turns that
+            // would otherwise collide on (arrival, lengths).
+            let (prompt_key, topic, similarity) = response_identity(
+                &self.spec, at, prompt_len, decode_len,
+                stream_key ^ turn as u64,
+            );
             queue.push_back(RequestTemplate {
                 arrival: at,
                 prompt_len,
                 decode_len,
                 prefix_chunks: prompt_chunks(stream_key, prompt_len),
+                prompt_key,
+                topic,
+                similarity,
             });
             context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
             at += decode_len as f64 * TOKEN_PACE_S
@@ -227,13 +238,20 @@ impl Iterator for SharedDocStream {
             self.docs[self.rng.uniform_usize(0, self.docs.len() - 1)];
         let suffix = self.rng.uniform_u64(self.spec.prefill_min as u64,
                                           self.spec.prefill_max as u64) as u32;
+        let prompt_len = doc_len + suffix;
+        let decode_len = self.rng.uniform_u64(self.spec.decode_min as u64,
+                                              self.spec.decode_max as u64)
+            as u32;
+        let (prompt_key, topic, similarity) =
+            response_identity(&self.spec, self.t, prompt_len, decode_len, 0);
         Some(RequestTemplate {
             arrival: self.t,
-            prompt_len: doc_len + suffix,
-            decode_len: self.rng.uniform_u64(self.spec.decode_min as u64,
-                                             self.spec.decode_max as u64)
-                as u32,
+            prompt_len,
+            decode_len,
             prefix_chunks: prompt_chunks(doc_key, doc_len),
+            prompt_key,
+            topic,
+            similarity,
         })
     }
 }
@@ -379,7 +397,7 @@ mod tests {
             let turns = srng.uniform_usize(TURNS_MIN, TURNS_MAX);
             let mut context: u32 = 0;
             let mut at = t;
-            for _ in 0..turns {
+            for turn in 0..turns {
                 if at >= duration {
                     break;
                 }
@@ -389,11 +407,18 @@ mod tests {
                 let decode_len = srng.uniform_u64(spec.decode_min as u64,
                                                   spec.decode_max as u64)
                     as u32;
+                let (prompt_key, topic, similarity) = response_identity(
+                    &spec, at, prompt_len, decode_len,
+                    stream_key ^ turn as u64,
+                );
                 requests.push(RequestTemplate {
                     arrival: at,
                     prompt_len,
                     decode_len,
                     prefix_chunks: prompt_chunks(stream_key, prompt_len),
+                    prompt_key,
+                    topic,
+                    similarity,
                 });
                 context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
                 at += decode_len as f64 * TOKEN_PACE_S

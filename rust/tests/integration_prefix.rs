@@ -51,6 +51,19 @@ fn chat_end_to_end_nonzero_hit_rate() {
         let v: f64 = cols[col].parse().unwrap();
         assert!(v >= 0.0, "{name} = {v}");
     }
+    // Response-cache columns ride in every row too — and stay exactly
+    // zero with the cache off, so prefill-only prefix reuse and
+    // request-level response hits are never conflated.
+    for name in ["resp_hit_rate", "resp_exact_hits", "resp_semantic_hits",
+                 "resp_saved_prefill_tok", "resp_saved_decode_tok",
+                 "resp_evictions", "resp_expired"] {
+        let col = header_cols
+            .iter()
+            .position(|c| c.trim() == name)
+            .unwrap_or_else(|| panic!("{name} column missing"));
+        let v: f64 = cols[col].parse().unwrap();
+        assert_eq!(v, 0.0, "{name} = {v} with the cache off");
+    }
 }
 
 /// The headline property: on both session workloads, prefix-locality

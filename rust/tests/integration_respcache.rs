@@ -1,0 +1,164 @@
+//! Response-cache integration (ISSUE 9): the cluster-front cache is
+//! invisible when disabled (default) AND when enabled but hitless —
+//! every core metric bit-identical across every sweep scheduler under
+//! both contention models — plus cache-on conservation, determinism,
+//! and report/CSV surfacing.
+
+use accellm::builder::SimBuilder;
+use accellm::registry::{SchedSpec, SchedulerRegistry};
+use accellm::respcache::ResponseCacheSpec;
+use accellm::sim::{ContentionModel, RunReport};
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::workload::{WorkloadSpec, MIXED};
+
+/// Small contended mixed fleet: cross-chassis transfers, both device
+/// classes, cheap enough to sweep every scheduler twice.
+const CLUSTER: &str = "mixed:h100x2+910b2x2";
+
+fn run_one(sched: &str, model: ContentionModel,
+           cache: Option<ResponseCacheSpec>) -> RunReport {
+    let mut b = SimBuilder::parse_cluster(CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(2.0)
+        .contention(2.0)
+        .contention_model(model)
+        .workload(MIXED, 10.0, 20.0, 7)
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"));
+    if let Some(spec) = cache {
+        b = b.response_cache(spec);
+    }
+    b.run()
+}
+
+const MODELS: [ContentionModel; 2] =
+    [ContentionModel::Admission, ContentionModel::MaxMin];
+
+/// A cache whose nanosecond TTL expires every entry before any repeat
+/// can land: every lookup misses, so admission is untouched and the
+/// run must be bit-identical to a cache-free one.
+fn hitless() -> ResponseCacheSpec {
+    ResponseCacheSpec {
+        exact: 8,
+        ttl: 1e-6,
+        semantic: Some(0.99),
+        hit_latency: 0.0,
+    }
+}
+
+/// The golden-stability contract: with the cache disabled — and even
+/// enabled-but-hitless — no metric moves, for every sweep scheduler
+/// under both bandwidth-sharing models on randomized scenarios.
+#[test]
+fn prop_disabled_and_hitless_cache_never_perturb_the_simulation() {
+    let scheds: Vec<&'static str> = SchedulerRegistry::sweep().collect();
+    let workloads = ["light", "mixed", "heavy", "chat"];
+    check(
+        8,
+        |rng| {
+            let sched = scheds[rng.uniform_usize(0, scheds.len() - 1)];
+            let wl = workloads[rng.uniform_usize(0, workloads.len() - 1)];
+            let rate = rng.uniform_f64(2.0, 12.0);
+            let dur = rng.uniform_f64(8.0, 20.0);
+            let seed = rng.uniform_u64(0, u64::from(u32::MAX));
+            let maxmin = rng.next_f64() < 0.5;
+            (sched, wl, rate, dur, seed, maxmin)
+        },
+        |&(sched, wl, rate, dur, seed, maxmin)| {
+            let model = if maxmin {
+                ContentionModel::MaxMin
+            } else {
+                ContentionModel::Admission
+            };
+            let spec = WorkloadSpec::by_name(wl).expect("known workload");
+            let run = |cache: Option<ResponseCacheSpec>| {
+                let mut b = SimBuilder::parse_cluster(CLUSTER)
+                    .expect("valid cluster spec")
+                    .network_gbs(2.0)
+                    .contention(2.0)
+                    .contention_model(model)
+                    .workload(spec, rate, dur, seed)
+                    .scheduler(SchedSpec::parse(sched).expect("known"));
+                if let Some(c) = cache {
+                    b = b.response_cache(c);
+                }
+                b.run()
+            };
+            let off = run(None);
+            let on = run(Some(hitless()));
+            prop_assert(off.completed == on.completed, "completed")?;
+            prop_assert(off.makespan == on.makespan, "makespan")?;
+            prop_assert(off.jct_mean == on.jct_mean, "jct_mean")?;
+            prop_assert(off.ttft_p99 == on.ttft_p99, "ttft_p99")?;
+            prop_assert(off.tbt_mean == on.tbt_mean, "tbt_mean")?;
+            prop_assert(off.utilization == on.utilization, "utilization")?;
+            prop_assert(off.peak_kv_bytes == on.peak_kv_bytes,
+                        "peak_kv_bytes")?;
+            // The off-run carries no cache block at all...
+            prop_assert(off.response_cache.is_none(),
+                        "cache report without a cache")?;
+            // ...and the hitless run audited every arrival, hit none.
+            let rc = on.response_cache.as_ref().expect("cache enabled");
+            prop_assert(rc.lookups as usize == on.completed,
+                        "one lookup per request")?;
+            prop_assert(rc.exact_hits + rc.semantic_hits == 0,
+                        "nanosecond TTL still hit")?;
+            Ok(())
+        },
+    );
+}
+
+/// Cache-on conservation under both contention models: every arrival
+/// is looked up exactly once, hits + fleet-served completions cover
+/// the whole trace, and both tiers land hits on the repeat-heavy
+/// mixed workload.
+#[test]
+fn cache_on_conserves_requests_for_every_scheduler_and_model() {
+    let spec = ResponseCacheSpec::parse("exact=1024,ttl=300,semantic=0.9")
+        .expect("valid spec");
+    for model in MODELS {
+        for sched in SchedulerRegistry::sweep() {
+            let r = run_one(sched, model, Some(spec));
+            let tag = format!("{sched}/{}", model.name());
+            let rc = r.response_cache.as_ref().expect("cache enabled");
+            let hits = (rc.exact_hits + rc.semantic_hits) as usize;
+            assert_eq!(rc.lookups as usize, r.completed + hits,
+                       "{tag}: lookups != arrivals");
+            assert!(rc.exact_hits > 0, "{tag}: exact tier never hit");
+            assert!(rc.semantic_hits > 0, "{tag}: semantic tier never hit");
+            assert!(rc.saved_prefill_tokens > 0 && rc.saved_decode_tokens > 0,
+                    "{tag}: hits saved no tokens");
+            assert!(rc.hit_rate > 0.0 && rc.hit_rate < 1.0,
+                    "{tag}: hit rate {}", rc.hit_rate);
+        }
+    }
+}
+
+/// Determinism: identical (trace, scheduler, cache spec) gives a
+/// bit-identical report including every cache counter.
+#[test]
+fn cached_sim_is_deterministic() {
+    let spec = ResponseCacheSpec::parse("exact=256,ttl=60,semantic=0.92")
+        .expect("valid spec");
+    let cell = || run_one("accellm", ContentionModel::MaxMin, Some(spec));
+    let (r1, r2) = (cell(), cell());
+    assert_eq!(r1.jct_mean, r2.jct_mean);
+    assert_eq!(r1.ttft_p99, r2.ttft_p99);
+    let (c1, c2) = (r1.response_cache.unwrap(), r2.response_cache.unwrap());
+    assert_eq!(c1, c2);
+}
+
+/// The default run path carries no cache: report field absent, JSON
+/// key absent — the golden-stability surface.
+#[test]
+fn cache_off_by_default_leaves_report_clean() {
+    let r = run_one("accellm", ContentionModel::Admission, None);
+    assert!(r.response_cache.is_none());
+    let doc = r.to_json();
+    assert!(doc.get("response_cache").is_none());
+    // Enabled, the JSON block surfaces with its counters.
+    let spec = ResponseCacheSpec::parse("exact=64,ttl=30").expect("valid");
+    let on = run_one("accellm", ContentionModel::Admission, Some(spec));
+    let doc = on.to_json();
+    let block = doc.get("response_cache").expect("cache block in JSON");
+    assert!(block.get("lookups").and_then(|x| x.as_f64()).unwrap() > 0.0);
+}

@@ -174,7 +174,9 @@ fn exporters_emit_wellformed_artifacts() {
     let csv = probes_csv(&r);
     let mut lines = csv.lines();
     let header = lines.next().expect("csv header");
-    assert_eq!(header, "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending");
+    assert_eq!(header,
+               "t_s,kind,id,load,busy,kv_gb,streams,rate_gbs,pending,\
+                active,resp_hits,resp_hit_rate");
     let ncol = header.split(',').count();
     let mut rows = 0;
     for line in lines {
