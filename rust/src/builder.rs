@@ -46,6 +46,7 @@ pub struct SimBuilder {
     membership: Option<MembershipTimeline>,
     autoscale: Option<AutoscaleSpec>,
     response_cache: Option<crate::respcache::ResponseCacheSpec>,
+    slo: Option<crate::slo::SloSpec>,
 }
 
 impl SimBuilder {
@@ -63,6 +64,7 @@ impl SimBuilder {
             membership: None,
             autoscale: None,
             response_cache: None,
+            slo: None,
         }
     }
 
@@ -193,6 +195,16 @@ impl SimBuilder {
         self
     }
 
+    /// SLO layer (`i_ttft=0.5,i_tpot=0.05,admit=64,preempt=1,
+    /// mix=0.3:0.2`; `SloSpec::parse("default")` for the stock
+    /// deadlines): per-request service classes, deadline metering,
+    /// admission control and preemption.  `None` (the default) keeps
+    /// class priorities flat and every golden byte-identical.
+    pub fn slo(mut self, spec: crate::slo::SloSpec) -> SimBuilder {
+        self.slo = Some(spec);
+        self
+    }
+
     pub fn cluster(&self) -> &ClusterSpec {
         &self.cluster
     }
@@ -207,6 +219,7 @@ impl SimBuilder {
         cfg.membership = self.membership.clone();
         cfg.autoscale = self.autoscale;
         cfg.response_cache = self.response_cache;
+        cfg.slo = self.slo.clone();
         cfg
     }
 
@@ -336,7 +349,8 @@ mod tests {
                     "exact=64,ttl=30,semantic=0.9,hit_ms=1",
                 )
                 .unwrap(),
-            );
+            )
+            .slo(crate::slo::SloSpec::parse("mix=0.3:0.2,admit=4").unwrap());
         assert!(b.cluster().topology().contended());
         assert_eq!(b.cluster().topology().uplink_bw(0), 5e9);
         assert_eq!(b.cluster().topology().spine_bw(), Some(8e9));
@@ -349,6 +363,9 @@ mod tests {
         assert_eq!(cfg.autoscale, Some(AutoscaleSpec::default()));
         let rc = cfg.response_cache.expect("response cache reaches config");
         assert_eq!((rc.exact, rc.ttl, rc.semantic), (64, 30.0, Some(0.9)));
+        let slo = cfg.slo.as_ref().expect("slo spec reaches config");
+        assert_eq!(slo.mix, Some((0.3, 0.2)));
+        assert_eq!(slo.admit, 4.0);
         // The default stays the admission model with telemetry off and
         // a static fleet (golden stability).
         let d = SimBuilder::parse_cluster("h100x4").unwrap().sim_config();
@@ -357,6 +374,7 @@ mod tests {
         assert!(!d.telemetry.enabled());
         assert!(d.membership.is_none() && d.autoscale.is_none());
         assert!(d.response_cache.is_none());
+        assert!(d.slo.is_none());
     }
 
     #[test]

@@ -49,6 +49,11 @@
 //! the same spec grammar as `--response-cache`
 //! (`"exact=4096,ttl=600,semantic=0.9,hit_ms=1"`).  Omitting it keeps
 //! every request on the fleet and the goldens byte-identical.
+//!
+//! `"slo"` enables the SLO layer with the same spec grammar as
+//! `--slo` (`"i_ttft=0.5,i_tpot=0.05,admit=64,preempt=1,mix=0.3:0.2"`;
+//! `"default"` turns it on with the stock deadlines).  Omitting it
+//! keeps class priorities flat and every golden byte-identical.
 
 use std::path::Path;
 
@@ -89,6 +94,8 @@ pub struct Experiment {
     pub autoscale: Option<AutoscaleSpec>,
     /// Cluster-front response cache (exact + semantic tiers).
     pub response_cache: Option<ResponseCacheSpec>,
+    /// SLO layer: service classes, deadlines, admission, preemption.
+    pub slo: Option<crate::slo::SloSpec>,
 }
 
 impl Default for Experiment {
@@ -109,6 +116,7 @@ impl Default for Experiment {
             membership: None,
             autoscale: None,
             response_cache: None,
+            slo: None,
         }
     }
 }
@@ -292,6 +300,10 @@ impl Experiment {
             exp.response_cache = Some(ResponseCacheSpec::parse(v)
                 .map_err(|e| anyhow!("config: {e}"))?);
         }
+        if let Some(v) = j.get("slo").and_then(|x| x.as_str()) {
+            exp.slo = Some(crate::slo::SloSpec::parse(v)
+                .map_err(|e| anyhow!("config: {e}"))?);
+        }
         if exp.rates.is_empty() || exp.duration <= 0.0 {
             return Err(anyhow!("config: rates/duration invalid"));
         }
@@ -307,6 +319,7 @@ impl Experiment {
         cfg.membership = self.membership.clone();
         cfg.autoscale = self.autoscale;
         cfg.response_cache = self.response_cache;
+        cfg.slo = self.slo;
         cfg
     }
 }
@@ -616,6 +629,50 @@ mod tests {
         let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
         assert!(d.response_cache.is_none());
         assert!(d.sim_config().response_cache.is_none());
+    }
+
+    #[test]
+    fn parses_slo_knob() {
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4",
+                "slo":"i_ttft=0.4,admit=32,preempt=0,mix=0.25:0.25"}"#,
+        )
+        .unwrap();
+        let s = e.slo.as_ref().unwrap();
+        assert_eq!(s.ttft[0], 0.4);
+        assert_eq!(s.admit, 32.0);
+        assert!(!s.preempt);
+        assert_eq!(s.mix, Some((0.25, 0.25)));
+        assert!(e.sim_config().slo.is_some());
+        // "default" turns the layer on with stock deadlines.
+        let e = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","slo":"default"}"#,
+        )
+        .unwrap();
+        assert_eq!(e.slo, Some(crate::slo::SloSpec::default()));
+        // Malformed specs are rejected at config-parse time with the
+        // grammar's actionable message (a mix that is not I:B, a mix
+        // summing past 1, an unknown key).
+        let err = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","slo":"mix=0.9"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("interactive:batch"), "{err}");
+        let err = Experiment::from_json_text(
+            r#"{"cluster":"h100x4","slo":"mix=0.7:0.7"}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("sum to <= 1"), "{err}");
+        assert!(Experiment::from_json_text(
+            r#"{"cluster":"h100x4","slo":"bogus=1"}"#
+        )
+        .is_err());
+        // Default: SLO layer off.
+        let d = Experiment::from_json_text(r#"{"cluster":"h100x4"}"#).unwrap();
+        assert!(d.slo.is_none());
+        assert!(d.sim_config().slo.is_none());
     }
 
     #[test]

@@ -129,6 +129,10 @@ pub struct AcceLlm {
     /// Prompts folded into one prefill work item (registry parameter
     /// `max_prefill_batch`).
     max_prefill_batch: usize,
+    /// Share of each prefill batch reserved for non-batch prompts when
+    /// the SLO layer is on (registry parameter `interactive_frac`;
+    /// 0 = no reservation, and the knob is inert without an SLO spec).
+    interactive_frac: f64,
     /// Per-instance decode sets (requests whose KV *primary* is here).
     sets: Vec<Vec<ReqId>>,
     /// Per-pair prompt queues.
@@ -208,6 +212,16 @@ impl AcceLlm {
     pub fn set_max_prefill_batch(&mut self, cap: usize) {
         assert!(cap >= 1, "prefill batch cap must be >= 1");
         self.max_prefill_batch = cap;
+    }
+
+    /// Share of each prefill batch reserved for non-batch prompts
+    /// under the SLO layer (registry param `interactive_frac`).  The
+    /// spec grammar bounds it to [0, 1]; it is a no-op without an SLO
+    /// spec, so bare runs stay bit-identical.
+    pub fn set_interactive_frac(&mut self, frac: f64) {
+        assert!((0.0..=1.0).contains(&frac),
+                "interactive fraction must be in [0, 1]");
+        self.interactive_frac = frac;
     }
 
     /// CHWBL slack of the hardware-aware arrival router (registry
@@ -379,6 +393,7 @@ impl AcceLlm {
             flip_slack: DEFAULT_FLIP_SLACK_S,
             max_decode_batch: DEFAULT_MAX_DECODE_BATCH,
             max_prefill_batch: DEFAULT_MAX_PREFILL_BATCH,
+            interactive_frac: 0.0,
             sets: vec![Vec::new(); n],
             queues: vec![VecDeque::new(); n / 2],
             replicas_on: vec![Vec::new(); n],
@@ -517,8 +532,80 @@ impl AcceLlm {
         }
         self.sets[inst] = kept;
 
+        // Class-priority pop (SLO layer): interactive prompts jump
+        // batch prompts, FIFO within a class.  With the layer off
+        // every priority is 0 and this is the original `drain(..n)`.
         let n = self.queues[pair].len().min(self.max_prefill_batch);
-        let reqs: Vec<ReqId> = self.queues[pair].drain(..n).collect();
+        let prio: Vec<u8> = self
+            .queues[pair]
+            .iter()
+            .map(|&r| self.classify(ctx, r))
+            .collect();
+        let mut reqs =
+            crate::coordinator::take_by_priority(&mut self.queues[pair],
+                                                 &prio, n);
+        // `interactive_frac` (SLO-on only): reserve that share of each
+        // prefill batch for non-batch prompts by capping the
+        // batch-class share.  An all-batch queue still serves
+        // (cap >= 1): the knob shapes ordering, never throughput to
+        // zero.
+        if ctx.slo_enabled() && self.interactive_frac > 0.0 {
+            let cap = (((reqs.len() as f64)
+                * (1.0 - self.interactive_frac))
+                .floor() as usize)
+                .max(1);
+            let mut n_batch = 0;
+            let mut deferred: Vec<ReqId> = Vec::new();
+            reqs.retain(|&r| {
+                if ctx.slo_priority(r) == 2 {
+                    n_batch += 1;
+                    if n_batch > cap {
+                        deferred.push(r);
+                        return false;
+                    }
+                }
+                true
+            });
+            // Deferred batch prompts keep their FIFO spot at the front.
+            for r in deferred.into_iter().rev() {
+                self.queues[pair].push_front(r);
+            }
+        }
+        // KV-pressure preemption (SLO layer): if the prompt batch does
+        // not fit beside this member's resident KV, evict batch-class
+        // stragglers (requests pausing here without a partner replica)
+        // and rewind them through the arrival path — the PR 8 crash
+        // machinery as policy, so the re-fetch is re-paid as prefill
+        // compute and replication transfers.  Newest residents first.
+        if ctx.slo_enabled() && ctx.slo_preempt() && !reqs.is_empty() {
+            let needed: f64 = reqs
+                .iter()
+                .map(|&r| {
+                    ctx.kv_bytes_tokens(ctx.requests[r].prompt_len as f64)
+                })
+                .sum();
+            let mut i = self.sets[inst].len();
+            while ctx.free_bytes(inst) < needed && i > 0 {
+                i -= 1;
+                let r = self.sets[inst][i];
+                if ctx.slo_priority(r) != 2
+                    || self.in_handoff.iter().any(|&(x, _)| x == r)
+                    || self.in_rerep.iter().any(|&(x, _)| x == r)
+                {
+                    continue;
+                }
+                self.sets[inst].remove(i);
+                let holders = ctx.requests[r].replicas.clone();
+                ctx.preempt_request(r);
+                for h in holders {
+                    self.replicas_on[h].retain(|&x| x != r);
+                }
+                // Back on this pair's own queue (affinity), behind
+                // everything already waiting.
+                ctx.pending.retain(|&x| x != r);
+                self.queues[pair].push_back(r);
+            }
+        }
         for &r in &reqs {
             ctx.place_primary(r, inst);
         }

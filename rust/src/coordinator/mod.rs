@@ -69,3 +69,79 @@ pub const DEFAULT_MAX_DECODE_BATCH: usize = 256;
 pub(crate) fn capped_batch(set: &[ReqId], cap: usize) -> Vec<ReqId> {
     set[..set.len().min(cap)].to_vec()
 }
+
+/// Pop up to `n` requests from `q` in priority order (lower `prio`
+/// first, FIFO within a priority), preserving the relative order of
+/// what remains.  `prio[i]` is the priority of `q[i]` — callers build
+/// it with [`crate::sim::Scheduler::classify`] *before* borrowing the
+/// queue mutably.
+///
+/// When every priority is equal (always the case with the SLO layer
+/// off, where `classify` returns a constant 0) this is exactly
+/// `q.drain(..n)` — the byte-identity fast path: no reorder, no float
+/// work, identical pop order to the pre-SLO FIFO.
+pub(crate) fn take_by_priority(q: &mut std::collections::VecDeque<ReqId>,
+                               prio: &[u8], n: usize) -> Vec<ReqId> {
+    debug_assert_eq!(q.len(), prio.len());
+    let n = n.min(q.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    if prio.windows(2).all(|w| w[0] == w[1]) {
+        return q.drain(..n).collect();
+    }
+    // Stable selection: sort queue positions by (priority, position);
+    // the first n are the winners, popped in that order.
+    let mut order: Vec<usize> = (0..q.len()).collect();
+    order.sort_by_key(|&i| (prio[i], i));
+    let mut chosen = vec![false; q.len()];
+    for &i in &order[..n] {
+        chosen[i] = true;
+    }
+    let mut taken = Vec::with_capacity(n);
+    let mut rest = std::collections::VecDeque::with_capacity(q.len() - n);
+    for (i, r) in q.drain(..).enumerate() {
+        if chosen[i] {
+            taken.push((prio[i], i, r));
+        } else {
+            rest.push_back(r);
+        }
+    }
+    *q = rest;
+    taken.sort_by_key(|&(p, i, _)| (p, i));
+    taken.into_iter().map(|(_, _, r)| r).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn take_by_priority_uniform_is_fifo_drain() {
+        let mut q: VecDeque<ReqId> = (0..6).collect();
+        let prio = vec![0u8; 6];
+        assert_eq!(take_by_priority(&mut q, &prio, 4), vec![0, 1, 2, 3]);
+        assert_eq!(q, VecDeque::from(vec![4, 5]));
+    }
+
+    #[test]
+    fn take_by_priority_interactive_jumps_batch() {
+        // queue: [b, i, s, i, b], priorities [2, 0, 1, 0, 2].
+        let mut q: VecDeque<ReqId> = VecDeque::from(vec![10, 11, 12, 13, 14]);
+        let prio = vec![2u8, 0, 1, 0, 2];
+        // Two slots: both interactive requests, FIFO within the class.
+        assert_eq!(take_by_priority(&mut q, &prio, 2), vec![11, 13]);
+        // Remainder keeps its relative order.
+        assert_eq!(q, VecDeque::from(vec![10, 12, 14]));
+    }
+
+    #[test]
+    fn take_by_priority_caps_and_empties() {
+        let mut q: VecDeque<ReqId> = VecDeque::from(vec![1, 2]);
+        let prio = vec![1u8, 0];
+        assert_eq!(take_by_priority(&mut q, &prio, 10), vec![2, 1]);
+        assert!(q.is_empty());
+        assert!(take_by_priority(&mut q, &[], 3).is_empty());
+    }
+}

@@ -137,8 +137,19 @@ impl Splitwise {
             {
                 continue;
             }
+            // Class-priority pop (SLO layer): interactive prompts jump
+            // batch prompts, FIFO within a class.  With the layer off
+            // every priority is 0 and this is the original
+            // `drain(..n)`.
             let n = self.queue.len().min(self.max_prefill_batch);
-            let reqs: Vec<ReqId> = self.queue.drain(..n).collect();
+            let prio: Vec<u8> = self
+                .queue
+                .iter()
+                .map(|&r| self.classify(ctx, r))
+                .collect();
+            let reqs =
+                crate::coordinator::take_by_priority(&mut self.queue,
+                                                     &prio, n);
             for &r in &reqs {
                 // KV materializes on the prefill machine during prefill.
                 ctx.place_primary(r, inst);

@@ -19,14 +19,18 @@
 //! robin ignores device capability, making this the capacity-blind
 //! baseline of the `hetero` evaluation.
 
-use crate::coordinator::{capped_batch, DEFAULT_MAX_DECODE_BATCH};
+use std::collections::VecDeque;
+
+use crate::coordinator::{capped_batch, take_by_priority,
+                         DEFAULT_MAX_DECODE_BATCH};
 use crate::sim::{InstId, MembershipChange, ReqId, Scheduler, SimCtx, Work};
 
 pub struct Vllm {
     /// Per-instance running decode sets (requests with KV resident here).
     sets: Vec<Vec<ReqId>>,
-    /// Per-instance queue of prompts waiting for admission.
-    waiting: Vec<Vec<ReqId>>,
+    /// Per-instance queue of prompts waiting for admission (FIFO; the
+    /// SLO layer's priority pop reorders only across classes).
+    waiting: Vec<VecDeque<ReqId>>,
     next_rr: usize,
     /// `max_num_seqs`: admission slots and decode batch cap (registry
     /// parameter `max_batch`).
@@ -37,7 +41,7 @@ impl Vllm {
     pub fn new(n_instances: usize) -> Self {
         Vllm {
             sets: vec![Vec::new(); n_instances],
-            waiting: vec![Vec::new(); n_instances],
+            waiting: vec![VecDeque::new(); n_instances],
             next_rr: 0,
             max_decode_batch: DEFAULT_MAX_DECODE_BATCH,
         }
@@ -55,12 +59,56 @@ impl Vllm {
         if ctx.is_busy(inst) {
             return;
         }
+        // SLO preemption (slot pressure): a waiting interactive prompt
+        // may evict batch-class decodes when every slot is taken.  The
+        // evicted request's KV is scrubbed and it re-prefills from
+        // scratch on this instance — preemption pays real compute, the
+        // interactive request gets the slot now.  Newest batch
+        // residents go first (least progress lost).
+        if ctx.slo_enabled() && ctx.slo_preempt()
+            && self.sets[inst].len() >= self.max_decode_batch
+        {
+            let need = self
+                .waiting[inst]
+                .iter()
+                .filter(|&&r| ctx.slo_priority(r) == 0)
+                .count();
+            if need > 0 {
+                let mut evict: Vec<ReqId> = Vec::new();
+                for i in (0..self.sets[inst].len()).rev() {
+                    if evict.len() >= need {
+                        break;
+                    }
+                    let r = self.sets[inst][i];
+                    if ctx.slo_priority(r) == 2 {
+                        self.sets[inst].remove(i);
+                        evict.push(r);
+                    }
+                }
+                for r in evict {
+                    ctx.preempt_request(r);
+                    // preempt_request parks it in ctx.pending; adopt it
+                    // back into this instance's waiting queue directly
+                    // (vllm KV never moves, and after the scrub there
+                    // is nothing left to move anyway).
+                    ctx.pending.retain(|&x| x != r);
+                    self.waiting[inst].push_back(r);
+                }
+            }
+        }
         let free_slots =
             self.max_decode_batch.saturating_sub(self.sets[inst].len());
         if !self.waiting[inst].is_empty() && free_slots > 0 {
-            // Prompt-exclusive iteration (vLLM 0.4.2: no chunked prefill).
+            // Prompt-exclusive iteration (vLLM 0.4.2: no chunked
+            // prefill).  Admission is class-priority FIFO: with the
+            // SLO layer off every priority is 0 and this is the
+            // original `drain(..n)`.
             let n = self.waiting[inst].len().min(free_slots);
-            let prefills: Vec<ReqId> = self.waiting[inst].drain(..n).collect();
+            let prio: Vec<u8> = self.waiting[inst]
+                .iter()
+                .map(|&r| self.classify(ctx, r))
+                .collect();
+            let prefills = take_by_priority(&mut self.waiting[inst], &prio, n);
             for &r in &prefills {
                 ctx.place_primary(r, inst);
                 self.sets[inst].push(r);
@@ -103,7 +151,7 @@ impl Scheduler for Vllm {
         ctx.pending.retain(|&r| r != req);
         match self.route(ctx) {
             Some(inst) => {
-                self.waiting[inst].push(req);
+                self.waiting[inst].push_back(req);
                 self.kick(ctx, inst);
             }
             // No active instance: park it until one joins.

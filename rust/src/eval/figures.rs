@@ -430,17 +430,80 @@ pub fn figure_by_id(id: &str) -> Option<FigureOutput> {
         "load_balance" => crate::eval::loadbalance::load_balance(),
         "scale_events" => crate::eval::scale_events::scale_events(),
         "response_cache" => crate::eval::respcache::response_cache(),
+        "slo" => crate::eval::slo::slo(),
         _ => return None,
     })
 }
 
 /// Every regenerable artifact: paper order, then repo extensions.
-pub const ALL_IDS: [&str; 22] = [
+pub const ALL_IDS: [&str; 23] = [
     "table1", "table2", "fig3", "fig4", "fig5", "fig6", "fig9", "fig10",
     "fig11", "fig12", "fig13", "fig14", "fig15", "fig16", "prefix_locality",
     "hetero", "contention", "spine_sweep", "param_sweep", "load_balance",
-    "scale_events", "response_cache",
+    "scale_events", "response_cache", "slo",
 ];
+
+/// One-line description per figure id, in [`ALL_IDS`] order.  This is
+/// the source of both `accellm figures --list` and the README "Figure
+/// catalog" table; the alignment test below keeps it in lockstep with
+/// the index, and `tests/integration_slo.rs` pins the README copy.
+pub const CATALOG: [(&str, &str); 23] = [
+    ("table1", "accelerator device specifications (paper Table 1)"),
+    ("table2", "workload characteristics (paper Table 2)"),
+    ("fig3", "prefill time/throughput vs prompt length x batch (H100)"),
+    ("fig4", "decode step time/throughput vs context x batch (H100)"),
+    ("fig5", "prefill interference TBT spike + batch imbalance"),
+    ("fig6", "bursty arrivals: utilization, splitwise vs accellm"),
+    ("fig9", "peak per-instance KV memory across rates"),
+    ("fig10", "throughput/JCT vs interconnect bandwidth sweep"),
+    ("fig11", "latency grid: mixed workload, H100, 4/8/16 instances"),
+    ("fig12", "latency grid: mixed workload, Ascend 910B2"),
+    ("fig13", "latency grid: light workload, H100"),
+    ("fig14", "latency grid: light workload, Ascend 910B2"),
+    ("fig15", "latency grid: heavy workload, H100"),
+    ("fig16", "worst-case TBT latencies per scheduler"),
+    ("prefix_locality", "cross-request prefix reuse: hit rate and \
+                         saved prefill"),
+    ("hetero", "mixed H100+910B2 fleet: capacity-aware vs blind pairing"),
+    ("contention", "shared-uplink contention: admission vs max-min \
+                    sharing"),
+    ("spine_sweep", "spine-tier saturation sweep under max-min sharing"),
+    ("param_sweep", "CHWBL load-factor sweep (locality vs balance)"),
+    ("load_balance", "per-instance load imbalance + latency breakdown \
+                      spans"),
+    ("scale_events", "elastic fleet: JCT/goodput through a crash \
+                      timeline"),
+    ("response_cache", "cluster-front response cache: instances bought \
+                        back at fixed p99"),
+    ("slo", "SLO goodput vs load: per-class deadlines, admission, \
+             preemption"),
+];
+
+/// `figures --list` body: every id with its one-line description.
+pub fn catalog_text() -> String {
+    let mut out = String::new();
+    for (id, desc) in CATALOG {
+        out.push_str(&format!("{id:<16} {}\n",
+                              desc.split_whitespace()
+                                  .collect::<Vec<_>>()
+                                  .join(" ")));
+    }
+    out
+}
+
+/// Markdown figure-catalog table for the README — generated from
+/// [`CATALOG`] so the docs cannot rot (pinned by
+/// `tests/integration_slo.rs`).
+pub fn catalog_markdown() -> String {
+    let mut s = String::from("| id | what it shows |\n|---|---|\n");
+    for (id, desc) in CATALOG {
+        s.push_str(&format!("| `{id}` | {} |\n",
+                            desc.split_whitespace()
+                                .collect::<Vec<_>>()
+                                .join(" ")));
+    }
+    s
+}
 
 /// Generate everything (the `make bench` payload).
 pub fn all_figures() -> Vec<FigureOutput> {
@@ -501,6 +564,25 @@ mod tests {
             assert!(figure_by_id(id).is_some(), "{id}");
         }
         assert!(figure_by_id("fig99").is_none());
+    }
+
+    #[test]
+    fn catalog_covers_every_figure_in_order() {
+        // The catalog is ALL_IDS plus descriptions, in the same order:
+        // adding a figure without describing it (or vice versa) fails
+        // here, and the README table is generated from the same array.
+        assert_eq!(CATALOG.len(), ALL_IDS.len());
+        for (i, (id, desc)) in CATALOG.iter().enumerate() {
+            assert_eq!(*id, ALL_IDS[i], "catalog order diverges at {i}");
+            assert!(!desc.trim().is_empty(), "{id} has no description");
+        }
+        let text = catalog_text();
+        let md = catalog_markdown();
+        for id in ALL_IDS {
+            assert!(text.contains(id), "{id} missing from --list");
+            assert!(md.contains(&format!("| `{id}` |")),
+                    "{id} missing from markdown");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod loadbalance;
 pub mod prefix;
 pub mod respcache;
 pub mod scale_events;
+pub mod slo;
 
 pub use ablations::{ablation_flip_slack, ablation_mechanisms};
 pub use bench::compare_bench;
@@ -25,3 +26,4 @@ pub use loadbalance::load_balance;
 pub use prefix::prefix_locality;
 pub use respcache::response_cache;
 pub use scale_events::scale_events;
+pub use slo::slo;

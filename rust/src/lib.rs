@@ -73,6 +73,7 @@ pub mod runtime;
 #[cfg(feature = "pjrt")]
 pub mod server;
 pub mod sim;
+pub mod slo;
 pub mod util;
 pub mod workload;
 
@@ -83,4 +84,5 @@ pub use registry::{SchedSpec, SchedulerRegistry};
 pub use respcache::{ResponseCache, ResponseCacheReport, ResponseCacheSpec};
 pub use sim::{run, ClusterSpec, PerfModel, RunReport, Scheduler, SimConfig,
               Topology};
+pub use slo::{SloClass, SloReport, SloSpec};
 pub use workload::{Trace, WorkloadSpec, CHAT, HEAVY, LIGHT, MIXED, SHARED_DOC};

@@ -35,8 +35,10 @@ USAGE:
                    [--telemetry] [--probe-interval S]
                    [--trace-out FILE] [--probes-out FILE]
                    [--events TIMELINE] [--autoscale SPEC]
-                   [--response-cache SPEC]
-  accellm figures  [--fig <id>] [--out DIR]      # regenerate paper tables/figures
+                   [--response-cache SPEC] [--slo SPEC]
+  accellm figures  [--fig <id>] [--out DIR] [--list]
+                                                  # regenerate paper tables/figures
+                                                  # (--list: ids + descriptions)
   accellm bench    [--scenario sweep|fleet] [--cluster SPEC] [--rate R]
                    [--duration S] [--requests N] [--scheduler SPEC]
                    [--reps N] [--out FILE]
@@ -112,7 +114,20 @@ fleet-served requests); the report gains a `response_cache` JSON
 block and `resp_*` CSV columns, kept separate from the `prefix_*`
 columns so request-level and prefill-only reuse never double-count.
 `accellm figures --fig response_cache` sweeps fleet size x cache on
-the contended mixed fleet.  Unknown flags left
+the contended mixed fleet.
+`--slo 'i_ttft=0.5,i_tpot=0.05,admit=64,preempt=1,mix=0.3:0.2'` (or
+`--slo default`) turns on the SLO layer: every request gets a service
+class (interactive/standard/batch) with TTFT/TPOT deadlines, schedulers
+pop prompts in class-priority order, batch arrivals park at the front
+door above the `admit` in-flight watermark, and under KV pressure
+schedulers may preempt batch requests (scrub their KV and re-prefill,
+paying real transfers).  The report gains a `slo` JSON block and
+goodput CSV columns (goodput = fraction of completed requests meeting
+both class deadlines).  Off by default — without `--slo` every run is
+byte-identical to the pre-SLO engine.  `accellm figures --fig slo`
+sweeps goodput vs load for accellm/vllm; `accellm figures --list`
+prints every figure id with a one-line description (the README
+\"Figure catalog\" table).  Unknown flags left
 unconsumed by a subcommand are reported as errors.  Run
 `make artifacts` once before `accellm serve` (needs a build with
 `--features pjrt`).";
@@ -356,6 +371,18 @@ fn parse_response_cache(
     }
 }
 
+/// `--slo "i_ttft=0.5,admit=64,mix=0.3:0.2"` (or `--slo default`) —
+/// the SLO layer.  Consulted unconditionally in `cmd_simulate` so the
+/// consumed-flag audit stays accurate.
+fn parse_slo(args: &Args) -> anyhow::Result<Option<accellm::SloSpec>> {
+    match args.get("slo") {
+        Some(spec) => Ok(Some(
+            accellm::SloSpec::parse(spec).map_err(anyhow::Error::msg)?,
+        )),
+        None => Ok(None),
+    }
+}
+
 fn parse_common(args: &Args) -> anyhow::Result<(ClusterSpec, WorkloadSpec,
                                                 f64, f64, u64)> {
     let cluster = parse_cluster(args)?;
@@ -381,6 +408,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // the CLI flags override / extend the config-file keys.
     let (cli_tel, cli_trace_out, cli_probes_out) = parse_telemetry(args)?;
     let cli_rc = parse_response_cache(args)?;
+    let cli_slo = parse_slo(args)?;
     // Config file runs an entire experiment (possibly a rate sweep).
     if let Some(path) = args.get("config") {
         let exp = accellm::config::Experiment::from_file(Path::new(path))?;
@@ -400,6 +428,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         let membership = cli_mem.or_else(|| exp.membership.clone());
         let autoscale = cli_auto.or(exp.autoscale);
         let response_cache = cli_rc.or(exp.response_cache);
+        let slo = cli_slo.or(exp.slo);
         // Per-run file outputs and a multi-rate sweep cannot mix: each
         // run would overwrite the file — and with a response cache the
         // probes CSV additionally carries a per-run hit-rate track, so
@@ -435,6 +464,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             }
             if let Some(rc) = response_cache {
                 b = b.response_cache(rc);
+            }
+            if let Some(s) = slo {
+                b = b.slo(s);
             }
             let report = b.run();
             println!("{}", report.csv_row());
@@ -472,6 +504,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if let Some(rc) = cli_rc {
         b = b.response_cache(rc);
     }
+    if let Some(s) = cli_slo {
+        b = b.slo(s);
+    }
     let report = b.run();
     print_report(&report, args.has("json"));
     write_telemetry_outputs(&report, &cli_trace_out, &cli_probes_out)?;
@@ -502,6 +537,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_figures(args: &Args) -> anyhow::Result<()> {
+    // `figures --list`: every id with its one-line description (the
+    // same catalog the README "Figure catalog" table is pinned to).
+    if args.has("list") {
+        print!("{}", accellm::eval::figures::catalog_text());
+        return Ok(());
+    }
     let outputs = match args.get("fig") {
         Some(id) => vec![figure_by_id(id)
             .ok_or_else(|| anyhow::anyhow!("unknown figure id '{id}'"))?],

@@ -312,9 +312,22 @@ const ROUTE_LOAD_FACTOR_PARAM: ParamSpec = ParamSpec {
     help: "CHWBL slack of hardware-aware arrival routing (mixed fleets)",
 };
 
-const ACCELLM_PARAMS: [ParamSpec; 4] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM,
+/// SLO-layer knob: minimum share of each prefill batch reserved for
+/// non-batch-class prompts.  Inert at the default 0 (and whenever the
+/// run has no `--slo` spec, where every class is Standard).
+const INTERACTIVE_FRAC_PARAM: ParamSpec = ParamSpec {
+    key: "interactive_frac",
+    default: ParamValue::Float(0.0),
+    min: 0.0,
+    max: 1.0,
+    help: "prefill-batch share reserved for interactive/standard \
+           prompts (SLO runs)",
+};
+
+const ACCELLM_PARAMS: [ParamSpec; 5] = [MAX_BATCH_PARAM, FLIP_SLACK_PARAM,
                                         ACCELLM_PREFILL_BATCH_PARAM,
-                                        ROUTE_LOAD_FACTOR_PARAM];
+                                        ROUTE_LOAD_FACTOR_PARAM,
+                                        INTERACTIVE_FRAC_PARAM];
 
 /// The blind baseline routes by free memory (no router), so it takes
 /// every accellm knob EXCEPT `route_load_factor`.
@@ -382,6 +395,7 @@ fn build_accellm(c: &ClusterSpec, p: &SchedParams) -> Box<dyn Scheduler> {
     let mut s = AcceLlm::new(c);
     apply_accellm_params(&mut s, p);
     s.set_route_load_factor(p.f64("route_load_factor"));
+    s.set_interactive_frac(p.f64("interactive_frac"));
     Box::new(s)
 }
 
@@ -585,6 +599,10 @@ mod tests {
         let acc = SchedSpec::parse("accellm").unwrap();
         assert_eq!(acc.params.usize("max_prefill_batch"), 8);
         assert_eq!(acc.params.f64("route_load_factor"), 1.25);
+        // SLO-layer knob defaults to inert.
+        assert_eq!(acc.params.f64("interactive_frac"), 0.0);
+        let e = SchedSpec::parse("accellm:interactive_frac=1.5").unwrap_err();
+        assert!(e.contains("<= 1"), "{e}");
         let spl = SchedSpec::parse("splitwise").unwrap();
         assert_eq!(spl.params.usize("max_prefill_batch"), 4);
         assert_eq!(spl.params.f64("prefill_frac"), 0.25);

@@ -423,6 +423,16 @@ pub trait Scheduler {
     fn on_transfer_done(&mut self, _ctx: &mut SimCtx, _src: InstId,
                         _dst: InstId, _req: ReqId) {
     }
+    /// Queue priority of a request for batch-pop ordering (lower runs
+    /// first; FIFO within a priority).  The default consults the
+    /// engine's SLO layer: interactive < standard < batch when the
+    /// layer is on, uniformly 0 when it is off — so priority pops
+    /// degrade to plain FIFO drains and SLO-off runs stay
+    /// byte-identical.  Policies may override to mix in their own
+    /// signals.
+    fn classify(&self, ctx: &SimCtx, req: ReqId) -> u8 {
+        ctx.slo_priority(req)
+    }
     /// Cluster membership changed (crash/drain/join).  Policies that
     /// index work by instance must purge a crashed instance, stop
     /// routing to Down/Draining instances, and adopt `rode_through`
@@ -524,6 +534,12 @@ pub struct SimCtx {
     /// Hits are short-circuited in `run_arrivals` before a SimRequest
     /// exists, so a disabled cache is bit-invisible to every golden.
     respcache: Option<crate::respcache::ResponseCache>,
+    /// SLO layer state (None = disabled, the default): per-class
+    /// deadline accounting, the admission parking lot, and the
+    /// preemption counter.  Like `respcache`, a disabled layer is
+    /// bit-invisible — class draws are pure functions of request
+    /// state and `slo_priority` collapses to a constant.
+    slo: Option<crate::slo::SloState>,
 }
 
 impl SimCtx {
@@ -564,6 +580,50 @@ impl SimCtx {
     /// Number of Active instances.
     pub fn n_active(&self) -> usize {
         self.avail.iter().filter(|&&a| a == Avail::Active).count()
+    }
+
+    /// Whether the SLO layer is active for this run.
+    pub fn slo_enabled(&self) -> bool {
+        self.slo.is_some()
+    }
+
+    /// May schedulers preempt batch-class requests under pressure?
+    /// Always false when the SLO layer is off.
+    pub fn slo_preempt(&self) -> bool {
+        self.slo.as_ref().is_some_and(|s| s.spec.preempt)
+    }
+
+    /// Scheduling priority of a request (0 runs first).  Uniformly 0
+    /// when the SLO layer is off, which collapses priority pops to
+    /// plain FIFO drains — the byte-identity contract.
+    pub fn slo_priority(&self, req: ReqId) -> u8 {
+        if self.slo.is_some() {
+            self.requests[req].slo.priority()
+        } else {
+            0
+        }
+    }
+
+    /// The request's service class (its template draw; `Standard` for
+    /// every request when the SLO layer is off).
+    pub fn slo_class(&self, req: ReqId) -> crate::slo::SloClass {
+        self.requests[req].slo
+    }
+
+    /// Would a new batch-class arrival be admitted right now?  True
+    /// when the SLO layer is off or the `admit` watermark is
+    /// unlimited; otherwise the in-flight population (admitted, not
+    /// finished, not parked) must sit below `admit` per active
+    /// instance.
+    fn slo_admit_ok(&self) -> bool {
+        let Some(s) = self.slo.as_ref() else { return true };
+        if !s.spec.admit.is_finite() {
+            return true;
+        }
+        let in_flight = self.requests.len()
+            - self.metrics.completed
+            - s.parked_queue.len();
+        (in_flight as f64) < s.spec.admit * self.n_active().max(1) as f64
     }
 
     /// Cost model of one instance.
@@ -830,6 +890,42 @@ impl SimCtx {
         for r in reps {
             self.instances[r].remove_replica(bytes);
         }
+    }
+
+    /// Preempt a batch-class request to free KV for a higher class —
+    /// the PR 8 crash-rewind machinery reused as policy.  Every KV
+    /// copy is freed, generation progress and the cached-prefix credit
+    /// are rewound, and the request re-enters `pending` for the
+    /// scheduler to re-admit (callers re-route it through their own
+    /// arrival path).  `first_token` is deliberately kept: a re-prefill
+    /// never re-stamps TTFT (`apply_work_effects` skips stamped
+    /// requests), so the re-fetch cost lands in JCT/TPOT — preemption
+    /// is priced, not free.  The caller must only preempt requests not
+    /// currently inside a running work item.
+    pub fn preempt_request(&mut self, req: ReqId) {
+        debug_assert!(!self.requests[req].is_finished(),
+                      "preempting a finished request");
+        self.free_request_kv(req);
+        let r = &mut self.requests[req];
+        r.generated = 0;
+        r.prefill_start = None;
+        r.cached_prefix = 0;
+        if let Some(s) = self.slo.as_mut() {
+            s.preempted += 1;
+        }
+        self.pending.push_back(req);
+    }
+
+    /// Deadline metering at EOS (no-op when the SLO layer is off).
+    fn slo_note_completion(&mut self, req: ReqId) {
+        let Some(state) = self.slo.as_mut() else { return };
+        let r = &self.requests[req];
+        let (Some(ft), Some(fin)) = (r.first_token, r.finish) else {
+            return;
+        };
+        let ttft = ft - r.arrival;
+        let tpot = (fin - ft) / r.decode_len.max(1) as f64;
+        state.on_completion(r.slo, ttft, tpot);
     }
 
     // ---- actions ---------------------------------------------------------
@@ -1618,6 +1714,10 @@ pub struct SimConfig {
     /// prefix reuse); None = disabled, bit-identical to the pre-cache
     /// engine.
     pub response_cache: Option<crate::respcache::ResponseCacheSpec>,
+    /// SLO layer (per-class deadlines, priority queueing, admission
+    /// control, preemption, goodput); None = disabled, bit-identical
+    /// to the pre-SLO engine.
+    pub slo: Option<crate::slo::SloSpec>,
 }
 
 impl SimConfig {
@@ -1632,6 +1732,7 @@ impl SimConfig {
             membership: None,
             autoscale: None,
             response_cache: None,
+            slo: None,
         }
     }
 
@@ -1729,6 +1830,7 @@ where
         respcache: cfg
             .response_cache
             .map(crate::respcache::ResponseCache::new),
+        slo: cfg.slo.map(crate::slo::SloState::new),
     };
     if cfg.cluster.topology().uplinks_enabled() {
         let n_up = cfg.cluster.topology().n_chassis();
@@ -1781,6 +1883,32 @@ where
         if ctx.requests.has_ripe() {
             ctx.requests.reclaim();
         }
+        // Release parked batch arrivals (admission control) once the
+        // in-flight population drops back below the watermark — or
+        // unconditionally when the run would otherwise end with
+        // requests still parked (liveness: every parked request must
+        // eventually run).  Release happens at the current clock; the
+        // wait lands in the request's TTFT and JCT.
+        if ctx.slo.as_ref().is_some_and(|s| !s.parked_queue.is_empty()) {
+            let starved = arrivals.peek().is_none()
+                && ctx.queue.peek_time().is_none();
+            while ctx
+                .slo
+                .as_ref()
+                .is_some_and(|s| !s.parked_queue.is_empty())
+                && (starved || ctx.slo_admit_ok())
+            {
+                let id = ctx
+                    .slo
+                    .as_mut()
+                    .unwrap()
+                    .parked_queue
+                    .pop_front()
+                    .unwrap();
+                ctx.pending.push_back(id);
+                sched.on_arrival(&mut ctx, id);
+            }
+        }
         // Admit the arrival iff it precedes every pending event
         // (ties to the arrival — see the ordering contract above).
         let admit = match (arrivals.peek(), ctx.queue.peek_time()) {
@@ -1814,11 +1942,44 @@ where
                     continue;
                 }
             }
+            // Service class (inert when the SLO layer is off): a
+            // `mix=` override re-bands the template's stored uniform
+            // draw; otherwise the workload family's own draw stands.
+            // Either way no RNG is consumed — the byte-identity
+            // contract.
+            let slo_class = match ctx.slo.as_ref().map(|s| s.spec.mix) {
+                Some(Some((fi, fb))) => {
+                    crate::slo::SloClass::from_uniform(tmpl.slo_u, fi, fb)
+                }
+                _ => tmpl.slo_class,
+            };
+            if slo_class == crate::slo::SloClass::Batch
+                && !ctx.slo_admit_ok()
+            {
+                // Admission control: the batch request parks at the
+                // front door — admitted to the request table (its
+                // arrival stamp starts the latency clock) but
+                // invisible to the scheduler until load drops.  Like
+                // inert control events, parking moves no clock.
+                let id = ctx.requests.len();
+                let mut req = SimRequest::new(id, tmpl.arrival,
+                                              tmpl.prompt_len,
+                                              tmpl.decode_len);
+                req.prefix_chunks = tmpl.prefix_chunks;
+                req.slo = slo_class;
+                ctx.requests.push(req);
+                ctx.telemetry.on_arrival(id, tmpl.arrival);
+                let s = ctx.slo.as_mut().expect("parking without SLO");
+                s.parked_queue.push_back(id);
+                s.parked += 1;
+                continue;
+            }
             ctx.now = tmpl.arrival;
             let id = ctx.requests.len();
             let mut req = SimRequest::new(id, tmpl.arrival, tmpl.prompt_len,
                                           tmpl.decode_len);
             req.prefix_chunks = tmpl.prefix_chunks;
+            req.slo = slo_class;
             ctx.requests.push(req);
             ctx.telemetry.on_arrival(id, tmpl.arrival);
             ctx.pending.push_back(id);
@@ -1905,7 +2066,7 @@ where
                 // ping-pong where a pending tick and a pending timeline
                 // entry keep each other alive forever.
                 let live = arrivals.peek().is_some()
-                    || ctx.requests.len() as u64 > ctx.metrics.completed;
+                    || ctx.requests.len() > ctx.metrics.completed;
                 if live {
                     ctx.now = t;
                     let e = ctx.timeline[idx];
@@ -1932,7 +2093,7 @@ where
             }
             Event::AutoscaleTick => {
                 let live = arrivals.peek().is_some()
-                    || ctx.requests.len() as u64 > ctx.metrics.completed;
+                    || ctx.requests.len() > ctx.metrics.completed;
                 if live {
                     // `autoscale_tick` advances `ctx.now` only if an
                     // action actually fires, so a never-triggering
@@ -1949,8 +2110,7 @@ where
                 if ctx.avail[inst] == Avail::Warming {
                     ctx.avail[inst] = Avail::Active;
                     let live = arrivals.peek().is_some()
-                        || ctx.requests.len() as u64
-                            > ctx.metrics.completed;
+                        || ctx.requests.len() > ctx.metrics.completed;
                     if live {
                         ctx.now = t;
                         sched.on_membership_change(
@@ -2017,6 +2177,7 @@ fn apply_work_effects(ctx: &mut SimCtx, inst: InstId, work: &Work) -> Vec<ReqId>
                     let jct = now - ctx.requests[r].arrival;
                     ctx.metrics.jct.add(jct);
                     ctx.metrics.completed += 1;
+                    ctx.slo_note_completion(r);
                     ctx.free_request_kv(r);
                     // Page reclamation candidate; the actual drop is
                     // deferred to the loop top, after the scheduler
@@ -2171,7 +2332,7 @@ fn autoscale_tick(ctx: &mut SimCtx, sched: &mut dyn Scheduler, t: f64) {
         return;
     }
     let in_flight =
-        (ctx.requests.len() as u64 - ctx.metrics.completed) as f64;
+        (ctx.requests.len() - ctx.metrics.completed) as f64;
     if in_flight > spec.up * n_active as f64 {
         // Backlog: wake the lowest-id Down instance, paying cold start.
         if let Some(inst) =
@@ -2292,6 +2453,11 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
         None
     };
     let response_cache = ctx.respcache.as_ref().map(|c| c.report());
+    debug_assert!(
+        ctx.slo.as_ref().map_or(true, |s| s.parked_queue.is_empty()),
+        "requests still parked at end of run"
+    );
+    let slo = ctx.slo.as_mut().map(|s| s.report());
     let m = &mut ctx.metrics;
     RunReport {
         scheduler: sched_name.to_string(),
@@ -2340,6 +2506,7 @@ fn finalize(mut ctx: SimCtx, workload: &str, rate: f64,
         trace_events,
         membership,
         response_cache,
+        slo,
     }
 }
 

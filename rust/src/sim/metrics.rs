@@ -368,6 +368,12 @@ pub struct RunReport {
     /// prefill-only reuse of requests that DID run, so the two never
     /// double-count.
     pub response_cache: Option<crate::respcache::ResponseCacheReport>,
+    /// SLO outcomes — goodput, per-class deadline tails, admission and
+    /// preemption counters (None when the SLO layer is off — same
+    /// byte-identity gating as `membership`/`response_cache`).  Only
+    /// requests that reached the fleet are goodput-metered; response-
+    /// cache hits are excluded by construction.
+    pub slo: Option<crate::slo::SloReport>,
 }
 
 impl RunReport {
@@ -420,6 +426,9 @@ impl RunReport {
         if let Some(rc) = &self.response_cache {
             pairs.push(("response_cache", rc.to_json()));
         }
+        if let Some(s) = &self.slo {
+            pairs.push(("slo", s.to_json()));
+        }
         Json::obj(pairs)
     }
 
@@ -429,8 +438,9 @@ impl RunReport {
         let b = self.breakdown.clone().unwrap_or_default();
         let im = self.imbalance.clone().unwrap_or_default();
         let rc = self.response_cache.clone().unwrap_or_default();
+        let slo = self.slo.clone().unwrap_or_default();
         format!(
-            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{},{:.3},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.4},{:.4},{},{},{},{},{},{}",
+            "{},{},{},{},{:.3},{},{},{:.3},{:.4},{:.4},{:.4},{:.5},{:.5},{:.5},{:.3},{:.3},{:.3},{:.2},{:.3},{:.2},{:.2},{:.3},{},{:.3},{},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{:.3},{:.4},{:.4},{},{},{},{},{},{},{:.4},{:.4},{:.4},{},{}",
             self.scheduler,
             self.device,
             self.workload,
@@ -473,6 +483,11 @@ impl RunReport {
             rc.saved_decode_tokens,
             rc.evictions,
             rc.expired,
+            slo.goodput,
+            slo.classes[0].goodput,
+            slo.classes[2].goodput,
+            slo.preempted,
+            slo.parked,
         )
     }
 
@@ -485,7 +500,8 @@ impl RunReport {
          span_decode_s,span_stall_s,load_max_over_mean,load_cv,\
          resp_hit_rate,resp_exact_hits,resp_semantic_hits,\
          resp_saved_prefill_tok,resp_saved_decode_tok,resp_evictions,\
-         resp_expired"
+         resp_expired,goodput,slo_i_goodput,slo_b_goodput,\
+         slo_preempted,slo_parked"
     }
 }
 

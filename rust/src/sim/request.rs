@@ -1,5 +1,7 @@
 //! Per-request simulation state and metric timestamps.
 
+use crate::slo::SloClass;
+
 pub type ReqId = usize;
 pub type InstId = usize;
 
@@ -38,6 +40,11 @@ pub struct SimRequest {
     /// instance; prefill charges only the remainder.  Set by the
     /// scheduler via `SimCtx::set_cached_prefix` before prefill starts.
     pub cached_prefix: u32,
+
+    /// SLO class from the workload template (inert — priority, parking
+    /// and deadline metering apply only when the engine's SLO layer is
+    /// on; see [`crate::slo`]).
+    pub slo: SloClass,
 }
 
 impl SimRequest {
@@ -56,6 +63,7 @@ impl SimRequest {
             replicas: Vec::new(),
             prefix_chunks: Vec::new(),
             cached_prefix: 0,
+            slo: SloClass::Standard,
         }
     }
 
@@ -115,6 +123,7 @@ static TOMBSTONE: SimRequest = SimRequest {
     replicas: Vec::new(),
     prefix_chunks: Vec::new(),
     cached_prefix: 0,
+    slo: SloClass::Standard,
 };
 
 #[derive(Debug, Default)]

@@ -98,6 +98,9 @@ impl SpanBreakdown {
 #[derive(Clone, Debug)]
 pub struct RequestSpan {
     pub req: ReqId,
+    /// SLO service class name (`"standard"` for every request when the
+    /// SLO layer is off — see [`crate::slo::SloClass`]).
+    pub class: &'static str,
     pub jct: f64,
     pub span: SpanBreakdown,
 }
@@ -620,6 +623,7 @@ impl Telemetry {
             let Some(tr) = self.reqs.get(i) else { continue };
             spans.push(RequestSpan {
                 req: i,
+                class: r.slo.name(),
                 jct: finish - r.arrival,
                 span: tr.span,
             });

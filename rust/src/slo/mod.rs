@@ -1,0 +1,504 @@
+//! SLO layer: per-request service classes, deadlines, and goodput.
+//!
+//! AcceLLM's claim is latency control under load, but a mean or a tail
+//! over *all* requests cannot see a scheduler that sacrifices batch
+//! traffic to protect interactive tails.  This module gives every
+//! request a service class — [`SloClass::Interactive`] /
+//! [`SloClass::Standard`] / [`SloClass::Batch`] — with per-class TTFT
+//! and TPOT deadlines, and reports **goodput**: the fraction of
+//! completed requests that met *both* deadlines (UELLM, arxiv
+//! 2409.14961, is the reference for SLO-aware serving; the load-
+//! balancing principle paper, arxiv 2601.17855, motivates tail-
+//! sensitive goodput over mean JCT for comparing routing policies).
+//!
+//! Classes are drawn by the workload as a **pure function of already-
+//! drawn request state** (`workload::slo_class_identity`, the PR 9
+//! `response_identity` pattern): enabling the SLO layer consumes no
+//! RNG and moves no arrival, so SLO-off runs stay byte-identical and
+//! the goldens untouched.
+//!
+//! The engine consults [`SloSpec`] for three mechanisms:
+//!
+//! * **priority queueing** — schedulers pop prefill batches in class-
+//!   priority order through [`crate::sim::Scheduler::classify`]
+//!   (interactive jumps batch; FIFO within a class);
+//! * **admission control** — batch arrivals park at the front door
+//!   while the in-flight population exceeds `admit` requests per
+//!   active instance, and release as the fleet drains;
+//! * **preemption** — under KV pressure schedulers may evict a batch
+//!   request's KV and rewind it through `on_arrival` (the PR 8 crash
+//!   machinery), re-paying its prefill and replica transfers.
+//!
+//! A deadline hit at *exactly* the deadline counts as met (`<=`).
+
+use std::collections::VecDeque;
+
+use crate::sim::ReqId;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Service class of one request.  Priority order is the declaration
+/// order: interactive runs first, batch last.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    Interactive,
+    Standard,
+    Batch,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::Interactive, SloClass::Standard, SloClass::Batch];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Standard => "standard",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            SloClass::Interactive => 0,
+            SloClass::Standard => 1,
+            SloClass::Batch => 2,
+        }
+    }
+
+    /// Queue priority: lower runs first.
+    pub fn priority(self) -> u8 {
+        self.index() as u8
+    }
+
+    /// Map a uniform draw in [0, 1) to a class given the workload's
+    /// class mix.  The band layout (interactive below `interactive_frac`,
+    /// batch in the next `batch_frac`, standard above) is part of the
+    /// byte-identity contract: the same `u` always yields the same class.
+    pub fn from_uniform(u: f64, interactive_frac: f64,
+                        batch_frac: f64) -> SloClass {
+        if u < interactive_frac {
+            SloClass::Interactive
+        } else if u < interactive_frac + batch_frac {
+            SloClass::Batch
+        } else {
+            SloClass::Standard
+        }
+    }
+}
+
+/// SLO policy: per-class deadlines plus the admission / preemption
+/// knobs.  Parsed from the `--slo` / config `"slo"` grammar
+/// (`i_ttft=0.5,i_tpot=0.05,admit=64,preempt=1,mix=0.3:0.2`).  `None`
+/// in [`crate::sim::SimConfig::slo`] (the default) keeps every run
+/// byte-identical to the pre-SLO engine.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloSpec {
+    /// TTFT deadline per class (seconds), indexed by [`SloClass::index`].
+    pub ttft: [f64; 3],
+    /// TPOT deadline per class (seconds per generated token).
+    pub tpot: [f64; 3],
+    /// Admission watermark: batch arrivals park while the in-flight
+    /// population is at or above `admit` requests per active instance.
+    /// `f64::INFINITY` (default) disables the gate.
+    pub admit: f64,
+    /// May schedulers preempt batch requests under KV pressure?
+    pub preempt: bool,
+    /// Class-mix override `(interactive_frac, batch_frac)`; `None`
+    /// keeps each workload family's own mix.
+    pub mix: Option<(f64, f64)>,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec {
+            ttft: [0.5, 2.5, 30.0],
+            tpot: [0.05, 0.15, 1.0],
+            admit: f64::INFINITY,
+            preempt: true,
+            mix: None,
+        }
+    }
+}
+
+impl SloSpec {
+    /// Parse the `k=v` comma grammar.  Keys: `i_ttft`, `i_tpot`,
+    /// `s_ttft`, `s_tpot`, `b_ttft`, `b_tpot` (seconds, > 0), `admit`
+    /// (in-flight per active instance, > 0), `preempt` (0/1), and
+    /// `mix=I:B` (class-mix override, fractions in [0, 1] summing to
+    /// <= 1).  The bare string `"default"` (or `""`) yields the
+    /// defaults, so `--slo default` turns the layer on untouched.
+    pub fn parse(s: &str) -> Result<SloSpec, String> {
+        let mut spec = SloSpec::default();
+        let s = s.trim();
+        if s.is_empty() || s == "default" {
+            return Ok(spec);
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("slo: expected key=value, got {part:?}"))?;
+            let fval = |v: &str, k: &str| -> Result<f64, String> {
+                v.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("slo: bad {k} value {v:?} (number)"))
+            };
+            match k.trim() {
+                "i_ttft" => spec.ttft[0] = fval(v, "i_ttft")?,
+                "s_ttft" => spec.ttft[1] = fval(v, "s_ttft")?,
+                "b_ttft" => spec.ttft[2] = fval(v, "b_ttft")?,
+                "i_tpot" => spec.tpot[0] = fval(v, "i_tpot")?,
+                "s_tpot" => spec.tpot[1] = fval(v, "s_tpot")?,
+                "b_tpot" => spec.tpot[2] = fval(v, "b_tpot")?,
+                "admit" => spec.admit = fval(v, "admit")?,
+                "preempt" => {
+                    spec.preempt = match v.trim() {
+                        "1" | "true" => true,
+                        "0" | "false" => false,
+                        other => {
+                            return Err(format!(
+                                "slo: preempt must be 0 or 1, got {other:?}"
+                            ))
+                        }
+                    }
+                }
+                "mix" => {
+                    let (i, b) = v.trim().split_once(':').ok_or_else(|| {
+                        format!(
+                            "slo: mix must be interactive:batch \
+                             fractions (e.g. mix=0.3:0.2), got {v:?}"
+                        )
+                    })?;
+                    let fi = fval(i, "mix interactive")?;
+                    let fb = fval(b, "mix batch")?;
+                    if !(0.0..=1.0).contains(&fi) || !(0.0..=1.0).contains(&fb)
+                    {
+                        return Err(format!(
+                            "slo: mix fractions must be in [0, 1], \
+                             got {fi}:{fb}"
+                        ));
+                    }
+                    if fi + fb > 1.0 {
+                        return Err(format!(
+                            "slo: mix fractions must sum to <= 1 (the \
+                             rest is the standard class), got {fi}+{fb}"
+                        ));
+                    }
+                    spec.mix = Some((fi, fb));
+                }
+                other => {
+                    return Err(format!(
+                        "slo: unknown key {other:?} (known: i_ttft, i_tpot, \
+                         s_ttft, s_tpot, b_ttft, b_tpot, admit, preempt, mix)"
+                    ))
+                }
+            }
+        }
+        for c in SloClass::ALL {
+            let i = c.index();
+            if !(spec.ttft[i] > 0.0) || !(spec.tpot[i] > 0.0) {
+                return Err(format!(
+                    "slo: {} deadlines must be positive \
+                     (ttft={}, tpot={})",
+                    c.name(),
+                    spec.ttft[i],
+                    spec.tpot[i]
+                ));
+            }
+        }
+        if !(spec.admit > 0.0) {
+            return Err(format!(
+                "slo: admit watermark must be positive, got {}",
+                spec.admit
+            ));
+        }
+        Ok(spec)
+    }
+
+    /// Deadlines for one class: `(ttft, tpot)` in seconds.
+    pub fn deadlines(&self, class: SloClass) -> (f64, f64) {
+        (self.ttft[class.index()], self.tpot[class.index()])
+    }
+}
+
+/// Live SLO accounting inside the engine: per-class latency summaries,
+/// deadline counters, the admission parking lot, and the preemption
+/// count.  Turned into a [`SloReport`] at finalize.
+#[derive(Clone, Debug)]
+pub struct SloState {
+    pub spec: SloSpec,
+    /// Batch arrivals parked by admission control, FIFO.
+    pub parked_queue: VecDeque<ReqId>,
+    /// Total arrivals that were ever parked.
+    pub parked: u64,
+    /// Preemption events (a request may be preempted more than once).
+    pub preempted: u64,
+    n: [u64; 3],
+    met_ttft: [u64; 3],
+    met_tpot: [u64; 3],
+    met_both: [u64; 3],
+    ttft: [Summary; 3],
+    tpot: [Summary; 3],
+}
+
+impl SloState {
+    pub fn new(spec: SloSpec) -> SloState {
+        SloState {
+            spec,
+            parked_queue: VecDeque::new(),
+            parked: 0,
+            preempted: 0,
+            n: [0; 3],
+            met_ttft: [0; 3],
+            met_tpot: [0; 3],
+            met_both: [0; 3],
+            ttft: [Summary::new(), Summary::new(), Summary::new()],
+            tpot: [Summary::new(), Summary::new(), Summary::new()],
+        }
+    }
+
+    /// Meter one completed request.  A latency landing *exactly* on
+    /// the deadline counts as met (`<=`) — the edge belongs to the SLO.
+    pub fn on_completion(&mut self, class: SloClass, ttft: f64, tpot: f64) {
+        let i = class.index();
+        let (d_ttft, d_tpot) = self.spec.deadlines(class);
+        self.n[i] += 1;
+        self.ttft[i].add(ttft);
+        self.tpot[i].add(tpot);
+        let ok_ttft = ttft <= d_ttft;
+        let ok_tpot = tpot <= d_tpot;
+        if ok_ttft {
+            self.met_ttft[i] += 1;
+        }
+        if ok_tpot {
+            self.met_tpot[i] += 1;
+        }
+        if ok_ttft && ok_tpot {
+            self.met_both[i] += 1;
+        }
+    }
+
+    pub fn report(&mut self) -> SloReport {
+        let mut classes: [SloClassReport; 3] = Default::default();
+        for c in SloClass::ALL {
+            let i = c.index();
+            classes[i] = SloClassReport {
+                n: self.n[i],
+                met_ttft: self.met_ttft[i],
+                met_tpot: self.met_tpot[i],
+                met_both: self.met_both[i],
+                goodput: frac(self.met_both[i], self.n[i]),
+                ttft_p99: self.ttft[i].quantile(0.99),
+                ttft_p999: self.ttft[i].quantile(0.999),
+                tpot_p99: self.tpot[i].quantile(0.99),
+                tpot_p999: self.tpot[i].quantile(0.999),
+            };
+        }
+        let n: u64 = self.n.iter().sum();
+        let met: u64 = self.met_both.iter().sum();
+        SloReport {
+            goodput: frac(met, n),
+            preempted: self.preempted,
+            parked: self.parked,
+            classes,
+        }
+    }
+}
+
+fn frac(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// Per-class slice of the SLO report.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloClassReport {
+    pub n: u64,
+    pub met_ttft: u64,
+    pub met_tpot: u64,
+    pub met_both: u64,
+    /// Fraction of this class's completions that met both deadlines.
+    pub goodput: f64,
+    pub ttft_p99: f64,
+    pub ttft_p999: f64,
+    pub tpot_p99: f64,
+    pub tpot_p999: f64,
+}
+
+/// SLO outcome of one run: overall goodput (fraction of completed
+/// requests meeting both their class deadlines), per-class tails, and
+/// the admission / preemption counters.  Composes with `resp_*` /
+/// `prefix_*` without double counting: response-cache hits never reach
+/// the fleet and are *not* goodput-metered, while prefix reuse only
+/// discounts prefill for requests that are.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloReport {
+    pub goodput: f64,
+    pub preempted: u64,
+    pub parked: u64,
+    pub classes: [SloClassReport; 3],
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let class = |c: SloClass| {
+            let r = &self.classes[c.index()];
+            Json::obj(vec![
+                ("n", Json::num(r.n as f64)),
+                ("met_ttft", Json::num(r.met_ttft as f64)),
+                ("met_tpot", Json::num(r.met_tpot as f64)),
+                ("met_both", Json::num(r.met_both as f64)),
+                ("goodput", Json::num(r.goodput)),
+                ("ttft_p99", Json::num(r.ttft_p99)),
+                ("ttft_p999", Json::num(r.ttft_p999)),
+                ("tpot_p99", Json::num(r.tpot_p99)),
+                ("tpot_p999", Json::num(r.tpot_p999)),
+            ])
+        };
+        Json::obj(vec![
+            ("goodput", Json::num(self.goodput)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("parked", Json::num(self.parked as f64)),
+            ("interactive", class(SloClass::Interactive)),
+            ("standard", class(SloClass::Standard)),
+            ("batch", class(SloClass::Batch)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_bare_forms() {
+        let d = SloSpec::default();
+        assert_eq!(SloSpec::parse("").unwrap(), d);
+        assert_eq!(SloSpec::parse("default").unwrap(), d);
+        assert_eq!(d.deadlines(SloClass::Interactive), (0.5, 0.05));
+        assert_eq!(d.deadlines(SloClass::Standard), (2.5, 0.15));
+        assert_eq!(d.deadlines(SloClass::Batch), (30.0, 1.0));
+        assert!(d.admit.is_infinite());
+        assert!(d.preempt);
+        assert!(d.mix.is_none());
+    }
+
+    #[test]
+    fn parses_full_grammar() {
+        let s = SloSpec::parse(
+            "i_ttft=0.4,i_tpot=0.04,s_ttft=2,s_tpot=0.2,b_ttft=60,\
+             b_tpot=2,admit=64,preempt=0,mix=0.3:0.2",
+        )
+        .unwrap();
+        assert_eq!(s.ttft, [0.4, 2.0, 60.0]);
+        assert_eq!(s.tpot, [0.04, 0.2, 2.0]);
+        assert_eq!(s.admit, 64.0);
+        assert!(!s.preempt);
+        assert_eq!(s.mix, Some((0.3, 0.2)));
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "bogus=1",
+            "i_ttft",
+            "i_ttft=x",
+            "i_ttft=0",
+            "i_tpot=-1",
+            "admit=0",
+            "admit=nope",
+            "preempt=2",
+            "mix=0.3",
+            "mix=0.3:x",
+            "mix=1.2:0.1",
+            "mix=-0.1:0.2",
+            "mix=0.6:0.6",
+        ] {
+            let err = SloSpec::parse(bad)
+                .expect_err(&format!("{bad:?} must be rejected"));
+            assert!(err.starts_with("slo:"), "{bad:?} -> {err}");
+        }
+        // Malformed mixes carry an actionable message.
+        let err = SloSpec::parse("mix=0.6:0.6").unwrap_err();
+        assert!(err.contains("sum to <= 1"), "{err}");
+        let err = SloSpec::parse("mix=0.3").unwrap_err();
+        assert!(err.contains("interactive:batch"), "{err}");
+    }
+
+    #[test]
+    fn uniform_band_layout_is_fixed() {
+        assert_eq!(SloClass::from_uniform(0.0, 0.3, 0.2),
+                   SloClass::Interactive);
+        assert_eq!(SloClass::from_uniform(0.299, 0.3, 0.2),
+                   SloClass::Interactive);
+        assert_eq!(SloClass::from_uniform(0.3, 0.3, 0.2), SloClass::Batch);
+        assert_eq!(SloClass::from_uniform(0.499, 0.3, 0.2), SloClass::Batch);
+        assert_eq!(SloClass::from_uniform(0.5, 0.3, 0.2), SloClass::Standard);
+        assert_eq!(SloClass::from_uniform(0.9, 0.0, 0.0), SloClass::Standard);
+    }
+
+    #[test]
+    fn deadline_edge_counts_as_met() {
+        // TTFT / TPOT landing exactly on the deadline meet the SLO.
+        let mut s = SloState::new(SloSpec::default());
+        s.on_completion(SloClass::Interactive, 0.5, 0.05);
+        // Just past either deadline misses.
+        s.on_completion(SloClass::Interactive, 0.5 + 1e-12, 0.05);
+        s.on_completion(SloClass::Interactive, 0.5, 0.05 + 1e-12);
+        let r = s.report();
+        let i = &r.classes[SloClass::Interactive.index()];
+        assert_eq!((i.n, i.met_both), (3, 1));
+        assert_eq!(i.met_ttft, 2);
+        assert_eq!(i.met_tpot, 2);
+        assert!((r.goodput - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn goodput_is_per_class_and_overall() {
+        let mut s = SloState::new(SloSpec::default());
+        s.on_completion(SloClass::Interactive, 0.1, 0.01);
+        s.on_completion(SloClass::Batch, 5.0, 0.5);
+        s.on_completion(SloClass::Batch, 100.0, 0.5); // misses b_ttft=30
+        let r = s.report();
+        assert_eq!(r.classes[0].goodput, 1.0);
+        assert_eq!(r.classes[2].n, 2);
+        assert_eq!(r.classes[2].met_both, 1);
+        assert!((r.goodput - 2.0 / 3.0).abs() < 1e-12);
+        // An empty class reports zero goodput, not NaN.
+        assert_eq!(r.classes[1].goodput, 0.0);
+    }
+
+    #[test]
+    fn report_json_has_every_field() {
+        let mut s = SloState::new(SloSpec::default());
+        s.on_completion(SloClass::Standard, 1.0, 0.1);
+        s.preempted = 2;
+        s.parked = 3;
+        let j = s.report().to_json().encode();
+        for key in [
+            "\"goodput\"",
+            "\"preempted\"",
+            "\"parked\"",
+            "\"interactive\"",
+            "\"standard\"",
+            "\"batch\"",
+            "\"n\"",
+            "\"met_ttft\"",
+            "\"met_tpot\"",
+            "\"met_both\"",
+            "\"ttft_p99\"",
+            "\"ttft_p999\"",
+            "\"tpot_p99\"",
+            "\"tpot_p999\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

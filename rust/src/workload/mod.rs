@@ -17,6 +17,7 @@
 //! context grows turn over turn) and `shared-doc` (concurrent queries
 //! over a small set of long documents) — see [`sessions`].
 
+use crate::slo::SloClass;
 use crate::util::rng::Pcg64;
 
 pub mod sessions;
@@ -52,6 +53,14 @@ pub struct WorkloadSpec {
     /// (semantic-tier candidate: unique prompt hash, popular topic,
     /// similarity drawn in [0.85, 0.995]).
     pub near_dup_prob: f64,
+    /// Fraction of requests in the interactive SLO class (see
+    /// [`slo_class_identity`]; only consulted when the SLO layer is
+    /// on, and overridable per run via the `mix=` key of
+    /// [`crate::slo::SloSpec`]).
+    pub interactive_frac: f64,
+    /// Fraction of requests in the batch SLO class; the remainder
+    /// (`1 - interactive_frac - batch_frac`) is standard.
+    pub batch_frac: f64,
 }
 
 pub const LIGHT: WorkloadSpec = WorkloadSpec {
@@ -63,6 +72,8 @@ pub const LIGHT: WorkloadSpec = WorkloadSpec {
     decode_max: 500,
     repeat_prob: 0.25,
     near_dup_prob: 0.10,
+    interactive_frac: 0.5,
+    batch_frac: 0.1,
 };
 
 pub const MIXED: WorkloadSpec = WorkloadSpec {
@@ -74,6 +85,8 @@ pub const MIXED: WorkloadSpec = WorkloadSpec {
     decode_max: 1000,
     repeat_prob: 0.25,
     near_dup_prob: 0.10,
+    interactive_frac: 0.3,
+    batch_frac: 0.2,
 };
 
 pub const HEAVY: WorkloadSpec = WorkloadSpec {
@@ -85,6 +98,8 @@ pub const HEAVY: WorkloadSpec = WorkloadSpec {
     decode_max: 1000,
     repeat_prob: 0.25,
     near_dup_prob: 0.10,
+    interactive_frac: 0.1,
+    batch_frac: 0.5,
 };
 
 /// Multi-turn chat: 20–200 fresh user tokens per turn on top of the
@@ -100,6 +115,8 @@ pub const CHAT: WorkloadSpec = WorkloadSpec {
     decode_max: 300,
     repeat_prob: 0.15,
     near_dup_prob: 0.10,
+    interactive_frac: 0.7,
+    batch_frac: 0.0,
 };
 
 /// Shared-document fan-out: 20–120-token queries appended to a long
@@ -115,6 +132,8 @@ pub const SHARED_DOC: WorkloadSpec = WorkloadSpec {
     decode_max: 150,
     repeat_prob: 0.10,
     near_dup_prob: 0.25,
+    interactive_frac: 0.4,
+    batch_frac: 0.1,
 };
 
 impl WorkloadSpec {
@@ -165,6 +184,13 @@ pub struct RequestTemplate {
     /// near-duplicates (the semantic tier compares it to its
     /// threshold).
     pub similarity: f64,
+    /// Uniform class-draw in [0, 1) behind `slo_class` (see
+    /// [`slo_class_identity`]) — kept so a per-run `mix=` override can
+    /// re-band the same draw without consuming RNG.
+    pub slo_u: f64,
+    /// SLO class under the family's own mix (inert unless the SLO
+    /// layer is enabled).
+    pub slo_class: SloClass,
 }
 
 /// Popular prompts per workload family that repeats/near-duplicates
@@ -197,15 +223,8 @@ pub fn response_identity(
     salt: u64,
 ) -> (u64, u64, f64) {
     use crate::prefix::splitmix64;
-    let family = spec
-        .name
-        .bytes()
-        .fold(0x9e37_79b9_7f4a_7c15_u64, |h, b| splitmix64(h ^ b as u64));
-    let base = splitmix64(
-        arrival.to_bits()
-            ^ splitmix64(((prompt_len as u64) << 32) | decode_len as u64)
-            ^ splitmix64(salt ^ family),
-    );
+    let family = family_hash(spec);
+    let base = identity_base(family, arrival, prompt_len, decode_len, salt);
     // 53-bit uniform in [0, 1): the repeat/near-dup/one-off selector.
     let u = (splitmix64(base ^ 0x5245_5045_4154) >> 11) as f64
         / (1u64 << 53) as f64;
@@ -222,6 +241,51 @@ pub fn response_identity(
         let fresh = splitmix64(base ^ 0x554e_4951);
         (fresh, fresh, 1.0)
     }
+}
+
+/// Stable hash of the workload family name (identity-draw namespace).
+fn family_hash(spec: &WorkloadSpec) -> u64 {
+    use crate::prefix::splitmix64;
+    spec.name
+        .bytes()
+        .fold(0x9e37_79b9_7f4a_7c15_u64, |h, b| splitmix64(h ^ b as u64))
+}
+
+/// Per-request identity base hashed out of already-drawn state — the
+/// one value every derived identity (response, SLO class) keys off.
+fn identity_base(family: u64, arrival: f64, prompt_len: u32,
+                 decode_len: u32, salt: u64) -> u64 {
+    use crate::prefix::splitmix64;
+    splitmix64(
+        arrival.to_bits()
+            ^ splitmix64(((prompt_len as u64) << 32) | decode_len as u64)
+            ^ splitmix64(salt ^ family),
+    )
+}
+
+/// Derive a request's SLO class — the PR 9 `response_identity` pattern:
+/// a pure function of ALREADY-DRAWN state (arrival, lengths, the same
+/// caller salt), consuming no RNG, so turning the SLO layer on or
+/// retuning a family's `interactive_frac`/`batch_frac` cannot perturb
+/// the arrival/length streams the goldens pin.  Returns the 53-bit
+/// uniform behind the draw (so [`crate::slo::SloSpec`]'s `mix=`
+/// override can re-band it) and the class under the family's own mix.
+pub fn slo_class_identity(
+    spec: &WorkloadSpec,
+    arrival: f64,
+    prompt_len: u32,
+    decode_len: u32,
+    salt: u64,
+) -> (f64, SloClass) {
+    use crate::prefix::splitmix64;
+    let family = family_hash(spec);
+    let base = identity_base(family, arrival, prompt_len, decode_len, salt);
+    // "SLOC": a salt distinct from every response-identity selector.
+    let u = (splitmix64(base ^ 0x534c_4f43) >> 11) as f64
+        / (1u64 << 53) as f64;
+    let class =
+        SloClass::from_uniform(u, spec.interactive_frac, spec.batch_frac);
+    (u, class)
 }
 
 /// Deterministic workload trace (record/replay: the same seed + spec +
@@ -307,6 +371,8 @@ impl Iterator for PoissonStream {
             as u32;
         let (prompt_key, topic, similarity) =
             response_identity(&self.spec, self.t, prompt_len, decode_len, 0);
+        let (slo_u, slo_class) =
+            slo_class_identity(&self.spec, self.t, prompt_len, decode_len, 0);
         Some(RequestTemplate {
             arrival: self.t,
             prompt_len,
@@ -315,6 +381,8 @@ impl Iterator for PoissonStream {
             prompt_key,
             topic,
             similarity,
+            slo_u,
+            slo_class,
         })
     }
 }
@@ -380,6 +448,9 @@ impl Trace {
                 let (prompt_key, topic, similarity) = response_identity(
                     &spec, 0.0, prompt_len, decode_len, i as u64,
                 );
+                let (slo_u, slo_class) = slo_class_identity(
+                    &spec, 0.0, prompt_len, decode_len, i as u64,
+                );
                 RequestTemplate {
                     arrival: 0.0,
                     prompt_len,
@@ -388,6 +459,8 @@ impl Trace {
                     prompt_key,
                     topic,
                     similarity,
+                    slo_u,
+                    slo_class,
                 }
             })
             .collect();
@@ -417,6 +490,9 @@ impl Trace {
                     let (prompt_key, topic, similarity) = response_identity(
                         &spec, base + t, prompt_len, decode_len, 0,
                     );
+                    let (slo_u, slo_class) = slo_class_identity(
+                        &spec, base + t, prompt_len, decode_len, 0,
+                    );
                     requests.push(RequestTemplate {
                         arrival: base + t,
                         prompt_len,
@@ -425,6 +501,8 @@ impl Trace {
                         prompt_key,
                         topic,
                         similarity,
+                        slo_u,
+                        slo_class,
                     });
                 }
             }
@@ -594,6 +672,55 @@ mod tests {
         // Popular-pool collisions are expected; one-offs must not all
         // collapse onto one key.
         assert!(distinct.len() > 16, "{} distinct keys", distinct.len());
+    }
+
+    #[test]
+    fn slo_class_frequencies_match_the_mix() {
+        use crate::slo::SloClass;
+        // ~10k requests: class fractions track the family knobs.
+        let t = Trace::poisson(MIXED, 50.0, 200.0, 7);
+        let n = t.len() as f64;
+        let frac = |c: SloClass| {
+            t.requests.iter().filter(|r| r.slo_class == c).count() as f64 / n
+        };
+        assert!(
+            (frac(SloClass::Interactive) - MIXED.interactive_frac).abs()
+                < 0.04,
+            "interactive {} vs knob {}",
+            frac(SloClass::Interactive),
+            MIXED.interactive_frac
+        );
+        assert!(
+            (frac(SloClass::Batch) - MIXED.batch_frac).abs() < 0.04,
+            "batch {} vs knob {}",
+            frac(SloClass::Batch),
+            MIXED.batch_frac
+        );
+        // The stored uniform re-derives the class under the family mix.
+        for r in &t.requests {
+            assert_eq!(
+                SloClass::from_uniform(r.slo_u, MIXED.interactive_frac,
+                                       MIXED.batch_frac),
+                r.slo_class
+            );
+        }
+        // A family with batch_frac = 0 never draws batch.
+        let c = Trace::generate(CHAT, 10.0, 60.0, 7);
+        assert!(c.requests.iter().all(|r| r.slo_class != SloClass::Batch));
+    }
+
+    #[test]
+    fn slo_class_is_a_pure_function_of_drawn_state() {
+        // Same inputs, same draw; the salt separates burst twins; and
+        // the class draw is independent of the response-identity draw
+        // (different salts into the same base).
+        let a = slo_class_identity(&MIXED, 1.5, 100, 50, 0);
+        assert_eq!(a, slo_class_identity(&MIXED, 1.5, 100, 50, 0));
+        assert_ne!(a.0, slo_class_identity(&MIXED, 1.5, 100, 50, 1).0);
+        // Regenerating a trace yields identical classes (replay).
+        let x = Trace::poisson(LIGHT, 8.0, 50.0, 42);
+        let y = Trace::poisson(LIGHT, 8.0, 50.0, 42);
+        assert_eq!(x.requests, y.requests);
     }
 
     #[test]

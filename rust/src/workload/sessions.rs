@@ -31,8 +31,8 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use crate::prefix::{chunk_hash, CHUNK_TOKENS};
 use crate::util::rng::Pcg64;
 use crate::util::OrdF64;
-use crate::workload::{response_identity, RequestTemplate, Trace,
-                      WorkloadSpec};
+use crate::workload::{response_identity, slo_class_identity,
+                      RequestTemplate, Trace, WorkloadSpec};
 
 /// Turns per chat session (uniform, inclusive).
 pub const TURNS_MIN: usize = 3;
@@ -136,6 +136,10 @@ impl ChatStream {
                 &self.spec, at, prompt_len, decode_len,
                 stream_key ^ turn as u64,
             );
+            let (slo_u, slo_class) = slo_class_identity(
+                &self.spec, at, prompt_len, decode_len,
+                stream_key ^ turn as u64,
+            );
             queue.push_back(RequestTemplate {
                 arrival: at,
                 prompt_len,
@@ -144,6 +148,8 @@ impl ChatStream {
                 prompt_key,
                 topic,
                 similarity,
+                slo_u,
+                slo_class,
             });
             context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
             at += decode_len as f64 * TOKEN_PACE_S
@@ -244,6 +250,8 @@ impl Iterator for SharedDocStream {
             as u32;
         let (prompt_key, topic, similarity) =
             response_identity(&self.spec, self.t, prompt_len, decode_len, 0);
+        let (slo_u, slo_class) =
+            slo_class_identity(&self.spec, self.t, prompt_len, decode_len, 0);
         Some(RequestTemplate {
             arrival: self.t,
             prompt_len,
@@ -252,6 +260,8 @@ impl Iterator for SharedDocStream {
             prompt_key,
             topic,
             similarity,
+            slo_u,
+            slo_class,
         })
     }
 }
@@ -411,6 +421,10 @@ mod tests {
                     &spec, at, prompt_len, decode_len,
                     stream_key ^ turn as u64,
                 );
+                let (slo_u, slo_class) = slo_class_identity(
+                    &spec, at, prompt_len, decode_len,
+                    stream_key ^ turn as u64,
+                );
                 requests.push(RequestTemplate {
                     arrival: at,
                     prompt_len,
@@ -419,6 +433,8 @@ mod tests {
                     prompt_key,
                     topic,
                     similarity,
+                    slo_u,
+                    slo_class,
                 });
                 context = (prompt_len + decode_len).min(MAX_CONTEXT_TOKENS);
                 at += decode_len as f64 * TOKEN_PACE_S

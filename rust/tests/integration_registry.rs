@@ -72,7 +72,7 @@ fn default_param_specs_match_bare_names_bit_for_bit() {
     let explicit = [
         ("accellm",
          "accellm:max_batch=256,flip_slack_ms=15,max_prefill_batch=8,\
-          route_load_factor=1.25"),
+          route_load_factor=1.25,interactive_frac=0"),
         ("accellm-blind",
          "accellm-blind:max_batch=256,flip_slack_ms=15,max_prefill_batch=8"),
         ("splitwise",

@@ -1,0 +1,197 @@
+//! SLO-layer integration (ISSUE 10): the layer is invisible when
+//! disabled (default) AND when enabled but neutral — every core metric
+//! bit-identical across every sweep scheduler under both contention
+//! models — plus preemption/parking conservation, determinism, report
+//! surfacing, and the README figure-catalog pin.
+
+use accellm::builder::SimBuilder;
+use accellm::eval::figures::catalog_markdown;
+use accellm::registry::{SchedSpec, SchedulerRegistry};
+use accellm::sim::{ContentionModel, RunReport};
+use accellm::util::quickcheck::{check, prop_assert};
+use accellm::workload::{WorkloadSpec, MIXED};
+use accellm::SloSpec;
+
+/// Small contended mixed fleet: cross-chassis transfers, both device
+/// classes, cheap enough to sweep every scheduler twice.
+const CLUSTER: &str = "mixed:h100x2+910b2x2";
+
+fn run_one(sched: &str, model: ContentionModel,
+           slo: Option<SloSpec>) -> RunReport {
+    let mut b = SimBuilder::parse_cluster(CLUSTER)
+        .expect("valid cluster spec")
+        .network_gbs(2.0)
+        .contention(2.0)
+        .contention_model(model)
+        .workload(MIXED, 10.0, 20.0, 7)
+        .scheduler(SchedSpec::parse(sched).expect("known scheduler"));
+    if let Some(spec) = slo {
+        b = b.slo(spec);
+    }
+    b.run()
+}
+
+const MODELS: [ContentionModel; 2] =
+    [ContentionModel::Admission, ContentionModel::MaxMin];
+
+/// An SLO spec that meters but never steers: every request lands in
+/// the standard class (`mix=0:0`), the admission watermark is
+/// infinite, and with one uniform class the priority pop is the FIFO
+/// drain and no preemption scan ever finds a batch victim.  A run
+/// with this spec must be bit-identical to an SLO-off run.
+fn neutral() -> SloSpec {
+    SloSpec::parse("mix=0:0").expect("valid spec")
+}
+
+/// The golden-stability contract: with the SLO layer disabled — and
+/// even enabled-but-neutral — no core metric moves, for every sweep
+/// scheduler under both bandwidth-sharing models on randomized
+/// scenarios.
+#[test]
+fn prop_disabled_and_neutral_slo_never_perturb_the_simulation() {
+    let scheds: Vec<&'static str> = SchedulerRegistry::sweep().collect();
+    let workloads = ["light", "mixed", "heavy", "chat"];
+    check(
+        8,
+        |rng| {
+            let sched = scheds[rng.uniform_usize(0, scheds.len() - 1)];
+            let wl = workloads[rng.uniform_usize(0, workloads.len() - 1)];
+            let rate = rng.uniform_f64(2.0, 12.0);
+            let dur = rng.uniform_f64(8.0, 20.0);
+            let seed = rng.uniform_u64(0, u64::from(u32::MAX));
+            let maxmin = rng.next_f64() < 0.5;
+            (sched, wl, rate, dur, seed, maxmin)
+        },
+        |&(sched, wl, rate, dur, seed, maxmin)| {
+            let model = if maxmin {
+                ContentionModel::MaxMin
+            } else {
+                ContentionModel::Admission
+            };
+            let spec = WorkloadSpec::by_name(wl).expect("known workload");
+            let run = |slo: Option<SloSpec>| {
+                let mut b = SimBuilder::parse_cluster(CLUSTER)
+                    .expect("valid cluster spec")
+                    .network_gbs(2.0)
+                    .contention(2.0)
+                    .contention_model(model)
+                    .workload(spec, rate, dur, seed)
+                    .scheduler(SchedSpec::parse(sched).expect("known"));
+                if let Some(s) = slo {
+                    b = b.slo(s);
+                }
+                b.run()
+            };
+            let off = run(None);
+            let on = run(Some(neutral()));
+            prop_assert(off.completed == on.completed, "completed")?;
+            prop_assert(off.makespan == on.makespan, "makespan")?;
+            prop_assert(off.jct_mean == on.jct_mean, "jct_mean")?;
+            prop_assert(off.ttft_p99 == on.ttft_p99, "ttft_p99")?;
+            prop_assert(off.tbt_mean == on.tbt_mean, "tbt_mean")?;
+            prop_assert(off.utilization == on.utilization, "utilization")?;
+            prop_assert(off.peak_kv_bytes == on.peak_kv_bytes,
+                        "peak_kv_bytes")?;
+            prop_assert(off.xfer_total_bytes == on.xfer_total_bytes,
+                        "xfer_total_bytes")?;
+            // The off-run carries no SLO block at all...
+            prop_assert(off.slo.is_none(), "slo report without --slo")?;
+            // ...and the neutral run metered every completion as
+            // standard class, steered nothing.
+            let s = on.slo.as_ref().expect("slo enabled");
+            prop_assert(s.classes[1].n as usize == on.completed,
+                        "all completions standard-class")?;
+            prop_assert(s.preempted == 0 && s.parked == 0,
+                        "neutral spec steered the run")?;
+            Ok(())
+        },
+    );
+}
+
+/// Preemption conservation: under slot pressure (a tiny vllm decode
+/// batch) interactive arrivals evict batch-class decodes, yet every
+/// request still completes — a preempted request re-prefills and
+/// finishes, it is never dropped.
+#[test]
+fn preemption_conserves_requests_under_slot_pressure() {
+    let spec = SloSpec::parse("mix=0.3:0.3").expect("valid spec");
+    for model in MODELS {
+        let r = run_one("vllm:max_batch=4", model, Some(spec));
+        let tag = model.name();
+        assert_eq!(r.completed, r.n_requests, "{tag}: lost requests");
+        let s = r.slo.as_ref().expect("slo enabled");
+        assert!(s.preempted > 0, "{tag}: slot pressure never preempted");
+        let n: u64 = s.classes.iter().map(|c| c.n).sum();
+        assert_eq!(n as usize, r.completed, "{tag}: metering gap");
+        // The class mix actually populated all three classes.
+        assert!(s.classes.iter().all(|c| c.n > 0), "{tag}: empty class");
+    }
+}
+
+/// Admission conservation: a watermark of 1 in-flight request per
+/// active instance parks batch arrivals at the front door; they are
+/// released as the fleet drains (or at end-of-arrivals) and every
+/// request still completes.
+#[test]
+fn admission_parking_conserves_requests() {
+    let spec = SloSpec::parse("mix=0.2:0.5,admit=1").expect("valid spec");
+    for sched in ["accellm", "vllm"] {
+        let r = run_one(sched, ContentionModel::Admission, Some(spec));
+        assert_eq!(r.completed, r.n_requests, "{sched}: lost requests");
+        let s = r.slo.as_ref().expect("slo enabled");
+        assert!(s.parked > 0, "{sched}: watermark of 1 never parked");
+        let n: u64 = s.classes.iter().map(|c| c.n).sum();
+        assert_eq!(n as usize, r.completed, "{sched}: metering gap");
+    }
+}
+
+/// Determinism: identical (trace, scheduler, SLO spec) gives a
+/// bit-identical report including every SLO counter.
+#[test]
+fn slo_sim_is_deterministic() {
+    let spec = SloSpec::parse("mix=0.3:0.3,admit=2").expect("valid spec");
+    let cell = || run_one("accellm", ContentionModel::MaxMin, Some(spec));
+    let (r1, r2) = (cell(), cell());
+    assert_eq!(r1.jct_mean, r2.jct_mean);
+    assert_eq!(r1.ttft_p99, r2.ttft_p99);
+    let (s1, s2) = (r1.slo.unwrap(), r2.slo.unwrap());
+    assert_eq!(s1, s2);
+}
+
+/// The default run path carries no SLO block: report field absent,
+/// JSON key absent — the golden-stability surface.  Enabled, the JSON
+/// block and the goodput CSV columns surface.
+#[test]
+fn slo_off_by_default_leaves_report_clean() {
+    let r = run_one("accellm", ContentionModel::Admission, None);
+    assert!(r.slo.is_none());
+    let doc = r.to_json();
+    assert!(doc.get("slo").is_none());
+    // The CSV always carries the goodput columns (zeros when off) so
+    // sweep output stays rectangular.
+    assert!(RunReport::csv_header().contains("goodput"));
+    let on = run_one("accellm", ContentionModel::Admission,
+                     Some(SloSpec::parse("mix=0.3:0.3").unwrap()));
+    let doc = on.to_json();
+    let block = doc.get("slo").expect("slo block in JSON");
+    assert!(block.get("goodput").and_then(|x| x.as_f64()).is_some());
+    assert!(block.get("interactive").is_some());
+    // Row and header stay column-aligned with the block present.
+    assert_eq!(on.csv_row().split(',').count(),
+               RunReport::csv_header().split(',').count());
+}
+
+/// The README figure-catalog table is the generated one — docs cannot
+/// rot (the PR 4 param-table pin, applied to `figures --list`).
+#[test]
+fn readme_figure_catalog_matches_the_registry() {
+    let readme = std::fs::read_to_string(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/README.md"))
+        .expect("rust/README.md");
+    let table = catalog_markdown();
+    assert!(
+        readme.contains(&table),
+        "README figure-catalog table is stale; replace it with the \
+         output of eval::figures::catalog_markdown():\n{table}"
+    );
+}
